@@ -1,0 +1,76 @@
+//! Buffer design-space sweep: evaluate all three systems across a
+//! GBUF × LBUF grid in parallel and print the Pareto frontier
+//! (performance vs area), reproducing the §V-D trade-off discussion.
+//!
+//! ```text
+//! cargo run --release --example buffer_sweep
+//! ```
+
+use pimfused::config::{ArchConfig, System};
+use pimfused::coordinator::{run_ppa, sweep, SweepPoint};
+use pimfused::dataflow::CostModel;
+use pimfused::ppa::Normalized;
+use pimfused::util::table::{pct_or_x, Table};
+use pimfused::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let gbufs = [2 * 1024, 8 * 1024, 32 * 1024];
+    let lbufs = [0usize, 128, 256];
+    let mut points = Vec::new();
+    for sys in System::ALL {
+        for &g in &gbufs {
+            for &l in &lbufs {
+                points.push(SweepPoint {
+                    cfg: ArchConfig::system(sys, g, l),
+                    workload: Workload::ResNet18Full,
+                });
+            }
+        }
+    }
+
+    let base = run_ppa(&ArchConfig::baseline(), Workload::ResNet18Full)?;
+    let t0 = std::time::Instant::now();
+    let results = sweep(&points, CostModel::default());
+    let dt = t0.elapsed();
+
+    let mut rows: Vec<(String, Normalized)> = Vec::new();
+    for r in results {
+        let r = r?;
+        rows.push((r.label.clone(), r.normalize(&base)));
+    }
+
+    let mut table = Table::new(vec!["config", "cycles", "energy", "area"]);
+    for (label, n) in &rows {
+        table.row(vec![
+            label.clone(),
+            pct_or_x(n.cycles),
+            pct_or_x(n.energy),
+            pct_or_x(n.area),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Pareto frontier on (cycles, area).
+    let mut frontier: Vec<&(String, Normalized)> = Vec::new();
+    for cand in &rows {
+        let dominated = rows.iter().any(|o| {
+            (o.1.cycles < cand.1.cycles && o.1.area <= cand.1.area)
+                || (o.1.cycles <= cand.1.cycles && o.1.area < cand.1.area)
+        });
+        if !dominated {
+            frontier.push(cand);
+        }
+    }
+    frontier.sort_by(|a, b| a.1.cycles.partial_cmp(&b.1.cycles).unwrap());
+    println!("Pareto frontier (cycles vs area):");
+    for (label, n) in frontier {
+        println!("  {:<24} {}", label, n.render());
+    }
+    println!(
+        "\nswept {} configurations in {:.2?} ({:.1} points/s)",
+        rows.len(),
+        dt,
+        rows.len() as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Fig. 3 walkthrough: generate the Table-I command trace for the paper's
+//! 8-layer example graph under both dataflows and contrast the
+//! cross-bank traffic (the quantity PIMfused optimizes).
+//!
+//! ```text
+//! cargo run --release --example trace_inspect
+//! ```
+
+use pimfused::config::{ArchConfig, System};
+use pimfused::dataflow::{plan, CostModel};
+use pimfused::sim::simulate;
+use pimfused::trace::gen::generate;
+use pimfused::workload::Workload;
+
+fn main() {
+    let g = Workload::Fig3.graph();
+    let model = CostModel::default();
+
+    for (title, cfg) in [
+        ("layer-by-layer (Fig. 3(b)) — AiM-like/G2K_L0", ArchConfig::baseline()),
+        (
+            "PIMfused dataflow (Fig. 3(c)) — Fused4/G8K_L128",
+            ArchConfig::system(System::Fused4, 8 * 1024, 128),
+        ),
+    ] {
+        let p = plan(&g, &cfg);
+        let t = generate(&g, &cfg, &p, model);
+        let s = t.stats();
+        let r = simulate(&cfg, &t);
+        println!("=== {title} ===");
+        println!("{}", t.dump(48));
+        println!(
+            "fused kernels: {}   commands: {}\n\
+             cross-bank bytes : {:>10} (read {} + write {})\n\
+             broadcast bytes  : {:>10}\n\
+             near-bank bytes  : {:>10} (+{} open-row re-reads)\n\
+             memory cycles    : {:>10}\n",
+            p.num_fused_kernels(),
+            s.num_cmds,
+            s.cross_bank_total(),
+            s.cross_bank_read,
+            s.cross_bank_write,
+            s.broadcast,
+            s.near_bank_read + s.near_bank_write,
+            s.near_bank_hit,
+            r.cycles,
+        );
+    }
+}

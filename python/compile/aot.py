@@ -1,0 +1,126 @@
+"""AOT export: lower the Layer-2/Layer-1 computations to HLO **text**
+artifacts the Rust runtime loads via PJRT.
+
+Text, not ``.serialize()``: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the HLO text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all f32, shapes chosen so CPU-PJRT compiles in milliseconds):
+
+* ``tile_conv_bn_relu.hlo.txt``  — Pallas VALID 3×3 conv+ReLU on a tile:
+  x(8,10,10), w(8,8,3,3) → (8,8,8).
+* ``fused_block_tile.hlo.txt``   — two chained Pallas convs on a haloed
+  tile (halo 2): x(8,12,12), w1, w2 → (8,8,8). The Fig. 1(b) contract.
+* ``maxpool_tile.hlo.txt``       — Pallas 3×3/2 max pool: x(8,17,17).
+* ``add_relu_tile.hlo.txt``      — Pallas residual ADD_RELU: (8,8,8)².
+* ``resnet18_32.hlo.txt``        — full ResNet18 @32px (ref ops; weights
+  as parameters in Rust node order).
+* ``resnet18_first8_32.hlo.txt`` — the First8Layers workload @32px.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--report]``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import pim_kernels as K
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_entries():
+    """(name, fn, example_args) for every artifact."""
+    res = 32
+    wspecs = [s.shape for s in model.weight_specs(res)]
+    w_args = [_spec(*s) for s in wspecs]
+    first8_w = w_args[:5]
+
+    def tile_conv(x, w):
+        return (K.conv2d_tile(x, w, stride=1, relu=True),)
+
+    def fused_tile(x, w1, w2):
+        return (K.fused_two_conv_tile(x, w1, w2, relu1=True, relu2=False),)
+
+    def pool_tile(x):
+        return (K.maxpool(x, 3, 2, 1),)
+
+    def addrelu_tile(a, b):
+        return (K.add_relu(a, b),)
+
+    def rn18(x, *w):
+        return (model.resnet18(x, list(w)),)
+
+    def rn18_first8(x, *w):
+        return (model.resnet18_first8(x, list(w)),)
+
+    return [
+        ("tile_conv_bn_relu", tile_conv, [_spec(8, 10, 10), _spec(8, 8, 3, 3)]),
+        (
+            "fused_block_tile",
+            fused_tile,
+            [_spec(8, 12, 12), _spec(8, 8, 3, 3), _spec(8, 8, 3, 3)],
+        ),
+        ("maxpool_tile", pool_tile, [_spec(8, 17, 17)]),
+        ("add_relu_tile", addrelu_tile, [_spec(8, 8, 8), _spec(8, 8, 8)]),
+        ("resnet18_32", rn18, [_spec(3, res, res)] + w_args),
+        ("resnet18_first8_32", rn18_first8, [_spec(3, res, res)] + first8_w),
+    ]
+
+
+def report():
+    """Analytic VMEM-footprint / MXU-occupancy estimates for the Pallas
+    kernels on a real TPU (interpret=True gives no hardware timing; see
+    DESIGN.md §Perf)."""
+    lines = ["L1 kernel analytic report (bf16 deployment estimates)"]
+    for (tile, cin, cout, k) in [(16, 64, 64, 3), (28, 64, 64, 3), (16, 128, 128, 3)]:
+        ih = tile + k - 1
+        vmem = (cin * ih * ih + cout * cin * k * k + cout * tile * tile) * 2
+        occ = min(cout, 128) / 128.0
+        lines.append(
+            f"  conv{k}x{k} tile={tile} cin={cin} cout={cout}: "
+            f"VMEM={vmem/1024:.1f}KB  MXU lane occupancy={occ:.0%}"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="artifact name filter")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+
+    if args.report:
+        print(report())
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn, specs in artifact_entries():
+        if args.only and args.only != name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Layer-1 Pallas kernels: the PIMcore compute hot-spots.
+
+Each ``pallas_call`` program instance models one PIMcore executing a
+``PIMcore_CMP`` command on its spatial tile (DESIGN.md
+§Hardware-Adaptation):
+
+* the convolution is expressed as k² MXU ``dot_general`` contractions
+  over ``cin`` (weight-slice × activation-patch), the TPU-native
+  rethinking of the paper's 16-lane near-bank MAC array;
+* the input BlockSpec carries the halo (HBM→VMEM is the analogue of the
+  bank→LBUF ``PIM_BK2LBUF`` path);
+* the weight operand uses a constant index_map — every grid step sees
+  the same weights, mirroring the GBUF broadcast.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against ``ref.py`` by pytest and
+real-TPU characteristics are reported analytically (``aot.py --report``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, relu: bool):
+    """VALID conv on one tile: x (cin, ih, iw), w (cout, cin, k, k),
+    o (cout, oh, ow). Accumulates k² cin-contractions on the MXU."""
+    cout, oh, ow = o_ref.shape
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.zeros((cout, oh, ow), dtype=jnp.float32)
+    for ky in range(k):
+        for kx in range(k):
+            # Strided patch covering every output pixel's (ky, kx) tap.
+            patch = jax.lax.slice(
+                x,
+                (0, ky, kx),
+                (x.shape[0], ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1),
+                (1, stride, stride),
+            )  # (cin, oh, ow)
+            wsl = w[:, :, ky, kx]  # (cout, cin)
+            acc = acc + jax.lax.dot_general(
+                wsl,
+                patch.reshape(patch.shape[0], -1),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).reshape(cout, oh, ow)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def conv2d_tile(x_halo, w, stride=1, relu=False):
+    """VALID conv of a haloed CHW tile through the Pallas kernel."""
+    cin, ih, iw = x_halo.shape
+    cout, cin2, k, _ = w.shape
+    assert cin == cin2, f"cin mismatch {cin} vs {cin2}"
+    oh = (ih - k) // stride + 1
+    ow = (iw - k) // stride + 1
+    kern = functools.partial(_conv_kernel, k=k, stride=stride, relu=relu)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((cout, oh, ow), jnp.float32),
+        interpret=True,
+    )(x_halo, w)
+
+
+def conv2d(x, w, stride=1, pad=0, relu=False):
+    """Padded conv: zero-pad on the host side (the trace generator charges
+    the halo fetch), VALID Pallas kernel inside."""
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    return conv2d_tile(x, w, stride=stride, relu=relu)
+
+
+def _pool_kernel(x_ref, o_ref, *, k: int, stride: int, is_max: bool):
+    x = x_ref[...]
+    c, oh, ow = o_ref.shape
+    acc = None
+    for ky in range(k):
+        for kx in range(k):
+            patch = jax.lax.slice(
+                x,
+                (0, ky, kx),
+                (c, ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1),
+                (1, stride, stride),
+            )
+            if acc is None:
+                acc = patch
+            elif is_max:
+                acc = jnp.maximum(acc, patch)
+            else:
+                acc = acc + patch
+    o_ref[...] = acc if is_max else acc / float(k * k)
+
+
+def maxpool(x, k, stride, pad):
+    """Max pool through the Pallas kernel (−inf padding, as in ref)."""
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)), constant_values=-jnp.inf)
+    cin, ih, iw = x.shape
+    oh = (ih - k) // stride + 1
+    ow = (iw - k) // stride + 1
+    kern = functools.partial(_pool_kernel, k=k, stride=stride, is_max=True)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((cin, oh, ow), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def avgpool(x, k, stride, pad):
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    cin, ih, iw = x.shape
+    oh = (ih - k) // stride + 1
+    ow = (iw - k) // stride + 1
+    kern = functools.partial(_pool_kernel, k=k, stride=stride, is_max=False)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((cin, oh, ow), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _add_relu_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(a_ref[...] + b_ref[...], 0.0)
+
+
+def add_relu(a, b):
+    """Residual ADD_RELU (the paper's PIMcore/GBcore execution flag)."""
+    return pl.pallas_call(
+        _add_relu_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def fused_two_conv_tile(x_halo, w1, w2, relu1=True, relu2=True):
+    """Two chained VALID 3×3 convs on one haloed tile — the two-layer
+    fused kernel of Fig. 1(b), one PIMcore's `PIMcore_CMP` work. The
+    intermediate tile never leaves the core (VMEM ↔ LBUF analogy)."""
+    t = conv2d_tile(x_halo, w1, stride=1, relu=relu1)
+    return conv2d_tile(t, w2, stride=1, relu=relu2)

@@ -1,0 +1,95 @@
+"""Layer-2 JAX model: ResNet18 forward pass built from the Layer-1 Pallas
+kernels, mirroring the Rust graph builder (`rust/src/cnn/resnet.rs`)
+node-for-node so weights can be fed from the coordinator in node order.
+
+BN is folded into conv weights (the paper treats CONV_BN_RELU as one
+layer); weights are function *parameters*, so the AOT artifact can be fed
+any weights from the Rust side (the e2e example feeds the same synthetic
+weights the Rust validator generates).
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels import pim_kernels as K
+from .kernels import ref as R
+
+
+@dataclass(frozen=True)
+class WeightSpec:
+    """One weight tensor of the network, in Rust node order."""
+
+    name: str
+    shape: tuple  # (cout, cin, k, k) for conv, (cout, cin) for fc
+
+
+def weight_specs(res: int = 32):
+    """Weight tensors of ResNet18 in the exact Rust node order."""
+    assert res % 32 == 0
+    specs = [WeightSpec("conv1", (64, 3, 7, 7))]
+    cin = 64
+    for sidx, cout, _stride in ((1, 64, 1), (2, 128, 2), (3, 256, 2), (4, 512, 2)):
+        for b in range(2):
+            pfx = f"s{sidx}b{b}"
+            specs.append(WeightSpec(f"{pfx}.conv1", (cout, cin, 3, 3)))
+            specs.append(WeightSpec(f"{pfx}.conv2", (cout, cout, 3, 3)))
+            if b == 0 and (cin != cout or sidx > 1):
+                specs.append(WeightSpec(f"{pfx}.down", (cout, cin, 1, 1)))
+            cin = cout
+    specs.append(WeightSpec("fc", (1000, 512)))
+    return specs
+
+
+def _ops(use_pallas: bool):
+    return K if use_pallas else R
+
+
+def resnet18(x, weights, use_pallas: bool = False):
+    """Forward pass. ``x``: (3, res, res) CHW; ``weights``: list in
+    ``weight_specs`` order. ``use_pallas`` switches conv/pool/add to the
+    Layer-1 kernels (interpret-mode; slower to trace, same numerics)."""
+    ops = _ops(use_pallas)
+    it = iter(weights)
+
+    x = ops.conv2d(x, next(it), stride=2, pad=3, relu=True)
+    x = ops.maxpool(x, 3, 2, 1)
+
+    cin = 64
+    for sidx, cout, stride in ((1, 64, 1), (2, 128, 2), (3, 256, 2), (4, 512, 2)):
+        for b in range(2):
+            s = stride if b == 0 else 1
+            c1 = ops.conv2d(x, next(it), stride=s, pad=1, relu=True)
+            c2 = ops.conv2d(c1, next(it), stride=1, pad=1, relu=False)
+            if b == 0 and (cin != cout or sidx > 1):
+                skip = ops.conv2d(x, next(it), stride=s, pad=0, relu=False)
+            else:
+                skip = x
+            x = ops.add_relu(c2, skip)
+            cin = cout
+
+    x = R.global_avg(x)
+    out = R.fc(x, next(it))
+    rest = list(it)
+    assert not rest, f"{len(rest)} unused weights"
+    return out
+
+
+def resnet18_first8(x, weights, use_pallas: bool = False):
+    """The ResNet18_First8Layers workload: stem + stage 1 (ends at the
+    s1b1 ADD_RELU). ``weights``: first 5 tensors of ``weight_specs``."""
+    ops = _ops(use_pallas)
+    it = iter(weights)
+    x = ops.conv2d(x, next(it), stride=2, pad=3, relu=True)
+    x = ops.maxpool(x, 3, 2, 1)
+    for _b in range(2):
+        c1 = ops.conv2d(x, next(it), stride=1, pad=1, relu=True)
+        c2 = ops.conv2d(c1, next(it), stride=1, pad=1, relu=False)
+        x = ops.add_relu(c2, x)
+    rest = list(it)
+    assert not rest
+    return x
+
+
+def num_params(res: int = 32) -> int:
+    return sum(int(jnp.prod(jnp.array(s.shape))) for s in weight_specs(res))

@@ -1,0 +1,76 @@
+"""The halo contract (Fig. 1(b)): a fused two-conv kernel computed on a
+haloed tile must equal the corresponding slice of the full two-layer
+(pad=1) network — the same property the Rust validator proves for whole
+plans, here proven for the Layer-1 kernel that the AOT artifact ships.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import pim_kernels as K
+from compile.kernels import ref as R
+
+
+def _full_two_conv(x, w1, w2):
+    t = R.conv2d(x, w1, stride=1, pad=1, relu=True)
+    return R.conv2d(t, w2, stride=1, pad=1, relu=False)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 6),
+    a=st.integers(1, 6),
+    tile=st.sampled_from([4, 6, 8]),
+    seed=st.integers(0, 10**6),
+)
+def test_interior_tile_equals_full_slice(c, a, tile, seed):
+    hw = 16
+    b = a + tile
+    if b > hw - 1:  # keep the halo inside the padded map
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((c, hw, hw)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((c, c, 3, 3)), jnp.float32) * 0.2
+    w2 = jnp.asarray(rng.standard_normal((c, c, 3, 3)), jnp.float32) * 0.2
+
+    full = _full_two_conv(x, w1, w2)
+
+    # Haloed slice in padded coordinates: out tile [a,b) needs
+    # xpad[a-1 : b+3] (halo 2 per side through two 3x3 convs).
+    xpad = jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+    halo = xpad[:, a - 1 : b + 3, a - 1 : b + 3]
+    tile_out = K.fused_two_conv_tile(halo, w1, w2, relu1=True, relu2=False)
+
+    want = full[:, a:b, a:b]
+    np.testing.assert_allclose(
+        np.asarray(tile_out), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_interior_tiles_reassemble():
+    # 2x2 grid of interior tiles of a larger map. (Border tiles need the
+    # *intermediate* feature map's zero padding, which the VALID-chain
+    # kernel cannot express — the Rust validator handles borders with
+    # clamped demand regions instead; see rust/src/validate. The shipped
+    # AOT artifact is the interior-tile contract.)
+    rng = np.random.default_rng(7)
+    c, hw, t = 4, 20, 8
+    x = jnp.asarray(rng.standard_normal((c, hw, hw)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((c, c, 3, 3)), jnp.float32) * 0.2
+    w2 = jnp.asarray(rng.standard_normal((c, c, 3, 3)), jnp.float32) * 0.2
+    full = _full_two_conv(x, w1, w2)
+
+    # Output tile [a, a+t) needs xpad1[a-1 : a+t+3], xpad1 = pad(x, 1).
+    xpad1 = jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+    out = np.zeros((c, 2 * t, 2 * t), np.float32)
+    for ty in range(2):
+        for tx in range(2):
+            a, bx = 2 + ty * t, 2 + tx * t
+            halo = xpad1[:, a - 1 : a + t + 3, bx - 1 : bx + t + 3]
+            tile = K.fused_two_conv_tile(halo, w1, w2, relu1=True, relu2=False)
+            out[:, ty * t : (ty + 1) * t, tx * t : (tx + 1) * t] = np.asarray(tile)
+    np.testing.assert_allclose(
+        out, np.asarray(full[:, 2 : 2 + 2 * t, 2 : 2 + 2 * t]), rtol=1e-5, atol=1e-5
+    )

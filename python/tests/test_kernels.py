@@ -1,0 +1,126 @@
+"""Layer-1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, strides and paddings; assert_allclose with
+tight tolerances (same f32 compute, different op decomposition).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import pim_kernels as K
+from compile.kernels import ref as R
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape, dtype=np.float32))
+
+
+def _close(a, b, tol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5, 7]),
+    stride=st.integers(1, 2),
+    pad=st.integers(0, 3),
+    hw=st.integers(6, 14),
+    relu=st.booleans(),
+)
+def test_conv2d_matches_ref(cin, cout, k, stride, pad, hw, relu):
+    if hw + 2 * pad < k:
+        return
+    x = _rand(cin, hw, hw)
+    w = _rand(cout, cin, k, k) * 0.2
+    got = K.conv2d(x, w, stride=stride, pad=pad, relu=relu)
+    want = R.conv2d(x, w, stride=stride, pad=pad, relu=relu)
+    assert got.shape == want.shape
+    _close(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 8),
+    k=st.sampled_from([2, 3]),
+    stride=st.integers(1, 2),
+    pad=st.integers(0, 1),
+    hw=st.integers(5, 13),
+)
+def test_maxpool_matches_ref(c, k, stride, pad, hw):
+    x = _rand(c, hw, hw)
+    got = K.maxpool(x, k, stride, pad)
+    want = R.maxpool(x, k, stride, pad)
+    assert got.shape == want.shape
+    _close(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 6),
+    k=st.sampled_from([2, 3]),
+    stride=st.integers(1, 2),
+    hw=st.integers(5, 12),
+)
+def test_avgpool_matches_ref(c, k, stride, hw):
+    x = _rand(c, hw, hw)
+    got = K.avgpool(x, k, stride, 0)
+    want = R.avgpool(x, k, stride, 0)
+    _close(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(1, 8), hw=st.integers(1, 12))
+def test_add_relu_matches_ref(c, hw):
+    a, b = _rand(c, hw, hw), _rand(c, hw, hw)
+    _close(K.add_relu(a, b), R.add_relu(a, b))
+
+
+def test_conv_known_answer():
+    # 3x3 all-ones kernel on an arange image: the window sum.
+    x = jnp.arange(9.0, dtype=jnp.float32).reshape(1, 3, 3)
+    w = jnp.ones((1, 1, 3, 3), jnp.float32)
+    out = K.conv2d(x, w)
+    assert out.shape == (1, 1, 1)
+    assert float(out[0, 0, 0]) == 36.0
+
+
+def test_conv_relu_clamps_negatives():
+    x = jnp.ones((1, 4, 4), jnp.float32)
+    w = -jnp.ones((1, 1, 3, 3), jnp.float32)
+    out = K.conv2d(x, w, relu=True)
+    assert float(jnp.max(out)) == 0.0
+
+
+def test_strided_conv_shape():
+    x = _rand(4, 11, 11)
+    w = _rand(6, 4, 3, 3)
+    out = K.conv2d(x, w, stride=2, pad=1)
+    assert out.shape == (6, 6, 6)
+
+
+def test_maxpool_padding_never_wins():
+    # All-negative input: -inf pad must not leak into the output.
+    x = -jnp.ones((1, 4, 4), jnp.float32) * 5.0
+    out = K.maxpool(x, 3, 2, 1)
+    assert float(jnp.max(out)) == -5.0
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(c=st.integers(1, 6), tile=st.sampled_from([4, 8]), seed=st.integers(0, 10**6))
+def test_fused_two_conv_tile_matches_ref(c, tile, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((c, tile + 4, tile + 4)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((c, c, 3, 3)), jnp.float32) * 0.2
+    w2 = jnp.asarray(rng.standard_normal((c, c, 3, 3)), jnp.float32) * 0.2
+    got = K.fused_two_conv_tile(x, w1, w2)
+    want = R.fused_two_conv_tile(x, w1, w2)
+    assert got.shape == (c, tile, tile)
+    _close(got, want)

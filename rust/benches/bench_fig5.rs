@@ -1,0 +1,52 @@
+//! Regenerates **Fig. 5**: normalized system PPA with increasing GBUF and
+//! no LBUF (w.r.t. AiM-like @ G2K_L0), for ResNet18_First8Layers and
+//! ResNet18_Full, and checks the paper's four observations.
+
+use pimfused::benchkit::{bench, section};
+use pimfused::config::System;
+use pimfused::coordinator::experiments::{fig5, render};
+use pimfused::dataflow::CostModel;
+use pimfused::workload::Workload;
+
+fn main() {
+    section("Fig. 5 — PPA vs GBUF (LBUF = 0)");
+    let rows = fig5(CostModel::default()).expect("fig5");
+    println!("{}", render(&rows));
+
+    let get = |s: System, gk: usize, w: Workload| {
+        rows.iter()
+            .find(|r| r.system == s && r.gbuf == gk * 1024 && r.workload == w)
+            .unwrap()
+            .norm
+    };
+
+    println!("paper anchors vs measured:");
+    let f16_first8 = get(System::Fused16, 32, Workload::ResNet18First8);
+    println!(
+        "  Fused16 G32K first8 cycles : paper  6.5%  measured {:>6.1}%",
+        f16_first8.cycles * 100.0
+    );
+    let f16_full = get(System::Fused16, 32, Workload::ResNet18Full);
+    println!(
+        "  Fused16 G32K full   cycles : paper 57.7%  measured {:>6.1}%",
+        f16_full.cycles * 100.0
+    );
+    let aim_flat = get(System::AimLike, 64, Workload::ResNet18Full).cycles
+        / get(System::AimLike, 2, Workload::ResNet18Full).cycles;
+    println!(
+        "  AiM-like GBUF sensitivity  : paper ~flat  measured {:.3}x (G64K/G2K)",
+        aim_flat
+    );
+    let f4_area_lo = get(System::Fused4, 2, Workload::ResNet18Full).area;
+    let f4_area_hi = get(System::Fused4, 64, Workload::ResNet18Full).area;
+    println!(
+        "  Fused4 area range          : paper 44.6-63.1%  measured {:.1}-{:.1}%",
+        f4_area_lo * 100.0,
+        f4_area_hi * 100.0
+    );
+
+    section("timing");
+    bench("fig5 full grid (30 sim points)", 1, 3, || {
+        fig5(CostModel::default()).unwrap().len()
+    });
+}

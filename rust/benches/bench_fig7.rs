@@ -1,0 +1,47 @@
+//! Regenerates **Fig. 7**: normalized PPA with both buffers scaled
+//! (ResNet18_Full), the paper's headline row, and the Takeaway-3 checks.
+
+use pimfused::benchkit::{bench, section};
+use pimfused::config::System;
+use pimfused::coordinator::experiments::{fig7, headline, render};
+use pimfused::dataflow::CostModel;
+
+fn main() {
+    let model = CostModel::default();
+    section("Fig. 7 — PPA vs joint LBUF+GBUF scaling (ResNet18_Full)");
+    let rows = fig7(model).expect("fig7");
+    println!("{}", render(&rows));
+
+    section("headline (§V-D)");
+    let n = headline(model).expect("headline");
+    println!("  Fused4 @ G32K_L256 vs AiM-like @ G2K_L0:");
+    println!("    paper   : cycles=30.6% energy=83.4% area=76.5%");
+    println!("    measured: {}", n.render());
+
+    let get = |s: System, g: usize, l: usize| {
+        rows.iter()
+            .find(|r| r.system == s && r.gbuf == g && r.lbuf == l)
+            .unwrap()
+            .norm
+    };
+    section("Takeaway 3 checks");
+    let joint = get(System::Fused4, 32 * 1024, 256).cycles;
+    let g_only = get(System::Fused4, 2 * 1024, 0).cycles; // Fig. 5/6 ends
+    println!(
+        "  joint scaling {:.1}% beats single-buffer paths (G2K_L0 {:.1}%)",
+        joint * 100.0,
+        g_only * 100.0
+    );
+    let ideal = get(System::Fused4, 64 * 1024, 100 * 1024);
+    let modest = get(System::Fused4, 64 * 1024, 256);
+    println!(
+        "  ideal 100K LBUF: cycles {:.1}% vs {:.1}% at 256B, but area {:.2}x vs {:.2}x (paper: 'rise dramatically')",
+        ideal.cycles * 100.0,
+        modest.cycles * 100.0,
+        ideal.area,
+        modest.area
+    );
+
+    section("timing");
+    bench("fig7 full grid (18 sim points)", 1, 3, || fig7(model).unwrap().len());
+}

@@ -1,0 +1,53 @@
+//! Regenerates the **Fig. 1 motivating comparison**: cross-bank transfer
+//! volume for two consecutive CONV layers under the layer-by-layer vs the
+//! fused-layer dataflow (4 banks / 4 PIMcores).
+
+use pimfused::benchkit::{bench, section};
+use pimfused::config::{ArchConfig, System};
+use pimfused::dataflow::{plan, CostModel};
+use pimfused::sim::simulate;
+use pimfused::trace::gen::generate;
+use pimfused::workload::Workload;
+
+fn main() {
+    section("Fig. 1 — cross-bank transfers, two fused CONVs");
+    let g = Workload::Fig1.graph();
+    let model = CostModel::default();
+
+    let report = |name: &str, cfg: &ArchConfig| {
+        let p = plan(&g, cfg);
+        let t = generate(&g, cfg, &p, model);
+        let s = t.stats();
+        let r = simulate(cfg, &t);
+        println!(
+            "  {:<26} cross-bank {:>8} B   broadcast {:>8} B   memory cycles {:>8}",
+            name,
+            s.cross_bank_total(),
+            s.broadcast,
+            r.cycles
+        );
+        (s.cross_bank_total(), r.cycles)
+    };
+
+    let lbl_cfg = {
+        let mut c = ArchConfig::system(System::Fused4, 2048, 128);
+        c.dataflow = pimfused::config::Dataflow::LayerByLayer;
+        c
+    };
+    let (lbl_cross, lbl_cycles) = report("layer-by-layer (Fig. 1a)", &lbl_cfg);
+    let fused_cfg = ArchConfig::system(System::Fused4, 2048, 128);
+    let (f_cross, f_cycles) = report("fused-layer   (Fig. 1b)", &fused_cfg);
+
+    println!(
+        "\n  fused eliminates {:.1}% of cross-bank bytes and {:.1}% of memory cycles",
+        (1.0 - f_cross as f64 / lbl_cross as f64) * 100.0,
+        (1.0 - f_cycles as f64 / lbl_cycles as f64) * 100.0
+    );
+
+    section("timing");
+    bench("fig1 end-to-end pipeline point", 2, 20, || {
+        let p = plan(&g, &fused_cfg);
+        let t = generate(&g, &fused_cfg, &p, model);
+        simulate(&fused_cfg, &t).cycles
+    });
+}

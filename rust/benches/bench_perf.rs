@@ -1,0 +1,53 @@
+//! §Perf hot-path microbenchmarks: the numbers EXPERIMENTS.md §Perf
+//! tracks across optimization iterations. Wall-clock here is *our*
+//! simulator's speed (the paper's "fast evaluation" claim for its
+//! profiling framework), not the modeled hardware's.
+
+use pimfused::benchkit::{bench, section};
+use pimfused::cnn::resnet::resnet18;
+use pimfused::config::{ArchConfig, System};
+use pimfused::coordinator::{run_ppa_with, sweep, SweepPoint};
+use pimfused::dataflow::{plan, CostModel};
+use pimfused::sim::simulate;
+use pimfused::trace::gen::generate;
+use pimfused::workload::Workload;
+
+fn main() {
+    let model = CostModel::default();
+    let g = resnet18();
+    let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+    let p = plan(&g, &cfg);
+    let t = generate(&g, &cfg, &p, model);
+    println!("trace: {} commands for ResNet18_Full on {}", t.cmds.len(), cfg.label());
+
+    section("pipeline stages (ResNet18_Full, Fused4/G32K_L256)");
+    bench("graph build (resnet18 @224)", 3, 50, resnet18);
+    bench("plan (partitioner)", 3, 200, || plan(&g, &cfg).steps.len());
+    bench("trace generation", 3, 50, || generate(&g, &cfg, &p, model).cmds.len());
+    bench("cycle simulation", 3, 200, || simulate(&cfg, &t).cycles);
+    bench("full PPA point (end-to-end)", 3, 20, || {
+        run_ppa_with(&cfg, Workload::ResNet18Full, model).unwrap().cycles
+    });
+
+    section("sweep throughput (the Fig. 7 grid)");
+    let points: Vec<SweepPoint> = System::ALL
+        .iter()
+        .flat_map(|&s| {
+            [(2048, 0), (8192, 128), (16384, 256), (32768, 256), (65536, 256), (65536, 102400)]
+                .into_iter()
+                .map(move |(gb, lb)| SweepPoint {
+                    cfg: ArchConfig::system(s, gb, lb),
+                    workload: Workload::ResNet18Full,
+                })
+        })
+        .collect();
+    bench("fig7 grid, parallel sweep (18 pts)", 1, 5, || {
+        sweep(&points, model).len()
+    });
+    bench("fig7 grid, serial (18 pts)", 1, 3, || {
+        points
+            .iter()
+            .map(|pt| run_ppa_with(&pt.cfg, pt.workload, model).unwrap().cycles)
+            .sum::<u64>()
+    });
+}

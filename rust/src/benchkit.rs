@@ -1,0 +1,68 @@
+//! Minimal benchmarking harness (offline substitute for `criterion`).
+//!
+//! Benches in `rust/benches/` use `harness = false` and call
+//! [`bench`] / [`section`]: warmup, N timed iterations, and a
+//! median/mean/min report. Paper-reproduction benches mostly print
+//! *figures* (tables of normalized PPA), for which wall-clock is
+//! secondary; [`bench`] is used for the §Perf hot-path measurements.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<4} min={:>10.3?} median={:>10.3?} mean={:>10.3?}",
+            self.name, self.iters, self.min, self.median, self.mean
+        )
+    }
+}
+
+/// Time `f` over `iters` iterations (after `warmup` unmeasured runs).
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let min = samples[0];
+    let median = samples[iters / 2];
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    let r = BenchResult { name: name.to_string(), iters, mean, median, min };
+    println!("{}", r.report());
+    r
+}
+
+/// Print a section banner (to structure bench output like the paper's
+/// figure captions).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median && r.median <= r.mean * 5);
+        assert!(r.report().contains("noop"));
+    }
+}

@@ -1,0 +1,260 @@
+//! Hand-rolled CLI (the offline image has no `clap`).
+//!
+//! ```text
+//! pimfused simulate --config fused4:G32K_L256 --workload full
+//! pimfused fig5|fig6|fig7|takeaways|headline
+//! pimfused sweep --systems aim,fused16,fused4 --gbuf 2K,32K --lbuf 0,256 --workload full
+//! pimfused trace --config fused16:G2K_L0 --workload fig3 [--limit 40]
+//! pimfused validate --config fused4:G8K_L128
+//! pimfused cmdset
+//! ```
+
+use crate::config::{ArchConfig, System};
+use crate::coordinator::{experiments, run_ppa, sweep, SweepPoint};
+use crate::dataflow::{plan, CostModel};
+use crate::trace::gen::generate;
+use crate::util::size::parse_bytes;
+use crate::workload::Workload;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand plus `--key value` options.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub cmd: String,
+    pub opts: HashMap<String, String>,
+}
+
+/// Parse a raw argv (without the binary name).
+pub fn parse_args(argv: &[String]) -> Result<Args> {
+    let Some(cmd) = argv.first() else {
+        bail!("usage: pimfused <simulate|sweep|fig5|fig6|fig7|takeaways|headline|trace|validate|cmdset> [--key value]...");
+    };
+    let mut opts = HashMap::new();
+    let mut i = 1;
+    while i < argv.len() {
+        let k = argv[i]
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --option, got {:?}", argv[i]))?;
+        let v = argv
+            .get(i + 1)
+            .ok_or_else(|| anyhow!("--{k} needs a value"))?;
+        opts.insert(k.to_string(), v.clone());
+        i += 2;
+    }
+    Ok(Args { cmd: cmd.clone(), opts })
+}
+
+impl Args {
+    fn config(&self) -> Result<ArchConfig> {
+        let spec = self.opts.get("config").map(String::as_str).unwrap_or("fused4:G32K_L256");
+        ArchConfig::parse(spec).map_err(anyhow::Error::msg)
+    }
+
+    fn workload(&self) -> Result<Workload> {
+        let w = self.opts.get("workload").map(String::as_str).unwrap_or("full");
+        Workload::parse(w).map_err(anyhow::Error::msg)
+    }
+}
+
+/// Run the CLI; returns the text to print.
+pub fn run(args: &Args) -> Result<String> {
+    let model = CostModel::default();
+    match args.cmd.as_str() {
+        "simulate" => {
+            let cfg = args.config()?;
+            let w = args.workload()?;
+            let r = run_ppa(&cfg, w)?;
+            let base = run_ppa(&ArchConfig::baseline(), w)?;
+            let n = r.normalize(&base);
+            Ok(format!(
+                "{} on {}\n  memory cycles : {}\n  energy        : {:.3} mJ\n  area          : {:.3} mm2\n  vs AiM-like/G2K_L0: {}\n",
+                r.label,
+                r.workload,
+                r.cycles,
+                r.energy_pj / 1e9,
+                r.area_mm2,
+                n.render()
+            ))
+        }
+        "sweep" => {
+            let systems: Vec<System> = args
+                .opts
+                .get("systems")
+                .map(String::as_str)
+                .unwrap_or("aim,fused16,fused4")
+                .split(',')
+                .map(System::parse)
+                .collect::<Result<_, _>>()
+                .map_err(anyhow::Error::msg)?;
+            let parse_list = |key: &str, def: &str| -> Result<Vec<usize>> {
+                args.opts
+                    .get(key)
+                    .map(String::as_str)
+                    .unwrap_or(def)
+                    .split(',')
+                    .map(|s| parse_bytes(s).map_err(anyhow::Error::msg))
+                    .collect()
+            };
+            let gbufs = parse_list("gbuf", "2K,8K,16K,32K,64K")?;
+            let lbufs = parse_list("lbuf", "0,64,128,256,512")?;
+            let w = args.workload()?;
+            let mut points: Vec<SweepPoint> = Vec::new();
+            for &s in &systems {
+                for &g in &gbufs {
+                    for &l in &lbufs {
+                        points.push(SweepPoint { cfg: ArchConfig::system(s, g, l), workload: w });
+                    }
+                }
+            }
+            let base = run_ppa(&ArchConfig::baseline(), w)?;
+            let results = sweep(&points, model);
+            let mut t = crate::util::table::Table::new(vec!["config", "cycles", "energy", "area"]);
+            for r in results {
+                let r = r?;
+                let n = r.normalize(&base);
+                t.row(vec![
+                    r.label.clone(),
+                    crate::util::table::pct_or_x(n.cycles),
+                    crate::util::table::pct_or_x(n.energy),
+                    crate::util::table::pct_or_x(n.area),
+                ]);
+            }
+            Ok(t.render())
+        }
+        "fig5" => Ok(experiments::render(&experiments::fig5(model)?)),
+        "fig6" => Ok(experiments::render(&experiments::fig6(model)?)),
+        "fig7" => Ok(experiments::render(&experiments::fig7(model)?)),
+        "takeaways" => {
+            let s = experiments::vd_stats(model)?;
+            Ok(format!(
+                "Fusing ResNet18 first-8 layers into 2x2 tiles (paper §V-D):\n  data replication     : +{:.1}% (paper +18.2%)\n  redundant computation: +{:.1}% (paper +17.3%)\n  performance improvement: {:.1}% (paper 91.2%)\n",
+                (s.fusion.replication - 1.0) * 100.0,
+                (s.fusion.redundant_macs - 1.0) * 100.0,
+                s.perf_improvement * 100.0
+            ))
+        }
+        "headline" => {
+            let n = experiments::headline(model)?;
+            Ok(format!(
+                "Fused4 @ G32K_L256 vs AiM-like @ G2K_L0 (ResNet18_Full):\n  measured: {}\n  paper   : cycles=30.6% energy=83.4% area=76.5%\n",
+                n.render()
+            ))
+        }
+        "trace" => {
+            let cfg = args.config()?;
+            let w = args.workload()?;
+            let limit: usize = args
+                .opts
+                .get("limit")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(60);
+            let g = w.graph();
+            let p = plan(&g, &cfg);
+            let tr = generate(&g, &cfg, &p, model);
+            let stats = tr.stats();
+            Ok(format!(
+                "{}\ncommands={} cross_bank={}B broadcast={}B near_bank={}B (hit {}B)\n",
+                tr.dump(limit),
+                stats.num_cmds,
+                stats.cross_bank_total(),
+                stats.broadcast,
+                stats.near_bank_read + stats.near_bank_write,
+                stats.near_bank_hit,
+            ))
+        }
+        "validate" => {
+            let cfg = args.config()?;
+            // Reduced resolution keeps the f32 reference fast.
+            let g = Workload::ResNet18Small.graph();
+            let p = plan(&g, &cfg);
+            let delta = crate::validate::validate_plan(&g, &p, 0xC0FFEE)
+                .map_err(anyhow::Error::msg)?;
+            Ok(format!(
+                "functional validation of {} on {}: OK (max |Δ| = {delta})\n",
+                cfg.label(),
+                g.name
+            ))
+        }
+        "cmdset" => Ok("\
+Custom PIM commands (Table I):
+  PIMcore_CMP   Perform fused operations in all PIMcores
+                flags: CONV_BN | CONV_BN_RELU | POOL | ADD_RELU
+  GBcore_CMP    Perform operations in GBcore
+                flags: POOL | ADD_RELU
+  PIM_BK2LBUF   Data transfer between all banks and LBUFs (parallel)
+  PIM_LBUF2BK   Data transfer between all LBUFs and banks (parallel)
+  PIM_BK2GBUF   Data transfer between one bank and GBUF (sequential)
+  PIM_GBUF2BK   Data transfer between GBUF and one bank (sequential)
+"
+        .to_string()),
+        other => bail!("unknown subcommand {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parse_subcommand_and_options() {
+        let a = parse_args(&argv("simulate --config fused4:G32K_L256 --workload first8")).unwrap();
+        assert_eq!(a.cmd, "simulate");
+        assert_eq!(a.opts["config"], "fused4:G32K_L256");
+        assert!(parse_args(&[]).is_err());
+        assert!(parse_args(&argv("simulate --config")).is_err());
+        assert!(parse_args(&argv("simulate config x")).is_err());
+    }
+
+    #[test]
+    fn simulate_command_reports() {
+        let a = parse_args(&argv("simulate --config aim:G2K_L0 --workload first8")).unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("AiM-like/G2K_L0"));
+        assert!(out.contains("memory cycles"));
+    }
+
+    #[test]
+    fn headline_and_takeaways_run() {
+        let h = run(&parse_args(&argv("headline")).unwrap()).unwrap();
+        assert!(h.contains("paper   : cycles=30.6%"));
+        let t = run(&parse_args(&argv("takeaways")).unwrap()).unwrap();
+        assert!(t.contains("replication"));
+    }
+
+    #[test]
+    fn trace_command_dumps_table_i_commands() {
+        let a = parse_args(&argv("trace --config fused16:G2K_L0 --workload fig3 --limit 10")).unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("PIMcore_CMP"));
+        assert!(out.contains("cross_bank="));
+    }
+
+    #[test]
+    fn cmdset_lists_all_six() {
+        let out = run(&parse_args(&argv("cmdset")).unwrap()).unwrap();
+        for c in ["PIMcore_CMP", "GBcore_CMP", "PIM_BK2LBUF", "PIM_LBUF2BK", "PIM_BK2GBUF", "PIM_GBUF2BK"] {
+            assert!(out.contains(c), "{c} missing");
+        }
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run(&parse_args(&argv("bogus")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn sweep_small_grid() {
+        let a = parse_args(&argv(
+            "sweep --systems fused4 --gbuf 2K,32K --lbuf 0,256 --workload first8",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert_eq!(out.matches("Fused4/").count(), 4);
+    }
+}

@@ -1,0 +1,353 @@
+//! CNN graph IR: layers, shape inference, and per-layer cost statistics.
+//!
+//! The paper treats element-wise fusions (`CONV_BN_RELU`) as a single layer
+//! (§IV, Fig. 3) and counts ResNet18 layers accordingly; this IR mirrors
+//! that convention — BN/ReLU are flags on [`Op::Conv`], residual joins are
+//! explicit [`Op::AddRelu`] nodes, and pooling is its own node.
+//!
+//! Node ids are topologically ordered and layer-sequential, so a *fused
+//! kernel* is a contiguous id range (see [`crate::dataflow::fused`]).
+
+pub mod resnet;
+
+use crate::config::ELEM_BYTES;
+
+/// Feature-map shape, channel-major (`c`, `h`, `w`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * ELEM_BYTES
+    }
+}
+
+/// Pooling flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Layer operator. Spatial ops carry (k, stride, pad) window geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Network input placeholder.
+    Input,
+    /// Convolution with optional folded BatchNorm and ReLU
+    /// (the paper's `CONV_BN` / `CONV_BN_RELU` execution flags).
+    Conv {
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        bn: bool,
+        relu: bool,
+    },
+    /// Spatial pooling (the paper's `POOL` flag).
+    Pool {
+        kind: PoolKind,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Global average pool (spatial collapse to 1×1).
+    GlobalAvgPool,
+    /// Residual join with ReLU (the paper's `ADD_RELU` flag). Two inputs.
+    AddRelu,
+    /// Fully connected layer (1×1 spatial).
+    Fc { cout: usize },
+}
+
+/// Node id within a [`Graph`].
+pub type NodeId = usize;
+
+/// One graph node: operator plus data-dependency edges.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    /// Producer nodes (1 for most ops, 2 for AddRelu, 0 for Input).
+    pub inputs: Vec<NodeId>,
+    /// Inferred output shape.
+    pub shape: Shape,
+    // Cached at build time (derivable from inputs but hot in the mappers).
+    pub(crate) cached_cin: usize,
+    pub(crate) cached_in_elems: usize,
+}
+
+impl Node {
+    /// Weight bytes this layer must stage (conv/fc kernels; BN folded).
+    pub fn weight_bytes(&self) -> usize {
+        match self.op {
+            Op::Conv { cout, k, .. } => {
+                // cin derives from the producer; stored at build time in
+                // `weight_elems` via Graph::finish_node. Recomputed here
+                // from the cached cin.
+                self.cached_cin * cout * k * k * ELEM_BYTES
+            }
+            Op::Fc { cout } => self.cached_cin * cout * ELEM_BYTES,
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate count for the whole layer.
+    pub fn macs(&self) -> usize {
+        match self.op {
+            Op::Conv { cout, k, .. } => {
+                self.shape.h * self.shape.w * cout * self.cached_cin * k * k
+            }
+            Op::Fc { cout } => self.cached_cin * cout,
+            _ => 0,
+        }
+    }
+
+    /// Element-wise operation count (pool compares/adds, residual adds,
+    /// BN+ReLU post-ops), used by the compute-latency and energy models.
+    pub fn eltwise_ops(&self) -> usize {
+        match self.op {
+            Op::Conv { bn, relu, .. } => {
+                let mut per_elem = 0;
+                if bn {
+                    per_elem += 2; // scale + shift (folded BN)
+                }
+                if relu {
+                    per_elem += 1;
+                }
+                self.shape.elems() * per_elem
+            }
+            Op::Pool { k, .. } => self.shape.elems() * k * k,
+            Op::GlobalAvgPool => self.cached_in_elems,
+            Op::AddRelu => self.shape.elems() * 2, // add + relu
+            Op::Fc { .. } | Op::Input => 0,
+        }
+    }
+
+    /// Is this a layer PIMcores execute in the layer-by-layer dataflow
+    /// (CONV/FC on PIMcores; POOL/ADD on the GBcore — Fig. 3(b))?
+    pub fn is_mac_layer(&self) -> bool {
+        matches!(self.op, Op::Conv { .. } | Op::Fc { .. })
+    }
+
+}
+
+/// A CNN as an ordered DAG of nodes. Node 0 is always the [`Op::Input`].
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    /// Start a graph with an input of the given shape.
+    pub fn new(name: &str, input: Shape) -> Self {
+        let node = Node {
+            id: 0,
+            name: "input".to_string(),
+            op: Op::Input,
+            inputs: vec![],
+            shape: input,
+            cached_cin: 0,
+            cached_in_elems: 0,
+        };
+        Self { name: name.to_string(), nodes: vec![node] }
+    }
+
+    fn infer_shape(&self, op: &Op, inputs: &[NodeId]) -> Shape {
+        let in_shape = self.nodes[inputs[0]].shape;
+        let spatial = |k: usize, s: usize, p: usize, d: usize| (d + 2 * p - k) / s + 1;
+        match *op {
+            Op::Input => in_shape,
+            Op::Conv { cout, k, stride, pad, .. } => Shape::new(
+                cout,
+                spatial(k, stride, pad, in_shape.h),
+                spatial(k, stride, pad, in_shape.w),
+            ),
+            Op::Pool { k, stride, pad, .. } => Shape::new(
+                in_shape.c,
+                spatial(k, stride, pad, in_shape.h),
+                spatial(k, stride, pad, in_shape.w),
+            ),
+            Op::GlobalAvgPool => Shape::new(in_shape.c, 1, 1),
+            Op::AddRelu => {
+                let b = self.nodes[inputs[1]].shape;
+                assert_eq!(in_shape, b, "AddRelu operand shapes must match");
+                in_shape
+            }
+            Op::Fc { cout } => Shape::new(cout, 1, 1),
+        }
+    }
+
+    /// Append a node; returns its id. Inputs must already exist (enforces
+    /// topological id order, which the fused-kernel partitioner relies on).
+    pub fn add(&mut self, name: &str, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        let id = self.nodes.len();
+        for &i in &inputs {
+            assert!(i < id, "node {name} input {i} not yet defined");
+        }
+        assert!(!inputs.is_empty(), "non-input node {name} needs inputs");
+        let shape = self.infer_shape(&op, &inputs);
+        let in0 = &self.nodes[inputs[0]];
+        let node = Node {
+            id,
+            name: name.to_string(),
+            op,
+            cached_cin: in0.shape.c,
+            cached_in_elems: in0.shape.elems(),
+            inputs,
+            shape,
+        };
+        self.nodes.push(node);
+        id
+    }
+
+    /// All non-input layer nodes, in execution order.
+    pub fn layers(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| !matches!(n.op, Op::Input))
+    }
+
+    /// Number of layers by the paper's counting (element-wise fused).
+    pub fn num_layers(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Consumers of each node (reverse edges), for demand propagation.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut cons = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                cons[i].push(n.id);
+            }
+        }
+        cons
+    }
+
+    /// Total MACs across the network.
+    pub fn total_macs(&self) -> usize {
+        self.nodes.iter().map(|n| n.macs()).sum()
+    }
+
+    /// Total weight bytes across the network.
+    pub fn total_weight_bytes(&self) -> usize {
+        self.nodes.iter().map(|n| n.weight_bytes()).sum()
+    }
+
+    /// Truncate to the first `n` layers (plus input); consumers outside the
+    /// prefix are dropped. Used for the `ResNet18_First8Layers` workload.
+    pub fn prefix(&self, n: usize) -> Graph {
+        assert!(n + 1 <= self.nodes.len(), "prefix longer than graph");
+        let nodes = self.nodes[..=n].to_vec();
+        Graph { name: format!("{}_first{}", self.name, n), nodes }
+    }
+
+    /// Structural sanity: ids consecutive, edges backwards, shapes positive.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("node {i} has id {}", n.id));
+            }
+            if n.shape.c == 0 || n.shape.h == 0 || n.shape.w == 0 {
+                return Err(format!("node {} has empty shape", n.name));
+            }
+            for &p in &n.inputs {
+                if p >= i {
+                    return Err(format!("node {} has forward edge to {p}", n.name));
+                }
+            }
+            match n.op {
+                Op::AddRelu if n.inputs.len() != 2 => {
+                    return Err(format!("AddRelu {} needs 2 inputs", n.name))
+                }
+                Op::Input if i != 0 => return Err("Input must be node 0".into()),
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny", Shape::new(3, 8, 8));
+        let c0 = g.add(
+            "conv0",
+            Op::Conv { cout: 4, k: 3, stride: 1, pad: 1, bn: true, relu: true },
+            vec![0],
+        );
+        let p = g.add(
+            "pool",
+            Op::Pool { kind: PoolKind::Max, k: 2, stride: 2, pad: 0 },
+            vec![c0],
+        );
+        let c1 = g.add(
+            "conv1",
+            Op::Conv { cout: 4, k: 3, stride: 1, pad: 1, bn: true, relu: false },
+            vec![p],
+        );
+        let a = g.add("add", Op::AddRelu, vec![c1, p]);
+        g.add("fc", Op::Fc { cout: 10 }, vec![a]);
+        g
+    }
+
+    #[test]
+    fn shapes_infer_correctly() {
+        let g = tiny();
+        g.validate().unwrap();
+        assert_eq!(g.nodes[1].shape, Shape::new(4, 8, 8)); // same-pad conv
+        assert_eq!(g.nodes[2].shape, Shape::new(4, 4, 4)); // 2x2/2 pool
+        assert_eq!(g.nodes[4].shape, Shape::new(4, 4, 4)); // add preserves
+        assert_eq!(g.nodes[5].shape, Shape::new(10, 1, 1)); // fc
+    }
+
+    #[test]
+    fn costs_are_sane() {
+        let g = tiny();
+        // conv0: 8*8*4*3*3*3 MACs.
+        assert_eq!(g.nodes[1].macs(), 8 * 8 * 4 * 3 * 3 * 3);
+        // conv0 weights: 3*4*3*3 elems * 2B.
+        assert_eq!(g.nodes[1].weight_bytes(), 3 * 4 * 9 * 2);
+        // pool does k*k compares per output elem.
+        assert_eq!(g.nodes[2].eltwise_ops(), 4 * 4 * 4 * 4);
+        // add_relu: 2 ops per elem.
+        assert_eq!(g.nodes[4].eltwise_ops(), 4 * 4 * 4 * 2);
+        assert!(g.total_macs() > 0);
+    }
+
+    #[test]
+    fn prefix_truncates() {
+        let g = tiny();
+        let p = g.prefix(2);
+        assert_eq!(p.num_layers(), 2);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn consumers_are_reverse_edges() {
+        let g = tiny();
+        let cons = g.consumers();
+        assert_eq!(cons[2], vec![3, 4]); // pool feeds conv1 and the residual
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet defined")]
+    fn forward_edges_rejected() {
+        let mut g = Graph::new("bad", Shape::new(1, 4, 4));
+        g.add("c", Op::Conv { cout: 1, k: 1, stride: 1, pad: 0, bn: false, relu: false }, vec![5]);
+    }
+}

@@ -1,0 +1,165 @@
+//! Benchmark network builders.
+//!
+//! [`resnet18`] follows the paper's layer counting exactly (element-wise
+//! fusions are one layer, residual ADD_RELU is one layer): the first 8
+//! layers are the stem (CONV7×7, MAXPOOL) plus residual stage 1, each
+//! later residual stage with a downsample is 7 layers — matching §V-A3's
+//! fused-kernel boundaries (8 / 7 / 7 for Fused4).
+
+use super::{Graph, Op, PoolKind, Shape};
+
+/// Standard ImageNet-resolution ResNet18 (input 3×224×224).
+pub fn resnet18() -> Graph {
+    resnet18_at(224)
+}
+
+/// ResNet18 at a custom square input resolution (must be divisible by 32).
+/// Smaller resolutions are used by fast tests and the e2e example.
+pub fn resnet18_at(res: usize) -> Graph {
+    assert!(res % 32 == 0, "resnet18 input resolution must be divisible by 32");
+    let mut g = Graph::new(&format!("resnet18_{res}"), Shape::new(3, res, res));
+
+    // Stem: L0 conv7x7/2 + L1 maxpool3x3/2  (2 layers)
+    let conv = |cout, k, stride, pad, relu| Op::Conv { cout, k, stride, pad, bn: true, relu };
+    let mut x = g.add("conv1", conv(64, 7, 2, 3, true), vec![0]);
+    x = g.add(
+        "maxpool",
+        Op::Pool { kind: PoolKind::Max, k: 3, stride: 2, pad: 1 },
+        vec![x],
+    );
+
+    // Residual stages. Stage 1 has identity skips (3 layers per block:
+    // conv, conv, add). Stages 2-4 start with a strided block whose skip
+    // is a 1x1 downsample conv (4 layers), then an identity block (3).
+    let stage = |g: &mut Graph, x: usize, sidx: usize, cout: usize, stride: usize| {
+        let mut inp = x;
+        for b in 0..2 {
+            let s = if b == 0 { stride } else { 1 };
+            let pfx = format!("s{sidx}b{b}");
+            let c1 = g.add(&format!("{pfx}.conv1"), conv(cout, 3, s, 1, true), vec![inp]);
+            let c2 = g.add(&format!("{pfx}.conv2"), conv(cout, 3, 1, 1, false), vec![c1]);
+            let skip = if s != 1 || g.nodes[inp].shape.c != cout {
+                g.add(&format!("{pfx}.down"), conv(cout, 1, s, 0, false), vec![inp])
+            } else {
+                inp
+            };
+            inp = g.add(&format!("{pfx}.add"), Op::AddRelu, vec![c2, skip]);
+        }
+        inp
+    };
+
+    x = stage(&mut g, x, 1, 64, 1); //  +6 layers → L2..L7
+    x = stage(&mut g, x, 2, 128, 2); // +7 layers → L8..L14
+    x = stage(&mut g, x, 3, 256, 2); // +7 layers → L15..L21
+    x = stage(&mut g, x, 4, 512, 2); // +7 layers → L22..L28
+
+    x = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    g.add("fc", Op::Fc { cout: 1000 }, vec![x]);
+    g
+}
+
+/// The first-8-layers workload of §V-A2 (`ResNet18_First8Layers`):
+/// stem + residual stage 1, ending at the L7 ADD_RELU.
+pub fn resnet18_first8() -> Graph {
+    let mut g = resnet18().prefix(8);
+    g.name = "resnet18_first8".into();
+    g
+}
+
+/// The 8-layer example graph of Fig. 3(a): CONV, POOL, CONV, CONV, ADD,
+/// CONV, CONV, ADD — used by the trace-walkthrough example and tests.
+pub fn fig3_example() -> Graph {
+    let mut g = Graph::new("fig3", Shape::new(16, 32, 32));
+    let conv = |cout, k, stride, pad, relu| Op::Conv { cout, k, stride, pad, bn: true, relu };
+    let l0 = g.add("L0.conv", conv(16, 3, 1, 1, true), vec![0]);
+    let l1 = g.add("L1.pool", Op::Pool { kind: PoolKind::Max, k: 2, stride: 2, pad: 0 }, vec![l0]);
+    let l2 = g.add("L2.conv", conv(16, 3, 1, 1, true), vec![l1]);
+    let l3 = g.add("L3.conv", conv(16, 3, 1, 1, false), vec![l2]);
+    let l4 = g.add("L4.add", Op::AddRelu, vec![l3, l1]);
+    let l5 = g.add("L5.conv", conv(32, 3, 2, 1, true), vec![l4]);
+    let l6 = g.add("L6.conv", conv(32, 3, 1, 1, false), vec![l5]);
+    let l5s = g.add("L7a.down", conv(32, 1, 2, 0, false), vec![l4]);
+    g.add("L7.add", Op::AddRelu, vec![l6, l5s]);
+    g
+}
+
+/// A minimal two-conv graph matching the Fig. 1 motivating example.
+pub fn fig1_example() -> Graph {
+    let mut g = Graph::new("fig1", Shape::new(16, 16, 16));
+    let conv = |cout| Op::Conv { cout, k: 3, stride: 1, pad: 1, bn: true, relu: true };
+    let l0 = g.add("L0", conv(16), vec![0]);
+    g.add("L1", conv(16), vec![l0]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_layer_count_matches_paper_counting() {
+        let g = resnet18();
+        g.validate().unwrap();
+        // 2 stem + 6 + 7 + 7 + 7 residual + gap + fc = 31 layers.
+        assert_eq!(g.num_layers(), 31);
+    }
+
+    #[test]
+    fn resnet18_shapes_match_reference() {
+        let g = resnet18();
+        let by_name = |n: &str| g.nodes.iter().find(|x| x.name == n).unwrap().shape;
+        assert_eq!(by_name("conv1"), Shape::new(64, 112, 112));
+        assert_eq!(by_name("maxpool"), Shape::new(64, 56, 56));
+        assert_eq!(by_name("s1b1.add"), Shape::new(64, 56, 56));
+        assert_eq!(by_name("s2b1.add"), Shape::new(128, 28, 28));
+        assert_eq!(by_name("s3b1.add"), Shape::new(256, 14, 14));
+        assert_eq!(by_name("s4b1.add"), Shape::new(512, 7, 7));
+        assert_eq!(by_name("fc"), Shape::new(1000, 1, 1));
+    }
+
+    #[test]
+    fn resnet18_macs_match_published_flops() {
+        // ResNet18 @224 is the commonly-quoted ~1.8 GMACs of conv+fc.
+        let g = resnet18();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((1.7..1.95).contains(&gmacs), "got {gmacs} GMACs");
+    }
+
+    #[test]
+    fn first8_ends_at_stage1_add() {
+        let g = resnet18_first8();
+        g.validate().unwrap();
+        assert_eq!(g.num_layers(), 8);
+        assert_eq!(g.nodes.last().unwrap().name, "s1b1.add");
+        // All first-8 fmaps live at 56x56 or larger (the "shallow layers
+        // have large spatial dims" premise of the hybrid dataflow).
+        for n in g.layers() {
+            assert!(n.shape.h >= 56);
+        }
+    }
+
+    #[test]
+    fn fused_kernel_boundaries_are_8_7_7() {
+        // §V-A3: first 8 layers, next 7, next 7 — check those ranges are
+        // exactly the stem+stage1, stage2, stage3 of our builder.
+        let g = resnet18();
+        // nodes[0] is the input, so layer Li is nodes[i+1].
+        assert_eq!(g.nodes[9].name, "s2b0.conv1"); // L8 starts stage 2
+        assert_eq!(g.nodes[16].name, "s3b0.conv1"); // L15 starts stage 3
+        assert_eq!(g.nodes[23].name, "s4b0.conv1"); // L22 starts stage 4
+    }
+
+    #[test]
+    fn fig3_graph_is_eight_layers() {
+        let g = fig3_example();
+        g.validate().unwrap();
+        assert_eq!(g.num_layers(), 9); // 8 logical + downsample branch conv
+    }
+
+    #[test]
+    fn small_resolution_variant_validates() {
+        let g = resnet18_at(32);
+        g.validate().unwrap();
+        assert_eq!(g.nodes.iter().find(|x| x.name == "s4b1.add").unwrap().shape, Shape::new(512, 1, 1));
+    }
+}

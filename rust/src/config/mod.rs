@@ -1,0 +1,238 @@
+//! System configuration: DRAM timing, architecture geometry, buffer sizes,
+//! dataflow strategy, and the three named systems evaluated by the paper
+//! (*AiM-like*, *Fused16*, *Fused4*; §V-A3).
+//!
+//! Buffer configurations use the paper's `GmK_Ln` notation — see
+//! [`crate::util::size::parse_bufcfg`].
+
+mod timing;
+
+pub use timing::DramTiming;
+
+use crate::util::size::{fmt_bufcfg, parse_bufcfg};
+
+/// Bytes per tensor element. GDDR6-AiM computes in BF16 (§II, [4]).
+pub const ELEM_BYTES: usize = 2;
+
+/// Bytes moved by one DRAM column access (256-bit I/O per bank, as in
+/// GDDR6-AiM's 16-wide BF16 MAC datapath).
+pub const COL_BYTES: usize = 32;
+
+/// DRAM row (page) size per bank. 2 KB is the GDDR6 norm and what the
+/// row-activate amortization in the simulator assumes.
+pub const ROW_BYTES: usize = 2048;
+
+/// Which dataflow drives a workload's mapping (§IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Conventional per-layer execution; PIMcores partition output channels.
+    LayerByLayer,
+    /// PIMfused hybrid: fused-layer kernels for shallow layers (spatial
+    /// `tiles_x × tiles_y` tiling), layer-by-layer for the rest.
+    PimFused {
+        /// Spatial tile grid along the output `ox` dimension.
+        tiles_x: usize,
+        /// Spatial tile grid along the output `oy` dimension.
+        tiles_y: usize,
+    },
+}
+
+impl Dataflow {
+    pub fn is_fused(&self) -> bool {
+        matches!(self, Dataflow::PimFused { .. })
+    }
+
+    pub fn tile_grid(&self) -> (usize, usize) {
+        match self {
+            Dataflow::LayerByLayer => (1, 1),
+            Dataflow::PimFused { tiles_x, tiles_y } => (*tiles_x, *tiles_y),
+        }
+    }
+}
+
+/// The three systems of §V-A3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum System {
+    /// GDDR6-AiM-like baseline: 16 × 1-bank PIMcores (MAC/BN/RELU only),
+    /// one GBcore, layer-by-layer dataflow.
+    AimLike,
+    /// PIMfused with 16 × 1-bank PIMcores; fused layers tiled 4×4.
+    Fused16,
+    /// PIMfused with 4 × 4-bank PIMcores; fused layers tiled 2×2.
+    Fused4,
+}
+
+impl System {
+    pub const ALL: [System; 3] = [System::AimLike, System::Fused16, System::Fused4];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            System::AimLike => "AiM-like",
+            System::Fused16 => "Fused16",
+            System::Fused4 => "Fused4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "aim" | "aim-like" | "aimlike" | "baseline" => Ok(System::AimLike),
+            "fused16" => Ok(System::Fused16),
+            "fused4" => Ok(System::Fused4),
+            _ => Err(format!("unknown system {s:?} (aim-like|fused16|fused4)")),
+        }
+    }
+}
+
+/// Full architecture configuration for one simulated DRAM-PIM channel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Which named system this configuration instantiates.
+    pub system: System,
+    /// Banks in the GDDR6 channel (16 in the paper).
+    pub num_banks: usize,
+    /// Banks served by one PIMcore (1 or 4 in the paper).
+    pub banks_per_pimcore: usize,
+    /// Channel-level global buffer size in bytes (GBUF, in the GBcore).
+    pub gbuf_bytes: usize,
+    /// Per-PIMcore local buffer size in bytes (LBUF; 0 = absent, as in AiM).
+    pub lbuf_bytes: usize,
+    /// BF16 MACs one PIMcore retires per memory cycle. Tied to the per-bank
+    /// 256-bit read path: 16 MACs/bank-cycle, so 4-bank PIMcores are 4× wider.
+    pub macs_per_cycle: usize,
+    /// Elementwise ops (BN, ReLU, add, pool-compare) one PIMcore retires per
+    /// cycle; matches the MAC datapath width.
+    pub eltwise_per_cycle: usize,
+    /// Throughput of the GBcore in elements/cycle for pool/add/relu work.
+    pub gbcore_eltwise_per_cycle: usize,
+    /// Dataflow strategy the mapper uses for this system.
+    pub dataflow: Dataflow,
+    /// DRAM timing parameters.
+    pub timing: DramTiming,
+}
+
+impl ArchConfig {
+    /// Instantiate one of the paper's named systems with a buffer config.
+    pub fn system(system: System, gbuf_bytes: usize, lbuf_bytes: usize) -> Self {
+        let (banks_per_pimcore, dataflow) = match system {
+            System::AimLike => (1, Dataflow::LayerByLayer),
+            System::Fused16 => (1, Dataflow::PimFused { tiles_x: 4, tiles_y: 4 }),
+            System::Fused4 => (4, Dataflow::PimFused { tiles_x: 2, tiles_y: 2 }),
+        };
+        let num_banks = 16;
+        Self {
+            system,
+            num_banks,
+            banks_per_pimcore,
+            gbuf_bytes,
+            lbuf_bytes,
+            macs_per_cycle: 16 * banks_per_pimcore,
+            eltwise_per_cycle: 16 * banks_per_pimcore,
+            gbcore_eltwise_per_cycle: 16,
+            dataflow,
+            timing: DramTiming::gddr6(),
+        }
+    }
+
+    /// The paper's baseline: AiM-like with GBUF = 2 KB, LBUF = 0 (§V-A3).
+    pub fn baseline() -> Self {
+        Self::system(System::AimLike, 2 * 1024, 0)
+    }
+
+    /// Number of PIMcores in the channel.
+    pub fn num_pimcores(&self) -> usize {
+        self.num_banks / self.banks_per_pimcore
+    }
+
+    /// Paper notation, e.g. `Fused4/G32K_L256`.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.system.name(), fmt_bufcfg(self.gbuf_bytes, self.lbuf_bytes))
+    }
+
+    /// Parse `"fused4:G32K_L256"` into a config.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let (sys, buf) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("config spec {spec:?} must be <system>:<GmK_Ln>"))?;
+        let system = System::parse(sys)?;
+        let (g, l) = parse_bufcfg(buf)?;
+        Ok(Self::system(system, g, l))
+    }
+
+    /// Sanity-check internal consistency; the coordinator calls this before
+    /// every run so misconfigurations fail loudly rather than skewing PPA.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_banks == 0 || self.banks_per_pimcore == 0 {
+            return Err("bank counts must be non-zero".into());
+        }
+        if self.num_banks % self.banks_per_pimcore != 0 {
+            return Err(format!(
+                "banks_per_pimcore {} must divide num_banks {}",
+                self.banks_per_pimcore, self.num_banks
+            ));
+        }
+        if self.macs_per_cycle == 0 || self.eltwise_per_cycle == 0 {
+            return Err("compute throughputs must be non-zero".into());
+        }
+        if self.dataflow.is_fused() {
+            let (tx, ty) = self.dataflow.tile_grid();
+            if tx * ty != self.num_pimcores() {
+                return Err(format!(
+                    "fused tile grid {}x{} must equal the PIMcore count {}",
+                    tx,
+                    ty,
+                    self.num_pimcores()
+                ));
+            }
+        }
+        self.timing.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        let b = ArchConfig::baseline();
+        assert_eq!(b.num_banks, 16);
+        assert_eq!(b.num_pimcores(), 16);
+        assert_eq!(b.gbuf_bytes, 2048);
+        assert_eq!(b.lbuf_bytes, 0);
+        assert_eq!(b.dataflow, Dataflow::LayerByLayer);
+
+        let f16 = ArchConfig::system(System::Fused16, 2048, 0);
+        assert_eq!(f16.num_pimcores(), 16);
+        assert_eq!(f16.dataflow.tile_grid(), (4, 4));
+
+        let f4 = ArchConfig::system(System::Fused4, 2048, 0);
+        assert_eq!(f4.num_pimcores(), 4);
+        assert_eq!(f4.dataflow.tile_grid(), (2, 2));
+        // 4-bank PIMcores have 4x the MAC width (one 256-bit path per bank).
+        assert_eq!(f4.macs_per_cycle, 64);
+    }
+
+    #[test]
+    fn presets_validate() {
+        for sys in System::ALL {
+            ArchConfig::system(sys, 32 * 1024, 256).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn label_and_parse_roundtrip() {
+        let c = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+        assert_eq!(c.label(), "Fused4/G32K_L256");
+        let p = ArchConfig::parse("fused4:G32K_L256").unwrap();
+        assert_eq!(p, c);
+        assert!(ArchConfig::parse("nope:G2K_L0").is_err());
+        assert!(ArchConfig::parse("fused4").is_err());
+    }
+
+    #[test]
+    fn bad_tile_grid_rejected() {
+        let mut c = ArchConfig::system(System::Fused16, 2048, 0);
+        c.dataflow = Dataflow::PimFused { tiles_x: 3, tiles_y: 3 };
+        assert!(c.validate().is_err());
+    }
+}

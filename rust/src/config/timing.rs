@@ -1,0 +1,111 @@
+//! GDDR6 timing parameters, in memory-clock cycles.
+//!
+//! Values follow public GDDR6 datasheet norms (16 Gb/s/pin parts, tCK ≈
+//! 0.75 ns command clock) and are the knobs the Ramulator2-like engine in
+//! [`crate::sim`] enforces. The paper reports *relative* memory cycles, so
+//! what matters is that the ratios between row activation, column access,
+//! and PIM command overheads are realistic — these are.
+
+/// DRAM timing constraints (cycles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DramTiming {
+    /// ACT to internal RD/WR delay.
+    pub t_rcd: u64,
+    /// PRE to ACT delay (row precharge).
+    pub t_rp: u64,
+    /// ACT to PRE minimum (row restore).
+    pub t_ras: u64,
+    /// Column-to-column delay — one column burst every tCCD.
+    pub t_ccd: u64,
+    /// RD to first data (CAS latency). Pipeline fill, paid once per burst
+    /// train, not per column.
+    pub t_cl: u64,
+    /// Write recovery.
+    pub t_wr: u64,
+    /// ACT-to-ACT across banks (rank-level).
+    pub t_rrd: u64,
+    /// Four-activate window.
+    pub t_faw: u64,
+    /// Cycles for one PIM command decode/issue from the memory controller
+    /// (custom commands in Table I ride the normal command bus).
+    pub t_cmd: u64,
+    /// Extra cycles to route one column of data over the channel-internal
+    /// bus between a bank and the GBUF (the shared-bus hop of §I).
+    pub t_bus_hop: u64,
+}
+
+impl DramTiming {
+    /// GDDR6 norms at the command clock (see module docs).
+    pub fn gddr6() -> Self {
+        Self {
+            t_rcd: 24,
+            t_rp: 24,
+            t_ras: 52,
+            t_ccd: 2,
+            t_cl: 24,
+            t_wr: 24,
+            t_rrd: 6,
+            t_faw: 32,
+            t_cmd: 1,
+            t_bus_hop: 2,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.t_ccd == 0 || self.t_rcd == 0 || self.t_rp == 0 {
+            return Err("core DRAM timings must be non-zero".into());
+        }
+        if self.t_ras < self.t_rcd {
+            return Err("tRAS must cover tRCD".into());
+        }
+        if self.t_faw < self.t_rrd {
+            return Err("tFAW must be at least tRRD".into());
+        }
+        Ok(())
+    }
+
+    /// Cycles to stream `cols` column accesses from one already-open row:
+    /// pipeline fill (tCL) then one burst per tCCD.
+    pub fn burst_cycles(&self, cols: u64) -> u64 {
+        if cols == 0 {
+            0
+        } else {
+            self.t_cl + cols * self.t_ccd
+        }
+    }
+
+    /// Cycles to open a row (PRE of the old one + ACT + tRCD). The engine
+    /// charges this whenever a transfer crosses a row boundary.
+    pub fn row_open_cycles(&self) -> u64 {
+        self.t_rp + self.t_rcd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gddr6_defaults_validate() {
+        DramTiming::gddr6().validate().unwrap();
+    }
+
+    #[test]
+    fn burst_cycles_scale_linearly_after_fill() {
+        let t = DramTiming::gddr6();
+        assert_eq!(t.burst_cycles(0), 0);
+        let one = t.burst_cycles(1);
+        let ten = t.burst_cycles(10);
+        assert_eq!(ten - one, 9 * t.t_ccd);
+    }
+
+    #[test]
+    fn invalid_timing_rejected() {
+        let mut t = DramTiming::gddr6();
+        t.t_ccd = 0;
+        assert!(t.validate().is_err());
+        let mut t2 = DramTiming::gddr6();
+        t2.t_ras = 1;
+        assert!(t2.validate().is_err());
+    }
+}

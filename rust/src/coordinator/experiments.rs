@@ -1,0 +1,257 @@
+//! The paper's experiments, one function per figure/statistic.
+//!
+//! Every function returns structured rows *and* can render the paper-style
+//! normalized table; the benches and the CLI call these, so "regenerate
+//! Fig. N" is a single entry point (see DESIGN.md §4 for the index).
+
+use super::{run_ppa_with, sweep, SweepPoint};
+use crate::config::{ArchConfig, System};
+use crate::dataflow::tiling::{fusion_cost, tile_segment, FusionCost};
+use crate::dataflow::CostModel;
+use crate::ppa::Normalized;
+use crate::util::size::fmt_bufcfg;
+use crate::util::table::{pct_or_x, Table};
+use crate::workload::Workload;
+use anyhow::Result;
+
+/// One plotted point: system + buffer config + workload, normalized to
+/// the AiM-like G2K_L0 baseline on the same workload.
+#[derive(Debug, Clone)]
+pub struct FigRow {
+    pub system: System,
+    pub gbuf: usize,
+    pub lbuf: usize,
+    pub workload: Workload,
+    pub norm: Normalized,
+}
+
+/// Shared driver: evaluate a (system × bufcfg × workload) grid, normalized
+/// per-workload to the baseline.
+pub fn grid(
+    systems: &[System],
+    bufcfgs: &[(usize, usize)],
+    workloads: &[Workload],
+    model: CostModel,
+) -> Result<Vec<FigRow>> {
+    let mut rows = Vec::new();
+    for &w in workloads {
+        let base = run_ppa_with(&ArchConfig::baseline(), w, model)?;
+        let points: Vec<SweepPoint> = systems
+            .iter()
+            .flat_map(|&s| {
+                bufcfgs.iter().map(move |&(g, l)| SweepPoint {
+                    cfg: ArchConfig::system(s, g, l),
+                    workload: w,
+                })
+            })
+            .collect();
+        let results = sweep(&points, model);
+        for (pt, res) in points.iter().zip(results) {
+            let r = res?;
+            rows.push(FigRow {
+                system: pt.cfg.system,
+                gbuf: pt.cfg.gbuf_bytes,
+                lbuf: pt.cfg.lbuf_bytes,
+                workload: w,
+                norm: r.normalize(&base),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Fig. 5: PPA vs GBUF size with no LBUF (§V-B).
+pub fn fig5(model: CostModel) -> Result<Vec<FigRow>> {
+    let gbufs = [2, 8, 16, 32, 64].map(|k| (k * 1024, 0));
+    grid(&System::ALL, &gbufs, &Workload::PAPER, model)
+}
+
+/// Fig. 6: PPA vs LBUF size with GBUF fixed at 2 KB (§V-C).
+pub fn fig6(model: CostModel) -> Result<Vec<FigRow>> {
+    let lbufs = [0usize, 64, 128, 256, 512].map(|l| (2048, l));
+    grid(&System::ALL, &lbufs, &Workload::PAPER, model)
+}
+
+/// Fig. 7: PPA with both buffers scaled, ResNet18_Full (§V-D).
+pub fn fig7(model: CostModel) -> Result<Vec<FigRow>> {
+    let cfgs = [
+        (2 * 1024, 0),
+        (8 * 1024, 128),
+        (16 * 1024, 256),
+        (32 * 1024, 256),
+        (64 * 1024, 256),
+        (64 * 1024, 100 * 1024),
+    ];
+    grid(&System::ALL, &cfgs, &[Workload::ResNet18Full], model)
+}
+
+/// Render rows the way the paper annotates its bars.
+pub fn render(rows: &[FigRow]) -> String {
+    let mut t = Table::new(vec!["system", "bufcfg", "workload", "cycles", "energy", "area"]);
+    for r in rows {
+        t.row(vec![
+            r.system.name().to_string(),
+            fmt_bufcfg(r.gbuf, r.lbuf),
+            r.workload.name().to_string(),
+            pct_or_x(r.norm.cycles),
+            pct_or_x(r.norm.energy),
+            pct_or_x(r.norm.area),
+        ]);
+    }
+    t.render()
+}
+
+/// §V-D / §I statistics: cost of fusing ResNet18's first 8 layers into 4
+/// tiles (paper: +18.2% replication, +17.3% redundant computation, 91.2%
+/// performance improvement), plus the measured cycle gain.
+pub struct TakeawayStats {
+    pub fusion: FusionCost,
+    /// Fused4 first8 cycles / AiM-like first8 cycles (well-buffered).
+    pub perf_improvement: f64,
+}
+
+pub fn vd_stats(model: CostModel) -> Result<TakeawayStats> {
+    let g = Workload::ResNet18First8.graph();
+    let tiles = tile_segment(&g, 1, 8, 2, 2);
+    let fusion = fusion_cost(&g, 1, 8, &tiles);
+
+    // "delivering a 91.2% performance improvement" — fused vs LbL on the
+    // same well-provisioned PIMfused hardware (G32K_L256).
+    let fused = run_ppa_with(&ArchConfig::system(System::Fused4, 32 * 1024, 256), Workload::ResNet18First8, model)?;
+    let mut lbl_cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+    lbl_cfg.dataflow = crate::config::Dataflow::LayerByLayer;
+    let lbl = run_ppa_with(&lbl_cfg, Workload::ResNet18First8, model)?;
+    Ok(TakeawayStats {
+        fusion,
+        perf_improvement: 1.0 - fused.cycles as f64 / lbl.cycles as f64,
+    })
+}
+
+/// The headline claim: Fused4 @ G32K_L256 vs AiM-like @ G2K_L0 on
+/// ResNet18_Full (paper: cycles 30.6%, energy 83.4%, area 76.5%).
+pub fn headline(model: CostModel) -> Result<Normalized> {
+    let base = run_ppa_with(&ArchConfig::baseline(), Workload::ResNet18Full, model)?;
+    let ours = run_ppa_with(
+        &ArchConfig::system(System::Fused4, 32 * 1024, 256),
+        Workload::ResNet18Full,
+        model,
+    )?;
+    Ok(ours.normalize(&base))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> CostModel {
+        CostModel::default()
+    }
+
+    #[test]
+    fn fig5_shapes_hold() {
+        let rows = fig5(m()).unwrap();
+        assert_eq!(rows.len(), 3 * 5 * 2);
+        let get = |s: System, g: usize, w: Workload| {
+            rows.iter()
+                .find(|r| r.system == s && r.gbuf == g * 1024 && r.workload == w)
+                .unwrap()
+                .norm
+        };
+        // Observation 1: AiM-like flat in GBUF.
+        let aim2 = get(System::AimLike, 2, Workload::ResNet18Full);
+        let aim64 = get(System::AimLike, 64, Workload::ResNet18Full);
+        assert!(aim2.cycles / aim64.cycles < 1.1);
+        // Observation 2: Fused16 gains substantially with GBUF.
+        let f2 = get(System::Fused16, 2, Workload::ResNet18First8);
+        let f32 = get(System::Fused16, 32, Workload::ResNet18First8);
+        assert!(f2.cycles / f32.cycles > 2.0, "{} vs {}", f2.cycles, f32.cycles);
+        // Observation 3: first8 gains exceed full gains at G32K.
+        let f32full = get(System::Fused16, 32, Workload::ResNet18Full);
+        assert!(f32.cycles < f32full.cycles);
+        // Observation 4: Fused4 area well below baseline.
+        let f4a = get(System::Fused4, 2, Workload::ResNet18Full).area;
+        assert!(f4a < 0.7, "Fused4 area {f4a}");
+    }
+
+    #[test]
+    fn fig6_shapes_hold() {
+        let rows = fig6(m()).unwrap();
+        let get = |s: System, l: usize, w: Workload| {
+            rows.iter()
+                .find(|r| r.system == s && r.lbuf == l && r.workload == w)
+                .unwrap()
+                .norm
+        };
+        // LBUF helps every system on first8...
+        for s in System::ALL {
+            let l0 = get(s, 0, Workload::ResNet18First8);
+            let l512 = get(s, 512, Workload::ResNet18First8);
+            assert!(l512.cycles < l0.cycles, "{s:?}");
+        }
+        // ...with saturation: 256 -> 512 adds much less than 0 -> 256.
+        let c0 = get(System::AimLike, 0, Workload::ResNet18First8).cycles;
+        let c256 = get(System::AimLike, 256, Workload::ResNet18First8).cycles;
+        let c512 = get(System::AimLike, 512, Workload::ResNet18First8).cycles;
+        assert!((c0 - c256) > 2.0 * (c256 - c512));
+        // Full-network gains are smaller than first8 gains (deep layers).
+        let full0 = get(System::AimLike, 0, Workload::ResNet18Full).cycles;
+        let full512 = get(System::AimLike, 512, Workload::ResNet18Full).cycles;
+        assert!(full512 / full0 > c512 / c0);
+    }
+
+    #[test]
+    fn fig7_pareto_between_fused4_and_fused16() {
+        let rows = fig7(m()).unwrap();
+        let get = |s: System, g: usize, l: usize| {
+            rows.iter()
+                .find(|r| r.system == s && r.gbuf == g && r.lbuf == l)
+                .unwrap()
+                .norm
+        };
+        // The paper's Pareto trade: Fused16 buys speed with area. At mid
+        // buffer sizes Fused16 is faster; Fused4 is always the area
+        // winner. (At G32K_L256 our model has Fused4 slightly ahead on
+        // cycles because its third fused kernel (stage 3) outweighs its
+        // broadcast serialization — a documented deviation, see
+        // EXPERIMENTS.md §Deviations.)
+        let f16_mid = get(System::Fused16, 8 * 1024, 128);
+        let f4_mid = get(System::Fused4, 8 * 1024, 128);
+        assert!(f16_mid.cycles < f4_mid.cycles);
+        let f16 = get(System::Fused16, 32 * 1024, 256);
+        let f4 = get(System::Fused4, 32 * 1024, 256);
+        assert!(f4.area < f16.area);
+        assert!(f4.cycles < 1.0 && f16.cycles < 1.0);
+        // Ideal LBUF: no real cycle gain over L256, but dramatic area.
+        let l256 = get(System::Fused4, 64 * 1024, 256);
+        let ideal = get(System::Fused4, 64 * 1024, 100 * 1024);
+        assert!(ideal.cycles <= l256.cycles);
+        assert!(ideal.area > 2.0 * l256.area);
+    }
+
+    #[test]
+    fn vd_stats_near_paper() {
+        let s = vd_stats(m()).unwrap();
+        // Paper: +18.2% replication, +17.3% redundant compute, 91.2% perf.
+        assert!((1.10..1.30).contains(&s.fusion.replication), "repl {}", s.fusion.replication);
+        assert!((1.08..1.28).contains(&s.fusion.redundant_macs), "macs {}", s.fusion.redundant_macs);
+        assert!(s.perf_improvement > 0.5, "perf improvement {}", s.perf_improvement);
+    }
+
+    #[test]
+    fn headline_direction_holds() {
+        // Fused4 @ G32K_L256 must beat the baseline on all three axes
+        // (paper: 30.6% / 83.4% / 76.5%).
+        let n = headline(m()).unwrap();
+        assert!(n.cycles < 1.0, "cycles {}", n.cycles);
+        assert!(n.energy < 1.0, "energy {}", n.energy);
+        assert!(n.area < 1.0, "area {}", n.area);
+    }
+
+    #[test]
+    fn render_produces_full_table() {
+        let rows = fig7(m()).unwrap();
+        let s = render(&rows);
+        assert!(s.contains("Fused4"));
+        assert!(s.contains("G32K_L256"));
+    }
+}

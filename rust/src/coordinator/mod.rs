@@ -1,0 +1,129 @@
+//! The L3 experiment coordinator: runs (architecture × workload) points
+//! through the full mapper → trace → simulator → energy pipeline, fans
+//! parameter sweeps out across OS threads, and regenerates the paper's
+//! figures (see [`experiments`]).
+
+pub mod experiments;
+
+use crate::config::ArchConfig;
+use crate::dataflow::{plan, CostModel};
+use crate::energy;
+use crate::ppa::PpaReport;
+use crate::sim::simulate;
+use crate::trace::gen::generate;
+use crate::workload::Workload;
+use anyhow::{Context, Result};
+
+/// Evaluate one configuration on one workload end-to-end.
+pub fn run_ppa(cfg: &ArchConfig, workload: Workload) -> Result<PpaReport> {
+    run_ppa_with(cfg, workload, CostModel::default())
+}
+
+/// [`run_ppa`] with an explicit cost model (used by calibration benches).
+pub fn run_ppa_with(cfg: &ArchConfig, workload: Workload, model: CostModel) -> Result<PpaReport> {
+    cfg.validate().map_err(anyhow::Error::msg).context("invalid architecture config")?;
+    let g = workload.graph();
+    g.validate().map_err(anyhow::Error::msg)?;
+    let p = plan(&g, cfg);
+    p.validate(&g).map_err(anyhow::Error::msg)?;
+    let trace = generate(&g, cfg, &p, model);
+    let sim = simulate(cfg, &trace);
+    let e = energy::energy(cfg, &sim.actions);
+    let a = energy::area(cfg);
+    Ok(PpaReport {
+        label: cfg.label(),
+        workload: workload.name().to_string(),
+        cycles: sim.cycles,
+        energy_pj: e.total_pj(),
+        area_mm2: a.total_mm2(),
+        sim,
+        energy: e,
+        area: a,
+    })
+}
+
+/// One point of a parameter sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub cfg: ArchConfig,
+    pub workload: Workload,
+}
+
+/// Run many points in parallel across OS threads (each point is
+/// independent; the pipeline is pure). Results keep input order.
+///
+/// Small grids run serially: one PPA point costs ~20 µs, so below ~64
+/// points thread spawn overhead dominates (EXPERIMENTS.md §Perf it. 2).
+pub fn sweep(points: &[SweepPoint], model: CostModel) -> Vec<Result<PpaReport>> {
+    if points.len() < 64 {
+        return points.iter().map(|p| run_ppa_with(&p.cfg, p.workload, model)).collect();
+    }
+    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let chunk = crate::util::ceil_div(points.len().max(1), n_threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = points
+            .chunks(chunk.max(1))
+            .map(|ps| {
+                s.spawn(move || {
+                    ps.iter()
+                        .map(|p| run_ppa_with(&p.cfg, p.workload, model))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("sweep worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::System;
+
+    #[test]
+    fn run_ppa_produces_consistent_report() {
+        let cfg = ArchConfig::baseline();
+        let r = run_ppa(&cfg, Workload::ResNet18First8).unwrap();
+        assert_eq!(r.label, "AiM-like/G2K_L0");
+        assert_eq!(r.workload, "ResNet18_First8Layers");
+        assert_eq!(r.cycles, r.sim.cycles);
+        assert!((r.energy_pj - r.energy.total_pj()).abs() < 1e-6);
+        assert!((r.area_mm2 - r.area.total_mm2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_config_is_rejected() {
+        let mut cfg = ArchConfig::baseline();
+        cfg.banks_per_pimcore = 3; // doesn't divide 16
+        assert!(run_ppa(&cfg, Workload::Fig1).is_err());
+    }
+
+    #[test]
+    fn sweep_matches_serial_and_keeps_order() {
+        let points: Vec<SweepPoint> = [2048usize, 8192, 32768]
+            .iter()
+            .flat_map(|&g| {
+                System::ALL.iter().map(move |&s| SweepPoint {
+                    cfg: ArchConfig::system(s, g, 128),
+                    workload: Workload::ResNet18First8,
+                })
+            })
+            .collect();
+        let par = sweep(&points, CostModel::default());
+        for (pt, res) in points.iter().zip(&par) {
+            let serial = run_ppa(&pt.cfg, pt.workload).unwrap();
+            let r = res.as_ref().unwrap();
+            assert_eq!(r.cycles, serial.cycles, "order/determinism broken at {}", r.label);
+            assert_eq!(r.label, pt.cfg.label());
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+        let a = run_ppa(&cfg, Workload::ResNet18Full).unwrap();
+        let b = run_ppa(&cfg, Workload::ResNet18Full).unwrap();
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy_pj, b.energy_pj);
+    }
+}

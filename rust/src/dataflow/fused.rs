@@ -1,0 +1,161 @@
+//! Fused-kernel partitioner: decides which contiguous layer ranges execute
+//! as fused kernels and which fall back to layer-by-layer (§IV, §V-A3).
+//!
+//! A node-id range `[start, end]` is a valid *fusion segment* when
+//! 1. no data edge crosses the cut after `end` other than `end`'s own
+//!    output (residual skips must close inside the segment), and
+//! 2. the segment output's spatial dims divide evenly by the tile grid
+//!    (the paper's "layers that cannot fit evenly into a 4×4 tiling
+//!    follow a layer-by-layer dataflow"), and
+//! 3. every layer in the segment is spatially tileable (no global
+//!    pooling / FC inside a fused kernel).
+//!
+//! The partitioner greedily grows segments up to [`MAX_FUSE_DEPTH`] layers,
+//! cutting at the deepest valid point. On ResNet18 this yields exactly the
+//! paper's kernels: 8+7 for Fused16 and 8+7+7 for Fused4.
+
+use super::{Plan, PlanStep};
+use crate::cnn::{Graph, NodeId, Op};
+
+/// Maximum layers per fused kernel. The paper's deepest kernel is 8
+/// layers (ResNet18 stem + stage 1).
+pub const MAX_FUSE_DEPTH: usize = 8;
+
+/// Can node `id`'s output be a segment boundary? True iff every edge that
+/// leaves `[start, id]` originates at `id` itself.
+pub fn is_cut_point(_g: &Graph, start: NodeId, id: NodeId, consumers: &[Vec<NodeId>]) -> bool {
+    for n in start..=id {
+        if n == id {
+            continue;
+        }
+        if consumers[n].iter().any(|&c| c > id) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Is every op in `[start, end]` spatially tileable?
+fn segment_tileable(g: &Graph, start: NodeId, end: NodeId) -> bool {
+    (start..=end).all(|i| {
+        matches!(
+            g.nodes[i].op,
+            Op::Conv { .. } | Op::Pool { .. } | Op::AddRelu
+        )
+    })
+}
+
+/// Full fusability check for `[start, end]` under a `ty × tx` output grid.
+pub fn segment_is_fusable(
+    g: &Graph,
+    start: NodeId,
+    end: NodeId,
+    ty: usize,
+    tx: usize,
+    consumers: &[Vec<NodeId>],
+) -> bool {
+    if !segment_tileable(g, start, end) {
+        return false;
+    }
+    if !is_cut_point(g, start, end, consumers) {
+        return false;
+    }
+    let s = g.nodes[end].shape;
+    // The paper requires even tiling of the kernel output.
+    s.h % ty == 0 && s.w % tx == 0 && s.h / ty >= 1 && s.w / tx >= 1 && (s.h / ty) * (s.w / tx) > 1
+}
+
+/// Greedy fused-kernel planner (see module docs).
+pub fn plan_fused(g: &Graph, ty: usize, tx: usize, max_depth: usize) -> Plan {
+    let consumers = g.consumers();
+    let mut steps = Vec::new();
+    let mut cur = 1usize; // node 0 is the input
+    let last = g.nodes.len() - 1;
+    while cur <= last {
+        // Deepest fusable cut within max_depth of cur.
+        let mut best: Option<NodeId> = None;
+        let hi = (cur + max_depth - 1).min(last);
+        for end in (cur..=hi).rev() {
+            if segment_is_fusable(g, cur, end, ty, tx, &consumers) {
+                best = Some(end);
+                break;
+            }
+        }
+        match best {
+            // A 1-layer "fused" segment is just layer-by-layer execution
+            // with a spatial partition; treat it as fused only if it spans
+            // 2+ layers (fusion exists to break *inter*-layer deps).
+            Some(end) if end > cur => {
+                steps.push(PlanStep::Fused { start: cur, end, grid: (ty, tx) });
+                cur = end + 1;
+            }
+            _ => {
+                steps.push(PlanStep::Lbl { node: cur });
+                cur += 1;
+            }
+        }
+    }
+    Plan { steps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet::{fig3_example, resnet18};
+    use crate::cnn::{Graph, Op, Shape};
+
+    #[test]
+    fn cut_points_respect_residual_skips() {
+        let g = resnet18();
+        let cons = g.consumers();
+        // L2 (s1b0.conv1, node 3): the maxpool->add skip crosses it.
+        assert!(!is_cut_point(&g, 1, 3, &cons));
+        // L4 (s1b0.add, node 5): all edges close.
+        assert!(is_cut_point(&g, 1, 5, &cons));
+        // L7 (s1b1.add, node 8): stage boundary.
+        assert!(is_cut_point(&g, 1, 8, &cons));
+    }
+
+    #[test]
+    fn fig3_fuses_two_kernels() {
+        // Fig. 3(c): L0-L4 then L5-L7 (+ downsample) as the second kernel.
+        let g = fig3_example();
+        let p = plan_fused(&g, 2, 2, MAX_FUSE_DEPTH);
+        p.validate(&g).unwrap();
+        assert_eq!(p.num_fused_kernels(), 2);
+    }
+
+    #[test]
+    fn gap_and_fc_never_fuse() {
+        let g = resnet18();
+        let p = plan_fused(&g, 2, 2, MAX_FUSE_DEPTH);
+        let fused = p.fused_nodes();
+        let gap = g.nodes.iter().find(|n| n.name == "gap").unwrap().id;
+        let fc = g.nodes.iter().find(|n| n.name == "fc").unwrap().id;
+        assert!(!fused.contains(&gap));
+        assert!(!fused.contains(&fc));
+    }
+
+    #[test]
+    fn uneven_maps_fall_back_to_lbl() {
+        // Stage 4 of ResNet18 produces 7x7 maps: odd, so a 2x2 grid cannot
+        // tile it evenly and the partitioner must not fuse it.
+        let g = resnet18();
+        let p = plan_fused(&g, 2, 2, MAX_FUSE_DEPTH);
+        let fused = p.fused_nodes();
+        assert!(!fused.iter().any(|&n| g.nodes[n].name.starts_with("s4")));
+    }
+
+    #[test]
+    fn single_conv_graph_stays_lbl() {
+        let mut g = Graph::new("one", Shape::new(8, 16, 16));
+        g.add(
+            "c",
+            Op::Conv { cout: 8, k: 3, stride: 1, pad: 1, bn: true, relu: true },
+            vec![0],
+        );
+        let p = plan_fused(&g, 2, 2, MAX_FUSE_DEPTH);
+        assert_eq!(p.num_fused_kernels(), 0);
+        assert_eq!(p.steps, vec![PlanStep::Lbl { node: 1 }]);
+    }
+}

@@ -1,0 +1,314 @@
+//! Dataflow mapping: how CNN layers are assigned to PIMcores and how data
+//! moves through LBUF/GBUF — the paper's §IV.
+//!
+//! * [`tiling`] — exact spatial-tile / halo math for fused kernels.
+//! * [`fused`] — the fused-kernel partitioner (which layer ranges fuse).
+//! * [`plan`] — builds a [`Plan`]: the per-layer strategy sequence that the
+//!   trace generator ([`crate::trace::gen`]) turns into Table-I commands.
+//!
+//! ## Cost model
+//!
+//! The paper evaluates *memory-system cycles* (Ramulator2's metric, §V-A1):
+//! the occupancy of banks, the shared internal bus, and the buffers.
+//! PIMcore arithmetic overlaps with operand streaming (near-bank MAC runs
+//! at bank-read bandwidth, as in AiM/Newton), so what the simulator times
+//! is data movement. How much data moves depends on *reuse*, and reuse
+//! depends on buffer sizes. The exact loop nests of the paper's in-house
+//! trace generator are not published, so [`CostModel`] expresses reuse as
+//! explicitly-documented saturating interpolations with named calibration
+//! constants; EXPERIMENTS.md records the calibrated values and the
+//! paper-vs-measured outcome for every figure. The *shapes* (who wins,
+//! where gains saturate, which buffer matters for which dataflow) emerge
+//! from the structure, not the constants.
+
+pub mod fused;
+pub mod tiling;
+
+use crate::cnn::{Graph, NodeId};
+use crate::config::{ArchConfig, Dataflow};
+
+/// One scheduling step of the hybrid PIMfused dataflow (Fig. 3(c)).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanStep {
+    /// Execute nodes `[start, end]` as one fused kernel, spatially tiled
+    /// `grid.0 × grid.1` across PIMcores.
+    Fused { start: NodeId, end: NodeId, grid: (usize, usize) },
+    /// Execute one layer in the conventional layer-by-layer dataflow
+    /// (cout-partitioned on PIMcores, or on the GBcore for non-MAC ops).
+    Lbl { node: NodeId },
+}
+
+/// The full execution plan for a workload on an architecture.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub steps: Vec<PlanStep>,
+}
+
+impl Plan {
+    /// Number of fused kernels in the plan.
+    pub fn num_fused_kernels(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s, PlanStep::Fused { .. }))
+            .count()
+    }
+
+    /// Node ids executed under the fused-layer dataflow.
+    pub fn fused_nodes(&self) -> Vec<NodeId> {
+        let mut v = Vec::new();
+        for s in &self.steps {
+            if let PlanStep::Fused { start, end, .. } = s {
+                v.extend(*start..=*end);
+            }
+        }
+        v
+    }
+
+    /// Every node id appears exactly once across the plan, in order.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        let mut expect = 1; // node 0 is the input
+        for s in &self.steps {
+            match *s {
+                PlanStep::Fused { start, end, grid } => {
+                    if start != expect {
+                        return Err(format!("fused step starts at {start}, expected {expect}"));
+                    }
+                    if end < start || end >= g.nodes.len() {
+                        return Err(format!("bad fused range [{start},{end}]"));
+                    }
+                    if grid.0 == 0 || grid.1 == 0 {
+                        return Err("empty tile grid".into());
+                    }
+                    expect = end + 1;
+                }
+                PlanStep::Lbl { node } => {
+                    if node != expect {
+                        return Err(format!("lbl step at {node}, expected {expect}"));
+                    }
+                    expect = node + 1;
+                }
+            }
+        }
+        if expect != g.nodes.len() {
+            return Err(format!("plan covers {} of {} nodes", expect - 1, g.nodes.len() - 1));
+        }
+        Ok(())
+    }
+}
+
+/// Build the execution plan for a graph on an architecture (§IV):
+/// layer-by-layer systems map every layer individually; PIMfused systems
+/// fuse maximal shallow segments (subject to the tile-divisibility rule of
+/// §V-A3) and fall back to layer-by-layer for the rest.
+pub fn plan(g: &Graph, cfg: &ArchConfig) -> Plan {
+    match cfg.dataflow {
+        Dataflow::LayerByLayer => Plan {
+            steps: (1..g.nodes.len()).map(|n| PlanStep::Lbl { node: n }).collect(),
+        },
+        Dataflow::PimFused { tiles_x, tiles_y } => {
+            fused::plan_fused(g, tiles_y, tiles_x, fused::MAX_FUSE_DEPTH)
+        }
+    }
+}
+
+/// Calibration constants for the reuse interpolations (see module docs).
+///
+/// The central quantity is the **DRAM-feed fraction** φ ∈ (0, 1]: the
+/// share of a PIMcore's operand feed that must come from its DRAM bank
+/// (occupying memory cycles) rather than from a buffer. φ follows a
+/// harmonic saturation `φ = 1/(1 + B/Bsat)` in the relevant buffer size
+/// `B` — reuse grows with buffer capacity and saturates, matching the
+/// paper's Takeaway 2 (small LBUFs capture most of the benefit) — with
+/// `Bsat` scaled by the layer's working set (deeper layers need
+/// proportionally more buffer, which is why ResNet18_Full improves less
+/// than First8Layers in Fig. 6). Calibrated values are recorded in
+/// EXPERIMENTS.md §Calibration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Implicit per-PIMcore register bytes available even with LBUF = 0
+    /// (AiM PIMcores have a small register file; FIM has 4-32 registers).
+    pub reg_bytes: usize,
+    /// LBUF bytes at which the layer-by-layer *weight feed* (per-pixel
+    /// GEMV streaming from the local bank, AiM-style) is half suppressed,
+    /// for a 64-output-channel layer.
+    pub lbl_feed_lsat: f64,
+    /// LBUF bytes at which the fused-dataflow *activation feed* is half
+    /// suppressed, for a 64-channel layer.
+    pub fused_act_lsat: f64,
+    /// GBUF bytes at which fused weight *re-broadcasts* (one pass per
+    /// output pixel at GBUF→0) are half suppressed.
+    pub fused_bcast_gsat: f64,
+    /// Fraction of a GBUF-broadcast byte's bus slot consumed when all
+    /// PIMcores snoop the broadcast (1.0 = full serial slot).
+    pub broadcast_pace: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            reg_bytes: 32,
+            lbl_feed_lsat: 96.0,
+            fused_act_lsat: 96.0,
+            fused_bcast_gsat: 1024.0,
+            broadcast_pace: 1.0,
+        }
+    }
+}
+
+impl CostModel {
+    fn phi(buf: usize, floor: usize, sat: f64) -> f64 {
+        let b = buf.max(floor) as f64;
+        1.0 / (1.0 + b / sat)
+    }
+
+    /// Layer-by-layer DRAM-feed fraction: the share of the per-MAC weight
+    /// feed that streams from the bank (row-buffer hits) instead of the
+    /// LBUF. `Lsat` scales with `cout/64`: deeper layers hold bigger
+    /// weight working sets, so the same LBUF suppresses less (Fig. 6's
+    /// smaller full-network gains).
+    pub fn lbl_feed_phi(&self, cout: usize, lbuf: usize) -> f64 {
+        let sat = self.lbl_feed_lsat * (cout as f64 / 64.0).max(0.25);
+        Self::phi(lbuf, self.reg_bytes, sat)
+    }
+
+    /// Fused-dataflow activation re-read fraction (per weight-broadcast
+    /// pass) surviving an LBUF of the given size.
+    pub fn fused_act_phi(&self, cin: usize, lbuf: usize) -> f64 {
+        let sat = self.fused_act_lsat * (cin as f64 / 64.0).max(0.25);
+        Self::phi(lbuf, self.reg_bytes, sat)
+    }
+
+    /// Fused weight broadcast restream factor: with tiny buffers, the
+    /// per-pixel GEMV structure re-broadcasts the layer's weights once per
+    /// output pixel. Residency on *either* side suppresses the repeats —
+    /// a weight-resident GBUF lets one broadcast serve many pixels
+    /// (Takeaway 1), and an activation-resident LBUF lets one broadcast
+    /// chunk be applied across the cached window before the next pass
+    /// (Takeaway 2) — hence the product of the two survival fractions,
+    /// which is also why combining both buffers beats growing either
+    /// alone (Takeaway 3).
+    ///
+    /// Both saturation points scale with the layer's working sets: the
+    /// GBUF must cover more of a bigger weight tensor (`w_bytes`, ref. the
+    /// 64→64 3×3 conv's 72 KB) and the LBUF a wider activation window
+    /// (`cin`), so deeper fused kernels benefit less — the effect that
+    /// keeps Fused4's third fused kernel (stage 3, 1.2 MB weights) from
+    /// being free and preserves Fused16's overall performance lead.
+    pub fn fused_bcast_restream(
+        &self,
+        tile_pixels: usize,
+        gbuf: usize,
+        lbuf: usize,
+        w_bytes: usize,
+        cin: usize,
+    ) -> f64 {
+        const W_REF: f64 = 73_728.0; // 64→64 3×3 conv weights, bytes
+        // Square-root scaling: a 16x weight tensor needs ~4x the GBUF for
+        // the same suppression (chunked residency is partially effective).
+        let gsat = self.fused_bcast_gsat * (w_bytes as f64 / W_REF).max(0.125).sqrt();
+        let g = 1.0 / (1.0 + gbuf.max(512) as f64 / gsat);
+        let lsat = self.fused_act_lsat * (cin as f64 / 64.0).max(0.25);
+        let l = 1.0 / (1.0 + lbuf.max(self.reg_bytes) as f64 / lsat);
+        1.0 + (tile_pixels.max(1) - 1) as f64 * g * l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet::{resnet18, resnet18_first8};
+    use crate::config::System;
+
+    #[test]
+    fn lbl_plan_covers_all_layers() {
+        let g = resnet18();
+        let cfg = ArchConfig::baseline();
+        let p = plan(&g, &cfg);
+        p.validate(&g).unwrap();
+        assert_eq!(p.num_fused_kernels(), 0);
+        assert_eq!(p.steps.len(), g.num_layers());
+    }
+
+    #[test]
+    fn fused4_plan_has_three_kernels_of_8_7_7() {
+        // §V-A3: Fused4 fuses 8 + 7 + 7 layers; the rest run layer-by-layer.
+        let g = resnet18();
+        let cfg = ArchConfig::system(System::Fused4, 2048, 0);
+        let p = plan(&g, &cfg);
+        p.validate(&g).unwrap();
+        let fused: Vec<(usize, usize)> = p
+            .steps
+            .iter()
+            .filter_map(|s| match *s {
+                PlanStep::Fused { start, end, .. } => Some((start, end)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fused, vec![(1, 8), (9, 15), (16, 22)]);
+    }
+
+    #[test]
+    fn fused16_plan_has_two_kernels_of_8_7() {
+        // §V-A3: Fused16 fuses 8 + 7 (stage 3's 14x14 maps don't tile 4x4
+        // evenly), the rest layer-by-layer.
+        let g = resnet18();
+        let cfg = ArchConfig::system(System::Fused16, 2048, 0);
+        let p = plan(&g, &cfg);
+        p.validate(&g).unwrap();
+        let fused: Vec<(usize, usize)> = p
+            .steps
+            .iter()
+            .filter_map(|s| match *s {
+                PlanStep::Fused { start, end, .. } => Some((start, end)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fused, vec![(1, 8), (9, 15)]);
+    }
+
+    #[test]
+    fn first8_fuses_entirely_on_both() {
+        let g = resnet18_first8();
+        for sys in [System::Fused16, System::Fused4] {
+            let cfg = ArchConfig::system(sys, 2048, 0);
+            let p = plan(&g, &cfg);
+            p.validate(&g).unwrap();
+            assert_eq!(p.num_fused_kernels(), 1);
+            assert_eq!(p.fused_nodes(), (1..=8).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn feed_fractions_monotone_in_buffers() {
+        let m = CostModel::default();
+        let p0 = m.lbl_feed_phi(64, 0);
+        let p256 = m.lbl_feed_phi(64, 256);
+        let p512 = m.lbl_feed_phi(64, 512);
+        assert!(p0 > p256 && p256 > p512 && p512 > 0.0);
+        assert!(p0 <= 1.0);
+        // Deeper layers (bigger cout) need more LBUF for the same cut.
+        assert!(m.lbl_feed_phi(512, 256) > m.lbl_feed_phi(64, 256));
+        // Fused activation re-reads saturate toward zero.
+        assert!(m.fused_act_phi(64, 0) > m.fused_act_phi(64, 256));
+        assert!(m.fused_act_phi(64, 100 * 1024) < 0.01);
+    }
+
+    #[test]
+    fn bcast_restream_shrinks_with_either_buffer() {
+        let m = CostModel::default();
+        let w = 73_728;
+        let r2k = m.fused_bcast_restream(196, 2048, 0, w, 64);
+        let r32k = m.fused_bcast_restream(196, 32 * 1024, 0, w, 64);
+        let r2k_l256 = m.fused_bcast_restream(196, 2048, 256, w, 64);
+        assert!(r2k > r32k && r32k >= 1.0);
+        assert!(r2k > r2k_l256, "LBUF must also suppress re-broadcasts");
+        // Bigger tiles (Fused4's 28x28 vs Fused16's 14x14) restream more:
+        // the "lower PIMcore parallelism" penalty of §V-B.
+        assert!(m.fused_bcast_restream(784, 2048, 0, w, 64) > r2k);
+        // Deeper layers (16x the weights, 4x the cin) keep restreaming at
+        // buffer sizes that fully suppress shallow layers.
+        let deep = m.fused_bcast_restream(49, 32 * 1024, 256, 16 * w, 256);
+        let shallow = m.fused_bcast_restream(49, 32 * 1024, 256, w, 64);
+        assert!(deep > shallow);
+    }
+}

@@ -1,0 +1,73 @@
+//! Analytic SRAM/register-file area & energy model @22nm — the stand-in
+//! for Accelergy's CACTI plugin (§V-A1).
+//!
+//! Two implementation styles compete and the cheaper wins, which
+//! reproduces the CACTI behaviour the paper leans on ("small SRAMs (<1KB)
+//! are dominated by peripheral circuitry"): tiny buffers synthesize as
+//! register files (low fixed cost, steep per-byte slope), larger ones as
+//! SRAM macros (peripheral floor, shallow slope).
+
+/// Area in mm² of a buffer of `bytes` capacity @22nm.
+pub fn sram_area_mm2(bytes: usize) -> f64 {
+    if bytes == 0 {
+        return 0.0;
+    }
+    let regfile = 0.0008 + 6.0e-6 * bytes as f64;
+    let sram = 0.009 + 1.12e-6 * bytes as f64;
+    regfile.min(sram)
+}
+
+/// Dynamic energy in pJ per byte accessed, for a buffer of `bytes`
+/// capacity. Grows weakly with capacity (longer bit/word lines).
+pub fn sram_energy_pj_per_byte(bytes: usize) -> f64 {
+    if bytes == 0 {
+        return 0.0;
+    }
+    0.35 + 0.12 * (bytes as f64 / 1024.0).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_cost_nothing() {
+        assert_eq!(sram_area_mm2(0), 0.0);
+        assert_eq!(sram_energy_pj_per_byte(0), 0.0);
+    }
+
+    #[test]
+    fn area_monotone_in_capacity() {
+        let sizes = [64usize, 128, 256, 512, 2048, 8192, 32768, 65536, 102400];
+        let areas: Vec<f64> = sizes.iter().map(|&b| sram_area_mm2(b)).collect();
+        for w in areas.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn small_buffers_are_peripheral_dominated() {
+        // Key takeaway 2's area premise: 64B -> 512B adds little area.
+        let a64 = sram_area_mm2(64);
+        let a512 = sram_area_mm2(512);
+        assert!(a512 / a64 < 4.0, "512B should be <4x the 64B area");
+        // ... while 100KB LBUFs are "dramatic" (paper §V-D).
+        assert!(sram_area_mm2(100 * 1024) / a512 > 25.0);
+    }
+
+    #[test]
+    fn style_crossover_exists() {
+        // Register-file style wins small, SRAM style wins large.
+        assert!(sram_area_mm2(64) < 0.0015);
+        let big = sram_area_mm2(64 * 1024);
+        assert!((0.05..0.12).contains(&big), "64KB = {big} mm2");
+    }
+
+    #[test]
+    fn energy_grows_weakly() {
+        let e64 = sram_energy_pj_per_byte(64);
+        let e64k = sram_energy_pj_per_byte(64 * 1024);
+        assert!(e64k > e64);
+        assert!(e64k / e64 < 5.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! # PIMfused — near-bank DRAM-PIM with fused-layer dataflow
+//!
+//! A from-scratch reproduction of *"PIMfused: Near-Bank DRAM-PIM with
+//! Fused-layer Dataflow for CNN Data Transfer Optimization"* (Yang et al.,
+//! cs.AR 2025): a GDDR6-AiM-like near-bank DRAM-PIM architecture, the
+//! PIMfused hybrid dataflow, and the PPA profiling framework (Ramulator2-
+//! like cycle simulator + Accelergy-like energy/area estimator) the paper
+//! uses to evaluate it.
+//!
+//! ## Crate layout (see DESIGN.md for the full inventory)
+//!
+//! * [`config`] — architecture geometry, buffer configs (`GmK_Ln`), DRAM
+//!   timing, the three named systems (AiM-like / Fused16 / Fused4).
+//! * [`cnn`] — CNN graph IR + ResNet18 builder (paper layer counting).
+//! * [`dataflow`] — layer-by-layer and fused-layer mappers, halo math.
+//! * [`trace`] — Table-I PIM command traces and their generator.
+//! * [`sim`] — trace-driven GDDR6 channel simulator (memory cycles).
+//! * [`energy`] — component-level energy/area models @22nm.
+//! * [`ppa`] — PPA reports and normalization against the baseline.
+//! * [`workload`] — the paper's workload scenarios.
+//! * [`coordinator`] — experiment registry + threaded sweep runner.
+//! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts.
+//! * [`validate`] — functional dataflow validator (real tensor movement).
+pub mod benchkit;
+pub mod cli;
+pub mod cnn;
+pub mod coordinator;
+pub mod dataflow;
+pub mod energy;
+pub mod ppa;
+pub mod workload;
+pub mod sim;
+pub mod trace;
+pub mod config;
+pub mod runtime;
+pub mod util;
+pub mod validate;

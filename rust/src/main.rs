@@ -1,0 +1,21 @@
+//! `pimfused` — the PIMfused reproduction CLI (leader entrypoint).
+//!
+//! Run `pimfused` with no arguments for usage. Typical session:
+//!
+//! ```text
+//! $ pimfused headline
+//! $ pimfused fig5
+//! $ pimfused simulate --config fused4:G32K_L256 --workload full
+//! $ pimfused trace --config fused16:G2K_L0 --workload fig3
+//! ```
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match pimfused::cli::parse_args(&argv).and_then(|a| pimfused::cli::run(&a)) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

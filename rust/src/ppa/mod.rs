@@ -1,0 +1,99 @@
+//! PPA (performance / power / area) reports and baseline normalization —
+//! what the paper's figures plot.
+
+use crate::energy::{AreaReport, EnergyReport};
+use crate::sim::SimResult;
+
+/// One system+workload evaluation.
+#[derive(Debug, Clone)]
+pub struct PpaReport {
+    /// Configuration label, e.g. `Fused4/G32K_L256`.
+    pub label: String,
+    /// Workload name.
+    pub workload: String,
+    /// Memory-system cycles (performance metric, §V-A1).
+    pub cycles: u64,
+    /// Total energy in pJ.
+    pub energy_pj: f64,
+    /// PIM-addition area in mm².
+    pub area_mm2: f64,
+    /// Full breakdowns for audits.
+    pub sim: SimResult,
+    pub energy: EnergyReport,
+    pub area: AreaReport,
+}
+
+/// PPA ratios relative to a baseline run (the paper normalizes everything
+/// to AiM-like @ G2K_L0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Normalized {
+    pub cycles: f64,
+    pub energy: f64,
+    pub area: f64,
+}
+
+impl PpaReport {
+    pub fn normalize(&self, base: &PpaReport) -> Normalized {
+        Normalized {
+            cycles: self.cycles as f64 / base.cycles as f64,
+            energy: self.energy_pj / base.energy_pj,
+            area: self.area_mm2 / base.area_mm2,
+        }
+    }
+}
+
+impl Normalized {
+    /// `cycles=30.6% energy=83.4% area=76.5%` in the paper's style.
+    pub fn render(&self) -> String {
+        use crate::util::table::pct_or_x;
+        format!(
+            "cycles={} energy={} area={}",
+            pct_or_x(self.cycles),
+            pct_or_x(self.energy),
+            pct_or_x(self.area)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::{AreaReport, EnergyReport};
+
+    fn dummy(cycles: u64, energy_pj: f64, area_mm2: f64) -> PpaReport {
+        PpaReport {
+            label: "x".into(),
+            workload: "w".into(),
+            cycles,
+            energy_pj,
+            area_mm2,
+            sim: SimResult::default(),
+            energy: EnergyReport { components: vec![] },
+            area: AreaReport {
+                pimcores_mm2: area_mm2,
+                gbcore_mm2: 0.0,
+                gbuf_mm2: 0.0,
+                lbufs_mm2: 0.0,
+                control_mm2: 0.0,
+            },
+        }
+    }
+
+    #[test]
+    fn normalization_is_ratio() {
+        let base = dummy(1000, 200.0, 0.4);
+        let ours = dummy(306, 166.8, 0.306);
+        let n = ours.normalize(&base);
+        assert!((n.cycles - 0.306).abs() < 1e-9);
+        assert!((n.energy - 0.834).abs() < 1e-9);
+        assert!((n.area - 0.765).abs() < 1e-9);
+        assert_eq!(n.render(), "cycles=30.6% energy=83.4% area=76.5%");
+    }
+
+    #[test]
+    fn over_unity_renders_as_multiplier() {
+        let base = dummy(100, 100.0, 1.0);
+        let worse = dummy(110, 100.0, 1.0);
+        assert!(worse.normalize(&base).render().starts_with("cycles=1.10x"));
+    }
+}

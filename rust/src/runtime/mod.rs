@@ -1,0 +1,131 @@
+//! PJRT runtime: load the JAX/Pallas AOT artifacts (`artifacts/*.hlo.txt`)
+//! and execute them from Rust — the L3↔L2 bridge of the three-layer stack.
+//!
+//! Python runs only at build time (`make artifacts`); this module makes
+//! the compiled computations callable from the coordinator's (host-side)
+//! golden-model checks. Interchange is HLO **text**, not serialized
+//! protos: jax ≥ 0.5 emits 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids
+//! (see /opt/xla-example/README.md and python/compile/aot.py).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client (one per process is plenty).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable plus its source path (for error reporting).
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(anyhow!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            ));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModel { exe, path: path.to_path_buf() })
+    }
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 output(s). The AOT pipeline lowers with `return_tuple=True`,
+    /// so results arrive as a tuple even for single outputs.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expect: usize = dims.iter().product();
+            if expect != data.len() {
+                return Err(anyhow!(
+                    "input length {} != shape {:?} product {}",
+                    data.len(),
+                    dims,
+                    expect
+                ));
+            }
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims_i64)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.path.display()))?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        outs.into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(anyhow::Error::from))
+            .collect()
+    }
+}
+
+/// Repository-relative artifacts directory (honors `PIMFUSED_ARTIFACTS`).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("PIMFUSED_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_hlo("/nonexistent/model.hlo.txt") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error for missing artifact"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected_before_execution() {
+        // Uses the reference example's HLO if present; otherwise skipped
+        // (the integration test in rust/tests covers the built artifacts).
+        let probe = artifacts_dir().join("tile_conv_bn_relu.hlo.txt");
+        if !probe.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let m = rt.load_hlo(&probe).unwrap();
+        let bad = m.run_f32(&[(&[0.0f32; 4], &[2usize, 3][..])]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn cpu_client_reports_platform() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+}

@@ -1,0 +1,130 @@
+//! Analytic expansion of byte streams into GDDR6 bank timing.
+//!
+//! The trace carries macro commands ("stream N bytes from this bank");
+//! this module converts them to cycles under the bank's timing state
+//! machine: a burst train of 32-B columns paced by `tCCD`, a pipeline
+//! fill of `tCL`, and a `tRP + tRCD` row-open penalty whenever the stream
+//! crosses a 2-KB row boundary (plus `tRAS` enforcement on short rows).
+
+use crate::config::{DramTiming, COL_BYTES, ROW_BYTES};
+
+/// Cycles for a PIMcore to stream `bytes` from/to its local bank(s)
+/// through the near-bank path: one column per cycle (the AiM internal
+/// datapath is not throttled by the external `tCCD`), with row-open
+/// penalties amortized per row.
+pub fn near_bank_stream_cycles(t: &DramTiming, bytes: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    let cols = bytes.div_ceil(COL_BYTES as u64);
+    let rows = bytes.div_ceil(ROW_BYTES as u64);
+    // Row open cost per row, with tRAS floor (a row must stay open tRAS).
+    let per_row_cols = (ROW_BYTES / COL_BYTES) as u64;
+    let open = t.row_open_cycles();
+    let row_cost = open.max(t.t_ras.saturating_sub(per_row_cols));
+    cols + rows * row_cost
+}
+
+/// Cycles for a sequential cross-bank transfer of `bytes` through the
+/// GBUF: bank-at-a-time, `tCCD` column pacing plus the shared-bus hop,
+/// one `tCL` fill per command, row opens per crossed row.
+pub fn cross_bank_stream_cycles(t: &DramTiming, bytes: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    let cols = bytes.div_ceil(COL_BYTES as u64);
+    let rows = bytes.div_ceil(ROW_BYTES as u64);
+    t.t_cl + cols * (t.t_ccd + t.t_bus_hop) + rows * t.row_open_cycles()
+}
+
+/// Cycles to broadcast `bytes` from the GBUF over the shared bus to all
+/// PIMcores (single-ported SRAM: one 32-B word per cycle).
+pub fn broadcast_cycles(bytes: u64) -> u64 {
+    bytes.div_ceil(COL_BYTES as u64)
+}
+
+/// Cycles for operand-feed bytes served by the already-open row buffer:
+/// one column per cycle, no row opens (the AiM MAC datapath consumes one
+/// 256-bit column per cycle from the open row).
+pub fn row_hit_stream_cycles(bytes: u64) -> u64 {
+    bytes.div_ceil(COL_BYTES as u64)
+}
+
+/// Cycles for the host to move `bytes` over the off-chip interface.
+/// GDDR6 at burst length 16 moves 32 B per two command cycles per device;
+/// we charge `tCCD` per column like an ordinary read/write stream.
+pub fn host_stream_cycles(t: &DramTiming, bytes: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    let cols = bytes.div_ceil(COL_BYTES as u64);
+    let rows = bytes.div_ceil(ROW_BYTES as u64);
+    t.t_cl + cols * t.t_ccd + rows * t.row_open_cycles()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> DramTiming {
+        DramTiming::gddr6()
+    }
+
+    #[test]
+    fn zero_bytes_zero_cycles() {
+        assert_eq!(near_bank_stream_cycles(&t(), 0), 0);
+        assert_eq!(cross_bank_stream_cycles(&t(), 0), 0);
+        assert_eq!(broadcast_cycles(0), 0);
+        assert_eq!(host_stream_cycles(&t(), 0), 0);
+    }
+
+    #[test]
+    fn near_bank_is_one_col_per_cycle_plus_rows() {
+        let tm = t();
+        // One full row: 64 columns + one row open (tRAS floor saturates).
+        let c = near_bank_stream_cycles(&tm, ROW_BYTES as u64);
+        assert_eq!(c, 64 + tm.row_open_cycles().max(tm.t_ras.saturating_sub(64)));
+    }
+
+    #[test]
+    fn cross_bank_slower_than_near_bank() {
+        let tm = t();
+        for bytes in [64u64, 2048, 1 << 20] {
+            assert!(
+                cross_bank_stream_cycles(&tm, bytes) > near_bank_stream_cycles(&tm, bytes),
+                "cross must cost more at {bytes}B"
+            );
+        }
+    }
+
+    #[test]
+    fn cycles_monotone_in_bytes() {
+        let tm = t();
+        let mut prev = 0;
+        for kb in 1..64u64 {
+            let c = cross_bank_stream_cycles(&tm, kb * 1024);
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn broadcast_is_bus_limited() {
+        assert_eq!(broadcast_cycles(32), 1);
+        assert_eq!(broadcast_cycles(33), 2);
+        assert_eq!(broadcast_cycles(1024), 32);
+    }
+
+    #[test]
+    fn large_stream_asymptote_matches_pacing() {
+        // For large transfers the per-column pacing dominates: near-bank
+        // ~1.75 cyc/col with row costs, cross-bank ~(tCCD+hop) + rows.
+        let tm = t();
+        let bytes = 32u64 << 20;
+        let cols = bytes / 32;
+        let near = near_bank_stream_cycles(&tm, bytes) as f64 / cols as f64;
+        let cross = cross_bank_stream_cycles(&tm, bytes) as f64 / cols as f64;
+        assert!((1.0..2.5).contains(&near), "near {near}");
+        assert!((4.0..6.0).contains(&cross), "cross {cross}");
+    }
+}

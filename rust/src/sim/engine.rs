@@ -1,0 +1,288 @@
+//! The trace-driven simulation engine: command stream → memory cycles +
+//! action counts.
+
+use super::dram;
+use super::ActionCounts;
+use crate::config::ArchConfig;
+use crate::trace::{Cmd, CmdKind, Trace};
+
+/// Result of simulating one trace on one architecture.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SimResult {
+    /// Memory-system cycles (the paper's performance metric).
+    pub cycles: u64,
+    /// Event tallies for the energy model.
+    pub actions: ActionCounts,
+    /// Cycles attributable to cross-bank (GBUF-routed) transfers — the
+    /// quantity PIMfused optimizes.
+    pub cross_bank_cycles: u64,
+    /// Cycles of parallel near-bank streaming (max-over-cores per cmd).
+    pub near_bank_cycles: u64,
+    /// Cycles of GBcore compute occupancy.
+    pub gbcore_cycles: u64,
+    /// Cycles of host interface occupancy.
+    pub host_cycles: u64,
+}
+
+/// Simulate a full trace.
+pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> SimResult {
+    let mut r = SimResult::default();
+    for cmd in &trace.cmds {
+        step(cfg, cmd, &mut r);
+    }
+    r
+}
+
+/// Advance the simulation by one command (exposed for incremental use by
+/// the validator and the property tests).
+pub fn step(cfg: &ArchConfig, cmd: &Cmd, r: &mut SimResult) {
+    let t = &cfg.timing;
+    // A multi-bank PIMcore stripes its streams across its banks (one
+    // 256-bit column per bank per cycle — the Fig. 2 4-bank PIMcore has a
+    // matching 64-lane datapath), so per-core transfer time divides by
+    // the bank fan-in.
+    let fanin = cfg.banks_per_pimcore as u64;
+    let a = &mut r.actions;
+    let dur = match &cmd.kind {
+        CmdKind::PimcoreCmp {
+            macs, eltwise, bank_read, bank_read_hit, bank_write, gbuf_stream, ..
+        } => {
+            a.pimcore_macs += macs.sum();
+            a.pimcore_eltwise += eltwise.sum();
+            a.near_col_read_bytes += bank_read.sum();
+            a.near_col_hit_bytes += bank_read_hit.sum();
+            a.near_col_write_bytes += bank_write.sum();
+            a.bus_bytes += gbuf_stream;
+            a.gbuf_read_bytes += gbuf_stream;
+            // Row activations track unique data only; hit traffic stays
+            // in the open row by construction.
+            a.row_activations += rows_touched(bank_read.sum() + bank_write.sum());
+            // Per-core streams run concurrently; the slowest core bounds.
+            // Row-hit feed moves one column per cycle with no row opens.
+            let core_max = (0..bank_read.len())
+                .map(|i| {
+                    dram::near_bank_stream_cycles(t, bank_read.get(i).div_ceil(fanin))
+                        + dram::near_bank_stream_cycles(t, bank_write.get(i).div_ceil(fanin))
+                        + dram::row_hit_stream_cycles(bank_read_hit.get(i).div_ceil(fanin))
+                })
+                .max()
+                .unwrap_or(0);
+            let bcast = dram::broadcast_cycles(*gbuf_stream);
+            let d = core_max.max(bcast) + t.t_cmd;
+            r.near_bank_cycles += core_max;
+            d
+        }
+        CmdKind::GbcoreCmp { eltwise, .. } => {
+            a.gbcore_eltwise += eltwise;
+            // GBcore streams operands through the GBUF port.
+            a.gbuf_read_bytes += eltwise * 2; // operand bytes (bf16)
+            let d = eltwise.div_ceil(cfg.gbcore_eltwise_per_cycle as u64) + t.t_cmd;
+            r.gbcore_cycles += d;
+            d
+        }
+        CmdKind::Bk2Lbuf { bytes } => {
+            a.near_col_read_bytes += bytes.sum();
+            a.lbuf_write_bytes += bytes.sum();
+            a.row_activations += rows_touched(bytes.sum());
+            let d = (0..bytes.len())
+                .map(|i| dram::near_bank_stream_cycles(t, bytes.get(i).div_ceil(fanin)))
+                .max()
+                .unwrap_or(0)
+                + t.t_cmd;
+            r.near_bank_cycles += d;
+            d
+        }
+        CmdKind::Lbuf2Bk { bytes } => {
+            a.near_col_write_bytes += bytes.sum();
+            a.lbuf_read_bytes += bytes.sum();
+            a.row_activations += rows_touched(bytes.sum());
+            let d = (0..bytes.len())
+                .map(|i| dram::near_bank_stream_cycles(t, bytes.get(i).div_ceil(fanin)))
+                .max()
+                .unwrap_or(0)
+                + t.t_cmd;
+            r.near_bank_cycles += d;
+            d
+        }
+        CmdKind::Bk2Gbuf { bytes } => {
+            a.cross_col_read_bytes += bytes;
+            a.gbuf_write_bytes += bytes;
+            a.bus_bytes += bytes;
+            a.row_activations += rows_touched(*bytes);
+            let d = dram::cross_bank_stream_cycles(t, *bytes) + t.t_cmd;
+            r.cross_bank_cycles += d;
+            d
+        }
+        CmdKind::Gbuf2Bk { bytes } => {
+            a.cross_col_write_bytes += bytes;
+            a.gbuf_read_bytes += bytes;
+            a.bus_bytes += bytes;
+            a.row_activations += rows_touched(*bytes);
+            let d = dram::cross_bank_stream_cycles(t, *bytes) + t.t_cmd;
+            r.cross_bank_cycles += d;
+            d
+        }
+        CmdKind::HostWrite { bytes } | CmdKind::HostRead { bytes } => {
+            a.host_bytes += bytes;
+            a.row_activations += rows_touched(*bytes);
+            let d = dram::host_stream_cycles(t, *bytes) + t.t_cmd;
+            r.host_cycles += d;
+            d
+        }
+    };
+    r.cycles += dur;
+}
+
+fn rows_touched(bytes: u64) -> u64 {
+    bytes.div_ceil(crate::config::ROW_BYTES as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet::{resnet18, resnet18_first8};
+    use crate::config::System;
+    use crate::dataflow::{plan, CostModel};
+    use crate::trace::gen::generate;
+    use crate::trace::{CmdKind, PerCore, Trace};
+    use crate::util::prop::{check_no_shrink, Gen};
+
+    fn run(sys: System, first8: bool, gbuf: usize, lbuf: usize) -> SimResult {
+        let g = if first8 { resnet18_first8() } else { resnet18() };
+        let cfg = ArchConfig::system(sys, gbuf, lbuf);
+        let p = plan(&g, &cfg);
+        let t = generate(&g, &cfg, &p, CostModel::default());
+        simulate(&cfg, &t)
+    }
+
+    #[test]
+    fn single_command_durations() {
+        let cfg = ArchConfig::baseline();
+        let mut r = SimResult::default();
+        let mut tr = Trace::default();
+        tr.push(0, CmdKind::Bk2Gbuf { bytes: 1024 });
+        step(&cfg, &tr.cmds[0], &mut r);
+        assert!(r.cycles > 0);
+        assert_eq!(r.cycles, r.cross_bank_cycles + 0);
+        assert_eq!(r.actions.cross_col_read_bytes, 1024);
+    }
+
+    #[test]
+    fn parallel_lbuf_fill_uses_max_not_sum() {
+        let cfg = ArchConfig::baseline();
+        let mut one = SimResult::default();
+        let mut tr1 = Trace::default();
+        tr1.push(0, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(1, 4096) });
+        step(&cfg, &tr1.cmds[0], &mut one);
+
+        let mut many = SimResult::default();
+        let mut tr16 = Trace::default();
+        tr16.push(0, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 4096) });
+        step(&cfg, &tr16.cmds[0], &mut many);
+
+        // 16 cores moving the same per-core volume take the same time.
+        assert_eq!(one.cycles, many.cycles);
+        // ... but touch 16x the data (energy).
+        assert_eq!(many.actions.near_col_read_bytes, 16 * one.actions.near_col_read_bytes);
+    }
+
+    #[test]
+    fn fused_beats_lbl_on_first8_cycles() {
+        // The headline direction: fused-layer dataflow cuts memory cycles
+        // on the shallow-layer workload.
+        let base = run(System::AimLike, true, 2048, 0);
+        let f16 = run(System::Fused16, true, 2048, 0);
+        assert!(
+            f16.cycles < base.cycles,
+            "fused {} !< lbl {}",
+            f16.cycles,
+            base.cycles
+        );
+    }
+
+    #[test]
+    fn lbuf_improves_all_systems_first8() {
+        for sys in System::ALL {
+            let l0 = run(sys, true, 2048, 0);
+            let l256 = run(sys, true, 2048, 256);
+            assert!(
+                l256.cycles < l0.cycles,
+                "{sys:?}: L256 {} !< L0 {}",
+                l256.cycles,
+                l0.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn gbuf_helps_fused_more_than_aim() {
+        // Takeaway 1: AiM-like is insensitive to GBUF; Fused16 gains.
+        let aim_g2 = run(System::AimLike, false, 2048, 0);
+        let aim_g32 = run(System::AimLike, false, 32 * 1024, 0);
+        let f_g2 = run(System::Fused16, false, 2048, 0);
+        let f_g32 = run(System::Fused16, false, 32 * 1024, 0);
+        let aim_gain = aim_g2.cycles as f64 / aim_g32.cycles as f64;
+        let fused_gain = f_g2.cycles as f64 / f_g32.cycles as f64;
+        assert!(fused_gain > aim_gain, "fused {fused_gain:.2} vs aim {aim_gain:.2}");
+        assert!(aim_gain < 1.1, "AiM-like should be nearly flat, got {aim_gain:.2}");
+    }
+
+    #[test]
+    fn cycles_monotone_in_buffer_sizes() {
+        check_no_shrink(
+            "cycles-monotone-buffers",
+            12,
+            |g: &mut Gen| {
+                let sys = *g.choose(&System::ALL);
+                let gb = *g.choose(&[2048usize, 8192, 32768]);
+                let lb = *g.choose(&[0usize, 128, 512]);
+                (sys, gb, lb)
+            },
+            |&(sys, gb, lb)| {
+                let small = run(sys, true, gb, lb);
+                let bigger_g = run(sys, true, gb * 2, lb);
+                let bigger_l = run(sys, true, gb, lb + 256);
+                bigger_g.cycles <= small.cycles && bigger_l.cycles <= small.cycles
+            },
+        );
+    }
+
+    #[test]
+    fn cycles_additive_over_trace_splits() {
+        // Property: simulating a trace equals summing its per-command steps.
+        let g = resnet18_first8();
+        let cfg = ArchConfig::system(System::Fused4, 8192, 128);
+        let p = plan(&g, &cfg);
+        let t = generate(&g, &cfg, &p, CostModel::default());
+        let whole = simulate(&cfg, &t);
+        let mut acc = SimResult::default();
+        for c in &t.cmds {
+            step(&cfg, c, &mut acc);
+        }
+        assert_eq!(whole, acc);
+    }
+
+    #[test]
+    fn fused_spends_fewer_absolute_cross_bank_cycles() {
+        // The paper's mechanism: fused kernels eliminate the per-layer
+        // activation gathers, so absolute cross-bank cycles drop (even if
+        // their *share* of the much-smaller total rises).
+        let base = run(System::AimLike, true, 2048, 256);
+        let f16 = run(System::Fused16, true, 2048, 256);
+        assert!(
+            f16.cross_bank_cycles < base.cross_bank_cycles,
+            "fused {} !< base {}",
+            f16.cross_bank_cycles,
+            base.cross_bank_cycles
+        );
+    }
+
+    #[test]
+    fn full_network_simulates_for_all_systems() {
+        for sys in System::ALL {
+            let r = run(sys, false, 2048, 0);
+            assert!(r.cycles > 100_000, "{sys:?} suspiciously fast: {}", r.cycles);
+            assert!(r.actions.pimcore_macs > 1_500_000_000);
+        }
+    }
+}

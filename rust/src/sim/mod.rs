@@ -1,0 +1,105 @@
+//! Trace-driven GDDR6-PIM channel simulator — the Ramulator2-extension box
+//! of the paper's profiling framework (Fig. 4, §V-A1).
+//!
+//! The engine walks a Table-I command trace and reports **memory-system
+//! cycles**: the occupancy of banks, the shared internal bus / GBUF port,
+//! and the PIM transfer paths. PIMcore arithmetic overlaps with operand
+//! streaming (near-bank MACs run at bank-read bandwidth, as in AiM [3,4]),
+//! so a command's duration is bounded by its *data movement*, not its
+//! FLOPs — matching the paper's use of Ramulator2 cycle counts as the
+//! performance metric while studying data-transfer optimization.
+//!
+//! Timing rules per command (see [`dram`] for the bank expansion):
+//!
+//! * near-bank streams (`PIMcore_CMP` operand reads/writes, `PIM_BK2LBUF`,
+//!   `PIM_LBUF2BK`) run on all PIMcores concurrently, one 32-B column per
+//!   cycle per core, paying a row-open penalty every crossed DRAM row;
+//! * cross-bank transfers (`PIM_BK2GBUF`, `PIM_GBUF2BK`) are sequential,
+//!   bank-at-a-time, and additionally pay the shared-bus hop per column
+//!   (the AiM GBUF conflict-avoidance rule, §III-B);
+//! * GBUF broadcasts share the single bus: one column per cycle, serial;
+//! * `GBcore_CMP` streams operands through the GBUF port (16 elem/cycle);
+//! * host I/O crosses the off-chip interface at the external burst rate.
+//!
+//! Commands execute back-to-back (the generator already folded reuse and
+//! overlap decisions into volumes); the engine also tallies
+//! [`ActionCounts`] for the energy model.
+
+pub mod dram;
+pub mod engine;
+
+pub use engine::{simulate, SimResult};
+
+/// Architecture-event tallies consumed by [`crate::energy`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ActionCounts {
+    /// DRAM row activations (ACT+PRE pairs).
+    pub row_activations: u64,
+    /// Near-bank column reads/writes, in bytes (PIMcore↔local bank).
+    pub near_col_read_bytes: u64,
+    pub near_col_write_bytes: u64,
+    /// Near-bank operand-feed bytes served by the open row buffer
+    /// (column-mux energy only; see DESIGN.md §5).
+    pub near_col_hit_bytes: u64,
+    /// Cross-bank column reads/writes, in bytes (bank↔GBUF via bus).
+    pub cross_col_read_bytes: u64,
+    pub cross_col_write_bytes: u64,
+    /// Bytes that crossed the shared internal bus (cross-bank + broadcast).
+    pub bus_bytes: u64,
+    /// GBUF SRAM accesses, bytes.
+    pub gbuf_read_bytes: u64,
+    pub gbuf_write_bytes: u64,
+    /// LBUF SRAM accesses, bytes.
+    pub lbuf_read_bytes: u64,
+    pub lbuf_write_bytes: u64,
+    /// Arithmetic.
+    pub pimcore_macs: u64,
+    pub pimcore_eltwise: u64,
+    pub gbcore_eltwise: u64,
+    /// Off-chip host interface bytes.
+    pub host_bytes: u64,
+}
+
+impl ActionCounts {
+    /// Element-wise accumulate (used when merging per-step results).
+    pub fn add(&mut self, o: &ActionCounts) {
+        self.row_activations += o.row_activations;
+        self.near_col_read_bytes += o.near_col_read_bytes;
+        self.near_col_write_bytes += o.near_col_write_bytes;
+        self.near_col_hit_bytes += o.near_col_hit_bytes;
+        self.cross_col_read_bytes += o.cross_col_read_bytes;
+        self.cross_col_write_bytes += o.cross_col_write_bytes;
+        self.bus_bytes += o.bus_bytes;
+        self.gbuf_read_bytes += o.gbuf_read_bytes;
+        self.gbuf_write_bytes += o.gbuf_write_bytes;
+        self.lbuf_read_bytes += o.lbuf_read_bytes;
+        self.lbuf_write_bytes += o.lbuf_write_bytes;
+        self.pimcore_macs += o.pimcore_macs;
+        self.pimcore_eltwise += o.pimcore_eltwise;
+        self.gbcore_eltwise += o.gbcore_eltwise;
+        self.host_bytes += o.host_bytes;
+    }
+
+    /// Total DRAM bytes touched (near + cross, read + write).
+    pub fn dram_bytes(&self) -> u64 {
+        self.near_col_read_bytes
+            + self.near_col_write_bytes
+            + self.cross_col_read_bytes
+            + self.cross_col_write_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn action_counts_add() {
+        let mut a = ActionCounts { row_activations: 1, pimcore_macs: 10, ..Default::default() };
+        let b = ActionCounts { row_activations: 2, bus_bytes: 5, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.row_activations, 3);
+        assert_eq!(a.pimcore_macs, 10);
+        assert_eq!(a.bus_bytes, 5);
+    }
+}

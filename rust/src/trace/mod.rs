@@ -1,0 +1,304 @@
+//! PIM command traces — the interface between the dataflow mapper and the
+//! cycle simulator, mirroring the paper's Table I custom commands.
+//!
+//! Commands here are *macro* commands: one `PIM_BK2GBUF` entry carries the
+//! total bytes of a logically-contiguous sequential transfer, which the
+//! engine expands analytically into column/row timing (the same
+//! information a per-column Ramulator2 trace would carry, ~10^6× smaller;
+//! DESIGN.md §5). Each command records the graph node it serves so traces
+//! can be audited per layer.
+
+pub mod gen;
+
+use crate::cnn::NodeId;
+
+/// Upper bound on PIMcores per channel (16 banks, 1-bank PIMcores).
+pub const MAX_CORES: usize = 16;
+
+/// A fixed-size per-PIMcore quantity (bytes, MACs, ...). Fixed array to
+/// keep the hot trace free of heap allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PerCore {
+    vals: [u64; MAX_CORES],
+    n: usize,
+}
+
+impl PerCore {
+    pub fn zero(n: usize) -> Self {
+        assert!(n >= 1 && n <= MAX_CORES);
+        Self { vals: [0; MAX_CORES], n }
+    }
+
+    /// Same value on every core (layer-by-layer symmetric partitions).
+    pub fn uniform(n: usize, v: u64) -> Self {
+        let mut pc = Self::zero(n);
+        pc.vals[..n].fill(v);
+        pc
+    }
+
+    pub fn from_slice(vs: &[u64]) -> Self {
+        let mut pc = Self::zero(vs.len());
+        pc.vals[..vs.len()].copy_from_slice(vs);
+        pc
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn get(&self, i: usize) -> u64 {
+        assert!(i < self.n);
+        self.vals[i]
+    }
+
+    pub fn set(&mut self, i: usize, v: u64) {
+        assert!(i < self.n);
+        self.vals[i] = v;
+    }
+
+    pub fn max(&self) -> u64 {
+        self.vals[..self.n].iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.vals[..self.n].iter().sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.vals[..self.n].iter().copied()
+    }
+}
+
+/// Execution flags of the compute commands (Table I note).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecFlags {
+    ConvBn,
+    ConvBnRelu,
+    Pool,
+    AddRelu,
+    /// FC runs on the MAC datapath like CONV (1×1 spatial).
+    Gemv,
+    /// Global average pool reduction.
+    Gap,
+}
+
+/// One PIM command (Table I) or host I/O event, with analytic volumes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CmdKind {
+    /// `PIMcore_CMP` — all PIMcores execute concurrently.
+    PimcoreCmp {
+        flags: ExecFlags,
+        /// MACs retired per core (max across cores bounds compute time).
+        macs: PerCore,
+        /// Element-wise ops per core (BN/ReLU/pool/add).
+        eltwise: PerCore,
+        /// First-touch bytes each core streams from its local bank(s):
+        /// full near-bank access energy, row activations charged.
+        bank_read: PerCore,
+        /// Operand-feed re-read bytes served by the open row buffer
+        /// (cheap column-mux energy, but they occupy the bank — this is
+        /// where buffer-starved configs burn their memory cycles).
+        bank_read_hit: PerCore,
+        /// Bytes each core writes back to its local bank(s).
+        bank_write: PerCore,
+        /// Bytes broadcast from the GBUF over the shared bus (serial,
+        /// snooped by all cores at once).
+        gbuf_stream: u64,
+    },
+    /// `GBcore_CMP` — pool/add/gap on the channel-level GBcore.
+    GbcoreCmp { flags: ExecFlags, eltwise: u64 },
+    /// `PIM_BK2LBUF` — parallel bank→LBUF fill (all cores at once).
+    Bk2Lbuf { bytes: PerCore },
+    /// `PIM_LBUF2BK` — parallel LBUF→bank spill.
+    Lbuf2Bk { bytes: PerCore },
+    /// `PIM_BK2GBUF` — sequential bank-at-a-time gather into the GBUF
+    /// (the cross-bank read path).
+    Bk2Gbuf { bytes: u64 },
+    /// `PIM_GBUF2BK` — sequential GBUF→bank scatter (cross-bank write).
+    Gbuf2Bk { bytes: u64 },
+    /// Host writes network input into banks over the channel interface.
+    HostWrite { bytes: u64 },
+    /// Host reads network output.
+    HostRead { bytes: u64 },
+}
+
+/// A command tagged with the graph node it serves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cmd {
+    pub node: NodeId,
+    pub kind: CmdKind,
+}
+
+/// A full workload trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub cmds: Vec<Cmd>,
+}
+
+/// Aggregate transfer statistics of a trace — the quantities Fig. 1
+/// contrasts (cross-bank bytes vs local reuse).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TraceStats {
+    pub num_cmds: usize,
+    /// Bytes moved over the shared bus through the GBUF, bank→GBUF.
+    pub cross_bank_read: u64,
+    /// Bytes moved GBUF→bank.
+    pub cross_bank_write: u64,
+    /// Bytes broadcast from GBUF to PIMcores during compute.
+    pub broadcast: u64,
+    /// Near-bank first-touch bytes read by PIMcores from local banks.
+    pub near_bank_read: u64,
+    /// Near-bank row-buffer-hit feed bytes (operand restreaming).
+    pub near_bank_hit: u64,
+    /// Near-bank bytes written.
+    pub near_bank_write: u64,
+    /// Parallel bank↔LBUF transfer bytes (sum over cores).
+    pub lbuf_fill: u64,
+    pub lbuf_spill: u64,
+    /// Host interface bytes.
+    pub host_bytes: u64,
+    /// Total MACs and element-wise ops (for energy).
+    pub total_macs: u64,
+    pub total_eltwise: u64,
+    pub gbcore_eltwise: u64,
+}
+
+impl TraceStats {
+    /// Total cross-bank transfer volume (the paper's headline quantity).
+    pub fn cross_bank_total(&self) -> u64 {
+        self.cross_bank_read + self.cross_bank_write
+    }
+}
+
+impl Trace {
+    pub fn push(&mut self, node: NodeId, kind: CmdKind) {
+        self.cmds.push(Cmd { node, kind });
+    }
+
+    pub fn stats(&self) -> TraceStats {
+        let mut s = TraceStats::default();
+        s.num_cmds = self.cmds.len();
+        for c in &self.cmds {
+            match &c.kind {
+                CmdKind::PimcoreCmp {
+                    macs, eltwise, bank_read, bank_read_hit, bank_write, gbuf_stream, ..
+                } => {
+                    s.total_macs += macs.sum();
+                    s.total_eltwise += eltwise.sum();
+                    s.near_bank_read += bank_read.sum();
+                    s.near_bank_hit += bank_read_hit.sum();
+                    s.near_bank_write += bank_write.sum();
+                    s.broadcast += gbuf_stream;
+                }
+                CmdKind::GbcoreCmp { eltwise, .. } => s.gbcore_eltwise += eltwise,
+                CmdKind::Bk2Lbuf { bytes } => s.lbuf_fill += bytes.sum(),
+                CmdKind::Lbuf2Bk { bytes } => s.lbuf_spill += bytes.sum(),
+                CmdKind::Bk2Gbuf { bytes } => s.cross_bank_read += bytes,
+                CmdKind::Gbuf2Bk { bytes } => s.cross_bank_write += bytes,
+                CmdKind::HostWrite { bytes } | CmdKind::HostRead { bytes } => {
+                    s.host_bytes += bytes
+                }
+            }
+        }
+        s
+    }
+
+    /// Pretty one-line-per-command dump (for `pimfused trace`).
+    pub fn dump(&self, limit: usize) -> String {
+        let mut out = String::new();
+        for (i, c) in self.cmds.iter().take(limit).enumerate() {
+            let desc = match &c.kind {
+                CmdKind::PimcoreCmp { flags, macs, bank_read, bank_read_hit, gbuf_stream, .. } => {
+                    format!(
+                        "PIMcore_CMP  {:?} macs(max)={} bank_rd(max)={}B hit(max)={}B bcast={}B",
+                        flags,
+                        macs.max(),
+                        bank_read.max(),
+                        bank_read_hit.max(),
+                        gbuf_stream
+                    )
+                }
+                CmdKind::GbcoreCmp { flags, eltwise } => {
+                    format!("GBcore_CMP   {flags:?} eltwise={eltwise}")
+                }
+                CmdKind::Bk2Lbuf { bytes } => {
+                    format!("PIM_BK2LBUF  {}B/core (parallel)", bytes.max())
+                }
+                CmdKind::Lbuf2Bk { bytes } => {
+                    format!("PIM_LBUF2BK  {}B/core (parallel)", bytes.max())
+                }
+                CmdKind::Bk2Gbuf { bytes } => format!("PIM_BK2GBUF  {bytes}B (sequential)"),
+                CmdKind::Gbuf2Bk { bytes } => format!("PIM_GBUF2BK  {bytes}B (sequential)"),
+                CmdKind::HostWrite { bytes } => format!("HOST_WRITE   {bytes}B"),
+                CmdKind::HostRead { bytes } => format!("HOST_READ    {bytes}B"),
+            };
+            out += &format!("{i:>5}  node {:>3}  {desc}\n", c.node);
+        }
+        if self.cmds.len() > limit {
+            out += &format!("  ... {} more commands\n", self.cmds.len() - limit);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percore_ops() {
+        let u = PerCore::uniform(4, 10);
+        assert_eq!(u.sum(), 40);
+        assert_eq!(u.max(), 10);
+        let mut v = PerCore::from_slice(&[1, 5, 3]);
+        assert_eq!(v.max(), 5);
+        v.set(0, 9);
+        assert_eq!(v.get(0), 9);
+        assert_eq!(v.len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percore_bounds_checked() {
+        let p = PerCore::zero(2);
+        p.get(2);
+    }
+
+    #[test]
+    fn stats_accumulate_by_kind() {
+        let mut t = Trace::default();
+        t.push(1, CmdKind::Bk2Gbuf { bytes: 100 });
+        t.push(1, CmdKind::Gbuf2Bk { bytes: 50 });
+        t.push(2, CmdKind::PimcoreCmp {
+            flags: ExecFlags::ConvBnRelu,
+            macs: PerCore::uniform(4, 1000),
+            eltwise: PerCore::uniform(4, 10),
+            bank_read: PerCore::uniform(4, 64),
+            bank_read_hit: PerCore::uniform(4, 16),
+            bank_write: PerCore::uniform(4, 32),
+            gbuf_stream: 256,
+        });
+        let s = t.stats();
+        assert_eq!(s.cross_bank_total(), 150);
+        assert_eq!(s.total_macs, 4000);
+        assert_eq!(s.near_bank_read, 256);
+        assert_eq!(s.near_bank_hit, 64);
+        assert_eq!(s.near_bank_write, 128);
+        assert_eq!(s.broadcast, 256);
+        assert_eq!(s.num_cmds, 3);
+    }
+
+    #[test]
+    fn dump_is_line_per_cmd() {
+        let mut t = Trace::default();
+        t.push(0, CmdKind::HostWrite { bytes: 42 });
+        t.push(1, CmdKind::Bk2Gbuf { bytes: 7 });
+        let d = t.dump(10);
+        assert_eq!(d.lines().count(), 2);
+        assert!(d.contains("PIM_BK2GBUF"));
+    }
+}

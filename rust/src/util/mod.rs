@@ -1,0 +1,63 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The build image is offline and the vendored crate set does not include
+//! `rand`, `proptest`, `prettytable` etc., so this module provides the tiny
+//! slices of those crates the project needs:
+//!
+//! * [`rng`] — a deterministic xorshift64* PRNG (seedable, `Copy`).
+//! * [`prop`] — a miniature property-testing framework used by the
+//!   invariant tests (see DESIGN.md §6.5).
+//! * [`size`] — parsing/formatting of human byte sizes (`"32K"`, `"256"`).
+//! * [`table`] — fixed-width ASCII table rendering for benches/CLI reports.
+
+pub mod prop;
+pub mod rng;
+pub mod size;
+pub mod table;
+
+/// Integer ceiling division. Used pervasively by the tiling math.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0, "ceil_div by zero");
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+/// Relative difference `|a-b| / max(|a|,|b|, eps)`; safe at zero.
+#[inline]
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let m = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() / m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_exact_and_inexact() {
+        assert_eq!(ceil_div(8, 4), 2);
+        assert_eq!(ceil_div(9, 4), 3);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(0, 4), 0);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(5, 4), 8);
+        assert_eq!(round_up(8, 4), 8);
+        assert_eq!(round_up(0, 4), 0);
+    }
+
+    #[test]
+    fn rel_diff_symmetry_and_zero() {
+        assert!(rel_diff(1.0, 1.0) < 1e-15);
+        assert!((rel_diff(2.0, 1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(rel_diff(0.0, 0.0), 0.0);
+    }
+}

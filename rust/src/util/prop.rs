@@ -1,0 +1,198 @@
+//! Miniature property-testing framework (offline substitute for `proptest`).
+//!
+//! The vendored crate set on this image has no `proptest`, so invariant
+//! tests use this instead: a [`Gen`] wraps the crate PRNG, strategies are
+//! plain closures `FnMut(&mut Gen) -> T`, and [`check`] runs a property over
+//! many generated cases with greedy input shrinking on failure (halving
+//! numeric fields via the case's [`Shrink`] impl when provided).
+//!
+//! Usage:
+//! ```no_run
+//! use pimfused::util::prop::{check, Gen};
+//! check("sum commutes", 256, |g: &mut Gen| (g.usize_in(0, 99), g.usize_in(0, 99)),
+//!       |&(a, b)| a + b == b + a);
+//! ```
+
+use super::rng::XorShift64;
+
+/// Case generator handed to strategies.
+pub struct Gen {
+    rng: XorShift64,
+    /// Grows over the run so later cases are "bigger", like proptest sizes.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: XorShift64::new(seed), size: 4 }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f32_signed(&mut self) -> f32 {
+        self.rng.next_f32_signed()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Pick one element of a slice uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len() - 1)]
+    }
+
+    /// A vector whose length scales with the current case size.
+    pub fn vec_of<T>(&mut self, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(0, self.size);
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Types that can propose strictly-smaller variants of themselves.
+pub trait Shrink: Sized {
+    /// Candidate smaller inputs, tried in order.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 { vec![] } else { vec![*self / 2, *self - 1] }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 { vec![] } else { vec![*self / 2, *self - 1] }
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1.clone()));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0.clone(), b));
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone, C: Shrink + Clone> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1.clone(), self.2.clone()));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0.clone(), b, self.2.clone()));
+        }
+        for c in self.2.shrink() {
+            out.push((self.0.clone(), self.1.clone(), c));
+        }
+        out
+    }
+}
+
+/// Run `property` over `cases` generated inputs; panic with the (shrunk)
+/// counterexample on failure. Deterministic: seeded from the test name.
+pub fn check<T, G, P>(name: &str, cases: usize, mut strategy: G, mut property: P)
+where
+    T: std::fmt::Debug + Clone + Shrink,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    let mut gen = Gen::new(seed);
+    for i in 0..cases {
+        gen.size = 4 + i * 64 / cases.max(1);
+        let case = strategy(&mut gen);
+        if !property(&case) {
+            let shrunk = shrink_loop(case, &mut property);
+            panic!("property '{name}' failed on case {i}; minimal counterexample: {shrunk:?}");
+        }
+    }
+}
+
+/// Like [`check`] but without shrinking, for non-`Shrink` case types.
+pub fn check_no_shrink<T, G, P>(name: &str, cases: usize, mut strategy: G, mut property: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    let mut gen = Gen::new(seed);
+    for i in 0..cases {
+        gen.size = 4 + i * 64 / cases.max(1);
+        let case = strategy(&mut gen);
+        assert!(
+            property(&case),
+            "property '{name}' failed on case {i}: {case:?}"
+        );
+    }
+}
+
+fn shrink_loop<T: Shrink + Clone + std::fmt::Debug>(
+    mut failing: T,
+    property: &mut impl FnMut(&T) -> bool,
+) -> T {
+    // Greedy descent: keep taking the first still-failing shrink candidate.
+    'outer: loop {
+        for cand in failing.shrink() {
+            if !property(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        return failing;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 128, |g| (g.usize_in(0, 1000), g.usize_in(0, 1000)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_reports_counterexample() {
+        check("always-small", 128, |g| g.usize_in(0, 1000), |&a| a < 10);
+    }
+
+    #[test]
+    fn shrink_finds_boundary() {
+        // The minimal failing usize for `a < 10` is 10 itself.
+        let shrunk = shrink_loop(977usize, &mut |&a| a < 10);
+        assert_eq!(shrunk, 10);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut g1 = Gen::new(9);
+        let mut g2 = Gen::new(9);
+        for _ in 0..50 {
+            assert_eq!(g1.u64(), g2.u64());
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Human byte-size parsing and formatting.
+//!
+//! The paper denotes buffer configurations as `GmK_Ln` — e.g. `G32K_L256`
+//! means GBUF = 32 KB, LBUF = 256 B. This module parses the size atoms
+//! (`32K`, `256`, `100K`, `2M`) and prints them back the same way.
+
+/// Parse a size like `"256"`, `"32K"`, `"2M"` into bytes.
+/// Suffixes are binary (K = 1024). Case-insensitive. A trailing `B` is
+/// accepted (`"64B"`, `"2KB"`).
+pub fn parse_bytes(s: &str) -> Result<usize, String> {
+    let t = s.trim().to_ascii_uppercase();
+    let t = t.strip_suffix('B').unwrap_or(&t);
+    if t.is_empty() {
+        return Err(format!("empty size string {s:?}"));
+    }
+    let (num, mult) = match t.chars().last().unwrap() {
+        'K' => (&t[..t.len() - 1], 1024usize),
+        'M' => (&t[..t.len() - 1], 1024 * 1024),
+        'G' => (&t[..t.len() - 1], 1024 * 1024 * 1024),
+        _ => (&t[..], 1),
+    };
+    let v: f64 = num
+        .parse()
+        .map_err(|_| format!("bad size number in {s:?}"))?;
+    if v < 0.0 {
+        return Err(format!("negative size {s:?}"));
+    }
+    Ok((v * mult as f64).round() as usize)
+}
+
+/// Format bytes compactly the way the paper writes them: `0`, `256`, `2K`,
+/// `100K`, `1M`. Exact multiples only get the suffix.
+pub fn fmt_bytes(b: usize) -> String {
+    const K: usize = 1024;
+    const M: usize = 1024 * 1024;
+    if b >= M && b % M == 0 {
+        format!("{}M", b / M)
+    } else if b >= K && b % K == 0 {
+        format!("{}K", b / K)
+    } else {
+        format!("{b}")
+    }
+}
+
+/// Render a buffer configuration in the paper's `GmK_Ln` notation.
+pub fn fmt_bufcfg(gbuf: usize, lbuf: usize) -> String {
+    format!("G{}_L{}", fmt_bytes(gbuf), fmt_bytes(lbuf))
+}
+
+/// Parse the paper's `GmK_Ln` notation back into `(gbuf, lbuf)` bytes.
+pub fn parse_bufcfg(s: &str) -> Result<(usize, usize), String> {
+    let t = s.trim();
+    let rest = t
+        .strip_prefix(['G', 'g'])
+        .ok_or_else(|| format!("bufcfg {s:?} must start with G"))?;
+    let (g, l) = rest
+        .split_once(['_', '-'])
+        .ok_or_else(|| format!("bufcfg {s:?} missing _L separator"))?;
+    let l = l
+        .strip_prefix(['L', 'l'])
+        .ok_or_else(|| format!("bufcfg {s:?} missing L part"))?;
+    Ok((parse_bytes(g)?, parse_bytes(l)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain_and_suffixed() {
+        assert_eq!(parse_bytes("256").unwrap(), 256);
+        assert_eq!(parse_bytes("2K").unwrap(), 2048);
+        assert_eq!(parse_bytes("2k").unwrap(), 2048);
+        assert_eq!(parse_bytes("2KB").unwrap(), 2048);
+        assert_eq!(parse_bytes("1M").unwrap(), 1 << 20);
+        assert_eq!(parse_bytes("0").unwrap(), 0);
+        assert_eq!(parse_bytes("1.5K").unwrap(), 1536);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("-4K").is_err());
+    }
+
+    #[test]
+    fn fmt_roundtrip() {
+        for b in [0usize, 1, 64, 256, 512, 2048, 100 * 1024, 1 << 20] {
+            assert_eq!(parse_bytes(&fmt_bytes(b)).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn bufcfg_notation_matches_paper() {
+        assert_eq!(fmt_bufcfg(32 * 1024, 256), "G32K_L256");
+        assert_eq!(fmt_bufcfg(2 * 1024, 0), "G2K_L0");
+        assert_eq!(fmt_bufcfg(64 * 1024, 100 * 1024), "G64K_L100K");
+        assert_eq!(parse_bufcfg("G32K_L256").unwrap(), (32 * 1024, 256));
+        assert_eq!(parse_bufcfg("g2k_l0").unwrap(), (2048, 0));
+        assert!(parse_bufcfg("32K_L256").is_err());
+        assert!(parse_bufcfg("G32K").is_err());
+    }
+}

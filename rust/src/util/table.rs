@@ -1,0 +1,126 @@
+//! Fixed-width ASCII table rendering for CLI reports and benches.
+//!
+//! The benches regenerate the paper's figures as text tables (one row per
+//! plotted point), so a small dependable renderer beats pulling in a crate.
+
+/// A simple left-aligned-first-column, right-aligned-rest table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    s += &format!(" {:<width$} |", c, width = w[i]);
+                } else {
+                    s += &format!(" {:>width$} |", c, width = w[i]);
+                }
+            }
+            s.push('\n');
+            s
+        };
+        let rule = {
+            let mut s = String::from("+");
+            for wi in &w {
+                s += &"-".repeat(wi + 2);
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        out += &rule;
+        out += &fmt_row(&self.header, &w);
+        out += &rule;
+        for r in &self.rows {
+            out += &fmt_row(r, &w);
+        }
+        out += &rule;
+        out
+    }
+}
+
+/// Format a ratio as the paper does: `30.6%` (one decimal).
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Format a ratio as a multiplier when >= 1 (`1.1x`), else percent.
+pub fn pct_or_x(x: f64) -> String {
+    if x >= 1.0 {
+        format!("{x:.2}x")
+    } else {
+        pct(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["cfg", "cycles"]);
+        t.row(vec!["G2K_L0", "100.0%"]);
+        t.row(vec!["G32K_L256", "30.6%"]);
+        let s = t.render();
+        assert!(s.contains("| G2K_L0    |"));
+        assert!(s.contains("|  30.6% |"));
+        // All lines equal width.
+        let widths: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.306), "30.6%");
+        assert_eq!(pct_or_x(1.1), "1.10x");
+        assert_eq!(pct_or_x(0.834), "83.4%");
+    }
+}

@@ -1,0 +1,337 @@
+//! A minimal CHW f32 tensor with the CNN ops the validator needs.
+//!
+//! Operation order per output element is fixed (channel-major, then
+//! `ky`, `kx`), so full-map and region-wise execution produce *identical*
+//! f32 results — the property the dataflow validator relies on for its
+//! bit-exact comparison.
+
+use crate::dataflow::tiling::Rect;
+
+/// Channel-major (c, h, w) tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    c: usize,
+    h: usize,
+    w: usize,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w, data: vec![0.0; c * h * w] }
+    }
+
+    pub fn empty() -> Self {
+        Self { c: 0, h: 0, w: 0, data: vec![] }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn from_fn(c: usize, h: usize, w: usize, mut f: impl FnMut(usize, usize, usize) -> f32) -> Self {
+        let mut t = Self::zeros(c, h, w);
+        for ci in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    let v = f(ci, y, x);
+                    t.data[(ci * h + y) * w + x] = v;
+                }
+            }
+        }
+        t
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.c, self.h, self.w)
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f32 {
+        debug_assert!(c < self.c && y < self.h && x < self.w);
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        self.data[(c * self.h + y) * self.w + x] = v;
+    }
+
+    /// Copy out a spatial rectangle (all channels).
+    pub fn slice(&self, r: &Rect) -> Tensor {
+        let mut out = Tensor::zeros(self.c, r.h(), r.w());
+        for c in 0..self.c {
+            for y in 0..r.h() {
+                for x in 0..r.w() {
+                    out.set(c, y, x, self.at(c, r.y0 + y, r.x0 + x));
+                }
+            }
+        }
+        out
+    }
+
+    /// Slice `want` (absolute coords) out of a tensor that itself covers
+    /// the absolute region `have`.
+    pub fn slice_rel(&self, have: &Rect, want: &Rect) -> Tensor {
+        assert!(have.contains(want), "want {want:?} outside have {have:?}");
+        let rel = Rect::new(want.x0 - have.x0, want.y0 - have.y0, want.x1 - have.x0, want.y1 - have.y0);
+        self.slice(&rel)
+    }
+
+    /// Paste a tile (covering absolute region `r`) into this full map.
+    pub fn paste(&mut self, r: &Rect, tile: &Tensor) {
+        assert_eq!(tile.dims(), (self.c, r.h(), r.w()));
+        for c in 0..self.c {
+            for y in 0..r.h() {
+                for x in 0..r.w() {
+                    self.set(c, r.y0 + y, r.x0 + x, tile.at(c, y, x));
+                }
+            }
+        }
+    }
+
+    /// Plain conv2d producing the full output map. Weights are
+    /// `[cout][cin][k][k]` row-major; accumulation order is (cin, ky, kx).
+    pub fn conv2d(&self, w: &[f32], cout: usize, k: usize, stride: usize, pad: usize, relu: bool) -> Tensor {
+        let oh = (self.h + 2 * pad - k) / stride + 1;
+        let ow = (self.w + 2 * pad - k) / stride + 1;
+        self.conv2d_region(w, cout, k, stride, pad, relu, Rect::full(self.h, self.w), Rect::full(oh, ow))
+    }
+
+    /// Conv2d over an output region, reading from a tensor that covers the
+    /// absolute input region `in_rect`. Out-of-region (but in-map) taps
+    /// must not occur — the tiling demands guarantee the halo is present;
+    /// taps outside the *feature map* are zero padding as usual.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_region(
+        &self,
+        w: &[f32],
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+        in_rect: Rect,
+        out_region: Rect,
+    ) -> Tensor {
+        let cin = self.c;
+        assert_eq!(w.len(), cout * cin * k * k, "weight count mismatch");
+        let mut out = Tensor::zeros(cout, out_region.h(), out_region.w());
+        // Absolute input map extent (for zero padding): reconstructed
+        // from the slice position — anything < 0 or >= map edge is pad.
+        for co in 0..cout {
+            for oy in out_region.y0..out_region.y1 {
+                for ox in out_region.x0..out_region.x1 {
+                    let mut acc = 0.0f32;
+                    for ci in 0..cin {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = (oy * stride + ky) as isize - pad as isize;
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if iy < 0 || ix < 0 {
+                                    continue; // zero pad
+                                }
+                                let (iy, ix) = (iy as usize, ix as usize);
+                                // Taps beyond the demanded rect only occur
+                                // past the map edge (clamped demand) —
+                                // treat as pad.
+                                if iy < in_rect.y0 || iy >= in_rect.y1 || ix < in_rect.x0 || ix >= in_rect.x1 {
+                                    continue;
+                                }
+                                let v = self.at(ci, iy - in_rect.y0, ix - in_rect.x0);
+                                acc += v * w[((co * cin + ci) * k + ky) * k + kx];
+                            }
+                        }
+                    }
+                    if relu && acc < 0.0 {
+                        acc = 0.0;
+                    }
+                    out.set(co, oy - out_region.y0, ox - out_region.x0, acc);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn maxpool(&self, k: usize, stride: usize, pad: usize) -> Tensor {
+        let oh = (self.h + 2 * pad - k) / stride + 1;
+        let ow = (self.w + 2 * pad - k) / stride + 1;
+        self.maxpool_region(k, stride, pad, Rect::full(self.h, self.w), Rect::full(oh, ow))
+    }
+
+    pub fn maxpool_region(&self, k: usize, stride: usize, pad: usize, in_rect: Rect, out_region: Rect) -> Tensor {
+        self.pool_region(k, stride, pad, in_rect, out_region, true)
+    }
+
+    pub fn avgpool(&self, k: usize, stride: usize, pad: usize) -> Tensor {
+        let oh = (self.h + 2 * pad - k) / stride + 1;
+        let ow = (self.w + 2 * pad - k) / stride + 1;
+        self.avgpool_region(k, stride, pad, Rect::full(self.h, self.w), Rect::full(oh, ow))
+    }
+
+    pub fn avgpool_region(&self, k: usize, stride: usize, pad: usize, in_rect: Rect, out_region: Rect) -> Tensor {
+        self.pool_region(k, stride, pad, in_rect, out_region, false)
+    }
+
+    fn pool_region(&self, k: usize, stride: usize, pad: usize, in_rect: Rect, out_region: Rect, is_max: bool) -> Tensor {
+        let mut out = Tensor::zeros(self.c, out_region.h(), out_region.w());
+        for c in 0..self.c {
+            for oy in out_region.y0..out_region.y1 {
+                for ox in out_region.x0..out_region.x1 {
+                    let mut m = f32::NEG_INFINITY;
+                    let mut s = 0.0f32;
+                    let mut cnt = 0usize;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if iy < 0 || ix < 0 {
+                                continue;
+                            }
+                            let (iy, ix) = (iy as usize, ix as usize);
+                            if iy < in_rect.y0 || iy >= in_rect.y1 || ix < in_rect.x0 || ix >= in_rect.x1 {
+                                continue;
+                            }
+                            let v = self.at(c, iy - in_rect.y0, ix - in_rect.x0);
+                            m = m.max(v);
+                            s += v;
+                            cnt += 1;
+                        }
+                    }
+                    let v = if is_max {
+                        if cnt == 0 { 0.0 } else { m }
+                    } else if cnt == 0 {
+                        0.0
+                    } else {
+                        s / (k * k) as f32 // count_include_pad, torch default
+                    };
+                    out.set(c, oy - out_region.y0, ox - out_region.x0, v);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn global_avg(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.c, 1, 1);
+        let n = (self.h * self.w) as f32;
+        for c in 0..self.c {
+            let mut s = 0.0;
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    s += self.at(c, y, x);
+                }
+            }
+            out.set(c, 0, 0, s / n);
+        }
+        out
+    }
+
+    pub fn add_relu(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.dims(), other.dims());
+        let mut out = Tensor::zeros(self.c, self.h, self.w);
+        for (o, (a, b)) in out.data.iter_mut().zip(self.data.iter().zip(other.data.iter())) {
+            *o = (a + b).max(0.0);
+        }
+        out
+    }
+
+    /// Fully connected over a flattened (c,1,1) input. Weights `[cout][cin]`.
+    pub fn fc(&self, w: &[f32], cout: usize) -> Tensor {
+        let cin = self.c * self.h * self.w;
+        assert_eq!(w.len(), cout * cin);
+        let mut out = Tensor::zeros(cout, 1, 1);
+        for co in 0..cout {
+            let mut acc = 0.0f32;
+            for ci in 0..cin {
+                acc += self.data[ci] * w[co * cin + ci];
+            }
+            out.set(co, 0, 0, acc);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights reproduces the input channel.
+        let t = Tensor::from_fn(2, 3, 3, |c, y, x| (c * 9 + y * 3 + x) as f32);
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // cout=2 cin=2 k=1: identity
+        let o = t.conv2d(&w, 2, 1, 1, 0, false);
+        assert_eq!(o.data(), t.data());
+    }
+
+    #[test]
+    fn conv_known_answer() {
+        // 3x3 all-ones kernel, 1 channel: output = window sums.
+        let t = Tensor::from_fn(1, 3, 3, |_, y, x| (y * 3 + x) as f32);
+        let w = vec![1.0; 9];
+        let o = t.conv2d(&w, 1, 3, 1, 0, false);
+        assert_eq!(o.dims(), (1, 1, 1));
+        assert_eq!(o.at(0, 0, 0), 36.0); // 0+1+..+8
+    }
+
+    #[test]
+    fn conv_region_matches_full() {
+        let t = Tensor::from_fn(3, 8, 8, |c, y, x| ((c + 2 * y + 3 * x) % 7) as f32 - 3.0);
+        let w: Vec<f32> = (0..4 * 3 * 9).map(|i| ((i % 5) as f32 - 2.0) * 0.1).collect();
+        let full = t.conv2d(&w, 4, 3, 1, 1, true);
+        // Compute an interior region from its demanded slice only.
+        let out_region = Rect::new(2, 3, 6, 7);
+        let in_demand = out_region.window_demand(3, 1, 1, 8, 8);
+        let sliced = t.slice(&in_demand);
+        let region = sliced.conv2d_region(&w, 4, 3, 1, 1, true, in_demand, out_region);
+        let expect = full.slice(&out_region);
+        assert_eq!(region.data(), expect.data());
+    }
+
+    #[test]
+    fn maxpool_region_matches_full() {
+        let t = Tensor::from_fn(2, 8, 8, |c, y, x| ((3 * c + y * x) % 11) as f32);
+        let full = t.maxpool(3, 2, 1);
+        let out_region = Rect::new(0, 0, 2, 4);
+        let in_demand = out_region.window_demand(3, 2, 1, 8, 8);
+        let region = t.slice(&in_demand).maxpool_region(3, 2, 1, in_demand, out_region);
+        assert_eq!(region.data(), full.slice(&out_region).data());
+    }
+
+    #[test]
+    fn paste_and_slice_roundtrip() {
+        let t = Tensor::from_fn(2, 6, 6, |c, y, x| (c * 36 + y * 6 + x) as f32);
+        let r = Rect::new(1, 2, 4, 5);
+        let s = t.slice(&r);
+        let mut copy = Tensor::zeros(2, 6, 6);
+        copy.paste(&r, &s);
+        assert_eq!(copy.slice(&r).data(), s.data());
+    }
+
+    #[test]
+    fn add_relu_clamps() {
+        let a = Tensor::from_fn(1, 1, 2, |_, _, x| if x == 0 { -2.0 } else { 1.0 });
+        let b = Tensor::from_fn(1, 1, 2, |_, _, _| 0.5);
+        let o = a.add_relu(&b);
+        assert_eq!(o.data(), &[0.0, 1.5]);
+    }
+
+    #[test]
+    fn global_avg_is_mean() {
+        let t = Tensor::from_fn(1, 2, 2, |_, y, x| (y * 2 + x) as f32);
+        assert_eq!(t.global_avg().at(0, 0, 0), 1.5);
+    }
+
+    #[test]
+    fn fc_known_answer() {
+        let t = Tensor::from_fn(3, 1, 1, |c, _, _| c as f32 + 1.0); // [1,2,3]
+        let w = vec![1.0, 1.0, 1.0, 0.0, 1.0, 0.0]; // rows: sum, pick-2nd
+        let o = t.fc(&w, 2);
+        assert_eq!(o.data(), &[6.0, 2.0]);
+    }
+}

@@ -1,0 +1,82 @@
+//! Workload scenarios evaluated by the paper (§V-A2).
+
+use crate::cnn::resnet::{fig1_example, fig3_example, resnet18, resnet18_at, resnet18_first8};
+use crate::cnn::Graph;
+
+/// Benchmark workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// End-to-end ResNet18 at 224×224 (`ResNet18_Full`).
+    ResNet18Full,
+    /// First 8 layers only (`ResNet18_First8Layers`): quantifies the pure
+    /// fused-vs-layer-by-layer contrast.
+    ResNet18First8,
+    /// The Fig. 3(a) walkthrough graph.
+    Fig3,
+    /// The Fig. 1 two-conv motivating example.
+    Fig1,
+    /// Reduced-resolution ResNet18 for fast tests / the e2e example.
+    ResNet18Small,
+}
+
+impl Workload {
+    pub const PAPER: [Workload; 2] = [Workload::ResNet18First8, Workload::ResNet18Full];
+
+    pub fn graph(&self) -> Graph {
+        match self {
+            Workload::ResNet18Full => resnet18(),
+            Workload::ResNet18First8 => resnet18_first8(),
+            Workload::Fig3 => fig3_example(),
+            Workload::Fig1 => fig1_example(),
+            Workload::ResNet18Small => resnet18_at(64),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::ResNet18Full => "ResNet18_Full",
+            Workload::ResNet18First8 => "ResNet18_First8Layers",
+            Workload::Fig3 => "Fig3_Example",
+            Workload::Fig1 => "Fig1_Example",
+            Workload::ResNet18Small => "ResNet18_64px",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" | "resnet18" | "resnet18_full" => Ok(Workload::ResNet18Full),
+            "first8" | "resnet18_first8" | "resnet18_first8layers" => Ok(Workload::ResNet18First8),
+            "fig3" => Ok(Workload::Fig3),
+            "fig1" => Ok(Workload::Fig1),
+            "small" | "resnet18_small" => Ok(Workload::ResNet18Small),
+            _ => Err(format!("unknown workload {s:?} (full|first8|fig1|fig3|small)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_workloads_build_valid_graphs() {
+        for w in [
+            Workload::ResNet18Full,
+            Workload::ResNet18First8,
+            Workload::Fig3,
+            Workload::Fig1,
+            Workload::ResNet18Small,
+        ] {
+            let g = w.graph();
+            g.validate().unwrap();
+            assert!(g.num_layers() >= 2, "{} too small", w.name());
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Workload::parse("full").unwrap(), Workload::ResNet18Full);
+        assert_eq!(Workload::parse("First8").unwrap(), Workload::ResNet18First8);
+        assert!(Workload::parse("nope").is_err());
+    }
+}

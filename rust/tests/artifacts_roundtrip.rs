@@ -1,0 +1,153 @@
+//! AOT-artifact integration: load every `artifacts/*.hlo.txt` through the
+//! PJRT runtime and check its numerics against the Rust reference.
+//!
+//! These tests skip (with a notice) when artifacts haven't been built —
+//! `make test` builds them first; plain `cargo test` stays green either
+//! way.
+
+use pimfused::cnn::{Graph, Op, Shape};
+use pimfused::runtime::{artifacts_dir, Runtime};
+use pimfused::util::rng::XorShift64;
+use pimfused::validate::tensor::Tensor;
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("tile_conv_bn_relu.hlo.txt").exists();
+    if !ok {
+        eprintln!("skipping artifact roundtrip: run `make artifacts` first");
+    }
+    ok
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = XorShift64::new(seed);
+    (0..n).map(|_| r.next_f32_signed()).collect()
+}
+
+#[test]
+fn tile_conv_artifact_matches_rust_conv() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let m = rt.load_hlo(artifacts_dir().join("tile_conv_bn_relu.hlo.txt")).unwrap();
+    let x = rand_vec(8 * 10 * 10, 1);
+    let w = rand_vec(8 * 8 * 3 * 3, 2);
+    let out = m
+        .run_f32(&[(&x, &[8usize, 10, 10][..]), (&w, &[8usize, 8, 3, 3][..])])
+        .unwrap();
+
+    // Rust reference: VALID conv + relu.
+    let xt = Tensor::from_fn(8, 10, 10, |c, y, xx| x[(c * 10 + y) * 10 + xx]);
+    let want = xt.conv2d(&w, 8, 3, 1, 0, true);
+    assert_eq!(out[0].len(), want.data().len());
+    for (a, b) in out[0].iter().zip(want.data()) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn add_relu_artifact_matches() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let m = rt.load_hlo(artifacts_dir().join("add_relu_tile.hlo.txt")).unwrap();
+    let a = rand_vec(8 * 8 * 8, 3);
+    let b = rand_vec(8 * 8 * 8, 4);
+    let out = m
+        .run_f32(&[(&a, &[8usize, 8, 8][..]), (&b, &[8usize, 8, 8][..])])
+        .unwrap();
+    for ((x, y), got) in a.iter().zip(&b).zip(&out[0]) {
+        assert_eq!(*got, (x + y).max(0.0));
+    }
+}
+
+#[test]
+fn maxpool_artifact_matches() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let m = rt.load_hlo(artifacts_dir().join("maxpool_tile.hlo.txt")).unwrap();
+    let x = rand_vec(8 * 17 * 17, 5);
+    let out = m.run_f32(&[(&x, &[8usize, 17, 17][..])]).unwrap();
+    let xt = Tensor::from_fn(8, 17, 17, |c, y, xx| x[(c * 17 + y) * 17 + xx]);
+    let want = xt.maxpool(3, 2, 1);
+    assert_eq!(out[0].len(), want.data().len());
+    for (a, b) in out[0].iter().zip(want.data()) {
+        assert_eq!(a, b, "maxpool must be exact (no accumulation)");
+    }
+}
+
+#[test]
+fn first8_artifact_matches_rust_reference() {
+    if !have_artifacts() {
+        return;
+    }
+    use pimfused::cnn::resnet::resnet18_at;
+    use pimfused::validate::{run_reference, synth_input, synth_weights};
+
+    let rt = Runtime::cpu().unwrap();
+    let m = rt
+        .load_hlo(artifacts_dir().join("resnet18_first8_32.hlo.txt"))
+        .unwrap();
+
+    let g = resnet18_at(32).prefix(8);
+    let input = synth_input(&g, 77);
+    let reference = run_reference(&g, &input, 77);
+    let want = reference.last().unwrap();
+
+    let mut datas = vec![input.data().to_vec()];
+    let mut shapes: Vec<Vec<usize>> = vec![vec![3, 32, 32]];
+    for n in &g.nodes {
+        if let Op::Conv { cout, k, .. } = n.op {
+            datas.push(synth_weights(n, 77));
+            shapes.push(vec![cout, g.nodes[n.inputs[0]].shape.c, k, k]);
+        }
+    }
+    let args: Vec<(&[f32], &[usize])> =
+        datas.iter().zip(&shapes).map(|(d, s)| (d.as_slice(), s.as_slice())).collect();
+    let out = m.run_f32(&args).unwrap();
+    assert_eq!(out[0].len(), want.data().len());
+    let mut worst = 0.0f32;
+    for (a, b) in out[0].iter().zip(want.data()) {
+        worst = worst.max((a - b).abs() / b.abs().max(1.0));
+    }
+    assert!(worst < 1e-3, "first8 golden mismatch: {worst}");
+}
+
+#[test]
+fn fused_block_tile_artifact_matches_demand_sliced_reference() {
+    if !have_artifacts() {
+        return;
+    }
+    use pimfused::dataflow::tiling::{demand_for_tile, Rect};
+    use pimfused::validate::{run_reference, synth_input, synth_weights};
+
+    let mut g = Graph::new("pair", Shape::new(8, 20, 20));
+    let conv = |relu| Op::Conv { cout: 8, k: 3, stride: 1, pad: 1, bn: true, relu };
+    let c1 = g.add("c1", conv(true), vec![0]);
+    let c2 = g.add("c2", conv(false), vec![c1]);
+
+    let input = synth_input(&g, 11);
+    let reference = run_reference(&g, &input, 11);
+    let tile = Rect::new(6, 6, 14, 14);
+    let demand = demand_for_tile(&g, 1, 2, tile);
+    let halo = input.slice(&demand.external[&0]);
+    let w1 = synth_weights(&g.nodes[c1], 11);
+    let w2 = synth_weights(&g.nodes[c2], 11);
+
+    let rt = Runtime::cpu().unwrap();
+    let m = rt.load_hlo(artifacts_dir().join("fused_block_tile.hlo.txt")).unwrap();
+    let out = m
+        .run_f32(&[
+            (halo.data(), &[8usize, 12, 12][..]),
+            (&w1, &[8usize, 8, 3, 3][..]),
+            (&w2, &[8usize, 8, 3, 3][..]),
+        ])
+        .unwrap();
+    let want = reference[c2].slice(&tile);
+    for (a, b) in out[0].iter().zip(want.data()) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
