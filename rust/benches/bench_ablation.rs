@@ -8,7 +8,7 @@
 
 use pimfused::benchkit::section;
 use pimfused::config::{ArchConfig, Dataflow, System};
-use pimfused::coordinator::run_ppa_with;
+use pimfused::coordinator::Session;
 use pimfused::dataflow::fused::plan_fused;
 use pimfused::dataflow::tiling::{fusion_cost, tile_segment};
 use pimfused::dataflow::CostModel;
@@ -18,13 +18,15 @@ use pimfused::workload::Workload;
 
 fn main() {
     let m = CostModel::default();
+    let session = Session::with_model(m);
 
     section("ablation 1 — dataflow on fixed hardware (Fused4/G32K_L256, ResNet18_Full)");
     let fused_cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256);
     let mut lbl_cfg = fused_cfg.clone();
     lbl_cfg.dataflow = Dataflow::LayerByLayer;
-    let fused = run_ppa_with(&fused_cfg, Workload::ResNet18Full, m).unwrap();
-    let lbl = run_ppa_with(&lbl_cfg, Workload::ResNet18Full, m).unwrap();
+    let fused =
+        session.experiment(fused_cfg.clone()).workload(Workload::ResNet18Full).run().unwrap();
+    let lbl = session.experiment(lbl_cfg).workload(Workload::ResNet18Full).run().unwrap();
     println!(
         "  PIMfused hybrid dataflow : {:>10} cycles   {:>8.3} mJ",
         fused.cycles,

@@ -4,13 +4,15 @@
 
 use pimfused::benchkit::{bench, section};
 use pimfused::config::System;
-use pimfused::coordinator::experiments::{fig5, render};
+use pimfused::coordinator::experiments::{fig5, fig5_in, render};
+use pimfused::coordinator::Session;
 use pimfused::dataflow::CostModel;
 use pimfused::workload::Workload;
 
 fn main() {
     section("Fig. 5 — PPA vs GBUF (LBUF = 0)");
-    let rows = fig5(CostModel::default()).expect("fig5");
+    let session = Session::new();
+    let rows = fig5_in(&session).expect("fig5");
     println!("{}", render(&rows));
 
     let get = |s: System, gk: usize, w: Workload| {

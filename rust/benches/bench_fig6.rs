@@ -3,13 +3,15 @@
 
 use pimfused::benchkit::{bench, section};
 use pimfused::config::System;
-use pimfused::coordinator::experiments::{fig6, render};
+use pimfused::coordinator::experiments::{fig6, fig6_in, render};
+use pimfused::coordinator::Session;
 use pimfused::dataflow::CostModel;
 use pimfused::workload::Workload;
 
 fn main() {
     section("Fig. 6 — PPA vs LBUF (GBUF = 2K)");
-    let rows = fig6(CostModel::default()).expect("fig6");
+    let session = Session::new();
+    let rows = fig6_in(&session).expect("fig6");
     println!("{}", render(&rows));
 
     let get = |s: System, l: usize, w: Workload| {

@@ -3,13 +3,15 @@
 
 use pimfused::benchkit::{bench, section};
 use pimfused::config::System;
-use pimfused::coordinator::experiments::{fig7, headline, render};
+use pimfused::coordinator::experiments::{fig7, fig7_in, headline, render};
+use pimfused::coordinator::Session;
 use pimfused::dataflow::CostModel;
 
 fn main() {
     let model = CostModel::default();
     section("Fig. 7 — PPA vs joint LBUF+GBUF scaling (ResNet18_Full)");
-    let rows = fig7(model).expect("fig7");
+    let session = Session::with_model(model);
+    let rows = fig7_in(&session).expect("fig7");
     println!("{}", render(&rows));
 
     section("headline (§V-D)");

@@ -2,11 +2,14 @@
 //! tracks across optimization iterations. Wall-clock here is *our*
 //! simulator's speed (the paper's "fast evaluation" claim for its
 //! profiling framework), not the modeled hardware's.
+//!
+//! The sweep section drives the Experiment API v2 [`SweepGrid`]; the
+//! cold-vs-warm pair quantifies what [`Session`] memoization buys.
 
 use pimfused::benchkit::{bench, section};
 use pimfused::cnn::resnet::resnet18;
 use pimfused::config::{ArchConfig, System};
-use pimfused::coordinator::{run_ppa_with, sweep, SweepPoint};
+use pimfused::coordinator::{Session, SweepGrid};
 use pimfused::dataflow::{plan, CostModel};
 use pimfused::sim::simulate;
 use pimfused::trace::gen::generate;
@@ -25,29 +28,36 @@ fn main() {
     bench("plan (partitioner)", 3, 200, || plan(&g, &cfg).steps.len());
     bench("trace generation", 3, 50, || generate(&g, &cfg, &p, model).cmds.len());
     bench("cycle simulation", 3, 200, || simulate(&cfg, &t).cycles);
-    bench("full PPA point (end-to-end)", 3, 20, || {
-        run_ppa_with(&cfg, Workload::ResNet18Full, model).unwrap().cycles
+    bench("full PPA point (cold session)", 3, 20, || {
+        // A fresh session per iteration: end-to-end cost including the
+        // graph build and mapping, like the old free-function pipeline.
+        Session::with_model(model)
+            .experiment(cfg.clone())
+            .workload(Workload::ResNet18Full)
+            .run()
+            .unwrap()
+            .cycles
+    });
+    let warm = Session::with_model(model);
+    bench("full PPA point (warm session)", 3, 20, || {
+        // Memoized graph + plan: only trace + sim + energy remain.
+        warm.experiment(cfg.clone()).workload(Workload::ResNet18Full).run().unwrap().cycles
     });
 
     section("sweep throughput (the Fig. 7 grid)");
-    let points: Vec<SweepPoint> = System::ALL
-        .iter()
-        .flat_map(|&s| {
-            [(2048, 0), (8192, 128), (16384, 256), (32768, 256), (65536, 256), (65536, 102400)]
-                .into_iter()
-                .map(move |(gb, lb)| SweepPoint {
-                    cfg: ArchConfig::system(s, gb, lb),
-                    workload: Workload::ResNet18Full,
-                })
-        })
-        .collect();
-    bench("fig7 grid, parallel sweep (18 pts)", 1, 5, || {
-        sweep(&points, model).len()
+    let grid = SweepGrid::new()
+        .systems(System::ALL)
+        .bufcfgs([(2048, 0), (8192, 128), (16384, 256), (32768, 256), (65536, 256), (65536, 102400)])
+        .workload(Workload::ResNet18Full);
+    let session = Session::with_model(model);
+    bench("fig7 grid, SweepGrid::run (18 pts)", 1, 5, || {
+        grid.run(&session).unwrap().len()
     });
-    bench("fig7 grid, serial (18 pts)", 1, 3, || {
+    let points = grid.points();
+    bench("fig7 grid, serial Session (18 pts)", 1, 3, || {
         points
             .iter()
-            .map(|pt| run_ppa_with(&pt.cfg, pt.workload, model).unwrap().cycles)
+            .map(|pt| session.run(&pt.cfg, pt.workload).unwrap().cycles)
             .sum::<u64>()
     });
 }

@@ -1,0 +1,64 @@
+//! Buffer design-space sweep: evaluate all three systems across a
+//! GBUF × LBUF grid in parallel and print the Pareto frontier
+//! (performance vs area), reproducing the §V-D trade-off discussion.
+//!
+//! Uses the Experiment API v2 [`SweepGrid`] builder with a per-point
+//! progress callback and the built-in normalized table.
+//!
+//! ```text
+//! cargo run --release --example buffer_sweep
+//! ```
+
+use pimfused::config::System;
+use pimfused::coordinator::{Session, SweepGrid};
+use pimfused::ppa::Normalized;
+use pimfused::workload::Workload;
+use std::io::Write;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::new();
+    let grid = SweepGrid::new()
+        .systems(System::ALL)
+        .gbuf_bytes([2 * 1024, 8 * 1024, 32 * 1024])
+        .lbuf_bytes([0, 128, 256])
+        .workload(Workload::ResNet18Full);
+
+    let t0 = std::time::Instant::now();
+    let results = grid.run_with_progress(&session, |p| {
+        eprint!("\r  sweeping {:>2}/{} ({})        ", p.completed, p.total, p.point.cfg.label());
+        let _ = std::io::stderr().flush();
+    })?;
+    eprintln!();
+    let dt = t0.elapsed();
+    results.ensure_ok()?;
+
+    println!("{}", results.table());
+
+    // Pareto frontier on (cycles, area).
+    let rows: Vec<(String, Normalized)> = results
+        .iter()
+        .map(|row| (row.point.cfg.label(), row.norm.expect("ensure_ok")))
+        .collect();
+    let mut frontier: Vec<&(String, Normalized)> = Vec::new();
+    for cand in &rows {
+        let dominated = rows.iter().any(|o| {
+            (o.1.cycles < cand.1.cycles && o.1.area <= cand.1.area)
+                || (o.1.cycles <= cand.1.cycles && o.1.area < cand.1.area)
+        });
+        if !dominated {
+            frontier.push(cand);
+        }
+    }
+    frontier.sort_by(|a, b| a.1.cycles.partial_cmp(&b.1.cycles).unwrap());
+    println!("Pareto frontier (cycles vs area):");
+    for (label, n) in frontier {
+        println!("  {:<24} {}", label, n.render());
+    }
+    println!(
+        "\nswept {} configurations in {:.2?} ({:.1} points/s)",
+        results.len(),
+        dt,
+        results.len() as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,17 +1,24 @@
+//! Calibration report: every paper anchor (headline, §V-D stats, Figs.
+//! 5-7) against the measured reproduction, plus a per-component energy
+//! breakdown via `--energy`. One [`Session`] feeds all figures, so the
+//! workload graphs and baseline reports are built once.
+
 use pimfused::coordinator::experiments::*;
+use pimfused::coordinator::Session;
 use pimfused::dataflow::CostModel;
+
 fn main() {
     let m = CostModel::default();
     if std::env::args().any(|a| a == "--energy") {
         use pimfused::config::{ArchConfig, System};
-        use pimfused::coordinator::run_ppa_with;
         use pimfused::workload::Workload;
+        let session = Session::with_model(m);
         for (name, cfg) in [
             ("baseline", ArchConfig::baseline()),
             ("fused4_hl", ArchConfig::system(System::Fused4, 32 * 1024, 256)),
             ("fused16_hl", ArchConfig::system(System::Fused16, 32 * 1024, 256)),
         ] {
-            let r = run_ppa_with(&cfg, Workload::ResNet18Full, m).unwrap();
+            let r = session.experiment(cfg).workload(Workload::ResNet18Full).run().unwrap();
             println!("== {name} {} total={:.3} mJ cycles={}", r.label, r.energy_pj / 1e9, r.cycles);
             for c in &r.energy.components {
                 println!("   {:<20} {:>10.4} mJ", c.name, c.energy_pj / 1e9);
@@ -25,8 +32,8 @@ fn main() {
     println!("V-D (paper: repl +18.2%, redundant +17.3%, perf 91.2%)");
     println!("  measured: repl +{:.1}%, redundant +{:.1}%, perf {:.1}%",
         (s.fusion.replication-1.0)*100.0, (s.fusion.redundant_macs-1.0)*100.0, s.perf_improvement*100.0);
-    println!("\nFIG5 (GBUF sweep, L0):\n{}", render(&fig5(m).unwrap()));
-    println!("FIG6 (LBUF sweep, G2K):\n{}", render(&fig6(m).unwrap()));
-    println!("FIG7 (joint):\n{}", render(&fig7(m).unwrap()));
+    let session = Session::with_model(m);
+    println!("\nFIG5 (GBUF sweep, L0):\n{}", render(&fig5_in(&session).unwrap()));
+    println!("FIG6 (LBUF sweep, G2K):\n{}", render(&fig6_in(&session).unwrap()));
+    println!("FIG7 (joint):\n{}", render(&fig7_in(&session).unwrap()));
 }
-// (appended) energy breakdown helper invoked via `--energy`

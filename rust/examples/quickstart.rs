@@ -1,22 +1,22 @@
 //! Quickstart: evaluate PIMfused against the GDDR6-AiM-like baseline on
-//! end-to-end ResNet18 and print the paper's headline comparison.
+//! end-to-end ResNet18 and print the paper's headline comparison —
+//! the smallest useful [`Session`] (Experiment API v2) program.
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 
 use pimfused::config::{ArchConfig, System};
-use pimfused::coordinator::run_ppa;
+use pimfused::coordinator::Session;
 use pimfused::workload::Workload;
 
 fn main() -> anyhow::Result<()> {
-    // The paper's baseline: AiM-like, GBUF = 2 KB, no LBUFs (§V-A3).
-    let baseline = ArchConfig::baseline();
-    // The headline PIMfused configuration: 4-bank PIMcores, G32K_L256.
-    let fused4 = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+    // A session owns the shared state: the cost model, the baseline used
+    // for normalization, and memoized graphs/plans/baseline reports.
+    let session = Session::new();
 
     println!("workload: end-to-end ResNet18 (224x224)\n");
-    let base = run_ppa(&baseline, Workload::ResNet18Full)?;
+    let base = session.baseline(Workload::ResNet18Full)?;
     println!(
         "{:<22} cycles={:>12}  energy={:>8.3} mJ  area={:>6.3} mm2",
         base.label,
@@ -26,8 +26,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     for sys in [System::Fused16, System::Fused4] {
-        let cfg = ArchConfig::system(sys, 32 * 1024, 256);
-        let r = run_ppa(&cfg, Workload::ResNet18Full)?;
+        let r = session
+            .experiment(ArchConfig::system(sys, 32 * 1024, 256))
+            .workload(Workload::ResNet18Full)
+            .run()?;
         let n = r.normalize(&base);
         println!(
             "{:<22} cycles={:>12}  energy={:>8.3} mJ  area={:>6.3} mm2   vs baseline: {}",
@@ -39,7 +41,12 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let ours = run_ppa(&fused4, Workload::ResNet18Full)?.normalize(&base);
+    // The headline PIMfused configuration: 4-bank PIMcores, G32K_L256.
+    // `.normalized()` reuses the memoized baseline report from above.
+    let ours = session
+        .experiment(ArchConfig::system(System::Fused4, 32 * 1024, 256))
+        .workload(Workload::ResNet18Full)
+        .normalized()?;
     println!(
         "\npaper headline (Fused4 @ G32K_L256): cycles=30.6% energy=83.4% area=76.5%\n\
          this reproduction                  : {}",

@@ -1,22 +1,46 @@
 //! Hand-rolled CLI (the offline image has no `clap`).
 //!
 //! ```text
-//! pimfused simulate --config fused4:G32K_L256 --workload full
+//! pimfused simulate --config fused4:G32K_L256 --workload full [--json]
 //! pimfused fig5|fig6|fig7|takeaways|headline
-//! pimfused sweep --systems aim,fused16,fused4 --gbuf 2K,32K --lbuf 0,256 --workload full
+//! pimfused sweep --systems aim,fused16,fused4 --gbuf 2K,32K --lbuf 0,256 --workload full [--json]
 //! pimfused trace --config fused16:G2K_L0 --workload fig3 [--limit 40]
 //! pimfused validate --config fused4:G8K_L128
 //! pimfused cmdset
 //! ```
+//!
+//! All PPA subcommands run through the coordinator's [`Session`] /
+//! [`SweepGrid`] (Experiment API v2); `--json` emits the
+//! [`SweepResults::to_json`] schema. Bad subcommands or options fail with
+//! a non-zero exit and the usage text.
 
 use crate::config::{ArchConfig, System};
-use crate::coordinator::{experiments, run_ppa, sweep, SweepPoint};
+use crate::coordinator::{experiments, Session, SweepGrid, SweepPoint, SweepResults};
 use crate::dataflow::{plan, CostModel};
 use crate::trace::gen::generate;
 use crate::util::size::parse_bytes;
 use crate::workload::Workload;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
+
+/// Usage text printed on bad invocations (and by `main` on any error).
+pub const USAGE: &str = "\
+usage: pimfused <command> [--key value]... [--json]
+commands:
+  simulate   one PPA point          --config <sys:GmK_Ln> --workload <w> [--json]
+  sweep      buffer design sweep    --systems aim,fused16,fused4 --gbuf 2K,32K
+                                    --lbuf 0,256 --workload <w> [--json]
+  fig5 | fig6 | fig7                regenerate the paper's figures
+  takeaways | headline              §V-D statistics / the headline claim
+  trace      dump a command trace   --config <sys:GmK_Ln> --workload <w> [--limit N]
+  validate   functional validation  --config <sys:GmK_Ln>
+  cmdset     list the Table-I PIM commands
+workloads: full | first8 | fig1 | fig3 | small
+systems:   aim | fused16 | fused4        bufcfg: e.g. fused4:G32K_L256
+";
+
+/// Options that are flags (no value); everything else takes `--key value`.
+const FLAGS: &[&str] = &["json"];
 
 /// Parsed command line: subcommand plus `--key value` options.
 #[derive(Debug, Clone)]
@@ -28,17 +52,22 @@ pub struct Args {
 /// Parse a raw argv (without the binary name).
 pub fn parse_args(argv: &[String]) -> Result<Args> {
     let Some(cmd) = argv.first() else {
-        bail!("usage: pimfused <simulate|sweep|fig5|fig6|fig7|takeaways|headline|trace|validate|cmdset> [--key value]...");
+        bail!("no command given\n{USAGE}");
     };
     let mut opts = HashMap::new();
     let mut i = 1;
     while i < argv.len() {
         let k = argv[i]
             .strip_prefix("--")
-            .ok_or_else(|| anyhow!("expected --option, got {:?}", argv[i]))?;
+            .ok_or_else(|| anyhow!("expected --option, got {:?}\n{USAGE}", argv[i]))?;
+        if FLAGS.contains(&k) {
+            opts.insert(k.to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
         let v = argv
             .get(i + 1)
-            .ok_or_else(|| anyhow!("--{k} needs a value"))?;
+            .ok_or_else(|| anyhow!("--{k} needs a value\n{USAGE}"))?;
         opts.insert(k.to_string(), v.clone());
         i += 2;
     }
@@ -55,29 +84,53 @@ impl Args {
         let w = self.opts.get("workload").map(String::as_str).unwrap_or("full");
         Workload::parse(w).map_err(anyhow::Error::msg)
     }
+
+    fn flag(&self, name: &str) -> bool {
+        self.opts.get(name).map(String::as_str) == Some("true")
+    }
+
+    /// Reject options the subcommand doesn't understand.
+    fn check_opts(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.opts.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown option --{k} for {:?}\n{USAGE}", self.cmd);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Run the CLI; returns the text to print.
 pub fn run(args: &Args) -> Result<String> {
     let model = CostModel::default();
+    let session = Session::with_model(model);
     match args.cmd.as_str() {
         "simulate" => {
+            args.check_opts(&["config", "workload", "json"])?;
             let cfg = args.config()?;
             let w = args.workload()?;
-            let r = run_ppa(&cfg, w)?;
-            let base = run_ppa(&ArchConfig::baseline(), w)?;
-            let n = r.normalize(&base);
+            let results = SweepGrid::from_points(vec![SweepPoint { cfg, workload: w }])
+                .run(&session)?;
+            results.ensure_ok()?;
+            if args.flag("json") {
+                return Ok(results.to_json());
+            }
+            let row = &results.rows[0];
+            let r = row.report.as_ref().expect("ensure_ok");
+            let n = row.norm.expect("ensure_ok");
             Ok(format!(
-                "{} on {}\n  memory cycles : {}\n  energy        : {:.3} mJ\n  area          : {:.3} mm2\n  vs AiM-like/G2K_L0: {}\n",
+                "{} on {}\n  memory cycles : {}\n  energy        : {:.3} mJ\n  area          : {:.3} mm2\n  vs {}: {}\n",
                 r.label,
                 r.workload,
                 r.cycles,
                 r.energy_pj / 1e9,
                 r.area_mm2,
+                results.baseline_label,
                 n.render()
             ))
         }
         "sweep" => {
+            args.check_opts(&["systems", "gbuf", "lbuf", "workload", "json"])?;
             let systems: Vec<System> = args
                 .opts
                 .get("systems")
@@ -99,33 +152,32 @@ pub fn run(args: &Args) -> Result<String> {
             let gbufs = parse_list("gbuf", "2K,8K,16K,32K,64K")?;
             let lbufs = parse_list("lbuf", "0,64,128,256,512")?;
             let w = args.workload()?;
-            let mut points: Vec<SweepPoint> = Vec::new();
-            for &s in &systems {
-                for &g in &gbufs {
-                    for &l in &lbufs {
-                        points.push(SweepPoint { cfg: ArchConfig::system(s, g, l), workload: w });
-                    }
-                }
+            let results: SweepResults = SweepGrid::new()
+                .systems(systems)
+                .gbuf_bytes(gbufs)
+                .lbuf_bytes(lbufs)
+                .workload(w)
+                .run(&session)?;
+            results.ensure_ok()?;
+            if args.flag("json") {
+                return Ok(results.to_json());
             }
-            let base = run_ppa(&ArchConfig::baseline(), w)?;
-            let results = sweep(&points, model);
-            let mut t = crate::util::table::Table::new(vec!["config", "cycles", "energy", "area"]);
-            for r in results {
-                let r = r?;
-                let n = r.normalize(&base);
-                t.row(vec![
-                    r.label.clone(),
-                    crate::util::table::pct_or_x(n.cycles),
-                    crate::util::table::pct_or_x(n.energy),
-                    crate::util::table::pct_or_x(n.area),
-                ]);
-            }
-            Ok(t.render())
+            Ok(results.table())
         }
-        "fig5" => Ok(experiments::render(&experiments::fig5(model)?)),
-        "fig6" => Ok(experiments::render(&experiments::fig6(model)?)),
-        "fig7" => Ok(experiments::render(&experiments::fig7(model)?)),
+        "fig5" => {
+            args.check_opts(&[])?;
+            Ok(experiments::render(&experiments::fig5(model)?))
+        }
+        "fig6" => {
+            args.check_opts(&[])?;
+            Ok(experiments::render(&experiments::fig6(model)?))
+        }
+        "fig7" => {
+            args.check_opts(&[])?;
+            Ok(experiments::render(&experiments::fig7(model)?))
+        }
         "takeaways" => {
+            args.check_opts(&[])?;
             let s = experiments::vd_stats(model)?;
             Ok(format!(
                 "Fusing ResNet18 first-8 layers into 2x2 tiles (paper §V-D):\n  data replication     : +{:.1}% (paper +18.2%)\n  redundant computation: +{:.1}% (paper +17.3%)\n  performance improvement: {:.1}% (paper 91.2%)\n",
@@ -135,6 +187,7 @@ pub fn run(args: &Args) -> Result<String> {
             ))
         }
         "headline" => {
+            args.check_opts(&[])?;
             let n = experiments::headline(model)?;
             Ok(format!(
                 "Fused4 @ G32K_L256 vs AiM-like @ G2K_L0 (ResNet18_Full):\n  measured: {}\n  paper   : cycles=30.6% energy=83.4% area=76.5%\n",
@@ -142,6 +195,7 @@ pub fn run(args: &Args) -> Result<String> {
             ))
         }
         "trace" => {
+            args.check_opts(&["config", "workload", "limit"])?;
             let cfg = args.config()?;
             let w = args.workload()?;
             let limit: usize = args
@@ -150,7 +204,7 @@ pub fn run(args: &Args) -> Result<String> {
                 .map(|s| s.parse())
                 .transpose()?
                 .unwrap_or(60);
-            let g = w.graph();
+            let g = session.graph(w)?;
             let p = plan(&g, &cfg);
             let tr = generate(&g, &cfg, &p, model);
             let stats = tr.stats();
@@ -165,9 +219,10 @@ pub fn run(args: &Args) -> Result<String> {
             ))
         }
         "validate" => {
+            args.check_opts(&["config"])?;
             let cfg = args.config()?;
             // Reduced resolution keeps the f32 reference fast.
-            let g = Workload::ResNet18Small.graph();
+            let g = session.graph(Workload::ResNet18Small)?;
             let p = plan(&g, &cfg);
             let delta = crate::validate::validate_plan(&g, &p, 0xC0FFEE)
                 .map_err(anyhow::Error::msg)?;
@@ -177,7 +232,9 @@ pub fn run(args: &Args) -> Result<String> {
                 g.name
             ))
         }
-        "cmdset" => Ok("\
+        "cmdset" => {
+            args.check_opts(&[])?;
+            Ok("\
 Custom PIM commands (Table I):
   PIMcore_CMP   Perform fused operations in all PIMcores
                 flags: CONV_BN | CONV_BN_RELU | POOL | ADD_RELU
@@ -188,8 +245,9 @@ Custom PIM commands (Table I):
   PIM_BK2GBUF   Data transfer between one bank and GBUF (sequential)
   PIM_GBUF2BK   Data transfer between GBUF and one bank (sequential)
 "
-        .to_string()),
-        other => bail!("unknown subcommand {other:?}"),
+            .to_string())
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
 }
 
@@ -212,11 +270,56 @@ mod tests {
     }
 
     #[test]
+    fn json_is_a_flag_not_a_key_value() {
+        let a = parse_args(&argv("simulate --json --config aim:G2K_L0")).unwrap();
+        assert!(a.flag("json"));
+        assert_eq!(a.opts["config"], "aim:G2K_L0");
+        let b = parse_args(&argv("sweep --json")).unwrap();
+        assert!(b.flag("json"));
+        assert!(!parse_args(&argv("sweep")).unwrap().flag("json"));
+    }
+
+    #[test]
     fn simulate_command_reports() {
         let a = parse_args(&argv("simulate --config aim:G2K_L0 --workload first8")).unwrap();
         let out = run(&a).unwrap();
         assert!(out.contains("AiM-like/G2K_L0"));
         assert!(out.contains("memory cycles"));
+    }
+
+    #[test]
+    fn simulate_json_emits_schema() {
+        let a =
+            parse_args(&argv("simulate --config fused4:G8K_L128 --workload fig1 --json")).unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.trim_start().starts_with('{'));
+        assert!(out.contains("\"baseline\": \"AiM-like/G2K_L0\""));
+        assert!(out.contains("\"config\": \"Fused4/G8K_L128\""));
+        assert!(out.contains("\"norm\": {\"cycles\": "));
+        assert!(out.contains("\"error\": null"));
+    }
+
+    #[test]
+    fn sweep_json_has_one_row_per_point() {
+        let a = parse_args(&argv(
+            "sweep --systems fused4 --gbuf 2K,32K --lbuf 0 --workload fig1 --json",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert_eq!(out.matches("\"config\":").count(), 2);
+        assert_eq!(out.matches("\"error\": null").count(), 2);
+    }
+
+    #[test]
+    fn bad_options_error_with_usage() {
+        let a = parse_args(&argv("simulate --bogus 1")).unwrap();
+        let e = run(&a).unwrap_err().to_string();
+        assert!(e.contains("unknown option --bogus"), "{e}");
+        assert!(e.contains("usage: pimfused"), "{e}");
+        let e = run(&parse_args(&argv("headline --config aim:G2K_L0")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown option --config"), "{e}");
     }
 
     #[test]
@@ -244,8 +347,10 @@ mod tests {
     }
 
     #[test]
-    fn unknown_subcommand_errors() {
-        assert!(run(&parse_args(&argv("bogus")).unwrap()).is_err());
+    fn unknown_subcommand_errors_with_usage() {
+        let e = run(&parse_args(&argv("bogus")).unwrap()).unwrap_err().to_string();
+        assert!(e.contains("unknown subcommand"));
+        assert!(e.contains("usage: pimfused"));
     }
 
     #[test]

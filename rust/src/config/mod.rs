@@ -62,24 +62,41 @@ pub enum System {
     Fused4,
 }
 
+/// One row per system: (variant, display name, CLI aliases). `name` and
+/// `parse` are both driven from this table so they cannot drift.
+const SYSTEM_TABLE: &[(System, &str, &[&str])] = &[
+    (System::AimLike, "AiM-like", &["aim", "aimlike", "baseline"]),
+    (System::Fused16, "Fused16", &[]),
+    (System::Fused4, "Fused4", &[]),
+];
+
 impl System {
     pub const ALL: [System; 3] = [System::AimLike, System::Fused16, System::Fused4];
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            System::AimLike => "AiM-like",
-            System::Fused16 => "Fused16",
-            System::Fused4 => "Fused4",
-        }
+    fn row(&self) -> &'static (System, &'static str, &'static [&'static str]) {
+        SYSTEM_TABLE
+            .iter()
+            .find(|row| row.0 == *self)
+            .expect("every System variant must have a SYSTEM_TABLE row")
     }
 
+    /// Display name, e.g. `AiM-like`.
+    pub fn name(&self) -> &'static str {
+        self.row().1
+    }
+
+    /// Parse a CLI spelling: the display name or any alias,
+    /// case-insensitively.
     pub fn parse(s: &str) -> Result<Self, String> {
-        match s.to_ascii_lowercase().as_str() {
-            "aim" | "aim-like" | "aimlike" | "baseline" => Ok(System::AimLike),
-            "fused16" => Ok(System::Fused16),
-            "fused4" => Ok(System::Fused4),
-            _ => Err(format!("unknown system {s:?} (aim-like|fused16|fused4)")),
+        let t = s.trim().to_ascii_lowercase();
+        for &(sys, name, aliases) in SYSTEM_TABLE {
+            if t == name.to_ascii_lowercase() || aliases.contains(&t.as_str()) {
+                return Ok(sys);
+            }
         }
+        let names: Vec<String> =
+            SYSTEM_TABLE.iter().map(|row| row.1.to_ascii_lowercase()).collect();
+        Err(format!("unknown system {s:?} ({})", names.join("|")))
     }
 }
 
@@ -227,6 +244,22 @@ mod tests {
         assert_eq!(p, c);
         assert!(ArchConfig::parse("nope:G2K_L0").is_err());
         assert!(ArchConfig::parse("fused4").is_err());
+    }
+
+    #[test]
+    fn system_table_drives_name_and_parse() {
+        assert_eq!(SYSTEM_TABLE.len(), System::ALL.len());
+        for (row, sys) in SYSTEM_TABLE.iter().zip(System::ALL) {
+            assert_eq!(row.0, sys, "SYSTEM_TABLE and ALL must agree on order");
+        }
+        for sys in System::ALL {
+            assert_eq!(System::parse(sys.name()).unwrap(), sys);
+            assert_eq!(System::parse(&sys.name().to_ascii_uppercase()).unwrap(), sys);
+        }
+        assert_eq!(System::parse("aim").unwrap(), System::AimLike);
+        assert_eq!(System::parse("baseline").unwrap(), System::AimLike);
+        assert_eq!(System::parse("Fused4").unwrap(), System::Fused4);
+        assert!(System::parse("nope").is_err());
     }
 
     #[test]

@@ -3,8 +3,13 @@
 //! Every function returns structured rows *and* can render the paper-style
 //! normalized table; the benches and the CLI call these, so "regenerate
 //! Fig. N" is a single entry point (see DESIGN.md §4 for the index).
+//!
+//! All figures run through [`Session`] / [`SweepGrid`] (Experiment API
+//! v2). The `*_in` variants take an existing session so several figures
+//! can share one set of memoized graphs and baseline reports (what
+//! `examples/calibrate.rs` does).
 
-use super::{run_ppa_with, sweep, SweepPoint};
+use super::{Session, SweepGrid};
 use crate::config::{ArchConfig, System};
 use crate::dataflow::tiling::{fusion_cost, tile_segment, FusionCost};
 use crate::dataflow::CostModel;
@@ -26,54 +31,72 @@ pub struct FigRow {
 }
 
 /// Shared driver: evaluate a (system × bufcfg × workload) grid, normalized
-/// per-workload to the baseline.
+/// per-workload to the baseline. Convenience wrapper over [`grid_in`] with
+/// a fresh [`Session`].
 pub fn grid(
     systems: &[System],
     bufcfgs: &[(usize, usize)],
     workloads: &[Workload],
     model: CostModel,
 ) -> Result<Vec<FigRow>> {
-    let mut rows = Vec::new();
-    for &w in workloads {
-        let base = run_ppa_with(&ArchConfig::baseline(), w, model)?;
-        let points: Vec<SweepPoint> = systems
-            .iter()
-            .flat_map(|&s| {
-                bufcfgs.iter().map(move |&(g, l)| SweepPoint {
-                    cfg: ArchConfig::system(s, g, l),
-                    workload: w,
-                })
-            })
-            .collect();
-        let results = sweep(&points, model);
-        for (pt, res) in points.iter().zip(results) {
-            let r = res?;
-            rows.push(FigRow {
-                system: pt.cfg.system,
-                gbuf: pt.cfg.gbuf_bytes,
-                lbuf: pt.cfg.lbuf_bytes,
-                workload: w,
-                norm: r.normalize(&base),
-            });
-        }
-    }
-    Ok(rows)
+    grid_in(&Session::with_model(model), systems, bufcfgs, workloads)
+}
+
+/// [`grid`] on an existing session, reusing its memoized graphs, plans and
+/// baseline reports across figures.
+pub fn grid_in(
+    session: &Session,
+    systems: &[System],
+    bufcfgs: &[(usize, usize)],
+    workloads: &[Workload],
+) -> Result<Vec<FigRow>> {
+    let results = SweepGrid::new()
+        .systems(systems.iter().copied())
+        .bufcfgs(bufcfgs.iter().copied())
+        .workloads(workloads.iter().copied())
+        .run(session)?;
+    results.ensure_ok()?;
+    Ok(results
+        .iter()
+        .map(|row| FigRow {
+            system: row.point.cfg.system,
+            gbuf: row.point.cfg.gbuf_bytes,
+            lbuf: row.point.cfg.lbuf_bytes,
+            workload: row.point.workload,
+            norm: row.norm.expect("ensure_ok guarantees normalized rows"),
+        })
+        .collect())
 }
 
 /// Fig. 5: PPA vs GBUF size with no LBUF (§V-B).
 pub fn fig5(model: CostModel) -> Result<Vec<FigRow>> {
+    fig5_in(&Session::with_model(model))
+}
+
+/// [`fig5`] on an existing session.
+pub fn fig5_in(session: &Session) -> Result<Vec<FigRow>> {
     let gbufs = [2, 8, 16, 32, 64].map(|k| (k * 1024, 0));
-    grid(&System::ALL, &gbufs, &Workload::PAPER, model)
+    grid_in(session, &System::ALL, &gbufs, &Workload::PAPER)
 }
 
 /// Fig. 6: PPA vs LBUF size with GBUF fixed at 2 KB (§V-C).
 pub fn fig6(model: CostModel) -> Result<Vec<FigRow>> {
+    fig6_in(&Session::with_model(model))
+}
+
+/// [`fig6`] on an existing session.
+pub fn fig6_in(session: &Session) -> Result<Vec<FigRow>> {
     let lbufs = [0usize, 64, 128, 256, 512].map(|l| (2048, l));
-    grid(&System::ALL, &lbufs, &Workload::PAPER, model)
+    grid_in(session, &System::ALL, &lbufs, &Workload::PAPER)
 }
 
 /// Fig. 7: PPA with both buffers scaled, ResNet18_Full (§V-D).
 pub fn fig7(model: CostModel) -> Result<Vec<FigRow>> {
+    fig7_in(&Session::with_model(model))
+}
+
+/// [`fig7`] on an existing session.
+pub fn fig7_in(session: &Session) -> Result<Vec<FigRow>> {
     let cfgs = [
         (2 * 1024, 0),
         (8 * 1024, 128),
@@ -82,7 +105,7 @@ pub fn fig7(model: CostModel) -> Result<Vec<FigRow>> {
         (64 * 1024, 256),
         (64 * 1024, 100 * 1024),
     ];
-    grid(&System::ALL, &cfgs, &[Workload::ResNet18Full], model)
+    grid_in(session, &System::ALL, &cfgs, &[Workload::ResNet18Full])
 }
 
 /// Render rows the way the paper annotates its bars.
@@ -111,16 +134,18 @@ pub struct TakeawayStats {
 }
 
 pub fn vd_stats(model: CostModel) -> Result<TakeawayStats> {
-    let g = Workload::ResNet18First8.graph();
+    let session = Session::with_model(model);
+    let g = session.graph(Workload::ResNet18First8)?;
     let tiles = tile_segment(&g, 1, 8, 2, 2);
     let fusion = fusion_cost(&g, 1, 8, &tiles);
 
     // "delivering a 91.2% performance improvement" — fused vs LbL on the
     // same well-provisioned PIMfused hardware (G32K_L256).
-    let fused = run_ppa_with(&ArchConfig::system(System::Fused4, 32 * 1024, 256), Workload::ResNet18First8, model)?;
-    let mut lbl_cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+    let fused_cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+    let fused = session.experiment(fused_cfg.clone()).workload(Workload::ResNet18First8).run()?;
+    let mut lbl_cfg = fused_cfg;
     lbl_cfg.dataflow = crate::config::Dataflow::LayerByLayer;
-    let lbl = run_ppa_with(&lbl_cfg, Workload::ResNet18First8, model)?;
+    let lbl = session.experiment(lbl_cfg).workload(Workload::ResNet18First8).run()?;
     Ok(TakeawayStats {
         fusion,
         perf_improvement: 1.0 - fused.cycles as f64 / lbl.cycles as f64,
@@ -130,13 +155,10 @@ pub fn vd_stats(model: CostModel) -> Result<TakeawayStats> {
 /// The headline claim: Fused4 @ G32K_L256 vs AiM-like @ G2K_L0 on
 /// ResNet18_Full (paper: cycles 30.6%, energy 83.4%, area 76.5%).
 pub fn headline(model: CostModel) -> Result<Normalized> {
-    let base = run_ppa_with(&ArchConfig::baseline(), Workload::ResNet18Full, model)?;
-    let ours = run_ppa_with(
-        &ArchConfig::system(System::Fused4, 32 * 1024, 256),
-        Workload::ResNet18Full,
-        model,
-    )?;
-    Ok(ours.normalize(&base))
+    Session::with_model(model)
+        .experiment(ArchConfig::system(System::Fused4, 32 * 1024, 256))
+        .workload(Workload::ResNet18Full)
+        .normalized()
 }
 
 #[cfg(test)]

@@ -1,0 +1,399 @@
+//! [`SweepGrid`]: the typed cartesian sweep builder of Experiment API v2,
+//! and [`SweepResults`], the normalized result collection it produces.
+//!
+//! ```no_run
+//! use pimfused::config::System;
+//! use pimfused::coordinator::{Session, SweepGrid};
+//! use pimfused::workload::Workload;
+//!
+//! let session = Session::new();
+//! let results = SweepGrid::new()
+//!     .systems(System::ALL)
+//!     .gbuf_bytes([2 * 1024, 32 * 1024])
+//!     .lbuf_bytes([0, 256])
+//!     .workloads(Workload::PAPER)
+//!     .run(&session)
+//!     .unwrap();
+//! println!("{}", results.table());
+//! ```
+//!
+//! Point order is deterministic and documented: workload-major, then
+//! system, then buffer config (GBUF-major). Results keep that order, so
+//! `SweepResults::rows[i]` always corresponds to `points()[i]`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::session::Session;
+use crate::config::{ArchConfig, Dataflow, System};
+use crate::ppa::{Normalized, PpaReport};
+use crate::workload::Workload;
+use anyhow::{bail, Result};
+
+/// One point of a parameter sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    pub cfg: ArchConfig,
+    pub workload: Workload,
+}
+
+/// Below this point count, thread spawn overhead dominates (one PPA point
+/// costs ~20 µs; EXPERIMENTS.md §Perf it. 2) and the executor runs serially.
+const PARALLEL_THRESHOLD: usize = 64;
+
+/// Run `eval` over `points`, fanning out across OS threads above
+/// [`PARALLEL_THRESHOLD`]. Results keep input order; each point is
+/// independent (the pipeline is pure).
+pub(crate) fn run_points<F>(points: &[SweepPoint], eval: F) -> Vec<Result<PpaReport>>
+where
+    F: Fn(&SweepPoint) -> Result<PpaReport> + Sync,
+{
+    if points.len() < PARALLEL_THRESHOLD {
+        return points.iter().map(&eval).collect();
+    }
+    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let chunk = crate::util::ceil_div(points.len().max(1), n_threads);
+    std::thread::scope(|s| {
+        let eval = &eval;
+        let handles: Vec<_> = points
+            .chunks(chunk.max(1))
+            .map(|ps| s.spawn(move || ps.iter().map(eval).collect::<Vec<_>>()))
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("sweep worker panicked")).collect()
+    })
+}
+
+/// Progress report handed to [`SweepGrid::run_with_progress`] callbacks
+/// after each completed point (from whichever worker finished it).
+#[derive(Debug, Clone, Copy)]
+pub struct SweepProgress<'a> {
+    /// Points finished so far (including this one).
+    pub completed: usize,
+    /// Total points in the sweep.
+    pub total: usize,
+    /// The point that just finished.
+    pub point: &'a SweepPoint,
+}
+
+/// Typed cartesian builder over (systems × buffer configs × workloads).
+///
+/// Unset axes default to: all systems, the baseline `G2K_L0` buffer
+/// config, and `ResNet18_Full`. [`SweepGrid::bufcfgs`] supplies explicit
+/// `(gbuf, lbuf)` pairs (the Fig. 7 joint-scaling shape) and overrides
+/// the `gbuf_bytes × lbuf_bytes` product.
+#[derive(Debug, Clone, Default)]
+pub struct SweepGrid {
+    systems: Vec<System>,
+    gbufs: Vec<usize>,
+    lbufs: Vec<usize>,
+    bufcfgs: Vec<(usize, usize)>,
+    workloads: Vec<Workload>,
+    explicit_points: Vec<SweepPoint>,
+}
+
+impl SweepGrid {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Escape hatch: a sweep over pre-built points (custom `ArchConfig`s,
+    /// e.g. dataflow-ablation variants). Combines with any builder axes
+    /// by appending after the generated grid.
+    pub fn from_points(points: Vec<SweepPoint>) -> Self {
+        Self { explicit_points: points, ..Self::default() }
+    }
+
+    pub fn systems(mut self, systems: impl IntoIterator<Item = System>) -> Self {
+        self.systems = systems.into_iter().collect();
+        self
+    }
+
+    pub fn gbuf_bytes(mut self, gbufs: impl IntoIterator<Item = usize>) -> Self {
+        self.gbufs = gbufs.into_iter().collect();
+        self
+    }
+
+    pub fn lbuf_bytes(mut self, lbufs: impl IntoIterator<Item = usize>) -> Self {
+        self.lbufs = lbufs.into_iter().collect();
+        self
+    }
+
+    /// Explicit `(gbuf, lbuf)` pairs; overrides the gbuf × lbuf product.
+    pub fn bufcfgs(mut self, cfgs: impl IntoIterator<Item = (usize, usize)>) -> Self {
+        self.bufcfgs = cfgs.into_iter().collect();
+        self
+    }
+
+    pub fn workloads(mut self, workloads: impl IntoIterator<Item = Workload>) -> Self {
+        self.workloads = workloads.into_iter().collect();
+        self
+    }
+
+    /// Convenience for a single-workload sweep.
+    pub fn workload(self, w: Workload) -> Self {
+        self.workloads([w])
+    }
+
+    /// The ordered point list this grid expands to: workload-major, then
+    /// system, then buffer config (GBUF-major, LBUF-minor), then any
+    /// [`SweepGrid::from_points`] extras.
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let untouched = self.systems.is_empty()
+            && self.gbufs.is_empty()
+            && self.lbufs.is_empty()
+            && self.bufcfgs.is_empty()
+            && self.workloads.is_empty();
+        if untouched && !self.explicit_points.is_empty() {
+            return self.explicit_points.clone();
+        }
+        let systems = if self.systems.is_empty() { System::ALL.to_vec() } else { self.systems.clone() };
+        let bufcfgs: Vec<(usize, usize)> = if !self.bufcfgs.is_empty() {
+            self.bufcfgs.clone()
+        } else {
+            let gbufs = if self.gbufs.is_empty() { vec![2 * 1024] } else { self.gbufs.clone() };
+            let lbufs = if self.lbufs.is_empty() { vec![0] } else { self.lbufs.clone() };
+            gbufs.iter().flat_map(|&g| lbufs.iter().map(move |&l| (g, l))).collect()
+        };
+        let workloads = if self.workloads.is_empty() {
+            vec![Workload::ResNet18Full]
+        } else {
+            self.workloads.clone()
+        };
+        let mut pts =
+            Vec::with_capacity(workloads.len() * systems.len() * bufcfgs.len() + self.explicit_points.len());
+        for &w in &workloads {
+            for &s in &systems {
+                for &(g, l) in &bufcfgs {
+                    pts.push(SweepPoint { cfg: ArchConfig::system(s, g, l), workload: w });
+                }
+            }
+        }
+        pts.extend(self.explicit_points.iter().cloned());
+        pts
+    }
+
+    /// Evaluate every point through the session (parallel above
+    /// [`PARALLEL_THRESHOLD`] points) and normalize per-workload against
+    /// the session baseline. `Err` only for baseline failures; per-point
+    /// failures are recorded in their [`SweepRow`].
+    pub fn run(&self, session: &Session) -> Result<SweepResults> {
+        self.run_with_progress(session, |_| {})
+    }
+
+    /// [`SweepGrid::run`] with a per-point progress callback, invoked from
+    /// worker threads as points complete (completion order, not point
+    /// order).
+    pub fn run_with_progress<F>(&self, session: &Session, progress: F) -> Result<SweepResults>
+    where
+        F: Fn(SweepProgress<'_>) + Send + Sync,
+    {
+        let points = self.points();
+        // Warm each distinct workload's baseline (and thereby its graph)
+        // and each distinct (workload, dataflow) plan serially, so every
+        // parallel worker and every normalization hits the session cache:
+        // exactly one baseline run per workload, and no worker ever
+        // builds while holding a cache mutex.
+        let mut warmed: Vec<Workload> = Vec::new();
+        let mut warmed_plans: Vec<(Workload, Dataflow)> = Vec::new();
+        for p in &points {
+            if !warmed.contains(&p.workload) {
+                session.baseline(p.workload)?;
+                warmed.push(p.workload);
+            }
+            let key = (p.workload, p.cfg.dataflow);
+            if !warmed_plans.contains(&key) {
+                // Ignore warm failures: a bad point must fail as its own
+                // row (the per-point run re-validates), not abort the
+                // whole sweep.
+                let _ = session.warm(&p.cfg, p.workload);
+                warmed_plans.push(key);
+            }
+        }
+        let total = points.len();
+        let done = AtomicUsize::new(0);
+        let reports = run_points(&points, |pt| {
+            let r = session.run(&pt.cfg, pt.workload);
+            let completed = done.fetch_add(1, Ordering::Relaxed) + 1;
+            progress(SweepProgress { completed, total, point: pt });
+            r
+        });
+        let mut rows = Vec::with_capacity(total);
+        for (pt, report) in points.into_iter().zip(reports) {
+            let norm = match &report {
+                Ok(r) => Some(r.normalize(&session.baseline(pt.workload)?)),
+                Err(_) => None,
+            };
+            rows.push(SweepRow { point: pt, report, norm });
+        }
+        Ok(SweepResults { baseline_label: session.baseline_config().label(), rows })
+    }
+}
+
+/// One evaluated sweep point: the input point, its report (or error), and
+/// its normalization against the session baseline for its workload.
+#[derive(Debug)]
+pub struct SweepRow {
+    pub point: SweepPoint,
+    pub report: Result<PpaReport>,
+    pub norm: Option<Normalized>,
+}
+
+/// An ordered collection of sweep rows with built-in normalization,
+/// tabling ([`SweepResults::table`]) and serialization
+/// ([`SweepResults::to_json`] / [`SweepResults::to_csv`], in
+/// `coordinator::serialize`).
+#[derive(Debug)]
+pub struct SweepResults {
+    /// Label of the config every row is normalized against.
+    pub baseline_label: String,
+    /// Rows in [`SweepGrid::points`] order.
+    pub rows: Vec<SweepRow>,
+}
+
+impl SweepResults {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, SweepRow> {
+        self.rows.iter()
+    }
+
+    /// The successful reports, in point order.
+    pub fn reports(&self) -> impl Iterator<Item = &PpaReport> {
+        self.rows.iter().filter_map(|r| r.report.as_ref().ok())
+    }
+
+    /// Error out on the first failed point, if any.
+    pub fn ensure_ok(&self) -> Result<&Self> {
+        for row in &self.rows {
+            if let Err(e) = &row.report {
+                bail!(
+                    "sweep point {} on {} failed: {e}",
+                    row.point.cfg.label(),
+                    row.point.workload.name()
+                );
+            }
+        }
+        Ok(self)
+    }
+
+    /// Render the paper-style normalized table (config / workload /
+    /// cycles / energy / area, percentages relative to the baseline).
+    pub fn table(&self) -> String {
+        use crate::util::table::{pct_or_x, Table};
+        let mut t = Table::new(vec!["config", "workload", "cycles", "energy", "area"]);
+        for row in &self.rows {
+            match (&row.report, row.norm) {
+                (Ok(r), Some(n)) => {
+                    t.row(vec![
+                        r.label.clone(),
+                        r.workload.clone(),
+                        pct_or_x(n.cycles),
+                        pct_or_x(n.energy),
+                        pct_or_x(n.area),
+                    ]);
+                }
+                _ => {
+                    t.row(vec![
+                        row.point.cfg.label(),
+                        row.point.workload.name().to_string(),
+                        "error".to_string(),
+                        "error".to_string(),
+                        "error".to_string(),
+                    ]);
+                }
+            }
+        }
+        t.render()
+    }
+}
+
+impl<'a> IntoIterator for &'a SweepResults {
+    type Item = &'a SweepRow;
+    type IntoIter = std::slice::Iter<'a, SweepRow>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_axes_fill_in() {
+        let pts = SweepGrid::new().points();
+        // All systems × baseline bufcfg × ResNet18_Full.
+        assert_eq!(pts.len(), 3);
+        assert!(pts.iter().all(|p| p.workload == Workload::ResNet18Full));
+        assert!(pts.iter().all(|p| p.cfg.gbuf_bytes == 2048 && p.cfg.lbuf_bytes == 0));
+    }
+
+    #[test]
+    fn ordering_is_workload_major_then_system_then_bufcfg() {
+        let pts = SweepGrid::new()
+            .systems([System::AimLike, System::Fused4])
+            .gbuf_bytes([2048, 8192])
+            .lbuf_bytes([0, 64])
+            .workloads([Workload::Fig1, Workload::Fig3])
+            .points();
+        assert_eq!(pts.len(), 2 * 2 * 4);
+        assert_eq!(pts[0].workload, Workload::Fig1);
+        assert_eq!(pts[8].workload, Workload::Fig3);
+        // Within a workload: system-major.
+        assert_eq!(pts[0].cfg.system, System::AimLike);
+        assert_eq!(pts[4].cfg.system, System::Fused4);
+        // Within a system: GBUF-major, LBUF-minor.
+        assert_eq!((pts[0].cfg.gbuf_bytes, pts[0].cfg.lbuf_bytes), (2048, 0));
+        assert_eq!((pts[1].cfg.gbuf_bytes, pts[1].cfg.lbuf_bytes), (2048, 64));
+        assert_eq!((pts[2].cfg.gbuf_bytes, pts[2].cfg.lbuf_bytes), (8192, 0));
+    }
+
+    #[test]
+    fn bufcfg_pairs_override_product() {
+        let pts = SweepGrid::new()
+            .systems([System::Fused4])
+            .bufcfgs([(2048, 0), (32 * 1024, 256)])
+            .gbuf_bytes([999]) // ignored: explicit pairs win
+            .workload(Workload::Fig1)
+            .points();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].cfg.gbuf_bytes, 32 * 1024);
+        assert_eq!(pts[1].cfg.lbuf_bytes, 256);
+    }
+
+    #[test]
+    fn from_points_used_alone_is_exact() {
+        let custom = vec![SweepPoint {
+            cfg: ArchConfig::system(System::Fused16, 4096, 32),
+            workload: Workload::Fig3,
+        }];
+        let pts = SweepGrid::from_points(custom.clone()).points();
+        assert_eq!(pts, custom);
+    }
+
+    #[test]
+    fn progress_callback_sees_every_point() {
+        let session = Session::new();
+        let grid = SweepGrid::new()
+            .systems([System::AimLike, System::Fused4])
+            .gbuf_bytes([2048, 8192])
+            .workload(Workload::Fig1);
+        let seen = AtomicUsize::new(0);
+        let results = grid
+            .run_with_progress(&session, |p| {
+                assert_eq!(p.total, 4);
+                assert!(p.completed >= 1 && p.completed <= 4);
+                seen.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        assert_eq!(seen.load(Ordering::Relaxed), 4);
+        assert_eq!(results.len(), 4);
+        results.ensure_ok().unwrap();
+    }
+}

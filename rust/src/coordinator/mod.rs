@@ -1,78 +1,72 @@
-//! The L3 experiment coordinator: runs (architecture × workload) points
-//! through the full mapper → trace → simulator → energy pipeline, fans
-//! parameter sweeps out across OS threads, and regenerates the paper's
-//! figures (see [`experiments`]).
+//! The L3 experiment coordinator — **Experiment API v2**.
+//!
+//! Everything the paper evaluates is some (architecture × buffer config ×
+//! workload) grid run through the mapper → trace → simulator → energy
+//! pipeline and normalized to the AiM-like `G2K_L0` baseline. API v2
+//! expresses that as three types:
+//!
+//! * [`Session`] — owns shared, memoized state: workload graphs, mapped
+//!   plans, per-workload baseline reports, and the [`CostModel`]. Builds
+//!   each piece exactly once, no matter how many points touch it.
+//! * [`Experiment`] — a builder for one evaluation:
+//!   `session.experiment(cfg).workload(w).run()` → [`PpaReport`]
+//!   (or `.normalized()` → [`crate::ppa::Normalized`]).
+//! * [`SweepGrid`] — a typed cartesian builder
+//!   (`.systems(..).gbuf_bytes(..).lbuf_bytes(..).workloads(..)`) that
+//!   yields deterministically-ordered points, fans them out across the
+//!   thread-scoped parallel executor (with an optional per-point progress
+//!   callback), and returns [`SweepResults`] with built-in normalization,
+//!   [tabling](SweepResults::table) and hand-rolled
+//!   [JSON](SweepResults::to_json)/[CSV](SweepResults::to_csv)
+//!   serialization.
+//!
+//! The paper's figures live in [`experiments`], one function per figure,
+//! all driven through a session. The v1 free functions ([`run_ppa`],
+//! [`run_ppa_with`], [`sweep`]) remain as deprecated one-release shims;
+//! see CHANGES.md for the old → new migration table.
+
+mod grid;
+mod serialize;
+mod session;
 
 pub mod experiments;
 
+pub use grid::{SweepGrid, SweepPoint, SweepProgress, SweepResults, SweepRow};
+pub use session::{Experiment, Session, SessionStats};
+
 use crate::config::ArchConfig;
-use crate::dataflow::{plan, CostModel};
-use crate::energy;
+use crate::dataflow::CostModel;
 use crate::ppa::PpaReport;
-use crate::sim::simulate;
-use crate::trace::gen::generate;
 use crate::workload::Workload;
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 /// Evaluate one configuration on one workload end-to-end.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Session::new().experiment(cfg).workload(w).run()` (Experiment API v2)"
+)]
 pub fn run_ppa(cfg: &ArchConfig, workload: Workload) -> Result<PpaReport> {
-    run_ppa_with(cfg, workload, CostModel::default())
+    Session::new().experiment(cfg.clone()).workload(workload).run()
 }
 
 /// [`run_ppa`] with an explicit cost model (used by calibration benches).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Session::with_model(model).experiment(cfg).workload(w).run()` (Experiment API v2)"
+)]
 pub fn run_ppa_with(cfg: &ArchConfig, workload: Workload, model: CostModel) -> Result<PpaReport> {
-    cfg.validate().map_err(anyhow::Error::msg).context("invalid architecture config")?;
-    let g = workload.graph();
-    g.validate().map_err(anyhow::Error::msg)?;
-    let p = plan(&g, cfg);
-    p.validate(&g).map_err(anyhow::Error::msg)?;
-    let trace = generate(&g, cfg, &p, model);
-    let sim = simulate(cfg, &trace);
-    let e = energy::energy(cfg, &sim.actions);
-    let a = energy::area(cfg);
-    Ok(PpaReport {
-        label: cfg.label(),
-        workload: workload.name().to_string(),
-        cycles: sim.cycles,
-        energy_pj: e.total_pj(),
-        area_mm2: a.total_mm2(),
-        sim,
-        energy: e,
-        area: a,
-    })
+    Session::with_model(model).experiment(cfg.clone()).workload(workload).run()
 }
 
-/// One point of a parameter sweep.
-#[derive(Debug, Clone)]
-pub struct SweepPoint {
-    pub cfg: ArchConfig,
-    pub workload: Workload,
-}
-
-/// Run many points in parallel across OS threads (each point is
-/// independent; the pipeline is pure). Results keep input order.
-///
-/// Small grids run serially: one PPA point costs ~20 µs, so below ~64
-/// points thread spawn overhead dominates (EXPERIMENTS.md §Perf it. 2).
+/// Run many points in parallel across OS threads. Results keep input
+/// order.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `SweepGrid::run` (or `SweepGrid::from_points(..).run(&session)`) — Experiment API v2"
+)]
 pub fn sweep(points: &[SweepPoint], model: CostModel) -> Vec<Result<PpaReport>> {
-    if points.len() < 64 {
-        return points.iter().map(|p| run_ppa_with(&p.cfg, p.workload, model)).collect();
-    }
-    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let chunk = crate::util::ceil_div(points.len().max(1), n_threads);
-    std::thread::scope(|s| {
-        let handles: Vec<_> = points
-            .chunks(chunk.max(1))
-            .map(|ps| {
-                s.spawn(move || {
-                    ps.iter()
-                        .map(|p| run_ppa_with(&p.cfg, p.workload, model))
-                        .collect::<Vec<_>>()
-                })
-            })
-            .collect();
-        handles.into_iter().flat_map(|h| h.join().expect("sweep worker panicked")).collect()
-    })
+    let session = Session::with_model(model);
+    grid::run_points(points, |p| session.run(&p.cfg, p.workload))
 }
 
 #[cfg(test)]
@@ -81,9 +75,9 @@ mod tests {
     use crate::config::System;
 
     #[test]
-    fn run_ppa_produces_consistent_report() {
-        let cfg = ArchConfig::baseline();
-        let r = run_ppa(&cfg, Workload::ResNet18First8).unwrap();
+    fn run_produces_consistent_report() {
+        let s = Session::new();
+        let r = s.run(&ArchConfig::baseline(), Workload::ResNet18First8).unwrap();
         assert_eq!(r.label, "AiM-like/G2K_L0");
         assert_eq!(r.workload, "ResNet18_First8Layers");
         assert_eq!(r.cycles, r.sim.cycles);
@@ -92,38 +86,48 @@ mod tests {
     }
 
     #[test]
-    fn invalid_config_is_rejected() {
-        let mut cfg = ArchConfig::baseline();
-        cfg.banks_per_pimcore = 3; // doesn't divide 16
-        assert!(run_ppa(&cfg, Workload::Fig1).is_err());
-    }
-
-    #[test]
-    fn sweep_matches_serial_and_keeps_order() {
-        let points: Vec<SweepPoint> = [2048usize, 8192, 32768]
-            .iter()
-            .flat_map(|&g| {
-                System::ALL.iter().map(move |&s| SweepPoint {
-                    cfg: ArchConfig::system(s, g, 128),
-                    workload: Workload::ResNet18First8,
-                })
-            })
-            .collect();
-        let par = sweep(&points, CostModel::default());
-        for (pt, res) in points.iter().zip(&par) {
-            let serial = run_ppa(&pt.cfg, pt.workload).unwrap();
-            let r = res.as_ref().unwrap();
-            assert_eq!(r.cycles, serial.cycles, "order/determinism broken at {}", r.label);
-            assert_eq!(r.label, pt.cfg.label());
+    fn grid_matches_serial_and_keeps_order() {
+        let session = Session::new();
+        let grid = SweepGrid::new()
+            .gbuf_bytes([2048usize, 8192, 32768])
+            .workload(Workload::ResNet18First8);
+        let results = grid.run(&session).unwrap();
+        let points = grid.points();
+        assert_eq!(results.len(), points.len());
+        let serial = Session::new();
+        for (pt, row) in points.iter().zip(&results) {
+            let want = serial.run(&pt.cfg, pt.workload).unwrap();
+            let got = row.report.as_ref().unwrap();
+            assert_eq!(got.cycles, want.cycles, "order/determinism broken at {}", got.label);
+            assert_eq!(got.label, pt.cfg.label());
         }
     }
 
     #[test]
     fn deterministic_across_runs() {
         let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256);
-        let a = run_ppa(&cfg, Workload::ResNet18Full).unwrap();
-        let b = run_ppa(&cfg, Workload::ResNet18Full).unwrap();
+        let a = Session::new().run(&cfg, Workload::ResNet18Full).unwrap();
+        let b = Session::new().run(&cfg, Workload::ResNet18Full).unwrap();
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.energy_pj, b.energy_pj);
+    }
+
+    /// The v1 shims must keep producing byte-identical results until they
+    /// are removed.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_v2() {
+        let cfg = ArchConfig::system(System::Fused16, 8192, 128);
+        let old = run_ppa(&cfg, Workload::Fig3).unwrap();
+        let new = Session::new().run(&cfg, Workload::Fig3).unwrap();
+        assert_eq!(old.cycles, new.cycles);
+        assert_eq!(old.energy_pj, new.energy_pj);
+
+        let points = SweepGrid::new().workload(Workload::Fig1).points();
+        let old = sweep(&points, CostModel::default());
+        assert_eq!(old.len(), points.len());
+        for (pt, r) in points.iter().zip(&old) {
+            assert_eq!(r.as_ref().unwrap().label, pt.cfg.label());
+        }
     }
 }

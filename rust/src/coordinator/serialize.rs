@@ -1,0 +1,190 @@
+//! Hand-rolled JSON / CSV serialization for [`SweepResults`].
+//!
+//! The offline crate set has no `serde`, so the writers below emit the
+//! formats directly. The schema is flat and stable — it is golden-tested
+//! in `tests/session_api.rs`, so treat any change as a breaking change to
+//! downstream tooling parsing `pimfused ... --json` output.
+
+use super::grid::{SweepResults, SweepRow};
+use std::fmt::Write as _;
+
+/// Escape a string for a JSON string literal (without the quotes).
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a CSV field: quote when it contains a delimiter, quote, or
+/// newline; double any embedded quotes.
+pub(crate) fn csv_escape(s: &str) -> String {
+    if s.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// A JSON number: f64 via `Display` (shortest round-trip form); non-finite
+/// values (never produced by the pipeline) degrade to `null`.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl SweepResults {
+    /// Serialize to pretty-printed JSON (2-space indent):
+    ///
+    /// ```json
+    /// {
+    ///   "baseline": "AiM-like/G2K_L0",
+    ///   "rows": [
+    ///     { "config": "...", "system": "...", "gbuf_bytes": 2048, ... }
+    ///   ]
+    /// }
+    /// ```
+    ///
+    /// Failed points carry `"error": "<message>"` and `null` metrics.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        let _ = writeln!(out, "  \"baseline\": \"{}\",", json_escape(&self.baseline_label));
+        out.push_str("  \"rows\": [");
+        for (i, row) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('\n');
+            json_row(&mut out, row);
+        }
+        if !self.rows.is_empty() {
+            out.push('\n');
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Serialize to CSV with a fixed header row. Failed points leave the
+    /// metric columns empty and put the message in `error`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "config,system,gbuf_bytes,lbuf_bytes,workload,cycles,energy_pj,area_mm2,\
+             norm_cycles,norm_energy,norm_area,error\n",
+        );
+        for row in &self.rows {
+            let cfg = &row.point.cfg;
+            let _ = write!(
+                out,
+                "{},{},{},{},{},",
+                csv_escape(&cfg.label()),
+                csv_escape(cfg.system.name()),
+                cfg.gbuf_bytes,
+                cfg.lbuf_bytes,
+                csv_escape(row.point.workload.name()),
+            );
+            match (&row.report, row.norm) {
+                (Ok(r), Some(n)) => {
+                    let _ = writeln!(
+                        out,
+                        "{},{},{},{},{},{},",
+                        r.cycles,
+                        r.energy_pj,
+                        r.area_mm2,
+                        n.cycles,
+                        n.energy,
+                        n.area
+                    );
+                }
+                _ => {
+                    let err = row.report.as_ref().err().map(|e| e.to_string()).unwrap_or_default();
+                    let _ = writeln!(out, ",,,,,,{}", csv_escape(&err));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn json_row(out: &mut String, row: &SweepRow) {
+    let cfg = &row.point.cfg;
+    out.push_str("    {\n");
+    let _ = writeln!(out, "      \"config\": \"{}\",", json_escape(&cfg.label()));
+    let _ = writeln!(out, "      \"system\": \"{}\",", json_escape(cfg.system.name()));
+    let _ = writeln!(out, "      \"gbuf_bytes\": {},", cfg.gbuf_bytes);
+    let _ = writeln!(out, "      \"lbuf_bytes\": {},", cfg.lbuf_bytes);
+    let _ = writeln!(out, "      \"workload\": \"{}\",", json_escape(row.point.workload.name()));
+    match &row.report {
+        Ok(r) => {
+            let _ = writeln!(out, "      \"cycles\": {},", r.cycles);
+            let _ = writeln!(out, "      \"energy_pj\": {},", json_f64(r.energy_pj));
+            let _ = writeln!(out, "      \"area_mm2\": {},", json_f64(r.area_mm2));
+            match row.norm {
+                Some(n) => {
+                    let _ = writeln!(
+                        out,
+                        "      \"norm\": {{\"cycles\": {}, \"energy\": {}, \"area\": {}}},",
+                        json_f64(n.cycles),
+                        json_f64(n.energy),
+                        json_f64(n.area)
+                    );
+                }
+                None => {
+                    let _ = writeln!(out, "      \"norm\": null,");
+                }
+            }
+            out.push_str("      \"error\": null\n");
+        }
+        Err(e) => {
+            out.push_str("      \"cycles\": null,\n");
+            out.push_str("      \"energy_pj\": null,\n");
+            out.push_str("      \"area_mm2\": null,\n");
+            out.push_str("      \"norm\": null,\n");
+            let _ = writeln!(out, "      \"error\": \"{}\"", json_escape(&e.to_string()));
+        }
+    }
+    out.push_str("    }");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping_covers_specials() {
+        assert_eq!(json_escape(r#"a"b\c"#), r#"a\"b\\c"#);
+        assert_eq!(json_escape("line1\nline2\ttab"), "line1\\nline2\\ttab");
+        assert_eq!(json_escape("ctl\u{1}"), "ctl\\u0001");
+        assert_eq!(json_escape("plain"), "plain");
+    }
+
+    #[test]
+    fn csv_escaping_quotes_when_needed() {
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_escape("two\nlines"), "\"two\nlines\"");
+    }
+
+    #[test]
+    fn json_f64_is_plain_or_null() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(1.0), "1");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+    }
+}

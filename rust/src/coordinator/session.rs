@@ -1,0 +1,378 @@
+//! [`Session`]: the owning context of Experiment API v2.
+//!
+//! A session holds everything that is shared between PPA evaluations —
+//! the [`CostModel`], the baseline configuration used for normalization,
+//! and memoized per-workload state (built graphs, mapped plans, baseline
+//! reports). Free-function pipelines rebuilt all of that for every call;
+//! a session builds each piece **exactly once** and hands out `Arc`s,
+//! which is what makes large design-space sweeps cheap (ROADMAP: scale,
+//! speed, new workloads).
+//!
+//! ```no_run
+//! use pimfused::config::{ArchConfig, System};
+//! use pimfused::coordinator::Session;
+//! use pimfused::workload::Workload;
+//!
+//! let session = Session::new();
+//! let report = session
+//!     .experiment(ArchConfig::system(System::Fused4, 32 * 1024, 256))
+//!     .workload(Workload::ResNet18Full)
+//!     .run()
+//!     .unwrap();
+//! println!("{}: {} cycles", report.label, report.cycles);
+//! ```
+//!
+//! All caches are interior-mutable behind mutexes, so a `&Session` can be
+//! shared across the sweep executor's worker threads.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cnn::Graph;
+use crate::config::{ArchConfig, Dataflow};
+use crate::dataflow::{plan, CostModel, Plan};
+use crate::energy;
+use crate::ppa::{Normalized, PpaReport};
+use crate::sim::simulate;
+use crate::trace::gen::generate;
+use crate::workload::Workload;
+use anyhow::{Context, Result};
+
+/// Shared, memoized state for a family of PPA evaluations.
+///
+/// See the [module docs](self) for the overall shape. Construction is
+/// cheap; nothing is evaluated until the first [`Session::run`] /
+/// [`Experiment::run`] / [`crate::coordinator::SweepGrid::run`].
+pub struct Session {
+    model: CostModel,
+    baseline_cfg: ArchConfig,
+    graphs: Mutex<HashMap<Workload, Arc<Graph>>>,
+    // Plans are keyed by (workload, dataflow): `dataflow::plan` reads
+    // only `cfg.dataflow` (LayerByLayer vs PimFused tile grid), so two
+    // configs differing only in buffers/timing share one mapped plan.
+    plans: Mutex<HashMap<(Workload, Dataflow), Arc<Plan>>>,
+    baselines: Mutex<HashMap<Workload, Arc<PpaReport>>>,
+    counters: Counters,
+}
+
+#[derive(Default)]
+struct Counters {
+    graph_builds: AtomicUsize,
+    plan_builds: AtomicUsize,
+    baseline_runs: AtomicUsize,
+    points_run: AtomicUsize,
+}
+
+/// Snapshot of a session's cache/work counters (see [`Session::stats`]).
+///
+/// The counting test in `tests/session_api.rs` uses this to prove that a
+/// sweep builds each workload graph and baseline report exactly once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Workload graphs built (one per distinct workload touched).
+    pub graph_builds: usize,
+    /// Plans mapped (one per distinct (workload, dataflow) pair).
+    pub plan_builds: usize,
+    /// Baseline reports evaluated (one per distinct workload normalized).
+    pub baseline_runs: usize,
+    /// Total pipeline evaluations, baselines included.
+    pub points_run: usize,
+}
+
+impl Session {
+    /// A session with the default [`CostModel`] and the paper's baseline
+    /// (`AiM-like/G2K_L0`) as the normalization reference.
+    pub fn new() -> Self {
+        Self::with_model(CostModel::default())
+    }
+
+    /// A session with an explicit cost model (calibration benches).
+    pub fn with_model(model: CostModel) -> Self {
+        Session {
+            model,
+            baseline_cfg: ArchConfig::baseline(),
+            graphs: Mutex::new(HashMap::new()),
+            plans: Mutex::new(HashMap::new()),
+            baselines: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        }
+    }
+
+    /// Replace the normalization baseline (builder-style). Clears any
+    /// baseline reports already memoized against the old config.
+    pub fn with_baseline(mut self, cfg: ArchConfig) -> Self {
+        self.baseline_cfg = cfg;
+        self.baselines.lock().unwrap().clear();
+        self
+    }
+
+    /// The session's cost model.
+    pub fn model(&self) -> CostModel {
+        self.model
+    }
+
+    /// The configuration all normalizations are relative to.
+    pub fn baseline_config(&self) -> &ArchConfig {
+        &self.baseline_cfg
+    }
+
+    /// Start building an [`Experiment`] on this session. The workload
+    /// defaults to [`Workload::ResNet18Full`].
+    pub fn experiment(&self, cfg: ArchConfig) -> Experiment<'_> {
+        Experiment { session: self, cfg, workload: Workload::ResNet18Full, model: None }
+    }
+
+    /// The memoized, validated graph for a workload (built on first use).
+    pub fn graph(&self, w: Workload) -> Result<Arc<Graph>> {
+        let mut m = self.graphs.lock().unwrap();
+        if let Some(g) = m.get(&w) {
+            return Ok(g.clone());
+        }
+        self.counters.graph_builds.fetch_add(1, Ordering::Relaxed);
+        let g = w.graph();
+        g.validate()
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("workload {} built an invalid graph", w.name()))?;
+        let g = Arc::new(g);
+        m.insert(w, g.clone());
+        Ok(g)
+    }
+
+    /// The memoized baseline report for a workload: one evaluation of
+    /// [`Session::baseline_config`] per distinct workload, shared by every
+    /// normalization afterwards.
+    pub fn baseline(&self, w: Workload) -> Result<Arc<PpaReport>> {
+        let mut m = self.baselines.lock().unwrap();
+        if let Some(b) = m.get(&w) {
+            return Ok(b.clone());
+        }
+        self.counters.baseline_runs.fetch_add(1, Ordering::Relaxed);
+        let baseline_cfg = self.baseline_cfg.clone();
+        let r = Arc::new(
+            self.run_with_model(&baseline_cfg, w, self.model)
+                .with_context(|| format!("evaluating baseline {}", baseline_cfg.label()))?,
+        );
+        m.insert(w, r.clone());
+        Ok(r)
+    }
+
+    /// Evaluate one configuration on one workload end-to-end, reusing the
+    /// session's memoized graph and plan. Equivalent to
+    /// `session.experiment(cfg).workload(w).run()`.
+    pub fn run(&self, cfg: &ArchConfig, w: Workload) -> Result<PpaReport> {
+        self.run_with_model(cfg, w, self.model)
+    }
+
+    /// [`Session::run`] plus normalization against the memoized baseline
+    /// report for the same workload.
+    pub fn normalized(&self, cfg: &ArchConfig, w: Workload) -> Result<Normalized> {
+        let r = self.run(cfg, w)?;
+        let b = self.baseline(w)?;
+        Ok(r.normalize(&b))
+    }
+
+    /// Snapshot the cache/work counters.
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            graph_builds: self.counters.graph_builds.load(Ordering::Relaxed),
+            plan_builds: self.counters.plan_builds.load(Ordering::Relaxed),
+            baseline_runs: self.counters.baseline_runs.load(Ordering::Relaxed),
+            points_run: self.counters.points_run.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Ensure the graph and plan for `(w, cfg.dataflow)` are memoized.
+    /// The sweep executor calls this from its serial warm-up so parallel
+    /// workers never build inside the cache mutexes — they only take
+    /// cache hits.
+    pub(crate) fn warm(&self, cfg: &ArchConfig, w: Workload) -> Result<()> {
+        let g = self.graph(w)?;
+        self.plan_for(&g, cfg, w)?;
+        Ok(())
+    }
+
+    /// The memoized plan for `(workload, cfg.dataflow)`; validated once.
+    fn plan_for(&self, g: &Graph, cfg: &ArchConfig, w: Workload) -> Result<Arc<Plan>> {
+        let key = (w, cfg.dataflow);
+        let mut m = self.plans.lock().unwrap();
+        if let Some(p) = m.get(&key) {
+            return Ok(p.clone());
+        }
+        self.counters.plan_builds.fetch_add(1, Ordering::Relaxed);
+        let p = plan(g, cfg);
+        p.validate(g)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("mapper produced an invalid plan for {}", w.name()))?;
+        let p = Arc::new(p);
+        m.insert(key, p.clone());
+        Ok(p)
+    }
+
+    /// The full mapper → trace → simulator → energy pipeline with an
+    /// explicit cost model (cache-bypassing callers: model overrides).
+    pub(crate) fn run_with_model(
+        &self,
+        cfg: &ArchConfig,
+        w: Workload,
+        model: CostModel,
+    ) -> Result<PpaReport> {
+        cfg.validate()
+            .map_err(anyhow::Error::msg)
+            .context("invalid architecture config")?;
+        let g = self.graph(w)?;
+        let p = self.plan_for(&g, cfg, w)?;
+        let trace = generate(&g, cfg, &p, model);
+        let sim = simulate(cfg, &trace);
+        let e = energy::energy(cfg, &sim.actions);
+        let a = energy::area(cfg);
+        self.counters.points_run.fetch_add(1, Ordering::Relaxed);
+        Ok(PpaReport {
+            label: cfg.label(),
+            workload: w.name().to_string(),
+            cycles: sim.cycles,
+            energy_pj: e.total_pj(),
+            area_mm2: a.total_mm2(),
+            sim,
+            energy: e,
+            area: a,
+        })
+    }
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Builder for one PPA evaluation on a [`Session`]:
+/// `session.experiment(cfg).workload(w).run()`.
+#[must_use = "an Experiment does nothing until .run() or .normalized()"]
+pub struct Experiment<'s> {
+    session: &'s Session,
+    cfg: ArchConfig,
+    workload: Workload,
+    model: Option<CostModel>,
+}
+
+impl Experiment<'_> {
+    /// Select the workload (default: [`Workload::ResNet18Full`]).
+    pub fn workload(mut self, w: Workload) -> Self {
+        self.workload = w;
+        self
+    }
+
+    /// Override the session's cost model for this experiment only.
+    /// Normalization then also re-evaluates the baseline under the
+    /// override (the memoized baseline belongs to the session model).
+    pub fn model(mut self, m: CostModel) -> Self {
+        self.model = Some(m);
+        self
+    }
+
+    /// Run the experiment end-to-end.
+    pub fn run(self) -> Result<PpaReport> {
+        let model = self.model.unwrap_or(self.session.model);
+        self.session.run_with_model(&self.cfg, self.workload, model)
+    }
+
+    /// Run and normalize against the session baseline on the same workload.
+    pub fn normalized(self) -> Result<Normalized> {
+        match self.model {
+            None => self.session.normalized(&self.cfg, self.workload),
+            Some(m) => {
+                let r = self.session.run_with_model(&self.cfg, self.workload, m)?;
+                let baseline_cfg = self.session.baseline_cfg.clone();
+                let b = self.session.run_with_model(&baseline_cfg, self.workload, m)?;
+                Ok(r.normalize(&b))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::System;
+
+    #[test]
+    fn experiment_matches_direct_run() {
+        let s = Session::new();
+        let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+        let a = s.experiment(cfg.clone()).workload(Workload::ResNet18First8).run().unwrap();
+        let b = s.run(&cfg, Workload::ResNet18First8).unwrap();
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy_pj, b.energy_pj);
+        assert_eq!(a.label, "Fused4/G32K_L256");
+    }
+
+    #[test]
+    fn graph_and_plan_are_memoized() {
+        let s = Session::new();
+        let cfg = ArchConfig::system(System::Fused16, 2048, 0);
+        for lbuf in [0usize, 64, 128] {
+            let mut c = cfg.clone();
+            c.lbuf_bytes = lbuf;
+            s.run(&c, Workload::Fig3).unwrap();
+        }
+        let st = s.stats();
+        assert_eq!(st.graph_builds, 1, "one graph for one workload");
+        assert_eq!(st.plan_builds, 1, "buffer-only changes share the plan");
+        assert_eq!(st.points_run, 3);
+    }
+
+    #[test]
+    fn distinct_dataflows_get_distinct_plans() {
+        let s = Session::new();
+        let fused = ArchConfig::system(System::Fused4, 2048, 0);
+        let mut lbl = fused.clone();
+        lbl.dataflow = crate::config::Dataflow::LayerByLayer;
+        let rf = s.run(&fused, Workload::Fig1).unwrap();
+        let rl = s.run(&lbl, Workload::Fig1).unwrap();
+        assert_ne!(rf.cycles, rl.cycles, "dataflow must change the outcome");
+        assert_eq!(s.stats().plan_builds, 2);
+        assert_eq!(s.stats().graph_builds, 1);
+    }
+
+    #[test]
+    fn baseline_is_evaluated_once_per_workload() {
+        let s = Session::new();
+        let cfg = ArchConfig::system(System::Fused4, 8192, 128);
+        let n1 = s.normalized(&cfg, Workload::Fig1).unwrap();
+        let n2 = s.normalized(&cfg, Workload::Fig1).unwrap();
+        assert_eq!(n1, n2);
+        assert_eq!(s.stats().baseline_runs, 1);
+        s.normalized(&cfg, Workload::Fig3).unwrap();
+        assert_eq!(s.stats().baseline_runs, 2);
+    }
+
+    #[test]
+    fn invalid_config_is_rejected() {
+        let s = Session::new();
+        let mut cfg = ArchConfig::baseline();
+        cfg.banks_per_pimcore = 3; // doesn't divide 16
+        assert!(s.run(&cfg, Workload::Fig1).is_err());
+    }
+
+    #[test]
+    fn custom_baseline_changes_normalization() {
+        let well = ArchConfig::system(System::AimLike, 32 * 1024, 256);
+        let s = Session::new().with_baseline(well.clone());
+        let n = s.normalized(&well, Workload::Fig1).unwrap();
+        assert!((n.cycles - 1.0).abs() < 1e-12, "self-normalization is 1.0");
+        assert_eq!(s.baseline_config().label(), "AiM-like/G32K_L256");
+    }
+
+    #[test]
+    fn model_override_is_self_consistent() {
+        let s = Session::new();
+        let mut m = CostModel::default();
+        m.lbl_feed_lsat *= 2.0;
+        let cfg = ArchConfig::baseline();
+        // Baseline vs itself under any model must normalize to exactly 1.
+        let n = s.experiment(cfg).workload(Workload::Fig1).model(m).normalized().unwrap();
+        assert!((n.cycles - 1.0).abs() < 1e-12);
+        assert!((n.energy - 1.0).abs() < 1e-12);
+    }
+}

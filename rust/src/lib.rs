@@ -17,9 +17,16 @@
 //! * [`sim`] — trace-driven GDDR6 channel simulator (memory cycles).
 //! * [`energy`] — component-level energy/area models @22nm.
 //! * [`ppa`] — PPA reports and normalization against the baseline.
-//! * [`workload`] — the paper's workload scenarios.
-//! * [`coordinator`] — experiment registry + threaded sweep runner.
-//! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts.
+//! * [`workload`] — the paper's workload scenarios (one table drives
+//!   names, aliases and [`workload::Workload::ALL`]).
+//! * [`coordinator`] — **Experiment API v2**: a memoizing
+//!   [`coordinator::Session`], the [`coordinator::Experiment`] builder,
+//!   the [`coordinator::SweepGrid`] cartesian sweep runner (threaded,
+//!   progress callbacks) and [`coordinator::SweepResults`] with JSON/CSV
+//!   serialization; plus [`coordinator::experiments`], the paper-figure
+//!   registry. The v1 free functions remain as deprecated shims.
+//! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts (stubbed
+//!   unless built with the `pjrt` feature).
 //! * [`validate`] — functional dataflow validator (real tensor movement).
 pub mod benchkit;
 pub mod cli;

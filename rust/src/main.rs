@@ -6,8 +6,11 @@
 //! $ pimfused headline
 //! $ pimfused fig5
 //! $ pimfused simulate --config fused4:G32K_L256 --workload full
+//! $ pimfused sweep --systems fused4 --gbuf 2K,32K --lbuf 0,256 --json
 //! $ pimfused trace --config fused16:G2K_L0 --workload fig3
 //! ```
+//!
+//! Bad subcommands or options print the usage text and exit non-zero.
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();

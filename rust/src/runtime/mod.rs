@@ -7,84 +7,165 @@
 //! protos: jax ≥ 0.5 emits 64-bit instruction ids that the crate's
 //! xla_extension 0.5.1 rejects, while the text parser reassigns ids
 //! (see /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! ## Feature gating
+//!
+//! The PJRT bindings (`xla` / xla_extension) are not part of the offline
+//! crate set, so the real implementation is gated behind the `pjrt` cargo
+//! feature. Without it this module compiles a **stub** with the same API:
+//! [`Runtime::cpu`] succeeds (so artifact probes and error-path tests
+//! run), but [`Runtime::load_hlo`] fails with a clear message. Callers
+//! that want to degrade gracefully check [`Runtime::available`] first
+//! (see `examples/e2e_resnet18.rs` and `tests/artifacts_roundtrip.rs`).
 
-use anyhow::{anyhow, Context, Result};
-use std::path::{Path, PathBuf};
-
-/// A PJRT CPU client (one per process is plenty).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-/// A compiled executable plus its source path (for error reporting).
-pub struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: PathBuf,
-}
+use std::path::PathBuf;
 
 impl Runtime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile an HLO-text artifact.
-    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
-        let path = path.as_ref();
-        if !path.exists() {
-            return Err(anyhow!(
-                "artifact {} not found — run `make artifacts` first",
-                path.display()
-            ));
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(LoadedModel { exe, path: path.to_path_buf() })
+    /// Whether this build carries the PJRT-backed runtime (`pjrt` feature).
+    pub const fn available() -> bool {
+        cfg!(feature = "pjrt")
     }
 }
 
-impl LoadedModel {
-    /// Execute with f32 inputs of the given shapes; returns the flattened
-    /// f32 output(s). The AOT pipeline lowers with `return_tuple=True`,
-    /// so results arrive as a tuple even for single outputs.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let expect: usize = dims.iter().product();
-            if expect != data.len() {
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use anyhow::{anyhow, Context, Result};
+    use std::path::{Path, PathBuf};
+
+    /// A PJRT CPU client (one per process is plenty).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    /// A compiled executable plus its source path (for error reporting).
+    pub struct LoadedModel {
+        exe: xla::PjRtLoadedExecutable,
+        pub path: PathBuf,
+    }
+
+    impl Runtime {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile an HLO-text artifact.
+        pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
+            let path = path.as_ref();
+            if !path.exists() {
                 return Err(anyhow!(
-                    "input length {} != shape {:?} product {}",
-                    data.len(),
-                    dims,
-                    expect
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
                 ));
             }
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(data).reshape(&dims_i64)?);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(LoadedModel { exe, path: path.to_path_buf() })
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.path.display()))?[0][0]
-            .to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        outs.into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(anyhow::Error::from))
-            .collect()
+    }
+
+    impl LoadedModel {
+        /// Execute with f32 inputs of the given shapes; returns the flattened
+        /// f32 output(s). The AOT pipeline lowers with `return_tuple=True`,
+        /// so results arrive as a tuple even for single outputs.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let expect: usize = dims.iter().product();
+                if expect != data.len() {
+                    return Err(anyhow!(
+                        "input length {} != shape {:?} product {}",
+                        data.len(),
+                        dims,
+                        expect
+                    ));
+                }
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                literals.push(xla::Literal::vec1(data).reshape(&dims_i64)?);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.path.display()))?[0][0]
+                .to_literal_sync()?;
+            let outs = result.to_tuple()?;
+            outs.into_iter()
+                .map(|l| l.to_vec::<f32>().map_err(anyhow::Error::from))
+                .collect()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use anyhow::{anyhow, Result};
+    use std::path::{Path, PathBuf};
+
+    /// Stub runtime compiled when the `pjrt` feature is off.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    /// Stub model handle; never successfully constructed without `pjrt`.
+    pub struct LoadedModel {
+        pub path: PathBuf,
+    }
+
+    impl Runtime {
+        /// Succeeds so callers can probe artifacts and exercise the
+        /// missing-artifact error path; actual loads fail cleanly.
+        pub fn cpu() -> Result<Self> {
+            Ok(Self { _private: () })
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (built without the `pjrt` feature)".to_string()
+        }
+
+        /// Keeps the missing-artifact diagnostics of the real runtime,
+        /// then fails with the feature hint.
+        pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
+            let path = path.as_ref();
+            if !path.exists() {
+                return Err(anyhow!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                ));
+            }
+            Err(anyhow!(
+                "cannot load {}: pimfused was built without the `pjrt` feature \
+                 (the offline crate set has no xla bindings)",
+                path.display()
+            ))
+        }
+    }
+
+    impl LoadedModel {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            Err(anyhow!(
+                "cannot execute {}: pimfused was built without the `pjrt` feature",
+                self.path.display()
+            ))
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{LoadedModel, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{LoadedModel, Runtime};
 
 /// Repository-relative artifacts directory (honors `PIMFUSED_ARTIFACTS`).
 pub fn artifacts_dir() -> PathBuf {
@@ -112,6 +193,10 @@ mod tests {
     fn shape_mismatch_is_rejected_before_execution() {
         // Uses the reference example's HLO if present; otherwise skipped
         // (the integration test in rust/tests covers the built artifacts).
+        if !Runtime::available() {
+            eprintln!("skipping: built without the `pjrt` feature");
+            return;
+        }
         let probe = artifacts_dir().join("tile_conv_bn_relu.hlo.txt");
         if !probe.exists() {
             eprintln!("skipping: artifacts not built");
@@ -127,5 +212,17 @@ mod tests {
     fn cpu_client_reports_platform() {
         let rt = Runtime::cpu().unwrap();
         assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn stub_loads_fail_with_feature_hint_when_gated() {
+        if Runtime::available() {
+            return;
+        }
+        // An existing path (the crate manifest) must still be refused.
+        let rt = Runtime::cpu().unwrap();
+        let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("Cargo.toml");
+        let err = rt.load_hlo(manifest).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -1,4 +1,9 @@
 //! Workload scenarios evaluated by the paper (§V-A2).
+//!
+//! Every variant's canonical name and CLI aliases live in one [`TABLE`];
+//! [`Workload::ALL`], [`Workload::name`] and [`Workload::parse`] are all
+//! driven from it, so adding a workload is a one-row change (plus its
+//! graph builder) and the accessors cannot drift apart.
 
 use crate::cnn::resnet::{fig1_example, fig3_example, resnet18, resnet18_at, resnet18_first8};
 use crate::cnn::Graph;
@@ -19,7 +24,27 @@ pub enum Workload {
     ResNet18Small,
 }
 
+/// One row per variant: (variant, canonical name, CLI aliases). The
+/// canonical name (case-insensitively) always parses too.
+const TABLE: &[(Workload, &str, &[&str])] = &[
+    (Workload::ResNet18Full, "ResNet18_Full", &["full", "resnet18"]),
+    (Workload::ResNet18First8, "ResNet18_First8Layers", &["first8", "resnet18_first8"]),
+    (Workload::Fig3, "Fig3_Example", &["fig3"]),
+    (Workload::Fig1, "Fig1_Example", &["fig1"]),
+    (Workload::ResNet18Small, "ResNet18_64px", &["small", "resnet18_small"]),
+];
+
 impl Workload {
+    /// Every workload, in [`TABLE`] order (checked by a test).
+    pub const ALL: [Workload; 5] = [
+        Workload::ResNet18Full,
+        Workload::ResNet18First8,
+        Workload::Fig3,
+        Workload::Fig1,
+        Workload::ResNet18Small,
+    ];
+
+    /// The two workloads the paper's figures evaluate.
     pub const PAPER: [Workload; 2] = [Workload::ResNet18First8, Workload::ResNet18Full];
 
     pub fn graph(&self) -> Graph {
@@ -32,25 +57,34 @@ impl Workload {
         }
     }
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            Workload::ResNet18Full => "ResNet18_Full",
-            Workload::ResNet18First8 => "ResNet18_First8Layers",
-            Workload::Fig3 => "Fig3_Example",
-            Workload::Fig1 => "Fig1_Example",
-            Workload::ResNet18Small => "ResNet18_64px",
-        }
+    fn row(&self) -> &'static (Workload, &'static str, &'static [&'static str]) {
+        TABLE
+            .iter()
+            .find(|row| row.0 == *self)
+            .expect("every Workload variant must have a TABLE row")
     }
 
+    /// Canonical name, e.g. `ResNet18_First8Layers`.
+    pub fn name(&self) -> &'static str {
+        self.row().1
+    }
+
+    /// CLI aliases (the first one is the short form shown in usage text).
+    pub fn aliases(&self) -> &'static [&'static str] {
+        self.row().2
+    }
+
+    /// Parse a CLI spelling: any alias or the canonical name,
+    /// case-insensitively.
     pub fn parse(s: &str) -> Result<Self, String> {
-        match s.to_ascii_lowercase().as_str() {
-            "full" | "resnet18" | "resnet18_full" => Ok(Workload::ResNet18Full),
-            "first8" | "resnet18_first8" | "resnet18_first8layers" => Ok(Workload::ResNet18First8),
-            "fig3" => Ok(Workload::Fig3),
-            "fig1" => Ok(Workload::Fig1),
-            "small" | "resnet18_small" => Ok(Workload::ResNet18Small),
-            _ => Err(format!("unknown workload {s:?} (full|first8|fig1|fig3|small)")),
+        let t = s.trim().to_ascii_lowercase();
+        for &(w, name, aliases) in TABLE {
+            if t == name.to_ascii_lowercase() || aliases.contains(&t.as_str()) {
+                return Ok(w);
+            }
         }
+        let short: Vec<&str> = TABLE.iter().map(|row| row.2[0]).collect();
+        Err(format!("unknown workload {s:?} ({})", short.join("|")))
     }
 }
 
@@ -60,16 +94,41 @@ mod tests {
 
     #[test]
     fn all_workloads_build_valid_graphs() {
-        for w in [
-            Workload::ResNet18Full,
-            Workload::ResNet18First8,
-            Workload::Fig3,
-            Workload::Fig1,
-            Workload::ResNet18Small,
-        ] {
+        for w in Workload::ALL {
             let g = w.graph();
             g.validate().unwrap();
             assert!(g.num_layers() >= 2, "{} too small", w.name());
+        }
+    }
+
+    #[test]
+    fn table_covers_all_in_order() {
+        assert_eq!(TABLE.len(), Workload::ALL.len());
+        for (row, w) in TABLE.iter().zip(Workload::ALL) {
+            assert_eq!(row.0, w, "TABLE and ALL must list variants in the same order");
+            assert!(!row.2.is_empty(), "{} needs at least one alias", row.1);
+        }
+    }
+
+    #[test]
+    fn names_and_aliases_roundtrip_through_parse() {
+        for w in Workload::ALL {
+            assert_eq!(Workload::parse(w.name()).unwrap(), w, "canonical {}", w.name());
+            assert_eq!(Workload::parse(&w.name().to_ascii_uppercase()).unwrap(), w);
+            for a in w.aliases() {
+                assert_eq!(Workload::parse(a).unwrap(), w, "alias {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn aliases_are_unique_across_workloads() {
+        let mut seen: Vec<String> = Vec::new();
+        for &(_, name, aliases) in TABLE {
+            for s in aliases.iter().map(|a| a.to_string()).chain([name.to_ascii_lowercase()]) {
+                assert!(!seen.contains(&s), "duplicate spelling {s:?}");
+                seen.push(s);
+            }
         }
     }
 
@@ -78,5 +137,6 @@ mod tests {
         assert_eq!(Workload::parse("full").unwrap(), Workload::ResNet18Full);
         assert_eq!(Workload::parse("First8").unwrap(), Workload::ResNet18First8);
         assert!(Workload::parse("nope").is_err());
+        assert!(Workload::parse("nope").unwrap_err().contains("full|first8"));
     }
 }

@@ -11,6 +11,10 @@ use pimfused::util::rng::XorShift64;
 use pimfused::validate::tensor::Tensor;
 
 fn have_artifacts() -> bool {
+    if !Runtime::available() {
+        eprintln!("skipping artifact roundtrip: built without the `pjrt` feature");
+        return false;
+    }
     let ok = artifacts_dir().join("tile_conv_bn_relu.hlo.txt").exists();
     if !ok {
         eprintln!("skipping artifact roundtrip: run `make artifacts` first");

@@ -2,7 +2,7 @@
 //! the full workload/system matrix, plus property-based invariants.
 
 use pimfused::config::{ArchConfig, System};
-use pimfused::coordinator::{run_ppa, run_ppa_with};
+use pimfused::coordinator::Session;
 use pimfused::dataflow::{plan, CostModel};
 use pimfused::sim::simulate;
 use pimfused::trace::gen::generate;
@@ -12,32 +12,28 @@ use pimfused::workload::Workload;
 
 #[test]
 fn every_system_runs_every_workload() {
+    let session = Session::new();
     for sys in System::ALL {
-        for w in [
-            Workload::ResNet18Full,
-            Workload::ResNet18First8,
-            Workload::Fig1,
-            Workload::Fig3,
-            Workload::ResNet18Small,
-        ] {
+        for w in Workload::ALL {
             let cfg = ArchConfig::system(sys, 8 * 1024, 128);
-            let r = run_ppa(&cfg, w).unwrap_or_else(|e| panic!("{sys:?}/{w:?}: {e}"));
+            let r = session.run(&cfg, w).unwrap_or_else(|e| panic!("{sys:?}/{w:?}: {e}"));
             assert!(r.cycles > 0);
             assert!(r.energy_pj > 0.0);
             assert!(r.area_mm2 > 0.0);
         }
     }
+    // One graph and (at most) one plan per dataflow were built per
+    // workload, no matter how many systems ran it.
+    assert_eq!(session.stats().graph_builds, Workload::ALL.len());
 }
 
 #[test]
 fn headline_beats_baseline_on_all_axes() {
-    let base = run_ppa(&ArchConfig::baseline(), Workload::ResNet18Full).unwrap();
-    let ours = run_ppa(
-        &ArchConfig::system(System::Fused4, 32 * 1024, 256),
-        Workload::ResNet18Full,
-    )
-    .unwrap();
-    let n = ours.normalize(&base);
+    let n = Session::new()
+        .experiment(ArchConfig::system(System::Fused4, 32 * 1024, 256))
+        .workload(Workload::ResNet18Full)
+        .normalized()
+        .unwrap();
     // Paper: 30.6% / 83.4% / 76.5%. Keep generous reproduction bands so
     // recalibration doesn't thrash CI, but the win must be simultaneous.
     assert!((0.2..0.45).contains(&n.cycles), "cycles {}", n.cycles);
@@ -92,9 +88,9 @@ fn prop_cycles_monotone_in_buffers_full_matrix() {
             (sys, w, gb, lb)
         },
         |&(sys, w, gb, lb)| {
-            let m = CostModel::default();
-            let small = run_ppa_with(&ArchConfig::system(sys, gb, lb), w, m).unwrap();
-            let big = run_ppa_with(&ArchConfig::system(sys, gb * 2, lb + 128), w, m).unwrap();
+            let s = Session::new();
+            let small = s.run(&ArchConfig::system(sys, gb, lb), w).unwrap();
+            let big = s.run(&ArchConfig::system(sys, gb * 2, lb + 128), w).unwrap();
             big.cycles <= small.cycles && big.energy_pj <= small.energy_pj * 1.02
         },
     );
@@ -108,10 +104,10 @@ fn prop_energy_scales_with_work() {
         8,
         |g: &mut Gen| *g.choose(&System::ALL),
         |&sys| {
-            let m = CostModel::default();
+            let s = Session::new();
             let cfg = ArchConfig::system(sys, 8192, 128);
-            let first8 = run_ppa_with(&cfg, Workload::ResNet18First8, m).unwrap();
-            let full = run_ppa_with(&cfg, Workload::ResNet18Full, m).unwrap();
+            let first8 = s.run(&cfg, Workload::ResNet18First8).unwrap();
+            let full = s.run(&cfg, Workload::ResNet18Full).unwrap();
             full.cycles > first8.cycles && full.energy_pj > first8.energy_pj
         },
     );

@@ -1,0 +1,216 @@
+//! Experiment API v2 integration tests: `SweepGrid` ordering and
+//! determinism against serial `Session` runs (including the parallel
+//! executor path), baseline-cache correctness, the graph/baseline
+//! reuse-exactly-once guarantee, and JSON/CSV golden outputs.
+
+use pimfused::config::{ArchConfig, System};
+use pimfused::coordinator::{Session, SweepGrid, SweepPoint, SweepResults, SweepRow};
+use pimfused::energy::{AreaReport, EnergyReport};
+use pimfused::ppa::{Normalized, PpaReport};
+use pimfused::sim::SimResult;
+use pimfused::workload::Workload;
+
+#[test]
+fn parallel_sweep_matches_serial_session_and_keeps_order() {
+    // 3 systems × 5 GBUFs × 5 LBUFs = 75 points: above the executor's
+    // serial threshold (64), so this exercises the threaded path.
+    let grid = SweepGrid::new()
+        .systems(System::ALL)
+        .gbuf_bytes([2048, 4096, 8192, 16384, 32768])
+        .lbuf_bytes([0, 64, 128, 256, 512])
+        .workload(Workload::Fig1);
+    let points = grid.points();
+    assert_eq!(points.len(), 75);
+
+    let session = Session::new();
+    let results = grid.run(&session).unwrap();
+    results.ensure_ok().unwrap();
+    assert_eq!(results.len(), points.len());
+
+    let serial = Session::new();
+    for (pt, row) in points.iter().zip(&results) {
+        assert_eq!(row.point, *pt, "result order must match point order");
+        let want = serial.run(&pt.cfg, pt.workload).unwrap();
+        let got = row.report.as_ref().unwrap();
+        assert_eq!(got.cycles, want.cycles, "{}", pt.cfg.label());
+        assert_eq!(got.energy_pj, want.energy_pj, "{}", pt.cfg.label());
+        assert_eq!(got.label, pt.cfg.label());
+    }
+}
+
+#[test]
+fn sweep_reuses_graph_and_baseline_exactly_once_per_workload() {
+    let session = Session::new();
+    let grid = SweepGrid::new()
+        .systems([System::AimLike, System::Fused4])
+        .gbuf_bytes([2048, 8192])
+        .lbuf_bytes([0, 128])
+        .workloads([Workload::Fig1, Workload::Fig3]);
+    let results = grid.run(&session).unwrap();
+    results.ensure_ok().unwrap();
+    assert_eq!(results.len(), 16);
+
+    let st = session.stats();
+    assert_eq!(st.graph_builds, 2, "one graph build per workload, shared with the baseline");
+    assert_eq!(st.baseline_runs, 2, "one baseline report per workload");
+    // 16 points + 2 baselines.
+    assert_eq!(st.points_run, 18);
+
+    // A second identical sweep re-runs points but rebuilds nothing.
+    grid.run(&session).unwrap().ensure_ok().unwrap();
+    let st2 = session.stats();
+    assert_eq!(st2.graph_builds, 2);
+    assert_eq!(st2.baseline_runs, 2);
+    assert_eq!(st2.plan_builds, st.plan_builds);
+}
+
+#[test]
+fn cached_baseline_normalization_equals_fresh() {
+    let cfg = ArchConfig::system(System::Fused16, 8192, 128);
+    let session = Session::new();
+    let first = session.normalized(&cfg, Workload::Fig3).unwrap();
+    let cached = session.normalized(&cfg, Workload::Fig3).unwrap();
+    let fresh = Session::new().normalized(&cfg, Workload::Fig3).unwrap();
+    assert_eq!(first, cached, "cache must not change the result");
+    assert_eq!(first, fresh, "memoized normalization must equal from-scratch");
+    assert_eq!(session.stats().baseline_runs, 1);
+}
+
+#[test]
+fn grid_norms_match_explicit_normalization() {
+    let session = Session::new();
+    let results = SweepGrid::new()
+        .systems([System::Fused4])
+        .bufcfgs([(2048, 0), (32 * 1024, 256)])
+        .workload(Workload::Fig3)
+        .run(&session)
+        .unwrap();
+    for row in &results {
+        let n = row.norm.unwrap();
+        let want = session.normalized(&row.point.cfg, row.point.workload).unwrap();
+        assert_eq!(n, want);
+    }
+}
+
+/// Handcrafted results for byte-exact serializer goldens (the pipeline's
+/// own numbers are model-calibration-dependent; the *format* is the
+/// contract).
+fn golden_results() -> SweepResults {
+    let ok_cfg = ArchConfig::system(System::Fused4, 2048, 0);
+    let ok_report = PpaReport {
+        label: ok_cfg.label(),
+        workload: Workload::Fig1.name().to_string(),
+        cycles: 100,
+        energy_pj: 1.5,
+        area_mm2: 0.25,
+        sim: SimResult::default(),
+        energy: EnergyReport { components: vec![] },
+        area: AreaReport {
+            pimcores_mm2: 0.25,
+            gbcore_mm2: 0.0,
+            gbuf_mm2: 0.0,
+            lbufs_mm2: 0.0,
+            control_mm2: 0.0,
+        },
+    };
+    let err_cfg = ArchConfig::system(System::AimLike, 2048, 0);
+    SweepResults {
+        baseline_label: "AiM-like/G2K_L0".to_string(),
+        rows: vec![
+            SweepRow {
+                point: SweepPoint { cfg: ok_cfg, workload: Workload::Fig1 },
+                report: Ok(ok_report),
+                norm: Some(Normalized { cycles: 0.5, energy: 0.75, area: 1.0 }),
+            },
+            SweepRow {
+                point: SweepPoint { cfg: err_cfg, workload: Workload::Fig1 },
+                report: Err(anyhow::anyhow!("boom \"quoted\"")),
+                norm: None,
+            },
+        ],
+    }
+}
+
+#[test]
+fn json_golden_output() {
+    let want = r#"{
+  "baseline": "AiM-like/G2K_L0",
+  "rows": [
+    {
+      "config": "Fused4/G2K_L0",
+      "system": "Fused4",
+      "gbuf_bytes": 2048,
+      "lbuf_bytes": 0,
+      "workload": "Fig1_Example",
+      "cycles": 100,
+      "energy_pj": 1.5,
+      "area_mm2": 0.25,
+      "norm": {"cycles": 0.5, "energy": 0.75, "area": 1},
+      "error": null
+    },
+    {
+      "config": "AiM-like/G2K_L0",
+      "system": "AiM-like",
+      "gbuf_bytes": 2048,
+      "lbuf_bytes": 0,
+      "workload": "Fig1_Example",
+      "cycles": null,
+      "energy_pj": null,
+      "area_mm2": null,
+      "norm": null,
+      "error": "boom \"quoted\""
+    }
+  ]
+}
+"#;
+    assert_eq!(golden_results().to_json(), want);
+}
+
+#[test]
+fn csv_golden_output() {
+    let want = "config,system,gbuf_bytes,lbuf_bytes,workload,cycles,energy_pj,area_mm2,norm_cycles,norm_energy,norm_area,error\n\
+                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,100,1.5,0.25,0.5,0.75,1,\n\
+                AiM-like/G2K_L0,AiM-like,2048,0,Fig1_Example,,,,,,,\"boom \"\"quoted\"\"\"\n";
+    assert_eq!(golden_results().to_csv(), want);
+}
+
+#[test]
+fn real_sweep_serializes_consistently() {
+    let session = Session::new();
+    let results = SweepGrid::new()
+        .systems([System::Fused4, System::Fused16])
+        .gbuf_bytes([2048, 8192])
+        .workload(Workload::Fig1)
+        .run(&session)
+        .unwrap();
+    results.ensure_ok().unwrap();
+
+    let json = results.to_json();
+    assert_eq!(json.matches("\"config\":").count(), results.len());
+    assert_eq!(json.matches("\"error\": null").count(), results.len());
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+
+    let csv = results.to_csv();
+    let lines: Vec<&str> = csv.trim_end().lines().collect();
+    assert_eq!(lines.len(), results.len() + 1, "header + one line per row");
+    let cols = lines[0].split(',').count();
+    for l in &lines {
+        assert_eq!(l.split(',').count(), cols, "ragged CSV row: {l}");
+    }
+}
+
+#[test]
+fn table_lists_every_point() {
+    let session = Session::new();
+    let results = SweepGrid::new()
+        .systems([System::Fused4])
+        .gbuf_bytes([2048, 8192])
+        .lbuf_bytes([0, 256])
+        .workload(Workload::Fig1)
+        .run(&session)
+        .unwrap();
+    let t = results.table();
+    assert_eq!(t.matches("Fused4/").count(), 4);
+    assert!(t.contains("workload"));
+    assert!(t.contains("Fig1_Example"));
+}

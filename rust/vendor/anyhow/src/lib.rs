@@ -1,0 +1,185 @@
+//! Offline stand-in for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build image has no crates.io access, so this vendored shim provides
+//! the (small) slice of `anyhow`'s API that pimfused uses, source-compatibly:
+//!
+//! * [`Error`] — an opaque error value built from any message or any
+//!   `std::error::Error`, carrying a context chain.
+//! * [`Result<T>`] — `std::result::Result<T, Error>` with a default type
+//!   parameter, like `anyhow::Result`.
+//! * [`Context`] — `.context(...)` / `.with_context(...)` on any `Result`
+//!   whose error converts into [`Error`].
+//! * [`anyhow!`] and [`bail!`] — format-style error construction.
+//!
+//! Differences from the real crate are deliberate simplifications: the
+//! error stores its cause chain as rendered strings (no downcasting, no
+//! backtraces), and `Display` prints the whole chain joined with `": "`
+//! so single-line `error: {e}` reports stay informative.
+
+use std::fmt;
+
+/// An opaque error: a rendered message plus outer-to-inner context chain.
+pub struct Error {
+    /// `chain[0]` is the outermost context, `chain.last()` the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct an error from any displayable message
+    /// (`anyhow::Error::msg` equivalent).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outer-to-inner chain of messages.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for c in rest {
+                        write!(f, "\n    {c}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`; that
+// is what makes this blanket conversion coherent (same trick as the real
+// anyhow crate).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result`: a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to results.
+pub trait Context<T> {
+    /// Wrap the error (if any) with an outer context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (like `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (like `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err() -> Result<i32> {
+        let n: i32 = "not-a-number".parse()?; // From<ParseIntError>
+        Ok(n)
+    }
+
+    #[test]
+    fn display_joins_context_chain() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(e.to_string(), "outer: mid: root");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        let e = parse_err().unwrap_err();
+        assert!(e.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn context_on_results() {
+        let r: Result<()> = Err(Error::msg("boom"));
+        let e = r.context("while exploding").unwrap_err();
+        assert_eq!(e.to_string(), "while exploding: boom");
+
+        let r: std::result::Result<(), std::num::ParseIntError> =
+            "x".parse::<i32>().map(|_| ());
+        let e = r.with_context(|| format!("parsing {}", "x")).unwrap_err();
+        assert!(e.to_string().starts_with("parsing x: "));
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with code 7");
+        let e = anyhow!("x = {x}", x = 3);
+        assert_eq!(e.to_string(), "x = 3");
+    }
+
+    #[test]
+    fn debug_renders_caused_by() {
+        let e = Error::msg("root").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("root"));
+    }
+}
