@@ -1,9 +1,9 @@
 //! Hand-rolled CLI (the offline image has no `clap`).
 //!
 //! ```text
-//! pimfused simulate --config fused4:G32K_L256 --workload full [--json]
+//! pimfused simulate --config fused4:G32K_L256 --workload full [--engine event] [--json]
 //! pimfused fig5|fig6|fig7|takeaways|headline
-//! pimfused sweep --systems aim,fused16,fused4 --gbuf 2K,32K --lbuf 0,256 --workload full [--json]
+//! pimfused sweep --systems aim,fused16,fused4 --gbuf 2K,32K --lbuf 0,256 --workload full [--engine event] [--json]
 //! pimfused trace --config fused16:G2K_L0 --workload fig3 [--limit 40]
 //! pimfused validate --config fused4:G8K_L128
 //! pimfused cmdset
@@ -14,7 +14,7 @@
 //! [`SweepResults::to_json`] schema. Bad subcommands or options fail with
 //! a non-zero exit and the usage text.
 
-use crate::config::{ArchConfig, System};
+use crate::config::{ArchConfig, Engine, System};
 use crate::coordinator::{experiments, Session, SweepGrid, SweepPoint, SweepResults};
 use crate::dataflow::{plan, CostModel};
 use crate::trace::gen::generate;
@@ -27,9 +27,11 @@ use std::collections::HashMap;
 pub const USAGE: &str = "\
 usage: pimfused <command> [--key value]... [--json]
 commands:
-  simulate   one PPA point          --config <sys:GmK_Ln> --workload <w> [--json]
+  simulate   one PPA point          --config <sys:GmK_Ln> --workload <w>
+                                    [--engine analytic|event] [--json]
   sweep      buffer design sweep    --systems aim,fused16,fused4 --gbuf 2K,32K
-                                    --lbuf 0,256 --workload <w> [--json]
+                                    --lbuf 0,256 --workload <w>
+                                    [--engine analytic|event] [--json]
   fig5 | fig6 | fig7                regenerate the paper's figures
   takeaways | headline              §V-D statistics / the headline claim
   trace      dump a command trace   --config <sys:GmK_Ln> --workload <w> [--limit N]
@@ -37,6 +39,7 @@ commands:
   cmdset     list the Table-I PIM commands
 workloads: full | first8 | fig1 | fig3 | small
 systems:   aim | fused16 | fused4        bufcfg: e.g. fused4:G32K_L256
+engines:   analytic (serial sum) | event (overlap-aware, reports utilization)
 ";
 
 /// Options that are flags (no value); everything else takes `--key value`.
@@ -85,6 +88,11 @@ impl Args {
         Workload::parse(w).map_err(anyhow::Error::msg)
     }
 
+    fn engine(&self) -> Result<Engine> {
+        let e = self.opts.get("engine").map(String::as_str).unwrap_or("analytic");
+        Engine::parse(e).map_err(anyhow::Error::msg)
+    }
+
     fn flag(&self, name: &str) -> bool {
         self.opts.get(name).map(String::as_str) == Some("true")
     }
@@ -106,8 +114,8 @@ pub fn run(args: &Args) -> Result<String> {
     let session = Session::with_model(model);
     match args.cmd.as_str() {
         "simulate" => {
-            args.check_opts(&["config", "workload", "json"])?;
-            let cfg = args.config()?;
+            args.check_opts(&["config", "workload", "engine", "json"])?;
+            let cfg = args.config()?.with_engine(args.engine()?);
             let w = args.workload()?;
             let results = SweepGrid::from_points(vec![SweepPoint { cfg, workload: w }])
                 .run(&session)?;
@@ -118,19 +126,25 @@ pub fn run(args: &Args) -> Result<String> {
             let row = &results.rows[0];
             let r = row.report.as_ref().expect("ensure_ok");
             let n = row.norm.expect("ensure_ok");
-            Ok(format!(
-                "{} on {}\n  memory cycles : {}\n  energy        : {:.3} mJ\n  area          : {:.3} mm2\n  vs {}: {}\n",
+            let mut out = format!(
+                "{} on {} ({} engine)\n  memory cycles : {}\n  energy        : {:.3} mJ\n  area          : {:.3} mm2\n  vs {}: {}\n",
                 r.label,
                 r.workload,
+                r.engine.name(),
                 r.cycles,
                 r.energy_pj / 1e9,
                 r.area_mm2,
                 results.baseline_label,
                 n.render()
-            ))
+            );
+            if let Some(occ) = &r.occupancy {
+                out.push_str("per-resource occupancy:\n");
+                out.push_str(&occ.render());
+            }
+            Ok(out)
         }
         "sweep" => {
-            args.check_opts(&["systems", "gbuf", "lbuf", "workload", "json"])?;
+            args.check_opts(&["systems", "gbuf", "lbuf", "workload", "engine", "json"])?;
             let systems: Vec<System> = args
                 .opts
                 .get("systems")
@@ -157,6 +171,7 @@ pub fn run(args: &Args) -> Result<String> {
                 .gbuf_bytes(gbufs)
                 .lbuf_bytes(lbufs)
                 .workload(w)
+                .engine(args.engine()?)
                 .run(&session)?;
             results.ensure_ok()?;
             if args.flag("json") {
@@ -308,6 +323,57 @@ mod tests {
         let out = run(&a).unwrap();
         assert_eq!(out.matches("\"config\":").count(), 2);
         assert_eq!(out.matches("\"error\": null").count(), 2);
+    }
+
+    #[test]
+    fn simulate_event_engine_reports_utilization_everywhere() {
+        // Acceptance: `simulate --engine event --json` runs for every
+        // workload × system and reports per-resource utilization.
+        use crate::workload::Workload;
+        for w in Workload::ALL {
+            for sys in System::ALL {
+                let spec = format!(
+                    "simulate --config {}:G8K_L128 --workload {} --engine event --json",
+                    sys.name().to_ascii_lowercase(),
+                    w.name()
+                );
+                let out = run(&parse_args(&argv(&spec)).unwrap())
+                    .unwrap_or_else(|e| panic!("{spec}: {e}"));
+                assert!(out.contains("\"engine\": \"event\""), "{spec}");
+                assert!(out.contains("\"utilization\": {\"makespan\": "), "{spec}");
+                assert!(out.contains("\"cores\": ["), "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn simulate_event_text_output_renders_occupancy() {
+        let a = parse_args(&argv(
+            "simulate --config fused4:G32K_L256 --workload fig1 --engine event",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("(event engine)"));
+        assert!(out.contains("per-resource occupancy:"));
+        assert!(out.contains("bus/GBUF port"));
+        // The analytic default prints no occupancy table.
+        let b = parse_args(&argv("simulate --config fused4:G32K_L256 --workload fig1")).unwrap();
+        let out = run(&b).unwrap();
+        assert!(out.contains("(analytic engine)"));
+        assert!(!out.contains("per-resource occupancy"));
+    }
+
+    #[test]
+    fn sweep_accepts_engine_option() {
+        let a = parse_args(&argv(
+            "sweep --systems fused4 --gbuf 2K --lbuf 0 --workload fig1 --engine event --json",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("\"engine\": \"event\""));
+        let bad = parse_args(&argv("simulate --engine warp --workload fig1")).unwrap();
+        let e = run(&bad).unwrap_err().to_string();
+        assert!(e.contains("unknown engine"), "{e}");
     }
 
     #[test]

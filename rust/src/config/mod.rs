@@ -50,6 +50,59 @@ impl Dataflow {
     }
 }
 
+/// Which simulation engine turns a command trace into cycles (DESIGN.md
+/// §6). Both engines report identical [`crate::sim::ActionCounts`] (so
+/// energy is engine-independent); they differ only in how command
+/// durations compose into total cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Engine {
+    /// Commands execute strictly back-to-back ([`crate::sim::engine`]):
+    /// total cycles are the sum of per-command durations. Fast, simple,
+    /// and systematically conservative about overlap.
+    Analytic,
+    /// Discrete-event scheduling with per-resource busy-until timelines
+    /// ([`crate::sim::event`]): independent commands overlap wherever
+    /// their data dependencies and resource reservations allow, and the
+    /// result carries a per-resource occupancy breakdown.
+    Event,
+}
+
+/// One row per engine: (variant, display name, CLI aliases) — the same
+/// table treatment as [`System`], so `name` and `parse` cannot drift.
+const ENGINE_TABLE: &[(Engine, &str, &[&str])] = &[
+    (Engine::Analytic, "analytic", &["serial"]),
+    (Engine::Event, "event", &["evt"]),
+];
+
+impl Engine {
+    pub const ALL: [Engine; 2] = [Engine::Analytic, Engine::Event];
+
+    fn row(&self) -> &'static (Engine, &'static str, &'static [&'static str]) {
+        ENGINE_TABLE
+            .iter()
+            .find(|row| row.0 == *self)
+            .expect("every Engine variant must have an ENGINE_TABLE row")
+    }
+
+    /// Display name, e.g. `event`.
+    pub fn name(&self) -> &'static str {
+        self.row().1
+    }
+
+    /// Parse a CLI spelling: the display name or any alias,
+    /// case-insensitively.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let t = s.trim().to_ascii_lowercase();
+        for &(e, name, aliases) in ENGINE_TABLE {
+            if t == name || aliases.contains(&t.as_str()) {
+                return Ok(e);
+            }
+        }
+        let names: Vec<&str> = ENGINE_TABLE.iter().map(|row| row.1).collect();
+        Err(format!("unknown engine {s:?} ({})", names.join("|")))
+    }
+}
+
 /// The three systems of §V-A3.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum System {
@@ -125,6 +178,8 @@ pub struct ArchConfig {
     pub dataflow: Dataflow,
     /// DRAM timing parameters.
     pub timing: DramTiming,
+    /// Simulation engine the coordinator runs this config through.
+    pub engine: Engine,
 }
 
 impl ArchConfig {
@@ -147,7 +202,14 @@ impl ArchConfig {
             gbcore_eltwise_per_cycle: 16,
             dataflow,
             timing: DramTiming::gddr6(),
+            engine: Engine::Analytic,
         }
+    }
+
+    /// Builder-style engine selection: `ArchConfig::system(..).with_engine(e)`.
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
     }
 
     /// The paper's baseline: AiM-like with GBUF = 2 KB, LBUF = 0 (§V-A3).
@@ -260,6 +322,31 @@ mod tests {
         assert_eq!(System::parse("baseline").unwrap(), System::AimLike);
         assert_eq!(System::parse("Fused4").unwrap(), System::Fused4);
         assert!(System::parse("nope").is_err());
+    }
+
+    #[test]
+    fn engine_table_drives_name_and_parse() {
+        assert_eq!(ENGINE_TABLE.len(), Engine::ALL.len());
+        for (row, e) in ENGINE_TABLE.iter().zip(Engine::ALL) {
+            assert_eq!(row.0, e, "ENGINE_TABLE and ALL must agree on order");
+        }
+        for e in Engine::ALL {
+            assert_eq!(Engine::parse(e.name()).unwrap(), e);
+            assert_eq!(Engine::parse(&e.name().to_ascii_uppercase()).unwrap(), e);
+        }
+        assert_eq!(Engine::parse("evt").unwrap(), Engine::Event);
+        assert_eq!(Engine::parse("serial").unwrap(), Engine::Analytic);
+        assert!(Engine::parse("nope").is_err());
+    }
+
+    #[test]
+    fn engine_defaults_to_analytic() {
+        for sys in System::ALL {
+            assert_eq!(ArchConfig::system(sys, 2048, 0).engine, Engine::Analytic);
+        }
+        let c = ArchConfig::baseline().with_engine(Engine::Event);
+        assert_eq!(c.engine, Engine::Event);
+        c.validate().unwrap();
     }
 
     #[test]

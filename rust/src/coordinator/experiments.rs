@@ -2,7 +2,7 @@
 //!
 //! Every function returns structured rows *and* can render the paper-style
 //! normalized table; the benches and the CLI call these, so "regenerate
-//! Fig. N" is a single entry point (see DESIGN.md §4 for the index).
+//! Fig. N" is a single entry point (DESIGN.md §4 is the index).
 //!
 //! All figures run through [`Session`] / [`SweepGrid`] (Experiment API
 //! v2). The `*_in` variants take an existing session so several figures

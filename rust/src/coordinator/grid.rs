@@ -24,7 +24,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::session::Session;
-use crate::config::{ArchConfig, Dataflow, System};
+use crate::config::{ArchConfig, Dataflow, Engine, System};
 use crate::ppa::{Normalized, PpaReport};
 use crate::workload::Workload;
 use anyhow::{bail, Result};
@@ -87,6 +87,7 @@ pub struct SweepGrid {
     lbufs: Vec<usize>,
     bufcfgs: Vec<(usize, usize)>,
     workloads: Vec<Workload>,
+    engines: Vec<Engine>,
     explicit_points: Vec<SweepPoint>,
 }
 
@@ -133,9 +134,42 @@ impl SweepGrid {
         self.workloads([w])
     }
 
+    /// Simulation engines to sweep (innermost axis; default
+    /// [`Engine::Analytic`] only).
+    pub fn engines(mut self, engines: impl IntoIterator<Item = Engine>) -> Self {
+        self.engines = engines.into_iter().collect();
+        self
+    }
+
+    /// Convenience for a single-engine sweep.
+    pub fn engine(self, e: Engine) -> Self {
+        self.engines([e])
+    }
+
+    /// Expand the explicit [`SweepGrid::from_points`] extras across the
+    /// engine axis: `from_points(..).engine(e)` means "run exactly these
+    /// points under `e`"; with no engine axis set, each point keeps the
+    /// engine already on its config.
+    fn explicit_expanded(&self) -> Vec<SweepPoint> {
+        let mut pts = Vec::new();
+        for p in &self.explicit_points {
+            if self.engines.is_empty() {
+                pts.push(p.clone());
+            } else {
+                for &e in &self.engines {
+                    let mut q = p.clone();
+                    q.cfg.engine = e;
+                    pts.push(q);
+                }
+            }
+        }
+        pts
+    }
+
     /// The ordered point list this grid expands to: workload-major, then
-    /// system, then buffer config (GBUF-major, LBUF-minor), then any
-    /// [`SweepGrid::from_points`] extras.
+    /// system, then buffer config (GBUF-major, LBUF-minor), then engine,
+    /// then any [`SweepGrid::from_points`] extras (engine axis applied,
+    /// see [`SweepGrid::explicit_expanded`]).
     pub fn points(&self) -> Vec<SweepPoint> {
         let untouched = self.systems.is_empty()
             && self.gbufs.is_empty()
@@ -143,7 +177,7 @@ impl SweepGrid {
             && self.bufcfgs.is_empty()
             && self.workloads.is_empty();
         if untouched && !self.explicit_points.is_empty() {
-            return self.explicit_points.clone();
+            return self.explicit_expanded();
         }
         let systems = if self.systems.is_empty() { System::ALL.to_vec() } else { self.systems.clone() };
         let bufcfgs: Vec<(usize, usize)> = if !self.bufcfgs.is_empty() {
@@ -158,16 +192,25 @@ impl SweepGrid {
         } else {
             self.workloads.clone()
         };
-        let mut pts =
-            Vec::with_capacity(workloads.len() * systems.len() * bufcfgs.len() + self.explicit_points.len());
+        let engines =
+            if self.engines.is_empty() { vec![Engine::Analytic] } else { self.engines.clone() };
+        let mut pts = Vec::with_capacity(
+            workloads.len() * systems.len() * bufcfgs.len() * engines.len()
+                + self.explicit_points.len(),
+        );
         for &w in &workloads {
             for &s in &systems {
                 for &(g, l) in &bufcfgs {
-                    pts.push(SweepPoint { cfg: ArchConfig::system(s, g, l), workload: w });
+                    for &e in &engines {
+                        pts.push(SweepPoint {
+                            cfg: ArchConfig::system(s, g, l).with_engine(e),
+                            workload: w,
+                        });
+                    }
                 }
             }
         }
-        pts.extend(self.explicit_points.iter().cloned());
+        pts.extend(self.explicit_expanded());
         pts
     }
 
@@ -187,17 +230,18 @@ impl SweepGrid {
         F: Fn(SweepProgress<'_>) + Send + Sync,
     {
         let points = self.points();
-        // Warm each distinct workload's baseline (and thereby its graph)
-        // and each distinct (workload, dataflow) plan serially, so every
-        // parallel worker and every normalization hits the session cache:
-        // exactly one baseline run per workload, and no worker ever
-        // builds while holding a cache mutex.
-        let mut warmed: Vec<Workload> = Vec::new();
+        // Warm each distinct (workload, engine) baseline (and thereby the
+        // workload's graph) and each distinct (workload, dataflow) plan
+        // serially, so every parallel worker and every normalization hits
+        // the session cache: exactly one baseline run per key, and no
+        // worker ever builds while holding a cache mutex.
+        let mut warmed: Vec<(Workload, Engine)> = Vec::new();
         let mut warmed_plans: Vec<(Workload, Dataflow)> = Vec::new();
         for p in &points {
-            if !warmed.contains(&p.workload) {
-                session.baseline(p.workload)?;
-                warmed.push(p.workload);
+            let bkey = (p.workload, p.cfg.engine);
+            if !warmed.contains(&bkey) {
+                session.baseline_for(p.workload, p.cfg.engine)?;
+                warmed.push(bkey);
             }
             let key = (p.workload, p.cfg.dataflow);
             if !warmed_plans.contains(&key) {
@@ -219,7 +263,7 @@ impl SweepGrid {
         let mut rows = Vec::with_capacity(total);
         for (pt, report) in points.into_iter().zip(reports) {
             let norm = match &report {
-                Ok(r) => Some(r.normalize(&session.baseline(pt.workload)?)),
+                Ok(r) => Some(r.normalize(&session.baseline_for(pt.workload, pt.cfg.engine)?)),
                 Err(_) => None,
             };
             rows.push(SweepRow { point: pt, report, norm });
@@ -282,16 +326,19 @@ impl SweepResults {
     }
 
     /// Render the paper-style normalized table (config / workload /
-    /// cycles / energy / area, percentages relative to the baseline).
+    /// engine / cycles / energy / area, percentages relative to the
+    /// baseline — each row against its own engine's baseline).
     pub fn table(&self) -> String {
         use crate::util::table::{pct_or_x, Table};
-        let mut t = Table::new(vec!["config", "workload", "cycles", "energy", "area"]);
+        let mut t = Table::new(vec!["config", "workload", "engine", "cycles", "energy", "area"]);
         for row in &self.rows {
+            let engine = row.point.cfg.engine.name().to_string();
             match (&row.report, row.norm) {
                 (Ok(r), Some(n)) => {
                     t.row(vec![
                         r.label.clone(),
                         r.workload.clone(),
+                        engine,
                         pct_or_x(n.cycles),
                         pct_or_x(n.energy),
                         pct_or_x(n.area),
@@ -301,6 +348,7 @@ impl SweepResults {
                     t.row(vec![
                         row.point.cfg.label(),
                         row.point.workload.name().to_string(),
+                        engine,
                         "error".to_string(),
                         "error".to_string(),
                         "error".to_string(),
@@ -355,6 +403,43 @@ mod tests {
     }
 
     #[test]
+    fn engine_axis_is_innermost_and_defaults_to_analytic() {
+        let pts = SweepGrid::new()
+            .systems([System::AimLike])
+            .gbuf_bytes([2048, 8192])
+            .workload(Workload::Fig1)
+            .engines(Engine::ALL)
+            .points();
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0].cfg.engine, Engine::Analytic);
+        assert_eq!(pts[1].cfg.engine, Engine::Event);
+        assert_eq!(pts[1].cfg.gbuf_bytes, 2048);
+        assert_eq!(pts[2].cfg.gbuf_bytes, 8192);
+        assert!(SweepGrid::new().points().iter().all(|p| p.cfg.engine == Engine::Analytic));
+    }
+
+    #[test]
+    fn dual_engine_sweep_normalizes_per_engine() {
+        let session = Session::new();
+        let results = SweepGrid::new()
+            .systems([System::AimLike])
+            .gbuf_bytes([2048])
+            .workload(Workload::Fig1)
+            .engines(Engine::ALL)
+            .run(&session)
+            .unwrap();
+        results.ensure_ok().unwrap();
+        // Both rows are the baseline config itself, so each normalizes to
+        // 1.0 against its own engine's baseline.
+        for row in &results {
+            let n = row.norm.unwrap();
+            assert!((n.cycles - 1.0).abs() < 1e-12, "{:?}", row.point.cfg.engine);
+        }
+        let ev = results.rows[1].report.as_ref().unwrap();
+        assert!(ev.occupancy.is_some(), "event rows carry occupancy");
+    }
+
+    #[test]
     fn bufcfg_pairs_override_product() {
         let pts = SweepGrid::new()
             .systems([System::Fused4])
@@ -375,6 +460,29 @@ mod tests {
         }];
         let pts = SweepGrid::from_points(custom.clone()).points();
         assert_eq!(pts, custom);
+    }
+
+    #[test]
+    fn from_points_with_engine_axis_stays_exact() {
+        let pt = SweepPoint {
+            cfg: ArchConfig::system(System::Fused16, 4096, 32),
+            workload: Workload::Fig3,
+        };
+        // `.engine(e)` re-targets the explicit points; it must not spawn
+        // a surprise default cartesian grid alongside them.
+        let pts = SweepGrid::from_points(vec![pt.clone()]).engine(Engine::Event).points();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].cfg.engine, Engine::Event);
+        assert_eq!(pts[0].workload, pt.workload);
+        // A multi-engine axis fans each explicit point out, engine-minor.
+        let pts2 = SweepGrid::from_points(vec![pt.clone()]).engines(Engine::ALL).points();
+        assert_eq!(pts2.len(), 2);
+        assert_eq!(pts2[0].cfg.engine, Engine::Analytic);
+        assert_eq!(pts2[1].cfg.engine, Engine::Event);
+        // With no engine axis, an explicit point keeps its own engine.
+        let ev = SweepPoint { cfg: pt.cfg.with_engine(Engine::Event), workload: pt.workload };
+        let pts3 = SweepGrid::from_points(vec![ev]).points();
+        assert_eq!(pts3[0].cfg.engine, Engine::Event);
     }
 
     #[test]

@@ -6,11 +6,13 @@
 //! expresses that as three types:
 //!
 //! * [`Session`] — owns shared, memoized state: workload graphs, mapped
-//!   plans, per-workload baseline reports, and the [`CostModel`]. Builds
-//!   each piece exactly once, no matter how many points touch it.
+//!   plans, per-workload baseline reports, and the
+//!   [`crate::dataflow::CostModel`]. Builds each piece exactly once, no
+//!   matter how many points touch it.
 //! * [`Experiment`] — a builder for one evaluation:
-//!   `session.experiment(cfg).workload(w).run()` → [`PpaReport`]
-//!   (or `.normalized()` → [`crate::ppa::Normalized`]).
+//!   `session.experiment(cfg).workload(w).run()` →
+//!   [`crate::ppa::PpaReport`] (or `.normalized()` →
+//!   [`crate::ppa::Normalized`]).
 //! * [`SweepGrid`] — a typed cartesian builder
 //!   (`.systems(..).gbuf_bytes(..).lbuf_bytes(..).workloads(..)`) that
 //!   yields deterministically-ordered points, fans them out across the
@@ -21,9 +23,14 @@
 //!   serialization.
 //!
 //! The paper's figures live in [`experiments`], one function per figure,
-//! all driven through a session. The v1 free functions ([`run_ppa`],
-//! [`run_ppa_with`], [`sweep`]) remain as deprecated one-release shims;
-//! see CHANGES.md for the old → new migration table.
+//! all driven through a session. The v1 free functions (`run_ppa`,
+//! `run_ppa_with`, `sweep`) were deprecated shims for one release (PR 1)
+//! and are now gone; see CHANGES.md for the old → new migration table.
+//!
+//! Every experiment carries an [`crate::config::Engine`] selection on its
+//! `ArchConfig`: sessions cache baseline reports per `(workload, engine)`
+//! so normalization always compares like with like, and [`SweepGrid`] can
+//! sweep the engine as an axis.
 
 mod grid;
 mod serialize;
@@ -34,45 +41,11 @@ pub mod experiments;
 pub use grid::{SweepGrid, SweepPoint, SweepProgress, SweepResults, SweepRow};
 pub use session::{Experiment, Session, SessionStats};
 
-use crate::config::ArchConfig;
-use crate::dataflow::CostModel;
-use crate::ppa::PpaReport;
-use crate::workload::Workload;
-use anyhow::Result;
-
-/// Evaluate one configuration on one workload end-to-end.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `Session::new().experiment(cfg).workload(w).run()` (Experiment API v2)"
-)]
-pub fn run_ppa(cfg: &ArchConfig, workload: Workload) -> Result<PpaReport> {
-    Session::new().experiment(cfg.clone()).workload(workload).run()
-}
-
-/// [`run_ppa`] with an explicit cost model (used by calibration benches).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `Session::with_model(model).experiment(cfg).workload(w).run()` (Experiment API v2)"
-)]
-pub fn run_ppa_with(cfg: &ArchConfig, workload: Workload, model: CostModel) -> Result<PpaReport> {
-    Session::with_model(model).experiment(cfg.clone()).workload(workload).run()
-}
-
-/// Run many points in parallel across OS threads. Results keep input
-/// order.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `SweepGrid::run` (or `SweepGrid::from_points(..).run(&session)`) — Experiment API v2"
-)]
-pub fn sweep(points: &[SweepPoint], model: CostModel) -> Vec<Result<PpaReport>> {
-    let session = Session::with_model(model);
-    grid::run_points(points, |p| session.run(&p.cfg, p.workload))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::System;
+    use crate::config::{ArchConfig, System};
+    use crate::workload::Workload;
 
     #[test]
     fn run_produces_consistent_report() {
@@ -112,22 +85,26 @@ mod tests {
         assert_eq!(a.energy_pj, b.energy_pj);
     }
 
-    /// The v1 shims must keep producing byte-identical results until they
-    /// are removed.
+    /// The v2 migration target of the removed v1 shims: one-off
+    /// experiments and point-list sweeps go through `Session` /
+    /// `SweepGrid::from_points` and agree with direct session runs.
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_v2() {
+    fn from_points_sweep_matches_session_runs() {
         let cfg = ArchConfig::system(System::Fused16, 8192, 128);
-        let old = run_ppa(&cfg, Workload::Fig3).unwrap();
-        let new = Session::new().run(&cfg, Workload::Fig3).unwrap();
-        assert_eq!(old.cycles, new.cycles);
-        assert_eq!(old.energy_pj, new.energy_pj);
+        let one = Session::new().experiment(cfg.clone()).workload(Workload::Fig3).run().unwrap();
+        let direct = Session::new().run(&cfg, Workload::Fig3).unwrap();
+        assert_eq!(one.cycles, direct.cycles);
+        assert_eq!(one.energy_pj, direct.energy_pj);
 
+        let session = Session::new();
         let points = SweepGrid::new().workload(Workload::Fig1).points();
-        let old = sweep(&points, CostModel::default());
-        assert_eq!(old.len(), points.len());
-        for (pt, r) in points.iter().zip(&old) {
-            assert_eq!(r.as_ref().unwrap().label, pt.cfg.label());
+        let results = SweepGrid::from_points(points.clone()).run(&session).unwrap();
+        results.ensure_ok().unwrap();
+        assert_eq!(results.len(), points.len());
+        for (pt, row) in points.iter().zip(&results) {
+            let r = row.report.as_ref().unwrap();
+            assert_eq!(r.label, pt.cfg.label());
+            assert_eq!(r.cycles, session.run(&pt.cfg, pt.workload).unwrap().cycles);
         }
     }
 }

@@ -83,19 +83,20 @@ impl SweepResults {
     /// metric columns empty and put the message in `error`.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "config,system,gbuf_bytes,lbuf_bytes,workload,cycles,energy_pj,area_mm2,\
+            "config,system,gbuf_bytes,lbuf_bytes,workload,engine,cycles,energy_pj,area_mm2,\
              norm_cycles,norm_energy,norm_area,error\n",
         );
         for row in &self.rows {
             let cfg = &row.point.cfg;
             let _ = write!(
                 out,
-                "{},{},{},{},{},",
+                "{},{},{},{},{},{},",
                 csv_escape(&cfg.label()),
                 csv_escape(cfg.system.name()),
                 cfg.gbuf_bytes,
                 cfg.lbuf_bytes,
                 csv_escape(row.point.workload.name()),
+                cfg.engine.name(),
             );
             match (&row.report, row.norm) {
                 (Ok(r), Some(n)) => {
@@ -120,6 +121,23 @@ impl SweepResults {
     }
 }
 
+/// The per-resource utilization object for event-engine rows: busy cycles
+/// per resource plus the schedule makespan (consumers derive fractions).
+fn json_utilization(occ: &crate::sim::ResourceOccupancy) -> String {
+    let list = |vals: &[u64]| {
+        vals.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
+    };
+    format!(
+        "{{\"makespan\": {}, \"bus\": {}, \"gbcore\": {}, \"host\": {}, \"cores\": [{}], \"banks\": [{}]}}",
+        occ.makespan,
+        occ.bus_busy,
+        occ.gbcore_busy,
+        occ.host_busy,
+        list(&occ.core_busy[..occ.num_cores]),
+        list(&occ.bank_busy[..occ.num_banks]),
+    )
+}
+
 fn json_row(out: &mut String, row: &SweepRow) {
     let cfg = &row.point.cfg;
     out.push_str("    {\n");
@@ -128,6 +146,7 @@ fn json_row(out: &mut String, row: &SweepRow) {
     let _ = writeln!(out, "      \"gbuf_bytes\": {},", cfg.gbuf_bytes);
     let _ = writeln!(out, "      \"lbuf_bytes\": {},", cfg.lbuf_bytes);
     let _ = writeln!(out, "      \"workload\": \"{}\",", json_escape(row.point.workload.name()));
+    let _ = writeln!(out, "      \"engine\": \"{}\",", cfg.engine.name());
     match &row.report {
         Ok(r) => {
             let _ = writeln!(out, "      \"cycles\": {},", r.cycles);
@@ -147,6 +166,14 @@ fn json_row(out: &mut String, row: &SweepRow) {
                     let _ = writeln!(out, "      \"norm\": null,");
                 }
             }
+            match &r.occupancy {
+                Some(occ) => {
+                    let _ = writeln!(out, "      \"utilization\": {},", json_utilization(occ));
+                }
+                None => {
+                    let _ = writeln!(out, "      \"utilization\": null,");
+                }
+            }
             out.push_str("      \"error\": null\n");
         }
         Err(e) => {
@@ -154,6 +181,7 @@ fn json_row(out: &mut String, row: &SweepRow) {
             out.push_str("      \"energy_pj\": null,\n");
             out.push_str("      \"area_mm2\": null,\n");
             out.push_str("      \"norm\": null,\n");
+            out.push_str("      \"utilization\": null,\n");
             let _ = writeln!(out, "      \"error\": \"{}\"", json_escape(&e.to_string()));
         }
     }

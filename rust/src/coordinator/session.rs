@@ -30,11 +30,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cnn::Graph;
-use crate::config::{ArchConfig, Dataflow};
+use crate::config::{ArchConfig, Dataflow, Engine};
 use crate::dataflow::{plan, CostModel, Plan};
 use crate::energy;
 use crate::ppa::{Normalized, PpaReport};
-use crate::sim::simulate;
 use crate::trace::gen::generate;
 use crate::workload::Workload;
 use anyhow::{Context, Result};
@@ -52,7 +51,10 @@ pub struct Session {
     // only `cfg.dataflow` (LayerByLayer vs PimFused tile grid), so two
     // configs differing only in buffers/timing share one mapped plan.
     plans: Mutex<HashMap<(Workload, Dataflow), Arc<Plan>>>,
-    baselines: Mutex<HashMap<Workload, Arc<PpaReport>>>,
+    // Baselines are keyed by (workload, engine): normalization always
+    // compares like with like, so an event-engine experiment is measured
+    // against the baseline config run through the event engine.
+    baselines: Mutex<HashMap<(Workload, Engine), Arc<PpaReport>>>,
     counters: Counters,
 }
 
@@ -139,21 +141,28 @@ impl Session {
         Ok(g)
     }
 
-    /// The memoized baseline report for a workload: one evaluation of
-    /// [`Session::baseline_config`] per distinct workload, shared by every
-    /// normalization afterwards.
+    /// The memoized baseline report for a workload under the baseline
+    /// config's own engine. See [`Session::baseline_for`].
     pub fn baseline(&self, w: Workload) -> Result<Arc<PpaReport>> {
+        self.baseline_for(w, self.baseline_cfg.engine)
+    }
+
+    /// The memoized baseline report for a workload under an explicit
+    /// engine: one evaluation of [`Session::baseline_config`] per distinct
+    /// `(workload, engine)` pair, shared by every normalization
+    /// afterwards.
+    pub fn baseline_for(&self, w: Workload, engine: Engine) -> Result<Arc<PpaReport>> {
         let mut m = self.baselines.lock().unwrap();
-        if let Some(b) = m.get(&w) {
+        if let Some(b) = m.get(&(w, engine)) {
             return Ok(b.clone());
         }
         self.counters.baseline_runs.fetch_add(1, Ordering::Relaxed);
-        let baseline_cfg = self.baseline_cfg.clone();
+        let baseline_cfg = self.baseline_cfg.clone().with_engine(engine);
         let r = Arc::new(
             self.run_with_model(&baseline_cfg, w, self.model)
                 .with_context(|| format!("evaluating baseline {}", baseline_cfg.label()))?,
         );
-        m.insert(w, r.clone());
+        m.insert((w, engine), r.clone());
         Ok(r)
     }
 
@@ -165,10 +174,11 @@ impl Session {
     }
 
     /// [`Session::run`] plus normalization against the memoized baseline
-    /// report for the same workload.
+    /// report for the same workload **and the same engine** (so engine
+    /// choice never skews a ratio).
     pub fn normalized(&self, cfg: &ArchConfig, w: Workload) -> Result<Normalized> {
         let r = self.run(cfg, w)?;
-        let b = self.baseline(w)?;
+        let b = self.baseline_for(w, cfg.engine)?;
         Ok(r.normalize(&b))
     }
 
@@ -223,19 +233,21 @@ impl Session {
         let g = self.graph(w)?;
         let p = self.plan_for(&g, cfg, w)?;
         let trace = generate(&g, cfg, &p, model);
-        let sim = simulate(cfg, &trace);
-        let e = energy::energy(cfg, &sim.actions);
+        let out = crate::sim::run(cfg, &trace);
+        let e = energy::energy(cfg, &out.result.actions);
         let a = energy::area(cfg);
         self.counters.points_run.fetch_add(1, Ordering::Relaxed);
         Ok(PpaReport {
             label: cfg.label(),
             workload: w.name().to_string(),
-            cycles: sim.cycles,
+            engine: cfg.engine,
+            cycles: out.result.cycles,
             energy_pj: e.total_pj(),
             area_mm2: a.total_mm2(),
-            sim,
+            sim: out.result,
             energy: e,
             area: a,
+            occupancy: out.occupancy,
         })
     }
 }
@@ -283,7 +295,8 @@ impl Experiment<'_> {
             None => self.session.normalized(&self.cfg, self.workload),
             Some(m) => {
                 let r = self.session.run_with_model(&self.cfg, self.workload, m)?;
-                let baseline_cfg = self.session.baseline_cfg.clone();
+                let baseline_cfg =
+                    self.session.baseline_cfg.clone().with_engine(self.cfg.engine);
                 let b = self.session.run_with_model(&baseline_cfg, self.workload, m)?;
                 Ok(r.normalize(&b))
             }
@@ -345,6 +358,36 @@ mod tests {
         assert_eq!(s.stats().baseline_runs, 1);
         s.normalized(&cfg, Workload::Fig3).unwrap();
         assert_eq!(s.stats().baseline_runs, 2);
+    }
+
+    #[test]
+    fn baselines_are_keyed_by_engine() {
+        use crate::config::Engine;
+        let s = Session::new();
+        let cfg = ArchConfig::system(System::Fused4, 8192, 128);
+        s.normalized(&cfg, Workload::Fig1).unwrap();
+        assert_eq!(s.stats().baseline_runs, 1);
+        let ev = cfg.with_engine(Engine::Event);
+        s.normalized(&ev, Workload::Fig1).unwrap();
+        assert_eq!(s.stats().baseline_runs, 2, "event engine gets its own baseline");
+        // Event baseline vs itself normalizes to exactly 1, and is served
+        // from the per-engine cache.
+        let base_ev = ArchConfig::baseline().with_engine(Engine::Event);
+        let nb = s.normalized(&base_ev, Workload::Fig1).unwrap();
+        assert!((nb.cycles - 1.0).abs() < 1e-12);
+        assert_eq!(s.stats().baseline_runs, 2, "baseline memoized per (workload, engine)");
+    }
+
+    #[test]
+    fn engine_choice_shares_the_mapped_plan() {
+        use crate::config::Engine;
+        let s = Session::new();
+        let cfg = ArchConfig::system(System::Fused16, 2048, 0);
+        s.run(&cfg, Workload::Fig3).unwrap();
+        s.run(&cfg.clone().with_engine(Engine::Event), Workload::Fig3).unwrap();
+        // The plan depends only on the dataflow, never on the engine.
+        assert_eq!(s.stats().plan_builds, 1);
+        assert_eq!(s.stats().graph_builds, 1);
     }
 
     #[test]

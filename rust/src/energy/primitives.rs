@@ -48,7 +48,7 @@ pub const E_ALU_PJ: f64 = 0.15;
 
 // ----------------------------------------------------------------------
 // Component areas (mm² @22nm). Derived from the PPA ratios the paper
-// reports for its three systems; see DESIGN.md §5 and the area tests.
+// reports for its three systems; see DESIGN.md §7 and the area tests.
 // ----------------------------------------------------------------------
 
 /// GDDR6-AiM-like 1-bank PIMcore: 16-lane BF16 MAC + BN + ReLU.

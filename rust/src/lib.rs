@@ -7,24 +7,29 @@
 //! like cycle simulator + Accelergy-like energy/area estimator) the paper
 //! uses to evaluate it.
 //!
-//! ## Crate layout (see DESIGN.md for the full inventory)
+//! ## Crate layout (see DESIGN.md §1 for the full inventory)
 //!
 //! * [`config`] — architecture geometry, buffer configs (`GmK_Ln`), DRAM
-//!   timing, the three named systems (AiM-like / Fused16 / Fused4).
+//!   timing, the three named systems (AiM-like / Fused16 / Fused4), and
+//!   the [`config::Engine`] simulation-engine selector.
 //! * [`cnn`] — CNN graph IR + ResNet18 builder (paper layer counting).
 //! * [`dataflow`] — layer-by-layer and fused-layer mappers, halo math.
-//! * [`trace`] — Table-I PIM command traces and their generator.
-//! * [`sim`] — trace-driven GDDR6 channel simulator (memory cycles).
+//! * [`trace`] — Table-I PIM command traces with per-node data-flow
+//!   annotations, and their generator.
+//! * [`sim`] — GDDR6 channel simulators (memory cycles): the analytic
+//!   back-to-back engine ([`sim::engine`]) and the event-driven
+//!   per-resource scheduler ([`sim::event`]).
 //! * [`energy`] — component-level energy/area models @22nm.
 //! * [`ppa`] — PPA reports and normalization against the baseline.
 //! * [`workload`] — the paper's workload scenarios (one table drives
 //!   names, aliases and [`workload::Workload::ALL`]).
 //! * [`coordinator`] — **Experiment API v2**: a memoizing
-//!   [`coordinator::Session`], the [`coordinator::Experiment`] builder,
-//!   the [`coordinator::SweepGrid`] cartesian sweep runner (threaded,
-//!   progress callbacks) and [`coordinator::SweepResults`] with JSON/CSV
-//!   serialization; plus [`coordinator::experiments`], the paper-figure
-//!   registry. The v1 free functions remain as deprecated shims.
+//!   [`coordinator::Session`] (baselines cached per workload × engine),
+//!   the [`coordinator::Experiment`] builder, the
+//!   [`coordinator::SweepGrid`] cartesian sweep runner (threaded,
+//!   progress callbacks, engine axis) and [`coordinator::SweepResults`]
+//!   with JSON/CSV serialization; plus [`coordinator::experiments`], the
+//!   paper-figure registry.
 //! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts (stubbed
 //!   unless built with the `pjrt` feature).
 //! * [`validate`] — functional dataflow validator (real tensor movement).

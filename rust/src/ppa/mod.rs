@@ -1,8 +1,9 @@
 //! PPA (performance / power / area) reports and baseline normalization —
 //! what the paper's figures plot.
 
+use crate::config::Engine;
 use crate::energy::{AreaReport, EnergyReport};
-use crate::sim::SimResult;
+use crate::sim::{ResourceOccupancy, SimResult};
 
 /// One system+workload evaluation.
 #[derive(Debug, Clone)]
@@ -11,6 +12,8 @@ pub struct PpaReport {
     pub label: String,
     /// Workload name.
     pub workload: String,
+    /// Simulation engine that produced the cycle count.
+    pub engine: Engine,
     /// Memory-system cycles (performance metric, §V-A1).
     pub cycles: u64,
     /// Total energy in pJ.
@@ -21,6 +24,8 @@ pub struct PpaReport {
     pub sim: SimResult,
     pub energy: EnergyReport,
     pub area: AreaReport,
+    /// Per-resource utilization (event engine only).
+    pub occupancy: Option<ResourceOccupancy>,
 }
 
 /// PPA ratios relative to a baseline run (the paper normalizes everything
@@ -64,6 +69,7 @@ mod tests {
         PpaReport {
             label: "x".into(),
             workload: "w".into(),
+            engine: Engine::Analytic,
             cycles,
             energy_pj,
             area_mm2,
@@ -76,6 +82,7 @@ mod tests {
                 lbufs_mm2: 0.0,
                 control_mm2: 0.0,
             },
+            occupancy: None,
         }
     }
 

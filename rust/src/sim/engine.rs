@@ -1,10 +1,18 @@
-//! The trace-driven simulation engine: command stream → memory cycles +
-//! action counts.
+//! The analytic (back-to-back) simulation engine: command stream → memory
+//! cycles + action counts.
+//!
+//! This module also owns the pieces both engines share: [`cost`] expands a
+//! macro command into the per-resource cycle demands of [`CmdCost`], and
+//! [`tally`] accumulates its [`ActionCounts`]. The analytic engine sums
+//! command durations; the event engine ([`super::event`]) schedules the
+//! same costs onto per-resource timelines. Because both tally through the
+//! same code path, their action counts — and therefore energy reports —
+//! are identical by construction.
 
 use super::dram;
 use super::ActionCounts;
 use crate::config::ArchConfig;
-use crate::trace::{Cmd, CmdKind, Trace};
+use crate::trace::{Cmd, CmdKind, PerCore, Trace};
 
 /// Result of simulating one trace on one architecture.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -33,17 +41,70 @@ pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> SimResult {
     r
 }
 
-/// Advance the simulation by one command (exposed for incremental use by
-/// the validator and the property tests).
-pub fn step(cfg: &ArchConfig, cmd: &Cmd, r: &mut SimResult) {
+/// A macro command's cycle demand on each resource class it occupies.
+/// Both engines derive timing from this one expansion ([`cost`]).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum CmdCost {
+    /// `PIMcore_CMP`: per-core bank-stream cycles (reads + writes + open-row
+    /// hit feed) and the serial GBUF-broadcast bus cycles all cores snoop.
+    Pimcore { core: PerCore, bcast: u64 },
+    /// `GBcore_CMP`: GBcore compute occupancy (command issue excluded).
+    Gbcore(u64),
+    /// `PIM_BK2LBUF` / `PIM_LBUF2BK`: parallel per-core bank-stream cycles.
+    NearBank(PerCore),
+    /// `PIM_BK2GBUF` / `PIM_GBUF2BK`: sequential bus / GBUF-port occupancy.
+    CrossBank(u64),
+    /// Host I/O: off-chip interface occupancy.
+    Host(u64),
+}
+
+/// Expand one macro command into its per-resource cycle demands using the
+/// [`dram`] bank timing formulas.
+pub(crate) fn cost(cfg: &ArchConfig, cmd: &Cmd) -> CmdCost {
     let t = &cfg.timing;
     // A multi-bank PIMcore stripes its streams across its banks (one
     // 256-bit column per bank per cycle — the Fig. 2 4-bank PIMcore has a
     // matching 64-lane datapath), so per-core transfer time divides by
     // the bank fan-in.
     let fanin = cfg.banks_per_pimcore as u64;
-    let a = &mut r.actions;
-    let dur = match &cmd.kind {
+    match &cmd.kind {
+        CmdKind::PimcoreCmp { bank_read, bank_read_hit, bank_write, gbuf_stream, .. } => {
+            // Per-core streams run concurrently; the slowest core bounds.
+            // Row-hit feed moves one column per cycle with no row opens.
+            let mut core = PerCore::zero(bank_read.len());
+            for i in 0..bank_read.len() {
+                core.set(
+                    i,
+                    dram::near_bank_stream_cycles(t, bank_read.get(i).div_ceil(fanin))
+                        + dram::near_bank_stream_cycles(t, bank_write.get(i).div_ceil(fanin))
+                        + dram::row_hit_stream_cycles(bank_read_hit.get(i).div_ceil(fanin)),
+                );
+            }
+            CmdCost::Pimcore { core, bcast: dram::broadcast_cycles(*gbuf_stream) }
+        }
+        CmdKind::GbcoreCmp { eltwise, .. } => {
+            CmdCost::Gbcore(eltwise.div_ceil(cfg.gbcore_eltwise_per_cycle as u64))
+        }
+        CmdKind::Bk2Lbuf { bytes } | CmdKind::Lbuf2Bk { bytes } => {
+            let mut core = PerCore::zero(bytes.len());
+            for i in 0..bytes.len() {
+                core.set(i, dram::near_bank_stream_cycles(t, bytes.get(i).div_ceil(fanin)));
+            }
+            CmdCost::NearBank(core)
+        }
+        CmdKind::Bk2Gbuf { bytes } | CmdKind::Gbuf2Bk { bytes } => {
+            CmdCost::CrossBank(dram::cross_bank_stream_cycles(t, *bytes))
+        }
+        CmdKind::HostWrite { bytes } | CmdKind::HostRead { bytes } => {
+            CmdCost::Host(dram::host_stream_cycles(t, *bytes))
+        }
+    }
+}
+
+/// Accumulate one command's event tallies for the energy model. Shared by
+/// both engines, so action counts cannot depend on engine choice.
+pub(crate) fn tally(cmd: &Cmd, a: &mut ActionCounts) {
+    match &cmd.kind {
         CmdKind::PimcoreCmp {
             macs, eltwise, bank_read, bank_read_hit, bank_write, gbuf_stream, ..
         } => {
@@ -57,80 +118,82 @@ pub fn step(cfg: &ArchConfig, cmd: &Cmd, r: &mut SimResult) {
             // Row activations track unique data only; hit traffic stays
             // in the open row by construction.
             a.row_activations += rows_touched(bank_read.sum() + bank_write.sum());
-            // Per-core streams run concurrently; the slowest core bounds.
-            // Row-hit feed moves one column per cycle with no row opens.
-            let core_max = (0..bank_read.len())
-                .map(|i| {
-                    dram::near_bank_stream_cycles(t, bank_read.get(i).div_ceil(fanin))
-                        + dram::near_bank_stream_cycles(t, bank_write.get(i).div_ceil(fanin))
-                        + dram::row_hit_stream_cycles(bank_read_hit.get(i).div_ceil(fanin))
-                })
-                .max()
-                .unwrap_or(0);
-            let bcast = dram::broadcast_cycles(*gbuf_stream);
-            let d = core_max.max(bcast) + t.t_cmd;
-            r.near_bank_cycles += core_max;
-            d
         }
         CmdKind::GbcoreCmp { eltwise, .. } => {
             a.gbcore_eltwise += eltwise;
             // GBcore streams operands through the GBUF port.
             a.gbuf_read_bytes += eltwise * 2; // operand bytes (bf16)
-            let d = eltwise.div_ceil(cfg.gbcore_eltwise_per_cycle as u64) + t.t_cmd;
-            r.gbcore_cycles += d;
-            d
         }
         CmdKind::Bk2Lbuf { bytes } => {
             a.near_col_read_bytes += bytes.sum();
             a.lbuf_write_bytes += bytes.sum();
             a.row_activations += rows_touched(bytes.sum());
-            let d = (0..bytes.len())
-                .map(|i| dram::near_bank_stream_cycles(t, bytes.get(i).div_ceil(fanin)))
-                .max()
-                .unwrap_or(0)
-                + t.t_cmd;
-            r.near_bank_cycles += d;
-            d
         }
         CmdKind::Lbuf2Bk { bytes } => {
             a.near_col_write_bytes += bytes.sum();
             a.lbuf_read_bytes += bytes.sum();
             a.row_activations += rows_touched(bytes.sum());
-            let d = (0..bytes.len())
-                .map(|i| dram::near_bank_stream_cycles(t, bytes.get(i).div_ceil(fanin)))
-                .max()
-                .unwrap_or(0)
-                + t.t_cmd;
-            r.near_bank_cycles += d;
-            d
         }
         CmdKind::Bk2Gbuf { bytes } => {
             a.cross_col_read_bytes += bytes;
             a.gbuf_write_bytes += bytes;
             a.bus_bytes += bytes;
             a.row_activations += rows_touched(*bytes);
-            let d = dram::cross_bank_stream_cycles(t, *bytes) + t.t_cmd;
-            r.cross_bank_cycles += d;
-            d
         }
         CmdKind::Gbuf2Bk { bytes } => {
             a.cross_col_write_bytes += bytes;
             a.gbuf_read_bytes += bytes;
             a.bus_bytes += bytes;
             a.row_activations += rows_touched(*bytes);
-            let d = dram::cross_bank_stream_cycles(t, *bytes) + t.t_cmd;
-            r.cross_bank_cycles += d;
-            d
         }
         CmdKind::HostWrite { bytes } | CmdKind::HostRead { bytes } => {
             a.host_bytes += bytes;
             a.row_activations += rows_touched(*bytes);
-            let d = dram::host_stream_cycles(t, *bytes) + t.t_cmd;
+        }
+    }
+}
+
+/// Accumulate one command's occupancy into the [`SimResult`] breakdown
+/// fields and return its serial duration (the analytic engine's charge).
+/// Shared with the event engine so the per-path breakdowns agree.
+pub(crate) fn charge(cfg: &ArchConfig, c: &CmdCost, r: &mut SimResult) -> u64 {
+    let t_cmd = cfg.timing.t_cmd;
+    match c {
+        CmdCost::Pimcore { core, bcast } => {
+            let core_max = core.max();
+            r.near_bank_cycles += core_max;
+            core_max.max(*bcast) + t_cmd
+        }
+        CmdCost::Gbcore(c) => {
+            let d = c + t_cmd;
+            r.gbcore_cycles += d;
+            d
+        }
+        CmdCost::NearBank(core) => {
+            let d = core.max() + t_cmd;
+            r.near_bank_cycles += d;
+            d
+        }
+        CmdCost::CrossBank(c) => {
+            let d = c + t_cmd;
+            r.cross_bank_cycles += d;
+            d
+        }
+        CmdCost::Host(c) => {
+            let d = c + t_cmd;
             r.host_cycles += d;
             d
         }
-    };
-    r.cycles += dur;
+    }
+}
+
+/// Advance the simulation by one command (exposed for incremental use by
+/// the validator and the property tests).
+pub fn step(cfg: &ArchConfig, cmd: &Cmd, r: &mut SimResult) {
+    tally(cmd, &mut r.actions);
+    let c = cost(cfg, cmd);
+    let d = charge(cfg, &c, r);
+    r.cycles += d;
 }
 
 fn rows_touched(bytes: u64) -> u64 {

@@ -1,0 +1,167 @@
+//! Dependency tracking: turn a trace's per-node data-flow annotations
+//! into a command-level DAG.
+//!
+//! The rules (DESIGN.md §6.2): commands serving the **same node** execute
+//! in trace order relative to each other (gather → fill → compute →
+//! scatter is a controller-sequenced program per layer). Across nodes, a
+//! command waits on the **last writer** of each feature map it reads
+//! (RAW), and a command that (re)defines a feature map additionally waits
+//! on that map's previous writer (WAW) and on every reader issued since
+//! (WAR) — a fused reorganization must not rewrite a map's bank placement
+//! while an earlier command is still streaming the old layout. Everything
+//! else is free to overlap, subject to resource availability.
+
+use crate::cnn::NodeId;
+use crate::trace::Trace;
+use std::collections::HashMap;
+
+/// Indices of the commands one command must wait for (deduplicated,
+/// unbounded: a map rewrite waits on arbitrarily many open readers).
+#[derive(Debug, Clone, Default)]
+pub(crate) struct Preds {
+    idx: Vec<usize>,
+}
+
+impl Preds {
+    pub(crate) fn add(&mut self, i: usize) {
+        if !self.idx.contains(&i) {
+            self.idx.push(i);
+        }
+    }
+
+    pub(crate) fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.idx.iter().copied()
+    }
+
+    #[cfg(test)]
+    pub(crate) fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    #[cfg(test)]
+    fn sorted(&self) -> Vec<usize> {
+        let mut v = self.idx.clone();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Build the predecessor list for every command in the trace.
+pub(crate) fn build(trace: &Trace) -> Vec<Preds> {
+    let mut last_writer: HashMap<NodeId, usize> = HashMap::new();
+    // Readers of each map since its last write — what a rewrite must
+    // drain before it may change the layout.
+    let mut open_readers: HashMap<NodeId, Vec<usize>> = HashMap::new();
+    let mut last_same_node: HashMap<NodeId, usize> = HashMap::new();
+    let mut preds = Vec::with_capacity(trace.cmds.len());
+    for (i, cmd) in trace.cmds.iter().enumerate() {
+        let mut p = Preds::default();
+        if let Some(&j) = last_same_node.get(&cmd.node) {
+            p.add(j);
+        }
+        for r in cmd.reads.iter() {
+            // Feature maps with no recorded writer (e.g. static weights
+            // or un-annotated test traces) impose no ordering.
+            if let Some(&j) = last_writer.get(&r) {
+                p.add(j);
+            }
+        }
+        if let Some(w) = cmd.writes {
+            if let Some(&j) = last_writer.get(&w) {
+                p.add(j); // WAW
+            }
+            for &j in open_readers.get(&w).into_iter().flatten() {
+                p.add(j); // WAR
+            }
+        }
+        preds.push(p);
+        last_same_node.insert(cmd.node, i);
+        for r in cmd.reads.iter() {
+            open_readers.entry(r).or_default().push(i);
+        }
+        if let Some(w) = cmd.writes {
+            last_writer.insert(w, i);
+            open_readers.entry(w).or_default().clear();
+        }
+    }
+    preds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{CmdKind, Trace};
+
+    #[test]
+    fn same_node_commands_chain() {
+        let mut t = Trace::default();
+        t.push(1, CmdKind::Bk2Gbuf { bytes: 64 });
+        t.push(1, CmdKind::Gbuf2Bk { bytes: 64 });
+        let p = build(&t);
+        assert_eq!(p[0].len(), 0);
+        assert_eq!(p[1].sorted(), vec![0]);
+    }
+
+    #[test]
+    fn readers_wait_on_last_writer_only() {
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 }, &[], Some(1));
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 64 }, &[], Some(2));
+        // Node 3 reads 1 only: independent of command 1 (node 2's write).
+        t.push_dep(3, CmdKind::Bk2Gbuf { bytes: 64 }, &[1], None);
+        // Node 4 reads both.
+        t.push_dep(4, CmdKind::Bk2Gbuf { bytes: 64 }, &[1, 2], None);
+        let p = build(&t);
+        assert_eq!(p[2].sorted(), vec![0]);
+        assert_eq!(p[3].sorted(), vec![0, 1]);
+    }
+
+    #[test]
+    fn rewriting_a_map_retargets_readers() {
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 }, &[], Some(1));
+        // A fused reorganization rewrites node 1's layout...
+        t.push_dep(5, CmdKind::Gbuf2Bk { bytes: 64 }, &[], Some(1));
+        // ...so a later reader of 1 waits for the reorganization.
+        t.push_dep(6, CmdKind::Bk2Gbuf { bytes: 64 }, &[1], None);
+        let p = build(&t);
+        assert_eq!(p[2].sorted(), vec![1]);
+    }
+
+    #[test]
+    fn rewriters_wait_for_open_readers_and_prior_writer() {
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 }, &[], Some(1)); // writes map 1
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 64 }, &[1], None); // reader A
+        t.push_dep(3, CmdKind::Bk2Gbuf { bytes: 64 }, &[1], None); // reader B
+        // A reorganization rewriting map 1 must drain both in-flight
+        // readers (WAR) and order after the original write (WAW).
+        t.push_dep(7, CmdKind::Gbuf2Bk { bytes: 64 }, &[], Some(1));
+        let p = build(&t);
+        assert_eq!(p[3].sorted(), vec![0, 1, 2]);
+        // A write retires the open-reader set: a second rewrite waits on
+        // the first rewrite only, not the long-retired readers.
+        let mut t2 = t.clone();
+        t2.push_dep(8, CmdKind::Gbuf2Bk { bytes: 64 }, &[], Some(1));
+        let p2 = build(&t2);
+        assert_eq!(p2[4].sorted(), vec![3]);
+    }
+
+    #[test]
+    fn unannotated_traces_only_chain_per_node() {
+        let mut t = Trace::default();
+        t.push(1, CmdKind::Bk2Gbuf { bytes: 64 });
+        t.push(2, CmdKind::Bk2Gbuf { bytes: 64 });
+        let p = build(&t);
+        assert_eq!(p[1].len(), 0, "different nodes, no annotations: independent");
+    }
+
+    #[test]
+    fn preds_deduplicate() {
+        let mut p = Preds::default();
+        p.add(3);
+        p.add(3);
+        p.add(7);
+        assert_eq!(p.sorted(), vec![3, 7]);
+    }
+}

@@ -1,0 +1,209 @@
+//! Discrete-event channel simulator — the overlap-aware alternative to
+//! the analytic back-to-back engine (select with
+//! [`Engine::Event`](crate::config::Engine)).
+//!
+//! The analytic engine charges every command serially, so it cannot model
+//! host I/O hidden under compute, GBUF gathers overlapping an independent
+//! branch's MACs, or bus contention over time — it is systematically
+//! conservative about exactly the cross-bank savings PIMfused optimizes.
+//! This engine instead runs a greedy earliest-issue list scheduler
+//! (DESIGN.md §6.2):
+//!
+//! 1. [`deps`] derives a command DAG from the trace's data-flow
+//!    annotations: same-node commands chain; across nodes a command waits
+//!    on the last writer of each feature map it reads (RAW), and a map
+//!    rewrite additionally drains the map's prior writer and every open
+//!    reader (WAW/WAR).
+//! 2. [`resources`] keeps a busy-until timeline per bank, per PIMcore,
+//!    for the shared internal bus / GBUF port, the GBcore, and the host
+//!    interface.
+//! 3. Commands are visited in trace order; each starts at the earliest
+//!    cycle where its predecessors have completed *and* every resource it
+//!    occupies is free, reserving those resources for the durations the
+//!    shared [`engine::cost`] expansion assigns.
+//!
+//! Three invariants hold by construction (property-tested in
+//! `tests/engine_agreement.rs`):
+//!
+//! * action counts — and therefore energy — are identical to the
+//!   analytic engine's (same [`engine::tally`] path);
+//! * total cycles never exceed the analytic serial sum (a command never
+//!   starts later than the previous command's completion);
+//! * total cycles never undercut the busiest single resource's occupancy
+//!   (reservations on one timeline cannot overlap).
+
+mod deps;
+mod resources;
+
+pub use resources::ResourceOccupancy;
+
+use super::engine::{self, charge, cost, tally, CmdCost};
+use super::SimResult;
+use crate::config::ArchConfig;
+use crate::trace::Trace;
+
+/// Event-engine output: the [`SimResult`] (with `cycles` = schedule
+/// makespan and every other field identical to the analytic engine's)
+/// plus the per-resource occupancy breakdown.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EventReport {
+    pub result: SimResult,
+    pub occupancy: ResourceOccupancy,
+}
+
+/// Simulate a full trace with the event-driven scheduler.
+pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> EventReport {
+    let preds = deps::build(trace);
+    let mut tl = resources::Timelines::new(cfg);
+    let mut done: Vec<u64> = vec![0; trace.cmds.len()];
+    let mut r = SimResult::default();
+    let mut makespan = 0u64;
+    let t_cmd = cfg.timing.t_cmd;
+
+    for (i, cmd) in trace.cmds.iter().enumerate() {
+        tally(cmd, &mut r.actions);
+        let c = cost(cfg, cmd);
+        // Keep the per-path occupancy breakdown (near/cross/gbcore/host
+        // cycles) on the analytic engine's accounting, so the two engines
+        // differ only in `cycles`. `charge` returns the serial duration,
+        // which we discard in favor of the scheduled completion below.
+        let _serial = charge(cfg, &c, &mut r);
+        let ready = preds[i].iter().map(|j| done[j]).max().unwrap_or(0);
+        let (start, span) = match &c {
+            CmdCost::Pimcore { core, bcast } => tl.issue_lockstep(ready, core, *bcast),
+            CmdCost::NearBank(core) => tl.issue_lockstep(ready, core, 0),
+            CmdCost::Gbcore(d) => (tl.issue_gbcore(ready, *d), *d),
+            CmdCost::CrossBank(d) => (tl.issue_bus(ready, *d), *d),
+            CmdCost::Host(d) => (tl.issue_host(ready, *d), *d),
+        };
+        done[i] = start + span + t_cmd;
+        makespan = makespan.max(done[i]);
+    }
+
+    r.cycles = makespan;
+    EventReport { result: r, occupancy: tl.into_occupancy(makespan) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet::resnet18_first8;
+    use crate::config::System;
+    use crate::dataflow::{plan, CostModel};
+    use crate::trace::gen::generate;
+    use crate::trace::{CmdKind, PerCore};
+
+    fn paper_trace(sys: System) -> (ArchConfig, Trace) {
+        let g = resnet18_first8();
+        let cfg = ArchConfig::system(sys, 8192, 128);
+        let p = plan(&g, &cfg);
+        let t = generate(&g, &cfg, &p, CostModel::default());
+        (cfg, t)
+    }
+
+    fn serial_cycles(cfg: &ArchConfig, trace: &Trace) -> u64 {
+        engine::simulate(cfg, trace).cycles
+    }
+
+    #[test]
+    fn empty_trace_is_zero_cycles() {
+        let cfg = ArchConfig::baseline();
+        let r = simulate(&cfg, &Trace::default());
+        assert_eq!(r.result.cycles, 0);
+        assert_eq!(r.occupancy.makespan, 0);
+    }
+
+    #[test]
+    fn chained_commands_match_analytic_exactly() {
+        // A strictly-dependent chain has no overlap to find: the event
+        // engine must degrade to the analytic serial total.
+        let cfg = ArchConfig::baseline();
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], Some(1));
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 2048 }, &[1], Some(2));
+        t.push_dep(3, CmdKind::Gbuf2Bk { bytes: 1024 }, &[2], Some(3));
+        let ev = simulate(&cfg, &t);
+        assert_eq!(ev.result.cycles, serial_cycles(&cfg, &t));
+    }
+
+    #[test]
+    fn independent_commands_on_disjoint_resources_overlap() {
+        // A bus transfer and a per-core LBUF fill share nothing: the
+        // event engine runs them concurrently, strictly beating the
+        // analytic serial sum.
+        let cfg = ArchConfig::baseline();
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 * 1024 }, &[], None);
+        t.push_dep(2, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 64 * 1024) }, &[], None);
+        let ev = simulate(&cfg, &t);
+        let serial = serial_cycles(&cfg, &t);
+        assert!(
+            ev.result.cycles < serial,
+            "event {} !< serial {}",
+            ev.result.cycles,
+            serial
+        );
+        // Both still bounded below by the busiest resource.
+        assert!(ev.result.cycles >= ev.occupancy.busiest());
+    }
+
+    #[test]
+    fn contended_resource_serializes() {
+        // Two independent cross-bank transfers both need the bus: their
+        // data phases cannot overlap. Only the second command's issue
+        // slot (`t_cmd`) hides under the first transfer.
+        let cfg = ArchConfig::baseline();
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], None);
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], None);
+        let ev = simulate(&cfg, &t);
+        let serial = serial_cycles(&cfg, &t);
+        assert_eq!(ev.result.cycles, ev.occupancy.bus_busy + cfg.timing.t_cmd);
+        assert_eq!(serial - ev.result.cycles, cfg.timing.t_cmd);
+    }
+
+    #[test]
+    fn rewrite_waits_for_inflight_reader() {
+        // Anti-dependency: a reorganization rewriting map 1's layout may
+        // not overlap the LBUF fill still streaming the old layout, even
+        // though the two occupy disjoint resources (bus vs cores).
+        let cfg = ArchConfig::baseline();
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], Some(1));
+        t.push_dep(2, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 64 * 1024) }, &[1], None);
+        t.push_dep(5, CmdKind::Gbuf2Bk { bytes: 4096 }, &[], Some(1));
+        let ev = simulate(&cfg, &t);
+        // RAW then WAR chain every command: no overlap is legal.
+        assert_eq!(ev.result.cycles, serial_cycles(&cfg, &t));
+    }
+
+    #[test]
+    fn actions_and_breakdowns_match_analytic_on_paper_traces() {
+        for sys in System::ALL {
+            let (cfg, t) = paper_trace(sys);
+            let an = engine::simulate(&cfg, &t);
+            let ev = simulate(&cfg, &t);
+            assert_eq!(ev.result.actions, an.actions, "{sys:?}");
+            assert_eq!(ev.result.cross_bank_cycles, an.cross_bank_cycles, "{sys:?}");
+            assert_eq!(ev.result.near_bank_cycles, an.near_bank_cycles, "{sys:?}");
+            assert_eq!(ev.result.gbcore_cycles, an.gbcore_cycles, "{sys:?}");
+            assert_eq!(ev.result.host_cycles, an.host_cycles, "{sys:?}");
+            assert!(ev.result.cycles <= an.cycles, "{sys:?}: event must not exceed serial");
+            assert!(ev.result.cycles >= ev.occupancy.busiest(), "{sys:?}: below resource bound");
+        }
+    }
+
+    #[test]
+    fn occupancy_report_is_populated() {
+        let (cfg, t) = paper_trace(System::Fused16);
+        let ev = simulate(&cfg, &t);
+        let occ = ev.occupancy;
+        assert_eq!(occ.num_cores, 16);
+        assert_eq!(occ.num_banks, 16);
+        assert_eq!(occ.makespan, ev.result.cycles);
+        assert!(occ.bus_busy > 0);
+        assert!(occ.host_busy > 0);
+        assert!(occ.core_busy[..occ.num_cores].iter().all(|&b| b > 0));
+        assert!(occ.render().contains("pimcore (max)"));
+    }
+}

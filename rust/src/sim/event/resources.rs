@@ -1,0 +1,298 @@
+//! Per-resource occupancy timelines for the event engine.
+//!
+//! Each hardware resource — every bank, every PIMcore, the shared
+//! internal bus / GBUF port, the GBcore, and the host interface — is a
+//! scalar *busy-until* timeline: the greedy scheduler reserves an
+//! interval by advancing `free_at` and tallying busy cycles. Scalar
+//! timelines cannot represent gaps, which keeps reservations O(1) and the
+//! schedule trivially legal; the cost is that a reservation can never be
+//! back-filled (an accepted conservatism, see DESIGN.md §6.2).
+
+use crate::config::ArchConfig;
+use crate::trace::{PerCore, MAX_CORES};
+
+/// Busy-cycle totals per resource, plus the schedule makespan — the
+/// event engine's per-resource utilization breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ResourceOccupancy {
+    /// PIMcores in the channel (valid prefix of the per-core arrays).
+    pub num_cores: usize,
+    /// Banks in the channel (valid prefix of `bank_busy`).
+    pub num_banks: usize,
+    /// Total schedule length in cycles (== the event engine's `cycles`).
+    pub makespan: u64,
+    /// Busy cycles per PIMcore datapath (streams + broadcast snooping).
+    pub core_busy: [u64; MAX_CORES],
+    /// Busy cycles per bank (near-bank column traffic).
+    pub bank_busy: [u64; MAX_CORES],
+    /// Busy cycles of the shared internal bus / GBUF port.
+    pub bus_busy: u64,
+    /// Busy cycles of the GBcore's compute datapath.
+    pub gbcore_busy: u64,
+    /// Busy cycles of the off-chip host interface.
+    pub host_busy: u64,
+}
+
+impl ResourceOccupancy {
+    /// The busiest single resource's occupancy — a lower bound on any
+    /// legal schedule's makespan.
+    pub fn busiest(&self) -> u64 {
+        let cores = self.core_busy[..self.num_cores].iter().copied().max().unwrap_or(0);
+        let banks = self.bank_busy[..self.num_banks].iter().copied().max().unwrap_or(0);
+        cores.max(banks).max(self.bus_busy).max(self.gbcore_busy).max(self.host_busy)
+    }
+
+    fn stat(vals: &[u64]) -> (u64, u64) {
+        let max = vals.iter().copied().max().unwrap_or(0);
+        let mean = if vals.is_empty() { 0 } else { vals.iter().sum::<u64>() / vals.len() as u64 };
+        (max, mean)
+    }
+
+    /// Render the utilization table the CLI prints for `--engine event`
+    /// (bus / GBcore / host individually; cores and banks summarized).
+    pub fn render(&self) -> String {
+        use crate::util::table::{pct, Table};
+        let share = |busy: u64| {
+            if self.makespan == 0 {
+                pct(0.0)
+            } else {
+                pct(busy as f64 / self.makespan as f64)
+            }
+        };
+        let (core_max, core_mean) = Self::stat(&self.core_busy[..self.num_cores]);
+        let (bank_max, bank_mean) = Self::stat(&self.bank_busy[..self.num_banks]);
+        let mut t = Table::new(vec!["resource", "busy_cycles", "utilization"]);
+        t.row(vec!["bus/GBUF port".to_string(), self.bus_busy.to_string(), share(self.bus_busy)]);
+        t.row(vec!["gbcore".to_string(), self.gbcore_busy.to_string(), share(self.gbcore_busy)]);
+        t.row(vec!["host i/f".to_string(), self.host_busy.to_string(), share(self.host_busy)]);
+        t.row(vec!["pimcore (max)".to_string(), core_max.to_string(), share(core_max)]);
+        t.row(vec!["pimcore (mean)".to_string(), core_mean.to_string(), share(core_mean)]);
+        t.row(vec!["bank (max)".to_string(), bank_max.to_string(), share(bank_max)]);
+        t.row(vec!["bank (mean)".to_string(), bank_mean.to_string(), share(bank_mean)]);
+        t.render()
+    }
+}
+
+/// The scheduler's mutable state: one `free_at` per resource, plus the
+/// busy tallies that become the [`ResourceOccupancy`] report.
+pub(crate) struct Timelines {
+    num_banks: usize,
+    banks_per_core: usize,
+    core_free: [u64; MAX_CORES],
+    bank_free: [u64; MAX_CORES],
+    bus_free: u64,
+    gbcore_free: u64,
+    host_free: u64,
+    occ: ResourceOccupancy,
+}
+
+impl Timelines {
+    pub(crate) fn new(cfg: &ArchConfig) -> Self {
+        let num_cores = cfg.num_pimcores().min(MAX_CORES);
+        let num_banks = cfg.num_banks.min(MAX_CORES);
+        Timelines {
+            num_banks,
+            banks_per_core: cfg.banks_per_pimcore,
+            core_free: [0; MAX_CORES],
+            bank_free: [0; MAX_CORES],
+            bus_free: 0,
+            gbcore_free: 0,
+            host_free: 0,
+            occ: ResourceOccupancy { num_cores, num_banks, ..Default::default() },
+        }
+    }
+
+    /// Bank indices owned by PIMcore `i`, clamped to the channel.
+    fn banks_of(&self, core: usize) -> std::ops::Range<usize> {
+        let lo = (core * self.banks_per_core).min(self.num_banks);
+        let hi = ((core + 1) * self.banks_per_core).min(self.num_banks);
+        lo..hi
+    }
+
+    /// Issue a lockstep all-PIMcores command (`PIMcore_CMP`, `PIM_BK2LBUF`,
+    /// `PIM_LBUF2BK`). Every participating core starts together (the macro
+    /// command is broadcast once); core `i` streams its banks for
+    /// `dur[i]` cycles, and a non-zero `bcast` additionally occupies the
+    /// bus while every core snoops it. Returns `(start, span)` where
+    /// `span` is the slowest participant's busy interval.
+    pub(crate) fn issue_lockstep(&mut self, ready: u64, dur: &PerCore, bcast: u64) -> (u64, u64) {
+        let n = dur.len();
+        let participates = |i: usize| dur.get(i) > 0 || bcast > 0;
+        let mut start = ready;
+        for i in 0..n {
+            if !participates(i) {
+                continue;
+            }
+            start = start.max(self.core_free[i]);
+            if dur.get(i) > 0 {
+                for b in self.banks_of(i) {
+                    start = start.max(self.bank_free[b]);
+                }
+            }
+        }
+        if bcast > 0 {
+            start = start.max(self.bus_free);
+        }
+        let mut span = 0;
+        for i in 0..n {
+            if !participates(i) {
+                continue;
+            }
+            // A core snooping a broadcast longer than its own streams
+            // stays occupied until the broadcast completes.
+            let busy = dur.get(i).max(bcast);
+            span = span.max(busy);
+            self.core_free[i] = start + busy;
+            self.occ.core_busy[i] += busy;
+            if dur.get(i) > 0 {
+                for b in self.banks_of(i) {
+                    self.bank_free[b] = start + dur.get(i);
+                    self.occ.bank_busy[b] += dur.get(i);
+                }
+            }
+        }
+        if bcast > 0 {
+            self.bus_free = start + bcast;
+            self.occ.bus_busy += bcast;
+        }
+        (start, span)
+    }
+
+    /// Issue a command on a single serial resource; returns its start.
+    fn issue_serial(free: &mut u64, busy: &mut u64, ready: u64, dur: u64) -> u64 {
+        let start = ready.max(*free);
+        *free = start + dur;
+        *busy += dur;
+        start
+    }
+
+    /// Sequential cross-bank transfer: occupies the shared bus / GBUF
+    /// port. Individual banks are touched one-at-a-time for 1/N of the
+    /// interval each — a conflict the scalar timelines deliberately do
+    /// not model (ROADMAP "bank-conflict refinement").
+    pub(crate) fn issue_bus(&mut self, ready: u64, dur: u64) -> u64 {
+        Self::issue_serial(&mut self.bus_free, &mut self.occ.bus_busy, ready, dur)
+    }
+
+    /// GBcore compute streams its operands through the single-ported
+    /// GBUF, so it occupies the shared bus / GBUF port for its whole
+    /// duration as well as the GBcore datapath. Busy cycles are tallied
+    /// to `gbcore_busy` only — the port reservation exists to serialize
+    /// GBcore work against cross-bank traffic, not to double-count it.
+    pub(crate) fn issue_gbcore(&mut self, ready: u64, dur: u64) -> u64 {
+        let start = ready.max(self.gbcore_free).max(self.bus_free);
+        self.gbcore_free = start + dur;
+        self.bus_free = start + dur;
+        self.occ.gbcore_busy += dur;
+        start
+    }
+
+    pub(crate) fn issue_host(&mut self, ready: u64, dur: u64) -> u64 {
+        Self::issue_serial(&mut self.host_free, &mut self.occ.host_busy, ready, dur)
+    }
+
+    pub(crate) fn into_occupancy(mut self, makespan: u64) -> ResourceOccupancy {
+        self.occ.makespan = makespan;
+        self.occ
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tl() -> Timelines {
+        Timelines::new(&ArchConfig::baseline())
+    }
+
+    #[test]
+    fn serial_resources_queue() {
+        let mut t = tl();
+        assert_eq!(t.issue_bus(0, 10), 0);
+        // Ready earlier than the bus frees: waits.
+        assert_eq!(t.issue_bus(3, 5), 10);
+        // Ready later than the bus frees: starts at ready.
+        assert_eq!(t.issue_bus(100, 1), 100);
+        assert_eq!(t.occ.bus_busy, 16);
+    }
+
+    #[test]
+    fn distinct_resources_overlap() {
+        let mut t = tl();
+        assert_eq!(t.issue_bus(0, 50), 0);
+        assert_eq!(t.issue_host(0, 20), 0, "host i/f is independent of the bus");
+        let mut cores = PerCore::zero(16);
+        cores.set(0, 10);
+        let (s, _) = t.issue_lockstep(0, &cores, 0);
+        assert_eq!(s, 0, "near-bank streams are independent of the bus");
+    }
+
+    #[test]
+    fn gbcore_shares_the_gbuf_port_with_cross_bank_traffic() {
+        let mut t = tl();
+        assert_eq!(t.issue_bus(0, 50), 0);
+        // GBcore compute streams through the single-ported GBUF: it
+        // queues behind the in-flight cross-bank transfer...
+        assert_eq!(t.issue_gbcore(0, 20), 50);
+        // ...and subsequent cross-bank traffic queues behind it in turn,
+        // while only the GBcore tally grows.
+        assert_eq!(t.issue_bus(0, 5), 70);
+        assert_eq!(t.occ.gbcore_busy, 20);
+        assert_eq!(t.occ.bus_busy, 55);
+    }
+
+    #[test]
+    fn lockstep_waits_for_all_participants() {
+        let mut t = tl();
+        // Core 0 busy until 30 via a solo stream.
+        let mut solo = PerCore::zero(16);
+        solo.set(0, 30);
+        let (s0, span0) = t.issue_lockstep(0, &solo, 0);
+        assert_eq!((s0, span0), (0, 30));
+        // An all-cores command must wait for core 0 even though the rest
+        // are idle (lockstep issue).
+        let all = PerCore::uniform(16, 5);
+        let (s1, span1) = t.issue_lockstep(0, &all, 0);
+        assert_eq!((s1, span1), (30, 5));
+    }
+
+    #[test]
+    fn idle_cores_do_not_block() {
+        let mut t = tl();
+        let mut c0 = PerCore::zero(16);
+        c0.set(0, 100);
+        t.issue_lockstep(0, &c0, 0);
+        // A stream that only uses core 1 ignores core 0's reservation.
+        let mut c1 = PerCore::zero(16);
+        c1.set(1, 10);
+        let (s, _) = t.issue_lockstep(0, &c1, 0);
+        assert_eq!(s, 0);
+    }
+
+    #[test]
+    fn broadcast_occupies_bus_and_snooping_cores() {
+        let mut t = tl();
+        let (s, span) = t.issue_lockstep(0, &PerCore::zero(16), 40);
+        assert_eq!((s, span), (0, 40));
+        assert_eq!(t.occ.bus_busy, 40);
+        // Every core snooped the broadcast...
+        assert_eq!(t.occ.core_busy[0], 40);
+        // ...but no bank traffic occurred.
+        assert_eq!(t.occ.bank_busy[0], 0);
+        // The next bus user queues behind the broadcast.
+        assert_eq!(t.issue_bus(0, 1), 40);
+    }
+
+    #[test]
+    fn occupancy_busiest_and_render() {
+        let mut t = tl();
+        t.issue_bus(0, 70);
+        t.issue_gbcore(0, 30);
+        let occ = t.into_occupancy(100);
+        assert_eq!(occ.busiest(), 70);
+        let s = occ.render();
+        assert!(s.contains("bus/GBUF port"));
+        assert!(s.contains("70.0%"));
+        assert!(s.contains("30.0%"));
+    }
+}

@@ -21,14 +21,50 @@
 //! * `GBcore_CMP` streams operands through the GBUF port (16 elem/cycle);
 //! * host I/O crosses the off-chip interface at the external burst rate.
 //!
-//! Commands execute back-to-back (the generator already folded reuse and
-//! overlap decisions into volumes); the engine also tallies
-//! [`ActionCounts`] for the energy model.
+//! Two engines turn those per-command costs into total cycles, selected
+//! by [`crate::config::Engine`] on the `ArchConfig` (DESIGN.md §6):
+//!
+//! * [`engine`] — the **analytic** engine: commands execute back-to-back
+//!   and total cycles are the serial sum. Fast and conservative.
+//! * [`event`] — the **event-driven** engine: a greedy earliest-issue
+//!   scheduler over per-resource busy-until timelines (per bank, per
+//!   PIMcore, the shared bus / GBUF port, the GBcore, the host
+//!   interface), with command ordering derived from the trace's per-node
+//!   data-flow annotations. Independent commands overlap; the result
+//!   adds a per-resource [`ResourceOccupancy`] breakdown.
+//!
+//! Both engines tally identical [`ActionCounts`] for the energy model,
+//! so energy reports never depend on engine choice.
 
 pub mod dram;
 pub mod engine;
+pub mod event;
 
 pub use engine::{simulate, SimResult};
+pub use event::{EventReport, ResourceOccupancy};
+
+use crate::config::{ArchConfig, Engine};
+use crate::trace::Trace;
+
+/// Result of running a trace under the engine `cfg.engine` selects:
+/// the [`SimResult`], plus the per-resource occupancy breakdown when the
+/// event engine produced one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimOutcome {
+    pub result: SimResult,
+    pub occupancy: Option<ResourceOccupancy>,
+}
+
+/// Simulate a trace with the engine selected by `cfg.engine`.
+pub fn run(cfg: &ArchConfig, trace: &Trace) -> SimOutcome {
+    match cfg.engine {
+        Engine::Analytic => SimOutcome { result: engine::simulate(cfg, trace), occupancy: None },
+        Engine::Event => {
+            let r = event::simulate(cfg, trace);
+            SimOutcome { result: r.result, occupancy: Some(r.occupancy) }
+        }
+    }
+}
 
 /// Architecture-event tallies consumed by [`crate::energy`].
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -92,6 +128,21 @@ impl ActionCounts {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn run_dispatches_on_engine() {
+        use crate::trace::CmdKind;
+        let mut t = Trace::default();
+        t.push(0, CmdKind::Bk2Gbuf { bytes: 2048 });
+        let cfg = ArchConfig::baseline();
+        let analytic = run(&cfg, &t);
+        assert!(analytic.occupancy.is_none());
+        assert_eq!(analytic.result, engine::simulate(&cfg, &t));
+        let ev = run(&cfg.clone().with_engine(Engine::Event), &t);
+        let occ = ev.occupancy.expect("event engine reports occupancy");
+        assert_eq!(occ.makespan, ev.result.cycles);
+        assert_eq!(ev.result.actions, analytic.result.actions);
+    }
 
     #[test]
     fn action_counts_add() {

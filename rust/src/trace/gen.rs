@@ -48,7 +48,7 @@ impl<'a> TraceGen<'a> {
         // spatial segment") — halo replication is still charged when the
         // fused kernel fetches it.
         let input_bytes = self.g.nodes[0].shape.bytes() as u64;
-        self.trace.push(0, CmdKind::HostWrite { bytes: input_bytes });
+        self.trace.push_dep(0, CmdKind::HostWrite { bytes: input_bytes }, &[], Some(0));
         let first_layout = match plan.steps.first() {
             Some(PlanStep::Fused { grid, .. }) => Layout::Spatial { ty: grid.0, tx: grid.1 },
             _ => Layout::CoutBanked,
@@ -64,7 +64,12 @@ impl<'a> TraceGen<'a> {
 
         // Host reads the final output.
         let out = self.g.nodes.last().unwrap();
-        self.trace.push(out.id, CmdKind::HostRead { bytes: out.shape.bytes() as u64 });
+        self.trace.push_dep(
+            out.id,
+            CmdKind::HostRead { bytes: out.shape.bytes() as u64 },
+            &[out.id],
+            None,
+        );
     }
 
     // ---------------------------------------------------------------
@@ -100,16 +105,23 @@ impl<'a> TraceGen<'a> {
         let in_bytes: u64 = n.inputs.iter().map(|&i| self.g.nodes[i].shape.bytes() as u64).sum();
 
         // Gather input activations into the GBUF (cross-bank, sequential).
-        self.trace.push(id, CmdKind::Bk2Gbuf { bytes: in_bytes });
+        self.trace.push_dep(id, CmdKind::Bk2Gbuf { bytes: in_bytes }, &n.inputs, None);
 
         let w_total = n.weight_bytes() as u64;
         let w_core = w_total / p as u64;
         let phi = self.model.lbl_feed_phi(n.shape.c, self.cfg.lbuf_bytes);
 
-        // Resident weight slice loads into the LBUF once (if any).
+        // Resident weight slice loads into the LBUF once (if any). Weights
+        // are static (host pre-distributed), so the fill reads no feature
+        // map.
         let resident = (self.cfg.lbuf_bytes as u64).min(w_core);
         if resident > 0 {
-            self.trace.push(id, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(p, resident) });
+            self.trace.push_dep(
+                id,
+                CmdKind::Bk2Lbuf { bytes: PerCore::uniform(p, resident) },
+                &[],
+                None,
+            );
         }
 
         let macs_core = (n.macs() as u64) / p as u64;
@@ -122,15 +134,20 @@ impl<'a> TraceGen<'a> {
         let out_core = (n.shape.bytes() as u64) / p as u64;
         let elt_core = (n.eltwise_ops() as u64) / p as u64;
 
-        self.trace.push(id, CmdKind::PimcoreCmp {
-            flags,
-            macs: PerCore::uniform(p, macs_core),
-            eltwise: PerCore::uniform(p, elt_core),
-            bank_read: PerCore::uniform(p, unique),
-            bank_read_hit: PerCore::uniform(p, hit),
-            bank_write: PerCore::uniform(p, out_core),
-            gbuf_stream: (in_bytes as f64 * self.model.broadcast_pace).round() as u64,
-        });
+        self.trace.push_dep(
+            id,
+            CmdKind::PimcoreCmp {
+                flags,
+                macs: PerCore::uniform(p, macs_core),
+                eltwise: PerCore::uniform(p, elt_core),
+                bank_read: PerCore::uniform(p, unique),
+                bank_read_hit: PerCore::uniform(p, hit),
+                bank_write: PerCore::uniform(p, out_core),
+                gbuf_stream: (in_bytes as f64 * self.model.broadcast_pace).round() as u64,
+            },
+            &n.inputs,
+            Some(id),
+        );
         self.layout.insert(id, Layout::CoutBanked);
     }
 
@@ -140,9 +157,10 @@ impl<'a> TraceGen<'a> {
         let n = &self.g.nodes[id];
         let in_bytes: u64 = n.inputs.iter().map(|&i| self.g.nodes[i].shape.bytes() as u64).sum();
         let out_bytes = n.shape.bytes() as u64;
-        self.trace.push(id, CmdKind::Bk2Gbuf { bytes: in_bytes });
-        self.trace.push(id, CmdKind::GbcoreCmp { flags, eltwise: n.eltwise_ops() as u64 });
-        self.trace.push(id, CmdKind::Gbuf2Bk { bytes: out_bytes });
+        self.trace.push_dep(id, CmdKind::Bk2Gbuf { bytes: in_bytes }, &n.inputs, None);
+        self.trace.push_dep(id, CmdKind::GbcoreCmp { flags, eltwise: n.eltwise_ops() as u64 }, &[], None);
+        // The scatter places the result in banks: it defines `id`'s layout.
+        self.trace.push_dep(id, CmdKind::Gbuf2Bk { bytes: out_bytes }, &[], Some(id));
         self.layout.insert(id, Layout::CoutBanked);
     }
 
@@ -193,8 +211,12 @@ impl<'a> TraceGen<'a> {
             // (the orange "reorganize" boxes of Fig. 3(c)).
             let cross = if matching { demanded.saturating_sub(full) } else { demanded };
             if cross > 0 {
-                self.trace.push(seg_start, CmdKind::Bk2Gbuf { bytes: cross });
-                self.trace.push(seg_start, CmdKind::Gbuf2Bk { bytes: cross });
+                // The reorganization *rewrites* producer `pid`'s bank
+                // placement: readers of `pid` inside the segment must wait
+                // for the scatter, which is why it registers as the new
+                // writer of `pid`.
+                self.trace.push_dep(seg_start, CmdKind::Bk2Gbuf { bytes: cross }, &[pid], None);
+                self.trace.push_dep(seg_start, CmdKind::Gbuf2Bk { bytes: cross }, &[], Some(pid));
             }
         }
     }
@@ -302,17 +324,22 @@ impl<'a> TraceGen<'a> {
         }
 
         if lbuf_fill.sum() > 0 {
-            self.trace.push(id, CmdKind::Bk2Lbuf { bytes: lbuf_fill });
+            self.trace.push_dep(id, CmdKind::Bk2Lbuf { bytes: lbuf_fill }, &n.inputs, None);
         }
-        self.trace.push(id, CmdKind::PimcoreCmp {
-            flags,
-            macs,
-            eltwise,
-            bank_read,
-            bank_read_hit: bank_hit,
-            bank_write,
-            gbuf_stream: bcast,
-        });
+        self.trace.push_dep(
+            id,
+            CmdKind::PimcoreCmp {
+                flags,
+                macs,
+                eltwise,
+                bank_read,
+                bank_read_hit: bank_hit,
+                bank_write,
+                gbuf_stream: bcast,
+            },
+            &n.inputs,
+            Some(id),
+        );
     }
 }
 

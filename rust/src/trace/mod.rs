@@ -7,6 +7,16 @@
 //! information a per-column Ramulator2 trace would carry, ~10^6× smaller;
 //! DESIGN.md §5). Each command records the graph node it serves so traces
 //! can be audited per layer.
+//!
+//! Commands additionally carry *dependency annotations* ([`Cmd::reads`],
+//! [`Cmd::writes`]): the feature maps whose current bank layout the
+//! command consumes, and the feature map whose data (or layout — fused
+//! reorganizations rewrite a producer's placement) it defines. The
+//! event-driven engine ([`crate::sim::event`]) derives command ordering
+//! from these instead of executing the trace back-to-back; the analytic
+//! engine ignores them. Traces built through [`Trace::push`] get empty
+//! annotations, which the event engine treats as "ordered only against
+//! commands of the same node".
 
 pub mod gen;
 
@@ -87,6 +97,10 @@ pub enum ExecFlags {
 }
 
 /// One PIM command (Table I) or host I/O event, with analytic volumes.
+// `PIMcore_CMP` carries five inline `PerCore` arrays, dwarfing the other
+// variants — accepted: boxing it would put a heap allocation on the hot
+// trace path this type exists to avoid.
+#[allow(clippy::large_enum_variant)]
 #[derive(Debug, Clone, PartialEq)]
 pub enum CmdKind {
     /// `PIMcore_CMP` — all PIMcores execute concurrently.
@@ -126,11 +140,55 @@ pub enum CmdKind {
     HostRead { bytes: u64 },
 }
 
-/// A command tagged with the graph node it serves.
+/// Upper bound on feature maps one command reads (`ADD_RELU`'s operand
+/// pair is the widest consumer in the IR).
+pub const MAX_DEPS: usize = 2;
+
+/// A fixed-size set of feature-map ids a command depends on (heap-free,
+/// like [`PerCore`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Deps {
+    ids: [NodeId; MAX_DEPS],
+    n: u8,
+}
+
+impl Deps {
+    /// No dependencies (what [`Trace::push`] records).
+    pub const EMPTY: Deps = Deps { ids: [0; MAX_DEPS], n: 0 };
+
+    pub fn from_slice(ids: &[NodeId]) -> Self {
+        assert!(ids.len() <= MAX_DEPS, "command reads more than {MAX_DEPS} feature maps");
+        let mut d = Deps::EMPTY;
+        for &id in ids {
+            d.ids[d.n as usize] = id;
+            d.n += 1;
+        }
+        d
+    }
+
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.ids[..self.n as usize].iter().copied()
+    }
+}
+
+/// A command tagged with the graph node it serves and its data-flow
+/// annotations (see the module docs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Cmd {
     pub node: NodeId,
     pub kind: CmdKind,
+    /// Feature maps whose current layout this command consumes.
+    pub reads: Deps,
+    /// Feature map whose data or layout this command (re)defines.
+    pub writes: Option<NodeId>,
 }
 
 /// A full workload trace.
@@ -175,13 +233,26 @@ impl TraceStats {
 }
 
 impl Trace {
+    /// Append a command with no dependency annotations (tests, synthetic
+    /// traces). The generator uses [`Trace::push_dep`].
     pub fn push(&mut self, node: NodeId, kind: CmdKind) {
-        self.cmds.push(Cmd { node, kind });
+        self.push_dep(node, kind, &[], None);
+    }
+
+    /// Append a command with explicit data-flow annotations: the feature
+    /// maps it `reads` and the one it `writes` (if any).
+    pub fn push_dep(
+        &mut self,
+        node: NodeId,
+        kind: CmdKind,
+        reads: &[NodeId],
+        writes: Option<NodeId>,
+    ) {
+        self.cmds.push(Cmd { node, kind, reads: Deps::from_slice(reads), writes });
     }
 
     pub fn stats(&self) -> TraceStats {
-        let mut s = TraceStats::default();
-        s.num_cmds = self.cmds.len();
+        let mut s = TraceStats { num_cmds: self.cmds.len(), ..Default::default() };
         for c in &self.cmds {
             match &c.kind {
                 CmdKind::PimcoreCmp {
@@ -290,6 +361,25 @@ mod tests {
         assert_eq!(s.near_bank_write, 128);
         assert_eq!(s.broadcast, 256);
         assert_eq!(s.num_cmds, 3);
+    }
+
+    #[test]
+    fn deps_annotations_roundtrip() {
+        let mut t = Trace::default();
+        t.push(3, CmdKind::Bk2Gbuf { bytes: 8 });
+        assert!(t.cmds[0].reads.is_empty());
+        assert_eq!(t.cmds[0].writes, None);
+        t.push_dep(4, CmdKind::Gbuf2Bk { bytes: 8 }, &[1, 2], Some(4));
+        let c = &t.cmds[1];
+        assert_eq!(c.reads.iter().collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(c.reads.len(), 2);
+        assert_eq!(c.writes, Some(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "more than")]
+    fn deps_bounded() {
+        Deps::from_slice(&[1, 2, 3]);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //!
 //! * [`rng`] — a deterministic xorshift64* PRNG (seedable, `Copy`).
 //! * [`prop`] — a miniature property-testing framework used by the
-//!   invariant tests (see DESIGN.md §6.5).
+//!   invariant tests (see DESIGN.md §8).
 //! * [`size`] — parsing/formatting of human byte sizes (`"32K"`, `"256"`).
 //! * [`table`] — fixed-width ASCII table rendering for benches/CLI reports.
 
@@ -19,7 +19,7 @@ pub mod table;
 #[inline]
 pub fn ceil_div(a: usize, b: usize) -> usize {
     debug_assert!(b > 0, "ceil_div by zero");
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Round `a` up to the next multiple of `b`.

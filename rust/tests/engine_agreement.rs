@@ -1,0 +1,103 @@
+//! Engine-agreement invariants: the event-driven engine must tally the
+//! exact same action counts as the analytic engine (so energy reports are
+//! byte-identical), never exceed the analytic serial cycle total, and
+//! never undercut the busiest single resource's occupancy.
+
+use pimfused::config::{ArchConfig, Engine, System};
+use pimfused::coordinator::Session;
+use pimfused::ppa::PpaReport;
+use pimfused::util::prop::{check_no_shrink, Gen};
+use pimfused::workload::Workload;
+
+fn pair(session: &Session, cfg: &ArchConfig, w: Workload) -> (PpaReport, PpaReport) {
+    let analytic = session.run(&cfg.clone().with_engine(Engine::Analytic), w).unwrap();
+    let event = session.run(&cfg.clone().with_engine(Engine::Event), w).unwrap();
+    (analytic, event)
+}
+
+fn assert_agreement(analytic: &PpaReport, event: &PpaReport, ctx: &str) {
+    assert_eq!(
+        event.sim.actions, analytic.sim.actions,
+        "{ctx}: engines must tally identical action counts"
+    );
+    assert_eq!(
+        event.energy_pj, analytic.energy_pj,
+        "{ctx}: identical actions must give byte-identical energy"
+    );
+    assert!(
+        event.cycles <= analytic.cycles,
+        "{ctx}: event {} must not exceed analytic {}",
+        event.cycles,
+        analytic.cycles
+    );
+    let occ = event.occupancy.expect("event engine reports occupancy");
+    assert!(
+        event.cycles >= occ.busiest(),
+        "{ctx}: event {} below the busiest resource's occupancy {}",
+        event.cycles,
+        occ.busiest()
+    );
+    assert_eq!(occ.makespan, event.cycles, "{ctx}: makespan is the cycle count");
+}
+
+#[test]
+fn engines_agree_on_every_workload_and_system() {
+    let session = Session::new();
+    for w in Workload::ALL {
+        for sys in System::ALL {
+            let cfg = ArchConfig::system(sys, 2048, 0);
+            let (a, e) = pair(&session, &cfg, w);
+            assert_agreement(&a, &e, &format!("{} on {sys:?}", w.name()));
+        }
+    }
+}
+
+#[test]
+fn event_beats_serial_on_full_resnet18_everywhere() {
+    // Acceptance: on end-to-end ResNet18 the event engine reports cycles
+    // <= the analytic engine for every system, with identical action
+    // counts (checked by assert_agreement).
+    let session = Session::new();
+    for sys in System::ALL {
+        let cfg = ArchConfig::system(sys, 32 * 1024, 256);
+        let (a, e) = pair(&session, &cfg, Workload::ResNet18Full);
+        assert_agreement(&a, &e, &format!("ResNet18_Full on {sys:?}"));
+    }
+}
+
+#[test]
+fn engines_agree_on_random_configs() {
+    // Random (system, buffers, workload) points over all Workload::ALL
+    // plans: the agreement invariants are config-independent.
+    let session = Session::new();
+    check_no_shrink(
+        "engine-agreement-random",
+        24,
+        |g: &mut Gen| {
+            let sys = *g.choose(&System::ALL);
+            let gbuf = *g.choose(&[2048usize, 8192, 32768]);
+            let lbuf = *g.choose(&[0usize, 64, 256]);
+            let w = *g.choose(&Workload::ALL);
+            (sys, gbuf, lbuf, w)
+        },
+        |&(sys, gbuf, lbuf, w)| {
+            let cfg = ArchConfig::system(sys, gbuf, lbuf);
+            let (a, e) = pair(&session, &cfg, w);
+            assert_agreement(&a, &e, &format!("{} on {}", w.name(), cfg.label()));
+            true
+        },
+    );
+}
+
+#[test]
+fn normalization_is_engine_consistent() {
+    // Each engine normalizes against its own baseline, so the baseline
+    // config itself is exactly 1.0 under both engines.
+    let session = Session::new();
+    for engine in Engine::ALL {
+        let cfg = ArchConfig::baseline().with_engine(engine);
+        let n = session.normalized(&cfg, Workload::ResNet18First8).unwrap();
+        assert!((n.cycles - 1.0).abs() < 1e-12, "{engine:?} self-normalization");
+        assert!((n.energy - 1.0).abs() < 1e-12);
+    }
+}

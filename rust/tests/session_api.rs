@@ -3,11 +3,11 @@
 //! executor path), baseline-cache correctness, the graph/baseline
 //! reuse-exactly-once guarantee, and JSON/CSV golden outputs.
 
-use pimfused::config::{ArchConfig, System};
+use pimfused::config::{ArchConfig, Engine, System};
 use pimfused::coordinator::{Session, SweepGrid, SweepPoint, SweepResults, SweepRow};
 use pimfused::energy::{AreaReport, EnergyReport};
 use pimfused::ppa::{Normalized, PpaReport};
-use pimfused::sim::SimResult;
+use pimfused::sim::{ResourceOccupancy, SimResult};
 use pimfused::workload::Workload;
 
 #[test]
@@ -96,22 +96,55 @@ fn grid_norms_match_explicit_normalization() {
 /// own numbers are model-calibration-dependent; the *format* is the
 /// contract).
 fn golden_results() -> SweepResults {
+    let dummy_area = AreaReport {
+        pimcores_mm2: 0.25,
+        gbcore_mm2: 0.0,
+        gbuf_mm2: 0.0,
+        lbufs_mm2: 0.0,
+        control_mm2: 0.0,
+    };
     let ok_cfg = ArchConfig::system(System::Fused4, 2048, 0);
     let ok_report = PpaReport {
         label: ok_cfg.label(),
         workload: Workload::Fig1.name().to_string(),
+        engine: Engine::Analytic,
         cycles: 100,
         energy_pj: 1.5,
         area_mm2: 0.25,
         sim: SimResult::default(),
         energy: EnergyReport { components: vec![] },
-        area: AreaReport {
-            pimcores_mm2: 0.25,
-            gbcore_mm2: 0.0,
-            gbuf_mm2: 0.0,
-            lbufs_mm2: 0.0,
-            control_mm2: 0.0,
-        },
+        area: dummy_area.clone(),
+        occupancy: None,
+    };
+    // A Fused4 event-engine row with a hand-built occupancy (4 cores,
+    // 16 banks) locks the utilization schema.
+    let ev_cfg = ArchConfig::system(System::Fused4, 2048, 0).with_engine(Engine::Event);
+    let mut occ = ResourceOccupancy {
+        num_cores: 4,
+        num_banks: 16,
+        makespan: 90,
+        bus_busy: 40,
+        gbcore_busy: 10,
+        host_busy: 5,
+        ..Default::default()
+    };
+    for i in 0..4 {
+        occ.core_busy[i] = 80 - i as u64;
+    }
+    for b in 0..16 {
+        occ.bank_busy[b] = b as u64;
+    }
+    let ev_report = PpaReport {
+        label: ev_cfg.label(),
+        workload: Workload::Fig1.name().to_string(),
+        engine: Engine::Event,
+        cycles: 90,
+        energy_pj: 1.5,
+        area_mm2: 0.25,
+        sim: SimResult::default(),
+        energy: EnergyReport { components: vec![] },
+        area: dummy_area,
+        occupancy: Some(occ),
     };
     let err_cfg = ArchConfig::system(System::AimLike, 2048, 0);
     SweepResults {
@@ -121,6 +154,11 @@ fn golden_results() -> SweepResults {
                 point: SweepPoint { cfg: ok_cfg, workload: Workload::Fig1 },
                 report: Ok(ok_report),
                 norm: Some(Normalized { cycles: 0.5, energy: 0.75, area: 1.0 }),
+            },
+            SweepRow {
+                point: SweepPoint { cfg: ev_cfg, workload: Workload::Fig1 },
+                report: Ok(ev_report),
+                norm: Some(Normalized { cycles: 0.45, energy: 0.75, area: 1.0 }),
             },
             SweepRow {
                 point: SweepPoint { cfg: err_cfg, workload: Workload::Fig1 },
@@ -142,10 +180,26 @@ fn json_golden_output() {
       "gbuf_bytes": 2048,
       "lbuf_bytes": 0,
       "workload": "Fig1_Example",
+      "engine": "analytic",
       "cycles": 100,
       "energy_pj": 1.5,
       "area_mm2": 0.25,
       "norm": {"cycles": 0.5, "energy": 0.75, "area": 1},
+      "utilization": null,
+      "error": null
+    },
+    {
+      "config": "Fused4/G2K_L0",
+      "system": "Fused4",
+      "gbuf_bytes": 2048,
+      "lbuf_bytes": 0,
+      "workload": "Fig1_Example",
+      "engine": "event",
+      "cycles": 90,
+      "energy_pj": 1.5,
+      "area_mm2": 0.25,
+      "norm": {"cycles": 0.45, "energy": 0.75, "area": 1},
+      "utilization": {"makespan": 90, "bus": 40, "gbcore": 10, "host": 5, "cores": [80, 79, 78, 77], "banks": [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]},
       "error": null
     },
     {
@@ -154,10 +208,12 @@ fn json_golden_output() {
       "gbuf_bytes": 2048,
       "lbuf_bytes": 0,
       "workload": "Fig1_Example",
+      "engine": "analytic",
       "cycles": null,
       "energy_pj": null,
       "area_mm2": null,
       "norm": null,
+      "utilization": null,
       "error": "boom \"quoted\""
     }
   ]
@@ -168,9 +224,10 @@ fn json_golden_output() {
 
 #[test]
 fn csv_golden_output() {
-    let want = "config,system,gbuf_bytes,lbuf_bytes,workload,cycles,energy_pj,area_mm2,norm_cycles,norm_energy,norm_area,error\n\
-                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,100,1.5,0.25,0.5,0.75,1,\n\
-                AiM-like/G2K_L0,AiM-like,2048,0,Fig1_Example,,,,,,,\"boom \"\"quoted\"\"\"\n";
+    let want = "config,system,gbuf_bytes,lbuf_bytes,workload,engine,cycles,energy_pj,area_mm2,norm_cycles,norm_energy,norm_area,error\n\
+                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,analytic,100,1.5,0.25,0.5,0.75,1,\n\
+                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,event,90,1.5,0.25,0.45,0.75,1,\n\
+                AiM-like/G2K_L0,AiM-like,2048,0,Fig1_Example,analytic,,,,,,,\"boom \"\"quoted\"\"\"\n";
     assert_eq!(golden_results().to_csv(), want);
 }
 
@@ -213,4 +270,7 @@ fn table_lists_every_point() {
     assert_eq!(t.matches("Fused4/").count(), 4);
     assert!(t.contains("workload"));
     assert!(t.contains("Fig1_Example"));
+    // Rows name their engine, so dual-engine sweeps stay distinguishable.
+    assert!(t.contains("engine"));
+    assert_eq!(t.matches("analytic").count(), 4);
 }
