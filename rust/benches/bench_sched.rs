@@ -1,0 +1,48 @@
+//! Scheduling-throughput bench: commands scheduled per second on the
+//! full ResNet18 traces across the paper's three systems — the analytic
+//! engine's linear walk vs the event engine's ready-heap + interval-
+//! timeline scheduler (deps build included, since a caller pays both).
+//!
+//! The acceptance bar for scheduler v2 is that event throughput stays
+//! within ~3x of the analytic walk (no super-linear blowup from the
+//! interval model); the `ratio` column below is the number to watch.
+
+use pimfused::benchkit::{bench, section};
+use pimfused::cnn::resnet::resnet18;
+use pimfused::config::{ArchConfig, System};
+use pimfused::dataflow::{plan, CostModel};
+use pimfused::sim::{event, simulate};
+use pimfused::trace::gen::generate;
+
+fn main() {
+    let model = CostModel::default();
+    let g = resnet18();
+
+    section("scheduling throughput, ResNet18_Full @ G32K_L256");
+    for sys in System::ALL {
+        let cfg = ArchConfig::system(sys, 32 * 1024, 256);
+        let p = plan(&g, &cfg);
+        let tr = generate(&g, &cfg, &p, model);
+        let n = tr.cmds.len();
+        let an = bench(
+            &format!("{:<8} analytic walk ({n} cmds)", sys.name()),
+            3,
+            200,
+            || simulate(&cfg, &tr).cycles,
+        );
+        let ev = bench(
+            &format!("{:<8} event schedule ({n} cmds)", sys.name()),
+            3,
+            200,
+            || event::simulate(&cfg, &tr).result.cycles,
+        );
+        let per_sec = |d: std::time::Duration| n as f64 / d.as_secs_f64();
+        println!(
+            "  {:<8} analytic {:>12.0} cmd/s | event {:>12.0} cmd/s | ratio {:.2}x",
+            sys.name(),
+            per_sec(an.median),
+            per_sec(ev.median),
+            ev.median.as_secs_f64() / an.median.as_secs_f64().max(f64::MIN_POSITIVE),
+        );
+    }
+}

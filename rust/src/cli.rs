@@ -33,6 +33,7 @@ commands:
                                     --lbuf 0,256 --workload <w>
                                     [--engine analytic|event] [--json]
   fig5 | fig6 | fig7                regenerate the paper's figures
+                                    [--engine analytic|event]
   takeaways | headline              §V-D statistics / the headline claim
   trace      dump a command trace   --config <sys:GmK_Ln> --workload <w> [--limit N]
   validate   functional validation  --config <sys:GmK_Ln>
@@ -140,6 +141,13 @@ pub fn run(args: &Args) -> Result<String> {
             if let Some(occ) = &r.occupancy {
                 out.push_str("per-resource occupancy:\n");
                 out.push_str(&occ.render());
+                if let Some(u) = r.bottleneck_utilization() {
+                    out.push_str(&format!(
+                        "bottleneck utilization: {} ({} idle cycles on the critical resource)\n",
+                        crate::util::table::pct(u),
+                        occ.bottleneck_idle(),
+                    ));
+                }
             }
             Ok(out)
         }
@@ -180,16 +188,16 @@ pub fn run(args: &Args) -> Result<String> {
             Ok(results.table())
         }
         "fig5" => {
-            args.check_opts(&[])?;
-            Ok(experiments::render(&experiments::fig5(model)?))
+            args.check_opts(&["engine"])?;
+            Ok(experiments::render(&experiments::fig5_with(&session, args.engine()?)?))
         }
         "fig6" => {
-            args.check_opts(&[])?;
-            Ok(experiments::render(&experiments::fig6(model)?))
+            args.check_opts(&["engine"])?;
+            Ok(experiments::render(&experiments::fig6_with(&session, args.engine()?)?))
         }
         "fig7" => {
-            args.check_opts(&[])?;
-            Ok(experiments::render(&experiments::fig7(model)?))
+            args.check_opts(&["engine"])?;
+            Ok(experiments::render(&experiments::fig7_with(&session, args.engine()?)?))
         }
         "takeaways" => {
             args.check_opts(&[])?;
@@ -356,6 +364,8 @@ mod tests {
         assert!(out.contains("(event engine)"));
         assert!(out.contains("per-resource occupancy:"));
         assert!(out.contains("bus/GBUF port"));
+        assert!(out.contains("cmd bus"));
+        assert!(out.contains("bottleneck utilization:"));
         // The analytic default prints no occupancy table.
         let b = parse_args(&argv("simulate --config fused4:G32K_L256 --workload fig1")).unwrap();
         let out = run(&b).unwrap();
@@ -386,6 +396,17 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("unknown option --config"), "{e}");
+    }
+
+    #[test]
+    fn fig_commands_accept_engine() {
+        let out = run(&parse_args(&argv("fig7 --engine event")).unwrap()).unwrap();
+        assert!(out.contains("event"));
+        assert!(out.contains("Fused4"));
+        let e = run(&parse_args(&argv("fig5 --engine warp")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown engine"), "{e}");
     }
 
     #[test]

@@ -79,6 +79,15 @@ impl DramTiming {
     pub fn row_open_cycles(&self) -> u64 {
         self.t_rp + self.t_rcd
     }
+
+    /// Minimum spacing the activation-window constraints allow between
+    /// row activations within one bank group: ACTs may not issue closer
+    /// together than `tRRD`, nor faster than four per `tFAW` window. The
+    /// event engine's scheduler meters each bank group's activations at
+    /// this rate (DESIGN.md §6.2).
+    pub fn act_slot_cycles(&self) -> u64 {
+        self.t_rrd.max(self.t_faw.div_ceil(4))
+    }
 }
 
 #[cfg(test)]
@@ -97,6 +106,17 @@ mod tests {
         let one = t.burst_cycles(1);
         let ten = t.burst_cycles(10);
         assert_eq!(ten - one, 9 * t.t_ccd);
+    }
+
+    #[test]
+    fn act_slot_is_the_binding_window() {
+        // GDDR6 norms: tFAW/4 = 8 dominates tRRD = 6.
+        assert_eq!(DramTiming::gddr6().act_slot_cycles(), 8);
+        // A tRRD-bound part: spacing is tRRD.
+        let mut t = DramTiming::gddr6();
+        t.t_rrd = 12;
+        t.t_faw = 16;
+        assert_eq!(t.act_slot_cycles(), 12);
     }
 
     #[test]

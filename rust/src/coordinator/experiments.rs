@@ -10,7 +10,7 @@
 //! `examples/calibrate.rs` does).
 
 use super::{Session, SweepGrid};
-use crate::config::{ArchConfig, System};
+use crate::config::{ArchConfig, Engine, System};
 use crate::dataflow::tiling::{fusion_cost, tile_segment, FusionCost};
 use crate::dataflow::CostModel;
 use crate::ppa::Normalized;
@@ -19,14 +19,16 @@ use crate::util::table::{pct_or_x, Table};
 use crate::workload::Workload;
 use anyhow::Result;
 
-/// One plotted point: system + buffer config + workload, normalized to
-/// the AiM-like G2K_L0 baseline on the same workload.
+/// One plotted point: system + buffer config + workload + engine,
+/// normalized to the AiM-like G2K_L0 baseline on the same workload *and
+/// the same engine* (so the ratios compare like with like).
 #[derive(Debug, Clone)]
 pub struct FigRow {
     pub system: System,
     pub gbuf: usize,
     pub lbuf: usize,
     pub workload: Workload,
+    pub engine: Engine,
     pub norm: Normalized,
 }
 
@@ -43,17 +45,32 @@ pub fn grid(
 }
 
 /// [`grid`] on an existing session, reusing its memoized graphs, plans and
-/// baseline reports across figures.
+/// baseline reports across figures. Runs the analytic engine; pick one
+/// explicitly with [`grid_with`].
 pub fn grid_in(
     session: &Session,
     systems: &[System],
     bufcfgs: &[(usize, usize)],
     workloads: &[Workload],
 ) -> Result<Vec<FigRow>> {
+    grid_with(session, systems, bufcfgs, workloads, Engine::Analytic)
+}
+
+/// [`grid_in`] under an explicit simulation engine: every point runs
+/// through `engine` and normalizes against the matching engine baseline
+/// (the session memoizes baselines per `(workload, engine)`).
+pub fn grid_with(
+    session: &Session,
+    systems: &[System],
+    bufcfgs: &[(usize, usize)],
+    workloads: &[Workload],
+    engine: Engine,
+) -> Result<Vec<FigRow>> {
     let results = SweepGrid::new()
         .systems(systems.iter().copied())
         .bufcfgs(bufcfgs.iter().copied())
         .workloads(workloads.iter().copied())
+        .engine(engine)
         .run(session)?;
     results.ensure_ok()?;
     Ok(results
@@ -63,6 +80,7 @@ pub fn grid_in(
             gbuf: row.point.cfg.gbuf_bytes,
             lbuf: row.point.cfg.lbuf_bytes,
             workload: row.point.workload,
+            engine: row.point.cfg.engine,
             norm: row.norm.expect("ensure_ok guarantees normalized rows"),
         })
         .collect())
@@ -75,8 +93,14 @@ pub fn fig5(model: CostModel) -> Result<Vec<FigRow>> {
 
 /// [`fig5`] on an existing session.
 pub fn fig5_in(session: &Session) -> Result<Vec<FigRow>> {
+    fig5_with(session, Engine::Analytic)
+}
+
+/// [`fig5`] under an explicit engine (`--engine event` regenerates the
+/// figure with overlap-aware cycles).
+pub fn fig5_with(session: &Session, engine: Engine) -> Result<Vec<FigRow>> {
     let gbufs = [2, 8, 16, 32, 64].map(|k| (k * 1024, 0));
-    grid_in(session, &System::ALL, &gbufs, &Workload::PAPER)
+    grid_with(session, &System::ALL, &gbufs, &Workload::PAPER, engine)
 }
 
 /// Fig. 6: PPA vs LBUF size with GBUF fixed at 2 KB (§V-C).
@@ -86,8 +110,13 @@ pub fn fig6(model: CostModel) -> Result<Vec<FigRow>> {
 
 /// [`fig6`] on an existing session.
 pub fn fig6_in(session: &Session) -> Result<Vec<FigRow>> {
+    fig6_with(session, Engine::Analytic)
+}
+
+/// [`fig6`] under an explicit engine.
+pub fn fig6_with(session: &Session, engine: Engine) -> Result<Vec<FigRow>> {
     let lbufs = [0usize, 64, 128, 256, 512].map(|l| (2048, l));
-    grid_in(session, &System::ALL, &lbufs, &Workload::PAPER)
+    grid_with(session, &System::ALL, &lbufs, &Workload::PAPER, engine)
 }
 
 /// Fig. 7: PPA with both buffers scaled, ResNet18_Full (§V-D).
@@ -97,6 +126,11 @@ pub fn fig7(model: CostModel) -> Result<Vec<FigRow>> {
 
 /// [`fig7`] on an existing session.
 pub fn fig7_in(session: &Session) -> Result<Vec<FigRow>> {
+    fig7_with(session, Engine::Analytic)
+}
+
+/// [`fig7`] under an explicit engine.
+pub fn fig7_with(session: &Session, engine: Engine) -> Result<Vec<FigRow>> {
     let cfgs = [
         (2 * 1024, 0),
         (8 * 1024, 128),
@@ -105,17 +139,19 @@ pub fn fig7_in(session: &Session) -> Result<Vec<FigRow>> {
         (64 * 1024, 256),
         (64 * 1024, 100 * 1024),
     ];
-    grid_in(session, &System::ALL, &cfgs, &[Workload::ResNet18Full])
+    grid_with(session, &System::ALL, &cfgs, &[Workload::ResNet18Full], engine)
 }
 
 /// Render rows the way the paper annotates its bars.
 pub fn render(rows: &[FigRow]) -> String {
-    let mut t = Table::new(vec!["system", "bufcfg", "workload", "cycles", "energy", "area"]);
+    let mut t =
+        Table::new(vec!["system", "bufcfg", "workload", "engine", "cycles", "energy", "area"]);
     for r in rows {
         t.row(vec![
             r.system.name().to_string(),
             fmt_bufcfg(r.gbuf, r.lbuf),
             r.workload.name().to_string(),
+            r.engine.name().to_string(),
             pct_or_x(r.norm.cycles),
             pct_or_x(r.norm.energy),
             pct_or_x(r.norm.area),
@@ -248,6 +284,35 @@ mod tests {
         let ideal = get(System::Fused4, 64 * 1024, 100 * 1024);
         assert!(ideal.cycles <= l256.cycles);
         assert!(ideal.area > 2.0 * l256.area);
+    }
+
+    #[test]
+    fn figures_run_under_the_event_engine() {
+        // ROADMAP "Event-engine figures": fig7 regenerated with --engine
+        // event. One shared session memoizes graphs/plans across both
+        // engines; each engine normalizes against its own baseline.
+        let session = Session::new();
+        let an = fig7_in(&session).unwrap();
+        let ev = fig7_with(&session, Engine::Event).unwrap();
+        assert_eq!(an.len(), ev.len());
+        for (a, e) in an.iter().zip(&ev) {
+            assert_eq!((a.system, a.gbuf, a.lbuf), (e.system, e.gbuf, e.lbuf));
+            assert_eq!(a.engine, Engine::Analytic);
+            assert_eq!(e.engine, Engine::Event);
+        }
+        // The baseline point normalizes to exactly 1.0 under both
+        // engines (each against its own engine's baseline run).
+        let base = |rows: &[FigRow]| {
+            rows.iter()
+                .find(|r| r.system == System::AimLike && r.gbuf == 2048 && r.lbuf == 0)
+                .unwrap()
+                .norm
+                .cycles
+        };
+        assert!((base(&an) - 1.0).abs() < 1e-12);
+        assert!((base(&ev) - 1.0).abs() < 1e-12);
+        // Rendered tables name the engine per row.
+        assert!(render(&ev).contains("event"));
     }
 
     #[test]

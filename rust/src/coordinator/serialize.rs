@@ -122,17 +122,21 @@ impl SweepResults {
 }
 
 /// The per-resource utilization object for event-engine rows: busy cycles
-/// per resource plus the schedule makespan (consumers derive fractions).
+/// per resource plus the schedule makespan (consumers derive fractions),
+/// the contended command-bus occupancy, and the total back-filled cycles
+/// the scheduler placed into timeline gaps.
 fn json_utilization(occ: &crate::sim::ResourceOccupancy) -> String {
     let list = |vals: &[u64]| {
         vals.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
     };
     format!(
-        "{{\"makespan\": {}, \"bus\": {}, \"gbcore\": {}, \"host\": {}, \"cores\": [{}], \"banks\": [{}]}}",
+        "{{\"makespan\": {}, \"bus\": {}, \"cmdbus\": {}, \"gbcore\": {}, \"host\": {}, \"backfilled\": {}, \"cores\": [{}], \"banks\": [{}]}}",
         occ.makespan,
         occ.bus_busy,
+        occ.cmdbus_busy,
         occ.gbcore_busy,
         occ.host_busy,
+        occ.backfilled,
         list(&occ.core_busy[..occ.num_cores]),
         list(&occ.bank_busy[..occ.num_banks]),
     )

@@ -45,6 +45,20 @@ impl PpaReport {
             area: self.area_mm2 / base.area_mm2,
         }
     }
+
+    /// Bottleneck utilization of the event schedule: the busiest
+    /// resource's share of the makespan (1.0 ⇒ resource-bound, lower ⇒
+    /// dependency-bound). `None` for analytic runs, which carry no
+    /// occupancy breakdown.
+    pub fn bottleneck_utilization(&self) -> Option<f64> {
+        self.occupancy.map(|o| {
+            if o.makespan == 0 {
+                0.0
+            } else {
+                o.busiest() as f64 / o.makespan as f64
+            }
+        })
+    }
 }
 
 impl Normalized {
@@ -95,6 +109,17 @@ mod tests {
         assert!((n.energy - 0.834).abs() < 1e-9);
         assert!((n.area - 0.765).abs() < 1e-9);
         assert_eq!(n.render(), "cycles=30.6% energy=83.4% area=76.5%");
+    }
+
+    #[test]
+    fn bottleneck_utilization_reads_the_occupancy() {
+        let mut r = dummy(100, 1.0, 1.0);
+        assert_eq!(r.bottleneck_utilization(), None, "analytic runs have no occupancy");
+        let occ = ResourceOccupancy { makespan: 200, bus_busy: 150, ..Default::default() };
+        r.occupancy = Some(occ);
+        assert_eq!(r.bottleneck_utilization(), Some(0.75));
+        r.occupancy = Some(ResourceOccupancy::default());
+        assert_eq!(r.bottleneck_utilization(), Some(0.0), "empty schedule is 0, not NaN");
     }
 
     #[test]

@@ -43,17 +43,25 @@ pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> SimResult {
 
 /// A macro command's cycle demand on each resource class it occupies.
 /// Both engines derive timing from this one expansion ([`cost`]).
+///
+/// Beyond raw durations, the expansion carries what the event engine's
+/// scheduler needs for its finer-grained reservations (DESIGN.md §6.2):
+/// `write` marks commands whose bank occupancy must be extended by the
+/// `tWR` write-recovery window, `acts` counts the row activations the
+/// tFAW/tRRD window meters per bank group, and `slice` is the 1/N
+/// per-bank share of a sequential cross-bank transfer.
 #[derive(Debug, Clone, Copy)]
 pub(crate) enum CmdCost {
     /// `PIMcore_CMP`: per-core bank-stream cycles (reads + writes + open-row
     /// hit feed) and the serial GBUF-broadcast bus cycles all cores snoop.
-    Pimcore { core: PerCore, bcast: u64 },
+    Pimcore { core: PerCore, bcast: u64, write: bool, acts: PerCore },
     /// `GBcore_CMP`: GBcore compute occupancy (command issue excluded).
     Gbcore(u64),
     /// `PIM_BK2LBUF` / `PIM_LBUF2BK`: parallel per-core bank-stream cycles.
-    NearBank(PerCore),
-    /// `PIM_BK2GBUF` / `PIM_GBUF2BK`: sequential bus / GBUF-port occupancy.
-    CrossBank(u64),
+    NearBank { core: PerCore, write: bool, acts: PerCore },
+    /// `PIM_BK2GBUF` / `PIM_GBUF2BK`: sequential bus / GBUF-port occupancy
+    /// (`total`), touching each bank for one `slice` of the interval.
+    CrossBank { total: u64, slice: u64, write: bool, acts: u64 },
     /// Host I/O: off-chip interface occupancy.
     Host(u64),
 }
@@ -72,6 +80,7 @@ pub(crate) fn cost(cfg: &ArchConfig, cmd: &Cmd) -> CmdCost {
             // Per-core streams run concurrently; the slowest core bounds.
             // Row-hit feed moves one column per cycle with no row opens.
             let mut core = PerCore::zero(bank_read.len());
+            let mut acts = PerCore::zero(bank_read.len());
             for i in 0..bank_read.len() {
                 core.set(
                     i,
@@ -79,21 +88,37 @@ pub(crate) fn cost(cfg: &ArchConfig, cmd: &Cmd) -> CmdCost {
                         + dram::near_bank_stream_cycles(t, bank_write.get(i).div_ceil(fanin))
                         + dram::row_hit_stream_cycles(bank_read_hit.get(i).div_ceil(fanin)),
                 );
+                acts.set(i, rows_touched(bank_read.get(i) + bank_write.get(i)));
             }
-            CmdCost::Pimcore { core, bcast: dram::broadcast_cycles(*gbuf_stream) }
+            CmdCost::Pimcore {
+                core,
+                bcast: dram::broadcast_cycles(*gbuf_stream),
+                write: bank_write.sum() > 0,
+                acts,
+            }
         }
         CmdKind::GbcoreCmp { eltwise, .. } => {
             CmdCost::Gbcore(eltwise.div_ceil(cfg.gbcore_eltwise_per_cycle as u64))
         }
         CmdKind::Bk2Lbuf { bytes } | CmdKind::Lbuf2Bk { bytes } => {
             let mut core = PerCore::zero(bytes.len());
+            let mut acts = PerCore::zero(bytes.len());
             for i in 0..bytes.len() {
                 core.set(i, dram::near_bank_stream_cycles(t, bytes.get(i).div_ceil(fanin)));
+                acts.set(i, rows_touched(bytes.get(i)));
             }
-            CmdCost::NearBank(core)
+            let write = matches!(cmd.kind, CmdKind::Lbuf2Bk { .. });
+            CmdCost::NearBank { core, write, acts }
         }
         CmdKind::Bk2Gbuf { bytes } | CmdKind::Gbuf2Bk { bytes } => {
-            CmdCost::CrossBank(dram::cross_bank_stream_cycles(t, *bytes))
+            let total = dram::cross_bank_stream_cycles(t, *bytes);
+            let banks = cfg.num_banks.max(1) as u64;
+            CmdCost::CrossBank {
+                total,
+                slice: total.div_ceil(banks),
+                write: matches!(cmd.kind, CmdKind::Gbuf2Bk { .. }),
+                acts: rows_touched(*bytes),
+            }
         }
         CmdKind::HostWrite { bytes } | CmdKind::HostRead { bytes } => {
             CmdCost::Host(dram::host_stream_cycles(t, *bytes))
@@ -156,26 +181,33 @@ pub(crate) fn tally(cmd: &Cmd, a: &mut ActionCounts) {
 /// Accumulate one command's occupancy into the [`SimResult`] breakdown
 /// fields and return its serial duration (the analytic engine's charge).
 /// Shared with the event engine so the per-path breakdowns agree.
+///
+/// Commands that write DRAM banks additionally charge the `tWR`
+/// write-recovery window: the bank cannot serve the next access until
+/// the write has restored, so both engines count those cycles in the
+/// command's duration (keeping the event engine's schedule bounded by
+/// the analytic serial sum even when a read queues behind the recovery).
 pub(crate) fn charge(cfg: &ArchConfig, c: &CmdCost, r: &mut SimResult) -> u64 {
     let t_cmd = cfg.timing.t_cmd;
+    let recovery = |write: bool| if write { cfg.timing.t_wr } else { 0 };
     match c {
-        CmdCost::Pimcore { core, bcast } => {
+        CmdCost::Pimcore { core, bcast, write, .. } => {
             let core_max = core.max();
             r.near_bank_cycles += core_max;
-            core_max.max(*bcast) + t_cmd
+            core_max.max(*bcast) + t_cmd + recovery(*write)
         }
         CmdCost::Gbcore(c) => {
             let d = c + t_cmd;
             r.gbcore_cycles += d;
             d
         }
-        CmdCost::NearBank(core) => {
-            let d = core.max() + t_cmd;
+        CmdCost::NearBank { core, write, .. } => {
+            let d = core.max() + t_cmd + recovery(*write);
             r.near_bank_cycles += d;
             d
         }
-        CmdCost::CrossBank(c) => {
-            let d = c + t_cmd;
+        CmdCost::CrossBank { total, write, .. } => {
+            let d = total + t_cmd + recovery(*write);
             r.cross_bank_cycles += d;
             d
         }
@@ -228,6 +260,33 @@ mod tests {
         assert!(r.cycles > 0);
         assert_eq!(r.cycles, r.cross_bank_cycles + 0);
         assert_eq!(r.actions.cross_col_read_bytes, 1024);
+    }
+
+    #[test]
+    fn bank_writes_charge_write_recovery() {
+        // A scatter (bank write) costs exactly tWR more than the gather
+        // (bank read) moving the same bytes: the write-recovery window is
+        // part of the command's bank occupancy in both engines.
+        let cfg = ArchConfig::baseline();
+        let mut rd = SimResult::default();
+        let mut tr = Trace::default();
+        tr.push(0, CmdKind::Bk2Gbuf { bytes: 1024 });
+        step(&cfg, &tr.cmds[0], &mut rd);
+        let mut wr = SimResult::default();
+        let mut tw = Trace::default();
+        tw.push(0, CmdKind::Gbuf2Bk { bytes: 1024 });
+        step(&cfg, &tw.cmds[0], &mut wr);
+        assert_eq!(wr.cycles - rd.cycles, cfg.timing.t_wr);
+        // Same for the parallel near-bank spill vs fill.
+        let mut fill = SimResult::default();
+        let mut tf = Trace::default();
+        tf.push(0, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 1024) });
+        step(&cfg, &tf.cmds[0], &mut fill);
+        let mut spill = SimResult::default();
+        let mut ts = Trace::default();
+        ts.push(0, CmdKind::Lbuf2Bk { bytes: PerCore::uniform(16, 1024) });
+        step(&cfg, &ts.cmds[0], &mut spill);
+        assert_eq!(spill.cycles - fill.cycles, cfg.timing.t_wr);
     }
 
     #[test]

@@ -10,10 +10,18 @@
 //! (WAR) — a fused reorganization must not rewrite a map's bank placement
 //! while an earlier command is still streaming the old layout. Everything
 //! else is free to overlap, subject to resource availability.
+//!
+//! [`build`] returns a [`Dag`]: the per-command predecessor lists plus
+//! the successor/indegree view the ready-heap scheduler consumes. The
+//! builder keeps all per-feature-map state in dense `Vec`s indexed by
+//! node id (sized by [`crate::trace::Trace::max_node`]) and deduplicates
+//! predecessor edges with an O(1) per-command stamp instead of a linear
+//! `contains` scan.
 
-use crate::cnn::NodeId;
 use crate::trace::Trace;
-use std::collections::HashMap;
+
+/// "No command" sentinel for the dense per-map tables.
+const NONE: usize = usize::MAX;
 
 /// Indices of the commands one command must wait for (deduplicated,
 /// unbounded: a map rewrite waits on arbitrarily many open readers).
@@ -23,12 +31,6 @@ pub(crate) struct Preds {
 }
 
 impl Preds {
-    pub(crate) fn add(&mut self, i: usize) {
-        if !self.idx.contains(&i) {
-            self.idx.push(i);
-        }
-    }
-
     pub(crate) fn iter(&self) -> impl Iterator<Item = usize> + '_ {
         self.idx.iter().copied()
     }
@@ -46,45 +48,107 @@ impl Preds {
     }
 }
 
-/// Build the predecessor list for every command in the trace.
-pub(crate) fn build(trace: &Trace) -> Vec<Preds> {
-    let mut last_writer: HashMap<NodeId, usize> = HashMap::new();
+/// The command DAG: predecessor lists plus the derived successor lists
+/// and indegrees (what the scheduler's ready heap is seeded from). Edges
+/// always point from a lower to a higher trace index, so the graph is
+/// acyclic by construction.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct Dag {
+    pub(crate) preds: Vec<Preds>,
+    /// Flattened (CSR) successor lists: the successors of command `i`
+    /// are `succs[succ_off[i]..succ_off[i + 1]]`.
+    succs: Vec<u32>,
+    succ_off: Vec<u32>,
+    indeg: Vec<u32>,
+}
+
+impl Dag {
+    pub(crate) fn len(&self) -> usize {
+        self.preds.len()
+    }
+
+    /// Commands that wait on command `i`.
+    pub(crate) fn succs(&self, i: usize) -> &[u32] {
+        &self.succs[self.succ_off[i] as usize..self.succ_off[i + 1] as usize]
+    }
+
+    /// Number of predecessors per command (0 ⇒ ready at cycle 0).
+    pub(crate) fn indegree(&self) -> &[u32] {
+        &self.indeg
+    }
+}
+
+/// Build the command DAG for a trace.
+pub(crate) fn build(trace: &Trace) -> Dag {
+    let n = trace.cmds.len();
+    debug_assert!(n <= u32::MAX as usize, "trace too large for u32 CSR indices");
+    let maps = trace.max_node() + 1;
+    let mut last_writer = vec![NONE; maps];
+    let mut last_same_node = vec![NONE; maps];
     // Readers of each map since its last write — what a rewrite must
     // drain before it may change the layout.
-    let mut open_readers: HashMap<NodeId, Vec<usize>> = HashMap::new();
-    let mut last_same_node: HashMap<NodeId, usize> = HashMap::new();
-    let mut preds = Vec::with_capacity(trace.cmds.len());
+    let mut open_readers: Vec<Vec<usize>> = vec![Vec::new(); maps];
+    // `seen[j] == i` marks j as already recorded as a predecessor of i.
+    let mut seen = vec![NONE; n];
+    let mut preds = Vec::with_capacity(n);
+    let mut indeg = vec![0u32; n];
     for (i, cmd) in trace.cmds.iter().enumerate() {
         let mut p = Preds::default();
-        if let Some(&j) = last_same_node.get(&cmd.node) {
-            p.add(j);
+        let mut add = |p: &mut Preds, j: usize| {
+            if seen[j] != i {
+                seen[j] = i;
+                p.idx.push(j);
+            }
+        };
+        if last_same_node[cmd.node] != NONE {
+            add(&mut p, last_same_node[cmd.node]);
         }
         for r in cmd.reads.iter() {
             // Feature maps with no recorded writer (e.g. static weights
             // or un-annotated test traces) impose no ordering.
-            if let Some(&j) = last_writer.get(&r) {
-                p.add(j);
+            if last_writer[r] != NONE {
+                add(&mut p, last_writer[r]);
             }
         }
         if let Some(w) = cmd.writes {
-            if let Some(&j) = last_writer.get(&w) {
-                p.add(j); // WAW
+            if last_writer[w] != NONE {
+                add(&mut p, last_writer[w]); // WAW
             }
-            for &j in open_readers.get(&w).into_iter().flatten() {
-                p.add(j); // WAR
+            for &j in &open_readers[w] {
+                add(&mut p, j); // WAR
             }
         }
+        indeg[i] = p.idx.len() as u32;
         preds.push(p);
-        last_same_node.insert(cmd.node, i);
+        last_same_node[cmd.node] = i;
         for r in cmd.reads.iter() {
-            open_readers.entry(r).or_default().push(i);
+            open_readers[r].push(i);
         }
         if let Some(w) = cmd.writes {
-            last_writer.insert(w, i);
-            open_readers.entry(w).or_default().clear();
+            last_writer[w] = i;
+            open_readers[w].clear();
         }
     }
-    preds
+
+    // Successor CSR from the predecessor lists (counting sort by source).
+    let mut succ_off = vec![0u32; n + 1];
+    for p in &preds {
+        for j in p.iter() {
+            succ_off[j + 1] += 1;
+        }
+    }
+    for k in 1..=n {
+        succ_off[k] += succ_off[k - 1];
+    }
+    let mut cursor: Vec<u32> = succ_off[..n].to_vec();
+    let mut succs = vec![0u32; succ_off[n] as usize];
+    for (i, p) in preds.iter().enumerate() {
+        for j in p.iter() {
+            succs[cursor[j] as usize] = i as u32;
+            cursor[j] += 1;
+        }
+    }
+    Dag { preds, succs, succ_off, indeg }
 }
 
 #[cfg(test)]
@@ -97,9 +161,12 @@ mod tests {
         let mut t = Trace::default();
         t.push(1, CmdKind::Bk2Gbuf { bytes: 64 });
         t.push(1, CmdKind::Gbuf2Bk { bytes: 64 });
-        let p = build(&t);
-        assert_eq!(p[0].len(), 0);
-        assert_eq!(p[1].sorted(), vec![0]);
+        let d = build(&t);
+        assert_eq!(d.preds[0].len(), 0);
+        assert_eq!(d.preds[1].sorted(), vec![0]);
+        assert_eq!(d.succs(0), [1]);
+        assert!(d.succs(1).is_empty());
+        assert_eq!(d.indegree(), [0, 1]);
     }
 
     #[test]
@@ -111,9 +178,13 @@ mod tests {
         t.push_dep(3, CmdKind::Bk2Gbuf { bytes: 64 }, &[1], None);
         // Node 4 reads both.
         t.push_dep(4, CmdKind::Bk2Gbuf { bytes: 64 }, &[1, 2], None);
-        let p = build(&t);
-        assert_eq!(p[2].sorted(), vec![0]);
-        assert_eq!(p[3].sorted(), vec![0, 1]);
+        let d = build(&t);
+        assert_eq!(d.preds[2].sorted(), vec![0]);
+        assert_eq!(d.preds[3].sorted(), vec![0, 1]);
+        // Successor view mirrors the predecessor edges.
+        assert_eq!(d.succs(0), [2, 3]);
+        assert_eq!(d.succs(1), [3]);
+        assert_eq!(d.indegree(), [0, 0, 1, 2]);
     }
 
     #[test]
@@ -124,8 +195,8 @@ mod tests {
         t.push_dep(5, CmdKind::Gbuf2Bk { bytes: 64 }, &[], Some(1));
         // ...so a later reader of 1 waits for the reorganization.
         t.push_dep(6, CmdKind::Bk2Gbuf { bytes: 64 }, &[1], None);
-        let p = build(&t);
-        assert_eq!(p[2].sorted(), vec![1]);
+        let d = build(&t);
+        assert_eq!(d.preds[2].sorted(), vec![1]);
     }
 
     #[test]
@@ -137,14 +208,14 @@ mod tests {
         // A reorganization rewriting map 1 must drain both in-flight
         // readers (WAR) and order after the original write (WAW).
         t.push_dep(7, CmdKind::Gbuf2Bk { bytes: 64 }, &[], Some(1));
-        let p = build(&t);
-        assert_eq!(p[3].sorted(), vec![0, 1, 2]);
+        let d = build(&t);
+        assert_eq!(d.preds[3].sorted(), vec![0, 1, 2]);
         // A write retires the open-reader set: a second rewrite waits on
         // the first rewrite only, not the long-retired readers.
         let mut t2 = t.clone();
         t2.push_dep(8, CmdKind::Gbuf2Bk { bytes: 64 }, &[], Some(1));
-        let p2 = build(&t2);
-        assert_eq!(p2[4].sorted(), vec![3]);
+        let d2 = build(&t2);
+        assert_eq!(d2.preds[4].sorted(), vec![3]);
     }
 
     #[test]
@@ -152,16 +223,29 @@ mod tests {
         let mut t = Trace::default();
         t.push(1, CmdKind::Bk2Gbuf { bytes: 64 });
         t.push(2, CmdKind::Bk2Gbuf { bytes: 64 });
-        let p = build(&t);
-        assert_eq!(p[1].len(), 0, "different nodes, no annotations: independent");
+        let d = build(&t);
+        assert_eq!(d.preds[1].len(), 0, "different nodes, no annotations: independent");
+        assert_eq!(d.indegree(), [0, 0]);
     }
 
     #[test]
-    fn preds_deduplicate() {
-        let mut p = Preds::default();
-        p.add(3);
-        p.add(3);
-        p.add(7);
-        assert_eq!(p.sorted(), vec![3, 7]);
+    fn duplicate_edges_are_stamped_out() {
+        // Same-node chaining and RAW both point at command 0: the stamp
+        // dedup must record the edge once (so indegree stays consistent
+        // with the successor count).
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 }, &[], Some(1));
+        t.push_dep(1, CmdKind::Gbuf2Bk { bytes: 64 }, &[1], Some(1));
+        let d = build(&t);
+        assert_eq!(d.preds[1].sorted(), vec![0]);
+        assert_eq!(d.succs(0), [1]);
+        assert_eq!(d.indegree()[1], 1);
+    }
+
+    #[test]
+    fn empty_trace_builds_empty_dag() {
+        let d = build(&Trace::default());
+        assert_eq!(d.len(), 0);
+        assert!(d.indegree().is_empty());
     }
 }

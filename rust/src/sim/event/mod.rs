@@ -6,41 +6,48 @@
 //! host I/O hidden under compute, GBUF gathers overlapping an independent
 //! branch's MACs, or bus contention over time — it is systematically
 //! conservative about exactly the cross-bank savings PIMfused optimizes.
-//! This engine instead runs a greedy earliest-issue list scheduler
-//! (DESIGN.md §6.2):
+//! This engine instead runs a ready-queue list scheduler (scheduler v2,
+//! DESIGN.md §6.2):
 //!
 //! 1. [`deps`] derives a command DAG from the trace's data-flow
 //!    annotations: same-node commands chain; across nodes a command waits
 //!    on the last writer of each feature map it reads (RAW), and a map
 //!    rewrite additionally drains the map's prior writer and every open
-//!    reader (WAW/WAR).
-//! 2. [`resources`] keeps a busy-until timeline per bank, per PIMcore,
-//!    for the shared internal bus / GBUF port, the GBcore, and the host
-//!    interface.
-//! 3. Commands are visited in trace order; each starts at the earliest
-//!    cycle where its predecessors have completed *and* every resource it
-//!    occupies is free, reserving those resources for the durations the
-//!    shared [`engine::cost`] expansion assigns.
+//!    reader (WAW/WAR). The DAG exposes successor lists and indegrees.
+//! 2. [`resources`] keeps an *interval timeline* (sorted gap list) per
+//!    resource: every bank, every PIMcore, the shared internal bus /
+//!    GBUF port, the GBcore, the host interface, the contended command
+//!    bus, and a tFAW/tRRD activation window per bank group. Short
+//!    commands back-fill idle windows earlier reservations left behind.
+//! 3. Commands issue in *readiness order*: a binary min-heap of
+//!    `(ready_cycle, trace_index)` pops the earliest-ready command, the
+//!    timelines find the earliest start where its issue slot and every
+//!    resource interval it needs fit, and completion updates the
+//!    successors' ready cycles.
 //!
 //! Three invariants hold by construction (property-tested in
-//! `tests/engine_agreement.rs`):
+//! `tests/engine_agreement.rs`, see the proof sketch in DESIGN.md §6.2):
 //!
 //! * action counts — and therefore energy — are identical to the
 //!   analytic engine's (same [`engine::tally`] path);
-//! * total cycles never exceed the analytic serial sum (a command never
-//!   starts later than the previous command's completion);
+//! * total cycles never exceed the analytic serial sum (every
+//!   reservation a command makes ends by its completion, so a popped
+//!   command can always start by the latest completion so far);
 //! * total cycles never undercut the busiest single resource's occupancy
-//!   (reservations on one timeline cannot overlap).
+//!   (reservations on one timeline cannot overlap — [`audit`] certifies
+//!   this together with dependency correctness).
 
 mod deps;
 mod resources;
 
 pub use resources::ResourceOccupancy;
 
-use super::engine::{self, charge, cost, tally, CmdCost};
+use super::engine::{self, charge, cost, tally};
 use super::SimResult;
 use crate::config::ArchConfig;
 use crate::trace::Trace;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Event-engine output: the [`SimResult`] (with `cycles` = schedule
 /// makespan and every other field identical to the analytic engine's)
@@ -53,35 +60,103 @@ pub struct EventReport {
 
 /// Simulate a full trace with the event-driven scheduler.
 pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> EventReport {
-    let preds = deps::build(trace);
-    let mut tl = resources::Timelines::new(cfg);
-    let mut done: Vec<u64> = vec![0; trace.cmds.len()];
-    let mut r = SimResult::default();
-    let mut makespan = 0u64;
-    let t_cmd = cfg.timing.t_cmd;
+    let dag = deps::build(trace);
+    run_schedule(cfg, trace, &dag).0
+}
 
-    for (i, cmd) in trace.cmds.iter().enumerate() {
+/// Per-command schedule record, in trace order: issue-slot start and
+/// completion cycle (completion includes the `t_cmd` issue slot, the
+/// data span, and any write-recovery window).
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleAudit {
+    pub starts: Vec<u64>,
+    pub dones: Vec<u64>,
+    /// Total busy cycles the scheduler back-filled into timeline gaps.
+    pub backfilled: u64,
+}
+
+/// Re-run the schedule and certify its legality: every command must
+/// start at or after every predecessor's completion, and completions
+/// must bound the reported makespan. Interval double-booking is ruled
+/// out separately — the timelines' `reserve` asserts non-overlap on
+/// every reservation, so reaching a result at all certifies it.
+pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
+    let dag = deps::build(trace);
+    let (report, sched) = run_schedule(cfg, trace, &dag);
+    let mut max_done = 0;
+    for i in 0..dag.len() {
+        for j in dag.preds[i].iter() {
+            if sched.starts[i] < sched.dones[j] {
+                return Err(format!(
+                    "command {i} starts at {} before predecessor {j} completes at {}",
+                    sched.starts[i], sched.dones[j]
+                ));
+            }
+        }
+        max_done = max_done.max(sched.dones[i]);
+    }
+    if max_done != report.result.cycles {
+        return Err(format!(
+            "makespan {} disagrees with the latest completion {max_done}",
+            report.result.cycles
+        ));
+    }
+    Ok(sched)
+}
+
+/// The scheduler core shared by [`simulate`] and [`audit`] (which pass
+/// in the DAG so it is built exactly once per call).
+fn run_schedule(
+    cfg: &ArchConfig,
+    trace: &Trace,
+    dag: &deps::Dag,
+) -> (EventReport, ScheduleAudit) {
+    let n = trace.cmds.len();
+    let mut r = SimResult::default();
+    // Expand costs and tallies in trace order, so action counts and the
+    // per-path cycle breakdowns are engine-identical by construction
+    // regardless of the issue order the heap picks below.
+    let mut costs = Vec::with_capacity(n);
+    for cmd in &trace.cmds {
         tally(cmd, &mut r.actions);
         let c = cost(cfg, cmd);
-        // Keep the per-path occupancy breakdown (near/cross/gbcore/host
-        // cycles) on the analytic engine's accounting, so the two engines
-        // differ only in `cycles`. `charge` returns the serial duration,
-        // which we discard in favor of the scheduled completion below.
+        // `charge` returns the serial duration, which we discard in
+        // favor of the scheduled completion below.
         let _serial = charge(cfg, &c, &mut r);
-        let ready = preds[i].iter().map(|j| done[j]).max().unwrap_or(0);
-        let (start, span) = match &c {
-            CmdCost::Pimcore { core, bcast } => tl.issue_lockstep(ready, core, *bcast),
-            CmdCost::NearBank(core) => tl.issue_lockstep(ready, core, 0),
-            CmdCost::Gbcore(d) => (tl.issue_gbcore(ready, *d), *d),
-            CmdCost::CrossBank(d) => (tl.issue_bus(ready, *d), *d),
-            CmdCost::Host(d) => (tl.issue_host(ready, *d), *d),
-        };
-        done[i] = start + span + t_cmd;
-        makespan = makespan.max(done[i]);
+        costs.push(c);
     }
 
+    let mut tl = resources::Timelines::new(cfg);
+    let mut ready = vec![0u64; n];
+    let mut indeg = dag.indegree().to_vec();
+    // Ready heap: earliest-ready command first, trace index as the
+    // deterministic tie-break.
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..n).filter(|&i| indeg[i] == 0).map(|i| Reverse((0, i))).collect();
+    let mut starts = vec![0u64; n];
+    let mut dones = vec![0u64; n];
+    let mut makespan = 0u64;
+    let mut issued = 0usize;
+    while let Some(Reverse((at, i))) = heap.pop() {
+        let iss = tl.issue(at, &costs[i]);
+        starts[i] = iss.start;
+        dones[i] = iss.done;
+        makespan = makespan.max(iss.done);
+        issued += 1;
+        for &s in dag.succs(i) {
+            let s = s as usize;
+            ready[s] = ready[s].max(iss.done);
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                heap.push(Reverse((ready[s], s)));
+            }
+        }
+    }
+    debug_assert_eq!(issued, n, "the dependency DAG must drain completely");
     r.cycles = makespan;
-    EventReport { result: r, occupancy: tl.into_occupancy(makespan) }
+    let occupancy = tl.into_occupancy(makespan);
+    let backfilled = occupancy.backfilled;
+    (EventReport { result: r, occupancy }, ScheduleAudit { starts, dones, backfilled })
 }
 
 #[cfg(test)]
@@ -90,6 +165,7 @@ mod tests {
     use crate::cnn::resnet::resnet18_first8;
     use crate::config::System;
     use crate::dataflow::{plan, CostModel};
+    use crate::sim::dram;
     use crate::trace::gen::generate;
     use crate::trace::{CmdKind, PerCore};
 
@@ -116,7 +192,8 @@ mod tests {
     #[test]
     fn chained_commands_match_analytic_exactly() {
         // A strictly-dependent chain has no overlap to find: the event
-        // engine must degrade to the analytic serial total.
+        // engine must degrade to the analytic serial total (including
+        // the scatter's write-recovery window, charged by both engines).
         let cfg = ArchConfig::baseline();
         let mut t = Trace::default();
         t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], Some(1));
@@ -128,13 +205,15 @@ mod tests {
 
     #[test]
     fn independent_commands_on_disjoint_resources_overlap() {
-        // A bus transfer and a per-core LBUF fill share nothing: the
-        // event engine runs them concurrently, strictly beating the
-        // analytic serial sum.
+        // A parallel LBUF fill (cores + banks) and GBcore compute (bus +
+        // GBcore port) share nothing but the command bus: the event
+        // engine runs their data phases concurrently, strictly beating
+        // the analytic serial sum.
         let cfg = ArchConfig::baseline();
         let mut t = Trace::default();
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 * 1024 }, &[], None);
-        t.push_dep(2, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 64 * 1024) }, &[], None);
+        t.push_dep(1, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 64 * 1024) }, &[], None);
+        let gb = CmdKind::GbcoreCmp { flags: crate::trace::ExecFlags::Pool, eltwise: 64 * 1024 };
+        t.push_dep(2, gb, &[], None);
         let ev = simulate(&cfg, &t);
         let serial = serial_cycles(&cfg, &t);
         assert!(
@@ -166,7 +245,7 @@ mod tests {
     fn rewrite_waits_for_inflight_reader() {
         // Anti-dependency: a reorganization rewriting map 1's layout may
         // not overlap the LBUF fill still streaming the old layout, even
-        // though the two occupy disjoint resources (bus vs cores).
+        // though the two occupy mostly disjoint resources.
         let cfg = ArchConfig::baseline();
         let mut t = Trace::default();
         t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], Some(1));
@@ -175,6 +254,69 @@ mod tests {
         let ev = simulate(&cfg, &t);
         // RAW then WAR chain every command: no overlap is legal.
         assert_eq!(ev.result.cycles, serial_cycles(&cfg, &t));
+    }
+
+    #[test]
+    fn read_after_write_pays_the_turnaround_window() {
+        // Satellite (tWR): a read reservation on a bank timeline that
+        // follows a write must start >= t_wr after the write's data
+        // completes. Two *independent* commands (different nodes, no
+        // annotations) hitting the same banks make the gap observable.
+        let cfg = ArchConfig::baseline();
+        let mut t = Trace::default();
+        t.push(1, CmdKind::Lbuf2Bk { bytes: PerCore::uniform(16, 4096) }); // bank write
+        t.push(2, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 4096) }); // bank read
+        let d = dram::near_bank_stream_cycles(&cfg.timing, 4096);
+        let t_cmd = cfg.timing.t_cmd;
+        let a = audit(&cfg, &t).expect("legal schedule");
+        // Write data occupies [t_cmd, t_cmd + d); the read's data phase
+        // begins exactly t_wr after it.
+        assert_eq!(a.starts[0], 0);
+        assert_eq!(a.starts[1] + t_cmd, (a.starts[0] + t_cmd + d) + cfg.timing.t_wr);
+
+        // Zeroing t_wr removes exactly that gap.
+        let mut cfg0 = cfg.clone();
+        cfg0.timing.t_wr = 0;
+        let ev0 = simulate(&cfg0, &t);
+        let ev = simulate(&cfg, &t);
+        assert_eq!(ev.result.cycles - ev0.result.cycles, cfg.timing.t_wr);
+    }
+
+    #[test]
+    fn issue_slots_backfill_the_command_bus() {
+        // Two bus-contended transfers, then an independent host read: the
+        // host command's issue slot lands in the command-bus gap behind
+        // the second transfer's slot, and its data hides under the bus
+        // traffic entirely.
+        let cfg = ArchConfig::baseline();
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 * 1024 }, &[], None);
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], None);
+        t.push_dep(3, CmdKind::HostRead { bytes: 4096 }, &[], None);
+        let ev = simulate(&cfg, &t);
+        let a = audit(&cfg, &t).unwrap();
+        assert!(a.backfilled > 0, "the host issue slot back-fills");
+        assert_eq!(a.starts[2], cfg.timing.t_cmd, "host issues right behind cmd 1's slot");
+        assert!(ev.result.cycles < serial_cycles(&cfg, &t));
+    }
+
+    #[test]
+    fn ready_order_beats_trace_order() {
+        // Command 3 is independent but sits behind a dependent chain in
+        // trace order; the ready heap issues it first, so its bus work
+        // hides under the chain instead of waiting for it.
+        let cfg = ArchConfig::baseline();
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 64 * 1024) }, &[], Some(1));
+        t.push_dep(1, CmdKind::Lbuf2Bk { bytes: PerCore::uniform(16, 64 * 1024) }, &[], Some(1));
+        t.push_dep(7, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], None);
+        let a = audit(&cfg, &t).unwrap();
+        assert!(
+            a.starts[2] < a.starts[1],
+            "independent command {} should issue before the chained one {}",
+            a.starts[2],
+            a.starts[1]
+        );
     }
 
     #[test]
@@ -190,6 +332,7 @@ mod tests {
             assert_eq!(ev.result.host_cycles, an.host_cycles, "{sys:?}");
             assert!(ev.result.cycles <= an.cycles, "{sys:?}: event must not exceed serial");
             assert!(ev.result.cycles >= ev.occupancy.busiest(), "{sys:?}: below resource bound");
+            audit(&cfg, &t).unwrap_or_else(|e| panic!("{sys:?}: {e}"));
         }
     }
 
@@ -203,7 +346,12 @@ mod tests {
         assert_eq!(occ.makespan, ev.result.cycles);
         assert!(occ.bus_busy > 0);
         assert!(occ.host_busy > 0);
+        assert!(occ.cmdbus_busy > 0, "every command pays an issue slot");
         assert!(occ.core_busy[..occ.num_cores].iter().all(|&b| b > 0));
-        assert!(occ.render().contains("pimcore (max)"));
+        assert!(occ.bank_busy[..occ.num_banks].iter().all(|&b| b > 0));
+        let rendered = occ.render();
+        assert!(rendered.contains("pimcore (max)"));
+        assert!(rendered.contains("cmd bus"));
+        assert!(rendered.contains("back-filled"));
     }
 }

@@ -26,12 +26,16 @@
 //!
 //! * [`engine`] — the **analytic** engine: commands execute back-to-back
 //!   and total cycles are the serial sum. Fast and conservative.
-//! * [`event`] — the **event-driven** engine: a greedy earliest-issue
-//!   scheduler over per-resource busy-until timelines (per bank, per
+//! * [`event`] — the **event-driven** engine: a ready-heap list
+//!   scheduler over per-resource *interval timelines* (per bank, per
 //!   PIMcore, the shared bus / GBUF port, the GBcore, the host
-//!   interface), with command ordering derived from the trace's per-node
-//!   data-flow annotations. Independent commands overlap; the result
-//!   adds a per-resource [`ResourceOccupancy`] breakdown.
+//!   interface, the contended command bus, and a tFAW/tRRD activation
+//!   window per bank group), with command ordering derived from the
+//!   trace's per-node data-flow annotations. Independent commands
+//!   overlap, short commands back-fill idle gaps, cross-bank transfers
+//!   reserve per-bank 1/N slices, and bank writes charge `tWR`
+//!   recovery; the result adds a per-resource [`ResourceOccupancy`]
+//!   breakdown.
 //!
 //! Both engines tally identical [`ActionCounts`] for the energy model,
 //! so energy reports never depend on engine choice.

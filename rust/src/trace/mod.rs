@@ -251,6 +251,24 @@ impl Trace {
         self.cmds.push(Cmd { node, kind, reads: Deps::from_slice(reads), writes });
     }
 
+    /// Largest node id any command references (its own node, its `reads`,
+    /// or its `writes`); `0` for an empty trace. The event engine's
+    /// dependency builder sizes its dense per-feature-map tables with
+    /// this instead of hashing node ids.
+    pub fn max_node(&self) -> NodeId {
+        let mut m = 0;
+        for c in &self.cmds {
+            m = m.max(c.node);
+            for r in c.reads.iter() {
+                m = m.max(r);
+            }
+            if let Some(w) = c.writes {
+                m = m.max(w);
+            }
+        }
+        m
+    }
+
     pub fn stats(&self) -> TraceStats {
         let mut s = TraceStats { num_cmds: self.cmds.len(), ..Default::default() };
         for c in &self.cmds {
@@ -380,6 +398,16 @@ mod tests {
     #[should_panic(expected = "more than")]
     fn deps_bounded() {
         Deps::from_slice(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn max_node_covers_reads_and_writes() {
+        assert_eq!(Trace::default().max_node(), 0);
+        let mut t = Trace::default();
+        t.push_dep(3, CmdKind::Bk2Gbuf { bytes: 8 }, &[7], None);
+        assert_eq!(t.max_node(), 7);
+        t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 8 }, &[], Some(9));
+        assert_eq!(t.max_node(), 9);
     }
 
     #[test]

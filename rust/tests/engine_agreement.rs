@@ -1,11 +1,17 @@
 //! Engine-agreement invariants: the event-driven engine must tally the
 //! exact same action counts as the analytic engine (so energy reports are
 //! byte-identical), never exceed the analytic serial cycle total, and
-//! never undercut the busiest single resource's occupancy.
+//! never undercut the busiest single resource's occupancy. Scheduler-v2
+//! legality (no command before a predecessor's completion, no
+//! double-booked resource interval) is certified by the event engine's
+//! audit over random configs × all workloads.
 
 use pimfused::config::{ArchConfig, Engine, System};
 use pimfused::coordinator::Session;
+use pimfused::dataflow::{plan, CostModel};
 use pimfused::ppa::PpaReport;
+use pimfused::sim::event;
+use pimfused::trace::gen::generate;
 use pimfused::util::prop::{check_no_shrink, Gen};
 use pimfused::workload::Workload;
 
@@ -85,6 +91,39 @@ fn engines_agree_on_random_configs() {
             let (a, e) = pair(&session, &cfg, w);
             assert_agreement(&a, &e, &format!("{} on {}", w.name(), cfg.label()));
             true
+        },
+    );
+}
+
+#[test]
+fn backfilled_schedules_stay_legal_on_random_configs() {
+    // Property (scheduler v2): across random (system, buffers, workload)
+    // points, the schedule audit replays the ready-heap schedule and
+    // verifies that no command's issue starts before any predecessor's
+    // completion and that the makespan is the latest completion.
+    // Double-booking an interval on one resource is impossible to
+    // observe from outside only because the timelines' reserve() asserts
+    // non-overlap on every reservation — producing a schedule at all
+    // certifies it, and this property run exercises that assert across
+    // the whole config space.
+    check_no_shrink(
+        "schedule-legality",
+        18,
+        |g: &mut Gen| {
+            let sys = *g.choose(&System::ALL);
+            let gbuf = *g.choose(&[2048usize, 8192, 32768]);
+            let lbuf = *g.choose(&[0usize, 64, 256]);
+            let w = *g.choose(&Workload::ALL);
+            (sys, gbuf, lbuf, w)
+        },
+        |&(sys, gbuf, lbuf, w)| {
+            let cfg = ArchConfig::system(sys, gbuf, lbuf);
+            let graph = w.graph();
+            let p = plan(&graph, &cfg);
+            let tr = generate(&graph, &cfg, &p, CostModel::default());
+            let a = event::audit(&cfg, &tr)
+                .unwrap_or_else(|e| panic!("{} on {}: {e}", w.name(), cfg.label()));
+            a.starts.len() == tr.cmds.len() && a.dones.len() == tr.cmds.len()
         },
     );
 }

@@ -126,6 +126,8 @@ fn golden_results() -> SweepResults {
         bus_busy: 40,
         gbcore_busy: 10,
         host_busy: 5,
+        cmdbus_busy: 3,
+        backfilled: 7,
         ..Default::default()
     };
     for i in 0..4 {
@@ -199,7 +201,7 @@ fn json_golden_output() {
       "energy_pj": 1.5,
       "area_mm2": 0.25,
       "norm": {"cycles": 0.45, "energy": 0.75, "area": 1},
-      "utilization": {"makespan": 90, "bus": 40, "gbcore": 10, "host": 5, "cores": [80, 79, 78, 77], "banks": [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]},
+      "utilization": {"makespan": 90, "bus": 40, "cmdbus": 3, "gbcore": 10, "host": 5, "backfilled": 7, "cores": [80, 79, 78, 77], "banks": [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]},
       "error": null
     },
     {
