@@ -3,9 +3,16 @@
 //! engine's linear walk vs the event engine's ready-heap + interval-
 //! timeline scheduler (deps build included, since a caller pays both).
 //!
-//! The acceptance bar for scheduler v2 is that event throughput stays
-//! within ~3x of the analytic walk (no super-linear blowup from the
-//! interval model); the `ratio` column below is the number to watch.
+//! The acceptance bar for the event scheduler is that its throughput
+//! stays within ~3x of the analytic walk (no super-linear blowup from
+//! the interval model, the per-bank host slices, or the per-row ACT
+//! slots); the `ratio` column below is the number to watch.
+//!
+//! CI runs this as a guardrail: `cargo bench --bench bench_sched --
+//! --assert-ratio 3` prints one machine-readable `guardrail:` line per
+//! system plus a `guardrail-summary:` line, and exits non-zero if the
+//! worst event/analytic ratio exceeds the bar. The captured stdout is
+//! uploaded as a build artifact so the tracked number has history.
 
 use pimfused::benchkit::{bench, section};
 use pimfused::cnn::resnet::resnet18;
@@ -15,8 +22,23 @@ use pimfused::sim::{event, simulate};
 use pimfused::trace::gen::generate;
 
 fn main() {
+    let mut args = std::env::args().skip(1);
+    let mut assert_ratio: Option<f64> = None;
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--assert-ratio" => {
+                let v = args.next().expect("--assert-ratio needs a value");
+                assert_ratio = Some(v.parse().expect("--assert-ratio must be a number"));
+            }
+            // Cargo appends `--bench` to every bench executable it runs.
+            "--bench" => {}
+            other => panic!("unknown bench_sched option {other:?} (supported: --assert-ratio N)"),
+        }
+    }
+
     let model = CostModel::default();
     let g = resnet18();
+    let mut worst: (f64, &str) = (0.0, "");
 
     section("scheduling throughput, ResNet18_Full @ G32K_L256");
     for sys in System::ALL {
@@ -37,12 +59,32 @@ fn main() {
             || event::simulate(&cfg, &tr).result.cycles,
         );
         let per_sec = |d: std::time::Duration| n as f64 / d.as_secs_f64();
+        let ratio = ev.median.as_secs_f64() / an.median.as_secs_f64().max(f64::MIN_POSITIVE);
+        if ratio > worst.0 {
+            worst = (ratio, sys.name());
+        }
         println!(
-            "  {:<8} analytic {:>12.0} cmd/s | event {:>12.0} cmd/s | ratio {:.2}x",
+            "  guardrail: system={} analytic_cmds_per_s={:.0} event_cmds_per_s={:.0} ratio={:.3}",
             sys.name(),
             per_sec(an.median),
             per_sec(ev.median),
-            ev.median.as_secs_f64() / an.median.as_secs_f64().max(f64::MIN_POSITIVE),
+            ratio,
         );
+    }
+    println!(
+        "guardrail-summary: worst_ratio={:.3} worst_system={} bar={}",
+        worst.0,
+        worst.1,
+        assert_ratio.map(|b| b.to_string()).unwrap_or_else(|| "none".into()),
+    );
+    if let Some(bar) = assert_ratio {
+        if worst.0 > bar {
+            eprintln!(
+                "bench_sched guardrail FAILED: event/analytic ratio {:.3} on {} exceeds the <= {bar}x bar",
+                worst.0, worst.1
+            );
+            std::process::exit(1);
+        }
+        println!("bench_sched guardrail OK: worst ratio {:.3} <= {bar}x", worst.0);
     }
 }

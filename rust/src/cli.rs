@@ -29,6 +29,7 @@ usage: pimfused <command> [--key value]... [--json]
 commands:
   simulate   one PPA point          --config <sys:GmK_Ln> --workload <w>
                                     [--engine analytic|event] [--json]
+                                    [--host-residency on|off]
   sweep      buffer design sweep    --systems aim,fused16,fused4 --gbuf 2K,32K
                                     --lbuf 0,256 --workload <w>
                                     [--engine analytic|event] [--json]
@@ -41,6 +42,7 @@ commands:
 workloads: full | first8 | fig1 | fig3 | small
 systems:   aim | fused16 | fused4        bufcfg: e.g. fused4:G32K_L256
 engines:   analytic (serial sum) | event (overlap-aware, reports utilization)
+host-residency: model host I/O's bank occupancy (default on; off = interface-only)
 ";
 
 /// Options that are flags (no value); everything else takes `--key value`.
@@ -94,6 +96,14 @@ impl Args {
         Engine::parse(e).map_err(anyhow::Error::msg)
     }
 
+    fn host_residency(&self) -> Result<bool> {
+        match self.opts.get("host-residency").map(String::as_str) {
+            None | Some("on") => Ok(true),
+            Some("off") => Ok(false),
+            Some(other) => bail!("--host-residency must be on|off, got {other:?}\n{USAGE}"),
+        }
+    }
+
     fn flag(&self, name: &str) -> bool {
         self.opts.get(name).map(String::as_str) == Some("true")
     }
@@ -115,8 +125,11 @@ pub fn run(args: &Args) -> Result<String> {
     let session = Session::with_model(model);
     match args.cmd.as_str() {
         "simulate" => {
-            args.check_opts(&["config", "workload", "engine", "json"])?;
-            let cfg = args.config()?.with_engine(args.engine()?);
+            args.check_opts(&["config", "workload", "engine", "json", "host-residency"])?;
+            let cfg = args
+                .config()?
+                .with_engine(args.engine()?)
+                .with_host_residency(args.host_residency()?);
             let w = args.workload()?;
             let results = SweepGrid::from_points(vec![SweepPoint { cfg, workload: w }])
                 .run(&session)?;
@@ -146,6 +159,13 @@ pub fn run(args: &Args) -> Result<String> {
                         "bottleneck utilization: {} ({} idle cycles on the critical resource)\n",
                         crate::util::table::pct(u),
                         occ.bottleneck_idle(),
+                    ));
+                }
+                if let (Some(h), Some(a)) = (r.host_bank_share(), r.act_utilization()) {
+                    out.push_str(&format!(
+                        "host bank residency: {} of bank occupancy | act-slot utilization: {}\n",
+                        crate::util::table::pct(h),
+                        crate::util::table::pct(a),
                     ));
                 }
             }
@@ -366,11 +386,47 @@ mod tests {
         assert!(out.contains("bus/GBUF port"));
         assert!(out.contains("cmd bus"));
         assert!(out.contains("bottleneck utilization:"));
+        assert!(out.contains("host/bank (max)"));
+        assert!(out.contains("act window (max)"));
+        assert!(out.contains("host bank residency:"));
+        assert!(out.contains("act-slot utilization:"));
         // The analytic default prints no occupancy table.
         let b = parse_args(&argv("simulate --config fused4:G32K_L256 --workload fig1")).unwrap();
         let out = run(&b).unwrap();
         assert!(out.contains("(analytic engine)"));
         assert!(!out.contains("per-resource occupancy"));
+    }
+
+    #[test]
+    fn simulate_host_residency_flag() {
+        // --host-residency off runs the interface-only model: no bank
+        // cycles attributed to the host.
+        let base = "simulate --config aim:G2K_L0 --workload fig1 --engine event --json";
+        let a = parse_args(&argv(base)).unwrap();
+        let on = run(&a).unwrap();
+        let spec = format!("{} --host-residency off", base.trim_end_matches(" --json"));
+        let b = parse_args(&argv(&format!("{spec} --json"))).unwrap();
+        let off = run(&b).unwrap();
+        let host_banks = |json: &str| -> u64 {
+            let tail = json.split("\"host_banks\": [").nth(1).expect("field present");
+            tail.split(']')
+                .next()
+                .unwrap()
+                .split(',')
+                .map(|v| v.trim().parse::<u64>().unwrap())
+                .sum()
+        };
+        assert!(host_banks(&on) > 0, "resident host I/O charges banks: {on}");
+        assert_eq!(host_banks(&off), 0, "interface-only host I/O leaves banks alone");
+        // Bad values fail with usage.
+        let bad = parse_args(&argv("simulate --workload fig1 --host-residency maybe")).unwrap();
+        let e = run(&bad).unwrap_err().to_string();
+        assert!(e.contains("--host-residency must be on|off"), "{e}");
+        // Other subcommands reject the option.
+        let e = run(&parse_args(&argv("fig5 --host-residency off")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown option --host-residency"), "{e}");
     }
 
     #[test]

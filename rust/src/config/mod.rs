@@ -7,7 +7,7 @@
 
 mod timing;
 
-pub use timing::DramTiming;
+pub use timing::{ActLayout, DramTiming, MAX_ACT_SLOTS};
 
 use crate::util::size::{fmt_bufcfg, parse_bufcfg};
 
@@ -180,6 +180,12 @@ pub struct ArchConfig {
     pub timing: DramTiming,
     /// Simulation engine the coordinator runs this config through.
     pub engine: Engine,
+    /// Model host I/O's physical bank residency: `HOST_WRITE`/`HOST_READ`
+    /// stream through their destination banks (per-bank slices that
+    /// conflict with PIM traffic, write recovery, ACT-window slots) in
+    /// addition to occupying the off-chip interface. On by default —
+    /// `false` reproduces the interface-only model (DESIGN.md §6.2).
+    pub host_residency: bool,
 }
 
 impl ArchConfig {
@@ -203,12 +209,20 @@ impl ArchConfig {
             dataflow,
             timing: DramTiming::gddr6(),
             engine: Engine::Analytic,
+            host_residency: true,
         }
     }
 
     /// Builder-style engine selection: `ArchConfig::system(..).with_engine(e)`.
     pub fn with_engine(mut self, engine: Engine) -> Self {
         self.engine = engine;
+        self
+    }
+
+    /// Builder-style host-residency selection (see the field docs);
+    /// `with_host_residency(false)` restores the interface-only host model.
+    pub fn with_host_residency(mut self, on: bool) -> Self {
+        self.host_residency = on;
         self
     }
 
@@ -346,6 +360,16 @@ mod tests {
         }
         let c = ArchConfig::baseline().with_engine(Engine::Event);
         assert_eq!(c.engine, Engine::Event);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn host_residency_defaults_on() {
+        for sys in System::ALL {
+            assert!(ArchConfig::system(sys, 2048, 0).host_residency);
+        }
+        let c = ArchConfig::baseline().with_host_residency(false);
+        assert!(!c.host_residency);
         c.validate().unwrap();
     }
 

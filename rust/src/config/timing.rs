@@ -88,6 +88,61 @@ impl DramTiming {
     pub fn act_slot_cycles(&self) -> u64 {
         self.t_rrd.max(self.t_faw.div_ceil(4))
     }
+
+    /// How a command's `acts` row activations occupy its bank group's
+    /// tFAW/tRRD window timeline during a data phase of `data_span`
+    /// cycles (DESIGN.md §6.2).
+    ///
+    /// When the group is ACT-saturated (`acts * slot ≥ data_span`) the
+    /// activations cannot spread: the layout degrades to one bulk window
+    /// capped at the span (which preserves the event-engine invariant
+    /// that a command's schedule charge never exceeds its analytic
+    /// charge). Otherwise the activations interleave: up to
+    /// [`MAX_ACT_SLOTS`] windows, each covering an equal share of the
+    /// activations at [`DramTiming::act_slot_cycles`] per ACT, spread
+    /// evenly across the data span — so a second dense-activation
+    /// command can place its windows in the gaps instead of queueing
+    /// behind one front-loaded bulk reservation.
+    pub fn act_layout(&self, acts: u64, data_span: u64) -> ActLayout {
+        let slot = self.act_slot_cycles();
+        if acts == 0 || data_span == 0 || slot == 0 {
+            return ActLayout { slots: 0, span: 0, stride: 0 };
+        }
+        let window = acts * slot;
+        if acts == 1 || window >= data_span {
+            return ActLayout { slots: 1, span: window.min(data_span), stride: 0 };
+        }
+        // Spread: rounding acts up into equal slots can overshoot the
+        // span; shrink the slot count until the windows fit disjointly.
+        let mut slots = acts.min(MAX_ACT_SLOTS);
+        let mut span = acts.div_ceil(slots) * slot;
+        while slots > 1 && slots * span > data_span {
+            slots -= 1;
+            span = acts.div_ceil(slots) * slot;
+        }
+        if slots == 1 {
+            return ActLayout { slots: 1, span: span.min(data_span), stride: 0 };
+        }
+        ActLayout { slots, span, stride: (data_span - span) / (slots - 1) }
+    }
+}
+
+/// Cap on the discrete ACT windows one command reserves per bank group:
+/// bounds the scheduler's per-command reservation-request size (a dense
+/// stream can touch thousands of rows) while still letting commands
+/// interleave at sub-window granularity.
+pub const MAX_ACT_SLOTS: u64 = 8;
+
+/// One bank group's ACT-window reservations for a single command, as
+/// computed by [`DramTiming::act_layout`]: `slots` windows of `span`
+/// cycles each, the k-th starting `k * stride` cycles into the command's
+/// data phase. Invariants: `stride ≥ span` whenever `slots > 1` (windows
+/// are disjoint) and the last window ends within the data span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ActLayout {
+    pub slots: u64,
+    pub span: u64,
+    pub stride: u64,
 }
 
 #[cfg(test)]
@@ -117,6 +172,60 @@ mod tests {
         t.t_rrd = 12;
         t.t_faw = 16;
         assert_eq!(t.act_slot_cycles(), 12);
+    }
+
+    #[test]
+    fn act_layout_spreads_when_unsaturated() {
+        let t = DramTiming::gddr6(); // slot = 8
+        // 4 ACTs over a 224-cycle span: one window per ACT, evenly spread.
+        let l = t.act_layout(4, 224);
+        assert_eq!((l.slots, l.span), (4, 8));
+        assert_eq!(l.stride, (224 - 8) / 3);
+        assert!(l.stride >= l.span, "windows must be disjoint");
+        assert!((l.slots - 1) * l.stride + l.span <= 224, "last window within the span");
+    }
+
+    #[test]
+    fn act_layout_saturated_degrades_to_capped_bulk_window() {
+        let t = DramTiming::gddr6();
+        // 100 ACTs * 8 = 800 ≥ span 300: one bulk window capped at span.
+        assert_eq!(t.act_layout(100, 300), ActLayout { slots: 1, span: 300, stride: 0 });
+        // Exactly saturated counts as saturated (no room to interleave).
+        assert_eq!(t.act_layout(10, 80), ActLayout { slots: 1, span: 80, stride: 0 });
+        // A single ACT is one slot at the front.
+        assert_eq!(t.act_layout(1, 300), ActLayout { slots: 1, span: 8, stride: 0 });
+    }
+
+    #[test]
+    fn act_layout_caps_slot_count_and_chunks_acts() {
+        let t = DramTiming::gddr6();
+        // 20 ACTs over a wide span: MAX_ACT_SLOTS windows of ceil(20/8)=3
+        // ACTs each (24 cycles), still disjoint and within the span.
+        let l = t.act_layout(20, 10_000);
+        assert_eq!((l.slots, l.span), (MAX_ACT_SLOTS, 3 * 8));
+        assert!(l.stride >= l.span);
+        assert!((l.slots - 1) * l.stride + l.span <= 10_000);
+        // Reserved cycles never undercut one slot per ACT.
+        assert!(l.slots * l.span >= 20 * 8);
+    }
+
+    #[test]
+    fn act_layout_shrinks_slots_when_rounding_overshoots() {
+        let t = DramTiming::gddr6();
+        // 9 ACTs, span 80: window 72 < 80 so unsaturated, but 8 slots of
+        // ceil(9/8)=2 ACTs (16 cycles) would need 128 > 80 — the layout
+        // must shrink the slot count until the windows fit (5 × 16 = 80).
+        let l = t.act_layout(9, 80);
+        assert_eq!((l.slots, l.span, l.stride), (5, 16, 16));
+        assert!(l.slots * l.span <= 80, "windows must fit the span: {l:?}");
+        assert!(l.slots == 1 || l.stride >= l.span, "{l:?}");
+    }
+
+    #[test]
+    fn act_layout_zero_cases() {
+        let t = DramTiming::gddr6();
+        assert_eq!(t.act_layout(0, 100).slots, 0);
+        assert_eq!(t.act_layout(5, 0).slots, 0);
     }
 
     #[test]

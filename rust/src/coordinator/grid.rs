@@ -235,12 +235,12 @@ impl SweepGrid {
         // serially, so every parallel worker and every normalization hits
         // the session cache: exactly one baseline run per key, and no
         // worker ever builds while holding a cache mutex.
-        let mut warmed: Vec<(Workload, Engine)> = Vec::new();
+        let mut warmed: Vec<(Workload, Engine, bool)> = Vec::new();
         let mut warmed_plans: Vec<(Workload, Dataflow)> = Vec::new();
         for p in &points {
-            let bkey = (p.workload, p.cfg.engine);
+            let bkey = (p.workload, p.cfg.engine, p.cfg.host_residency);
             if !warmed.contains(&bkey) {
-                session.baseline_for(p.workload, p.cfg.engine)?;
+                session.baseline_matched(p.workload, &p.cfg)?;
                 warmed.push(bkey);
             }
             let key = (p.workload, p.cfg.dataflow);
@@ -263,7 +263,7 @@ impl SweepGrid {
         let mut rows = Vec::with_capacity(total);
         for (pt, report) in points.into_iter().zip(reports) {
             let norm = match &report {
-                Ok(r) => Some(r.normalize(&session.baseline_for(pt.workload, pt.cfg.engine)?)),
+                Ok(r) => Some(r.normalize(&session.baseline_matched(pt.workload, &pt.cfg)?)),
                 Err(_) => None,
             };
             rows.push(SweepRow { point: pt, report, norm });

@@ -80,11 +80,12 @@ impl SweepResults {
     }
 
     /// Serialize to CSV with a fixed header row. Failed points leave the
-    /// metric columns empty and put the message in `error`.
+    /// metric columns empty and put the message in `error`; analytic rows
+    /// (no occupancy breakdown) leave the occupancy columns empty.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "config,system,gbuf_bytes,lbuf_bytes,workload,engine,cycles,energy_pj,area_mm2,\
-             norm_cycles,norm_energy,norm_area,error\n",
+             norm_cycles,norm_energy,norm_area,host_bank_busy,act_window_busy,error\n",
         );
         for row in &self.rows {
             let cfg = &row.point.cfg;
@@ -100,20 +101,25 @@ impl SweepResults {
             );
             match (&row.report, row.norm) {
                 (Ok(r), Some(n)) => {
+                    let occ = r.occupancy;
+                    let host_bk = occ.map(|o| o.host_bank_total().to_string()).unwrap_or_default();
+                    let act_bk = occ.map(|o| o.act_busy_total().to_string()).unwrap_or_default();
                     let _ = writeln!(
                         out,
-                        "{},{},{},{},{},{},",
+                        "{},{},{},{},{},{},{},{},",
                         r.cycles,
                         r.energy_pj,
                         r.area_mm2,
                         n.cycles,
                         n.energy,
-                        n.area
+                        n.area,
+                        host_bk,
+                        act_bk
                     );
                 }
                 _ => {
                     let err = row.report.as_ref().err().map(|e| e.to_string()).unwrap_or_default();
-                    let _ = writeln!(out, ",,,,,,{}", csv_escape(&err));
+                    let _ = writeln!(out, ",,,,,,,,{}", csv_escape(&err));
                 }
             }
         }
@@ -123,14 +129,16 @@ impl SweepResults {
 
 /// The per-resource utilization object for event-engine rows: busy cycles
 /// per resource plus the schedule makespan (consumers derive fractions),
-/// the contended command-bus occupancy, and the total back-filled cycles
-/// the scheduler placed into timeline gaps.
+/// the contended command-bus occupancy, the total back-filled cycles the
+/// scheduler placed into timeline gaps, the host-residency share of every
+/// bank (`host_banks`, zero when residency is disabled), and the reserved
+/// tFAW/tRRD window cycles per bank group (`act_windows`).
 fn json_utilization(occ: &crate::sim::ResourceOccupancy) -> String {
     let list = |vals: &[u64]| {
         vals.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
     };
     format!(
-        "{{\"makespan\": {}, \"bus\": {}, \"cmdbus\": {}, \"gbcore\": {}, \"host\": {}, \"backfilled\": {}, \"cores\": [{}], \"banks\": [{}]}}",
+        "{{\"makespan\": {}, \"bus\": {}, \"cmdbus\": {}, \"gbcore\": {}, \"host\": {}, \"backfilled\": {}, \"cores\": [{}], \"banks\": [{}], \"host_banks\": [{}], \"act_windows\": [{}]}}",
         occ.makespan,
         occ.bus_busy,
         occ.cmdbus_busy,
@@ -139,6 +147,8 @@ fn json_utilization(occ: &crate::sim::ResourceOccupancy) -> String {
         occ.backfilled,
         list(&occ.core_busy[..occ.num_cores]),
         list(&occ.bank_busy[..occ.num_banks]),
+        list(&occ.host_bank_busy[..occ.num_banks]),
+        list(&occ.act_busy[..occ.num_groups]),
     )
 }
 

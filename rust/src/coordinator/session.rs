@@ -51,10 +51,12 @@ pub struct Session {
     // only `cfg.dataflow` (LayerByLayer vs PimFused tile grid), so two
     // configs differing only in buffers/timing share one mapped plan.
     plans: Mutex<HashMap<(Workload, Dataflow), Arc<Plan>>>,
-    // Baselines are keyed by (workload, engine): normalization always
-    // compares like with like, so an event-engine experiment is measured
-    // against the baseline config run through the event engine.
-    baselines: Mutex<HashMap<(Workload, Engine), Arc<PpaReport>>>,
+    // Baselines are keyed by (workload, engine, host-residency):
+    // normalization always compares like with like, so an event-engine
+    // experiment is measured against the baseline config run through the
+    // event engine, and an interface-only host model against an
+    // interface-only baseline.
+    baselines: Mutex<HashMap<(Workload, Engine, bool), Arc<PpaReport>>>,
     counters: Counters,
 }
 
@@ -148,21 +150,37 @@ impl Session {
     }
 
     /// The memoized baseline report for a workload under an explicit
-    /// engine: one evaluation of [`Session::baseline_config`] per distinct
-    /// `(workload, engine)` pair, shared by every normalization
-    /// afterwards.
+    /// engine and the baseline config's own host-residency model. See
+    /// [`Session::baseline_matched`] for the general per-axis lookup.
     pub fn baseline_for(&self, w: Workload, engine: Engine) -> Result<Arc<PpaReport>> {
+        let cfg = self.baseline_cfg.clone().with_engine(engine);
+        self.baseline_matched(w, &cfg)
+    }
+
+    /// The memoized baseline report matching an experiment config's
+    /// normalization axes — engine **and** host-residency model: one
+    /// evaluation of [`Session::baseline_config`] per distinct
+    /// `(workload, engine, host_residency)` triple, shared by every
+    /// normalization afterwards. Any axis that changes what a cycle
+    /// count *means* must match between numerator and baseline, or the
+    /// ratio mixes models.
+    pub fn baseline_matched(&self, w: Workload, cfg: &ArchConfig) -> Result<Arc<PpaReport>> {
+        let key = (w, cfg.engine, cfg.host_residency);
         let mut m = self.baselines.lock().unwrap();
-        if let Some(b) = m.get(&(w, engine)) {
+        if let Some(b) = m.get(&key) {
             return Ok(b.clone());
         }
         self.counters.baseline_runs.fetch_add(1, Ordering::Relaxed);
-        let baseline_cfg = self.baseline_cfg.clone().with_engine(engine);
+        let baseline_cfg = self
+            .baseline_cfg
+            .clone()
+            .with_engine(cfg.engine)
+            .with_host_residency(cfg.host_residency);
         let r = Arc::new(
             self.run_with_model(&baseline_cfg, w, self.model)
                 .with_context(|| format!("evaluating baseline {}", baseline_cfg.label()))?,
         );
-        m.insert((w, engine), r.clone());
+        m.insert(key, r.clone());
         Ok(r)
     }
 
@@ -174,11 +192,11 @@ impl Session {
     }
 
     /// [`Session::run`] plus normalization against the memoized baseline
-    /// report for the same workload **and the same engine** (so engine
-    /// choice never skews a ratio).
+    /// report for the same workload, the same engine, **and** the same
+    /// host-residency model (so neither axis ever skews a ratio).
     pub fn normalized(&self, cfg: &ArchConfig, w: Workload) -> Result<Normalized> {
         let r = self.run(cfg, w)?;
-        let b = self.baseline_for(w, cfg.engine)?;
+        let b = self.baseline_matched(w, cfg)?;
         Ok(r.normalize(&b))
     }
 
@@ -376,6 +394,21 @@ mod tests {
         let nb = s.normalized(&base_ev, Workload::Fig1).unwrap();
         assert!((nb.cycles - 1.0).abs() < 1e-12);
         assert_eq!(s.stats().baseline_runs, 2, "baseline memoized per (workload, engine)");
+    }
+
+    #[test]
+    fn baselines_are_keyed_by_host_residency() {
+        // A --host-residency off point must normalize against an
+        // interface-only baseline (compare like with like): the baseline
+        // config itself, residency off, is exactly 1.0 and earns its own
+        // cache entry.
+        let s = Session::new();
+        let base_off = ArchConfig::baseline().with_host_residency(false);
+        s.normalized(&ArchConfig::baseline(), Workload::Fig1).unwrap();
+        assert_eq!(s.stats().baseline_runs, 1);
+        let n = s.normalized(&base_off, Workload::Fig1).unwrap();
+        assert!((n.cycles - 1.0).abs() < 1e-12, "interface-only self-normalization");
+        assert_eq!(s.stats().baseline_runs, 2, "residency gets its own baseline");
     }
 
     #[test]

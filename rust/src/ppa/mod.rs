@@ -59,6 +59,28 @@ impl PpaReport {
             }
         })
     }
+
+    /// Host I/O's share of total bank occupancy in the event schedule —
+    /// how much of the banks' busy time is the host streaming the network
+    /// input/output through them rather than PIM traffic. `None` for
+    /// analytic runs; `0.0` when host bank residency is disabled.
+    pub fn host_bank_share(&self) -> Option<f64> {
+        self.occupancy.map(|o| {
+            let total: u64 = o.bank_busy[..o.num_banks].iter().sum();
+            if total == 0 {
+                0.0
+            } else {
+                o.host_bank_total() as f64 / total as f64
+            }
+        })
+    }
+
+    /// ACT-slot utilization of the event schedule: the share of all bank
+    /// groups' tFAW/tRRD window-cycles the schedule reserves. `None` for
+    /// analytic runs.
+    pub fn act_utilization(&self) -> Option<f64> {
+        self.occupancy.map(|o| o.act_utilization())
+    }
 }
 
 impl Normalized {
@@ -120,6 +142,29 @@ mod tests {
         assert_eq!(r.bottleneck_utilization(), Some(0.75));
         r.occupancy = Some(ResourceOccupancy::default());
         assert_eq!(r.bottleneck_utilization(), Some(0.0), "empty schedule is 0, not NaN");
+    }
+
+    #[test]
+    fn host_bank_share_and_act_utilization_read_the_occupancy() {
+        let mut r = dummy(100, 1.0, 1.0);
+        assert_eq!(r.host_bank_share(), None);
+        assert_eq!(r.act_utilization(), None);
+        let mut occ = ResourceOccupancy {
+            num_banks: 2,
+            num_groups: 1,
+            makespan: 100,
+            ..Default::default()
+        };
+        occ.bank_busy[0] = 30;
+        occ.bank_busy[1] = 10;
+        occ.host_bank_busy[0] = 8;
+        occ.host_bank_busy[1] = 2;
+        occ.act_busy[0] = 25;
+        r.occupancy = Some(occ);
+        assert_eq!(r.host_bank_share(), Some(0.25));
+        assert_eq!(r.act_utilization(), Some(0.25));
+        r.occupancy = Some(ResourceOccupancy::default());
+        assert_eq!(r.host_bank_share(), Some(0.0), "empty schedule is 0, not NaN");
     }
 
     #[test]

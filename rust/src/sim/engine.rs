@@ -12,7 +12,7 @@
 use super::dram;
 use super::ActionCounts;
 use crate::config::ArchConfig;
-use crate::trace::{Cmd, CmdKind, PerCore, Trace};
+use crate::trace::{BankMask, Cmd, CmdKind, PerCore, Trace};
 
 /// Result of simulating one trace on one architecture.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -62,8 +62,12 @@ pub(crate) enum CmdCost {
     /// `PIM_BK2GBUF` / `PIM_GBUF2BK`: sequential bus / GBUF-port occupancy
     /// (`total`), touching each bank for one `slice` of the interval.
     CrossBank { total: u64, slice: u64, write: bool, acts: u64 },
-    /// Host I/O: off-chip interface occupancy.
-    Host(u64),
+    /// `HOST_WRITE` / `HOST_READ`: off-chip interface occupancy (`total`)
+    /// plus — when the config models host bank residency — a 1/N `slice`
+    /// of each destination bank's timeline and `acts` row activations
+    /// metered through the tFAW/tRRD windows. `slice == 0` (residency off
+    /// or no annotated banks) degrades to the interface-only model.
+    Host { total: u64, slice: u64, banks: BankMask, write: bool, acts: u64 },
 }
 
 /// Expand one macro command into its per-resource cycle demands using the
@@ -120,8 +124,17 @@ pub(crate) fn cost(cfg: &ArchConfig, cmd: &Cmd) -> CmdCost {
                 acts: rows_touched(*bytes),
             }
         }
-        CmdKind::HostWrite { bytes } | CmdKind::HostRead { bytes } => {
-            CmdCost::Host(dram::host_stream_cycles(t, *bytes))
+        CmdKind::HostWrite { bytes, banks } | CmdKind::HostRead { bytes, banks } => {
+            let total = dram::host_stream_cycles(t, *bytes);
+            let n = banks.count() as u64;
+            let resident = cfg.host_residency && n > 0 && total > 0;
+            CmdCost::Host {
+                total,
+                slice: if resident { total.div_ceil(n) } else { 0 },
+                banks: *banks,
+                write: matches!(cmd.kind, CmdKind::HostWrite { .. }),
+                acts: if resident { rows_touched(*bytes) } else { 0 },
+            }
         }
     }
 }
@@ -171,7 +184,7 @@ pub(crate) fn tally(cmd: &Cmd, a: &mut ActionCounts) {
             a.bus_bytes += bytes;
             a.row_activations += rows_touched(*bytes);
         }
-        CmdKind::HostWrite { bytes } | CmdKind::HostRead { bytes } => {
+        CmdKind::HostWrite { bytes, .. } | CmdKind::HostRead { bytes, .. } => {
             a.host_bytes += bytes;
             a.row_activations += rows_touched(*bytes);
         }
@@ -211,8 +224,11 @@ pub(crate) fn charge(cfg: &ArchConfig, c: &CmdCost, r: &mut SimResult) -> u64 {
             r.cross_bank_cycles += d;
             d
         }
-        CmdCost::Host(c) => {
-            let d = c + t_cmd;
+        CmdCost::Host { total, slice, write, .. } => {
+            // With bank residency modeled, a host write's destination
+            // banks must restore before the next access — the same tWR
+            // the event engine's slice tails reserve.
+            let d = total + t_cmd + recovery(*write && *slice > 0);
             r.host_cycles += d;
             d
         }
@@ -287,6 +303,34 @@ mod tests {
         ts.push(0, CmdKind::Lbuf2Bk { bytes: PerCore::uniform(16, 1024) });
         step(&cfg, &ts.cmds[0], &mut spill);
         assert_eq!(spill.cycles - fill.cycles, cfg.timing.t_wr);
+    }
+
+    #[test]
+    fn host_write_residency_charges_write_recovery() {
+        use crate::trace::BankMask;
+        // With bank residency on, a host write's destination banks must
+        // restore (tWR) before the next access; a host read pays nothing
+        // extra, and turning residency off restores the old charge.
+        let cfg = ArchConfig::baseline();
+        let run_one = |cfg: &ArchConfig, kind: CmdKind| {
+            let mut r = SimResult::default();
+            let mut t = Trace::default();
+            t.push(0, kind);
+            step(cfg, &t.cmds[0], &mut r);
+            r
+        };
+        let banks = BankMask::all(16);
+        let wr = run_one(&cfg, CmdKind::HostWrite { bytes: 4096, banks });
+        let rd = run_one(&cfg, CmdKind::HostRead { bytes: 4096, banks });
+        assert_eq!(wr.cycles - rd.cycles, cfg.timing.t_wr);
+        let off = cfg.clone().with_host_residency(false);
+        let wr_off = run_one(&off, CmdKind::HostWrite { bytes: 4096, banks });
+        assert_eq!(wr_off.cycles, rd.cycles, "residency off: interface-only charge");
+        // An un-annotated host command also degrades to interface-only.
+        let wr_nobanks = run_one(&cfg, CmdKind::HostWrite { bytes: 4096, banks: BankMask::EMPTY });
+        assert_eq!(wr_nobanks.cycles, rd.cycles);
+        // Action counts (energy) never depend on the residency switch.
+        assert_eq!(wr.actions, wr_off.actions);
     }
 
     #[test]

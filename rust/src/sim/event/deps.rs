@@ -8,8 +8,13 @@
 //! (RAW), and a command that (re)defines a feature map additionally waits
 //! on that map's previous writer (WAW) and on every reader issued since
 //! (WAR) — a fused reorganization must not rewrite a map's bank placement
-//! while an earlier command is still streaming the old layout. Everything
-//! else is free to overlap, subject to resource availability.
+//! while an earlier command is still streaming the old layout. Host I/O
+//! takes part like any other command: `HOST_WRITE` registers as the input
+//! map's writer (everything consuming the input waits for the host
+//! stream — and, with host bank residency modeled, for its bank slices to
+//! drain), and `HOST_READ` reads the output map, so it waits on the final
+//! layer's scatter. Everything else is free to overlap, subject to
+//! resource availability.
 //!
 //! [`build`] returns a [`Dag`]: the per-command predecessor lists plus
 //! the successor/indegree view the ready-heap scheduler consumes. The
@@ -216,6 +221,24 @@ mod tests {
         t2.push_dep(8, CmdKind::Gbuf2Bk { bytes: 64 }, &[], Some(1));
         let d2 = build(&t2);
         assert_eq!(d2.preds[4].sorted(), vec![3]);
+    }
+
+    #[test]
+    fn host_io_bounds_the_dag() {
+        use crate::trace::BankMask;
+        // HOST_WRITE defines the input map: the first consumer waits on
+        // it. HOST_READ consumes the output map: it waits on the final
+        // writer, but not on unrelated commands.
+        let banks = BankMask::all(16);
+        let mut t = Trace::default();
+        t.push_dep(0, CmdKind::HostWrite { bytes: 1024, banks }, &[], Some(0));
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 1024 }, &[0], None);
+        t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 512 }, &[], Some(2));
+        t.push_dep(2, CmdKind::HostRead { bytes: 512, banks }, &[2], None);
+        let d = build(&t);
+        assert_eq!(d.preds[1].sorted(), vec![0], "consumer waits on the host write");
+        assert_eq!(d.preds[3].sorted(), vec![2], "host read waits on the output's writer");
+        assert_eq!(d.indegree(), [0, 1, 0, 1]);
     }
 
     #[test]

@@ -19,6 +19,9 @@
 //!    GBUF port, the GBcore, the host interface, the contended command
 //!    bus, and a tFAW/tRRD activation window per bank group. Short
 //!    commands back-fill idle windows earlier reservations left behind.
+//!    Host I/O holds per-bank slices of its destination banks (true bank
+//!    residency) and row activations spread over a command's data span
+//!    as per-row interleaved ACT slots — see the module docs there.
 //! 3. Commands issue in *readiness order*: a binary min-heap of
 //!    `(ready_cycle, trace_index)` pops the earliest-ready command, the
 //!    timelines find the earliest start where its issue slot and every
@@ -42,10 +45,12 @@ mod resources;
 
 pub use resources::ResourceOccupancy;
 
-use super::engine::{self, charge, cost, tally};
+use resources::NUM_ACT_GROUPS;
+
+use super::engine::{self, charge, cost, tally, CmdCost};
 use super::SimResult;
 use crate::config::ArchConfig;
-use crate::trace::Trace;
+use crate::trace::{CmdKind, Trace};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -61,7 +66,7 @@ pub struct EventReport {
 /// Simulate a full trace with the event-driven scheduler.
 pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> EventReport {
     let dag = deps::build(trace);
-    run_schedule(cfg, trace, &dag).0
+    run_schedule(cfg, trace, &dag, false).0
 }
 
 /// Per-command schedule record, in trace order: issue-slot start and
@@ -73,16 +78,34 @@ pub struct ScheduleAudit {
     pub dones: Vec<u64>,
     /// Total busy cycles the scheduler back-filled into timeline gaps.
     pub backfilled: u64,
+    /// Bank cycles certified as host-residency slices (zero when the
+    /// config runs the interface-only host model).
+    pub host_bank_cycles: u64,
+    /// Reserved tFAW/tRRD window cycles certified across all bank groups.
+    pub act_window_cycles: u64,
 }
 
-/// Re-run the schedule and certify its legality: every command must
-/// start at or after every predecessor's completion, and completions
-/// must bound the reported makespan. Interval double-booking is ruled
-/// out separately — the timelines' `reserve` asserts non-overlap on
-/// every reservation, so reaching a result at all certifies it.
+/// Re-run the schedule in recording mode and certify its legality:
+///
+/// * every command starts at or after every predecessor's completion,
+///   and completions bound the reported makespan;
+/// * no resource interval is double-booked — replayed independently of
+///   the timelines' `reserve` asserts, by sorting every command's
+///   recorded reservations per resource and scanning for overlap (this
+///   covers the host-command bank slices in particular: two host phases,
+///   or a host phase and a PIM stream, can never hold one bank at once);
+/// * host commands reserve bank slices exactly on their annotated
+///   destination banks, inside their own data window — and reserve none
+///   when the config disables host residency;
+/// * every row activation lands in a legal tFAW/tRRD slot: each ACT
+///   reservation lies within its command's data window, and per bank
+///   group the reserved window cycles cover the command's activations at
+///   `act_slot_cycles()` per ACT (saturated groups are capped at the
+///   data span — the bulk-window degradation `DramTiming::act_layout`
+///   documents). Cross-command spacing follows from the no-overlap check.
 pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
     let dag = deps::build(trace);
-    let (report, sched) = run_schedule(cfg, trace, &dag);
+    let (report, mut sched, records) = run_schedule(cfg, trace, &dag, true);
     let mut max_done = 0;
     for i in 0..dag.len() {
         for j in dag.preds[i].iter() {
@@ -101,16 +124,106 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
             report.result.cycles
         ));
     }
+
+    // Independent double-booking replay over every resource.
+    let mut per_res: Vec<Vec<(u64, u64, usize)>> = vec![Vec::new(); resources::NUM_RES];
+    for (i, rec) in records.iter().enumerate() {
+        for &(res, s, e, _) in &rec.resv {
+            per_res[res].push((s, e, i));
+        }
+    }
+    for (res, iv) in per_res.iter_mut().enumerate() {
+        iv.sort_unstable();
+        for w in iv.windows(2) {
+            if w[1].0 < w[0].1 {
+                return Err(format!(
+                    "resource {res}: command {} holds [{}, {}) while command {} holds [{}, {})",
+                    w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
+                ));
+            }
+        }
+    }
+
+    let t_cmd = cfg.timing.t_cmd;
+    let act_slot = cfg.timing.act_slot_cycles();
+    for (i, rec) in records.iter().enumerate() {
+        let data_lo = sched.starts[i] + t_cmd;
+        let data_hi = data_lo + rec.data_span;
+
+        // Host bank residency: slices sit exactly on the annotated banks.
+        if let CmdKind::HostWrite { banks, .. } | CmdKind::HostRead { banks, .. } =
+            &trace.cmds[i].kind
+        {
+            let c = cost(cfg, &trace.cmds[i]);
+            let resident = matches!(c, CmdCost::Host { slice, .. } if slice > 0);
+            let mut sliced = 0u64;
+            let mut touched = 0usize;
+            for &(res, s, e, span) in &rec.resv {
+                if let Some(b) = resources::res_bank(res) {
+                    if !resident {
+                        return Err(format!(
+                            "host command {i} reserved bank {b} with residency off"
+                        ));
+                    }
+                    if !banks.contains(b) || b >= cfg.num_banks {
+                        return Err(format!(
+                            "host command {i} reserved bank {b} outside its destination set"
+                        ));
+                    }
+                    if s < data_lo || e > sched.dones[i] || s + span > data_hi {
+                        return Err(format!(
+                            "host command {i}: bank {b} slice [{s}, {e}) escapes its window [{data_lo}, {})",
+                            sched.dones[i]
+                        ));
+                    }
+                    // Recovery tails are reserved but not streamed.
+                    sliced += span;
+                    touched += 1;
+                }
+            }
+            if resident && touched == 0 {
+                return Err(format!("host command {i} models residency but reserved no banks"));
+            }
+            sched.host_bank_cycles += sliced;
+        }
+
+        // ACT slots: in-window, and enough reserved cycles per group to
+        // cover the command's activations at the legal rate.
+        let mut reserved = [0u64; NUM_ACT_GROUPS];
+        for &(res, s, e, _) in &rec.resv {
+            if let Some(g) = resources::res_act_group(res) {
+                if s < data_lo || e > data_hi {
+                    return Err(format!(
+                        "command {i}: ACT window [{s}, {e}) escapes the data phase [{data_lo}, {data_hi})"
+                    ));
+                }
+                reserved[g] += e - s;
+            }
+        }
+        for g in 0..NUM_ACT_GROUPS {
+            let want = (rec.group_acts[g] * act_slot).min(rec.data_span);
+            if reserved[g] < want {
+                return Err(format!(
+                    "command {i}: group {g} reserved {} ACT-window cycles for {} activations (needs {want})",
+                    reserved[g], rec.group_acts[g]
+                ));
+            }
+            sched.act_window_cycles += reserved[g];
+        }
+    }
     Ok(sched)
 }
 
 /// The scheduler core shared by [`simulate`] and [`audit`] (which pass
-/// in the DAG so it is built exactly once per call).
+/// in the DAG so it is built exactly once per call). With `record` set,
+/// every command's committed reservation intervals are captured for the
+/// audit's independent replay.
 fn run_schedule(
     cfg: &ArchConfig,
     trace: &Trace,
     dag: &deps::Dag,
-) -> (EventReport, ScheduleAudit) {
+    record: bool,
+) -> (EventReport, ScheduleAudit, Vec<resources::IssueRecord>) {
     let n = trace.cmds.len();
     let mut r = SimResult::default();
     // Expand costs and tallies in trace order, so action counts and the
@@ -126,7 +239,11 @@ fn run_schedule(
         costs.push(c);
     }
 
-    let mut tl = resources::Timelines::new(cfg);
+    let mut tl = if record {
+        resources::Timelines::with_recording(cfg)
+    } else {
+        resources::Timelines::new(cfg)
+    };
     let mut ready = vec![0u64; n];
     let mut indeg = dag.indegree().to_vec();
     // Ready heap: earliest-ready command first, trace index as the
@@ -137,8 +254,14 @@ fn run_schedule(
     let mut dones = vec![0u64; n];
     let mut makespan = 0u64;
     let mut issued = 0usize;
+    // The heap issues in readiness order, but the audit wants records in
+    // trace order: remember which command each record belongs to.
+    let mut issue_order = Vec::with_capacity(if record { n } else { 0 });
     while let Some(Reverse((at, i))) = heap.pop() {
         let iss = tl.issue(at, &costs[i]);
+        if record {
+            issue_order.push(i);
+        }
         starts[i] = iss.start;
         dones[i] = iss.done;
         makespan = makespan.max(iss.done);
@@ -154,9 +277,19 @@ fn run_schedule(
     }
     debug_assert_eq!(issued, n, "the dependency DAG must drain completely");
     r.cycles = makespan;
+    let mut records = tl.take_records();
+    if record {
+        // Permute the issue-order records back into trace order.
+        let mut by_trace = vec![resources::IssueRecord::default(); n];
+        for (k, rec) in records.drain(..).enumerate() {
+            by_trace[issue_order[k]] = rec;
+        }
+        records = by_trace;
+    }
     let occupancy = tl.into_occupancy(makespan);
     let backfilled = occupancy.backfilled;
-    (EventReport { result: r, occupancy }, ScheduleAudit { starts, dones, backfilled })
+    let sched = ScheduleAudit { starts, dones, backfilled, ..Default::default() };
+    (EventReport { result: r, occupancy }, sched, records)
 }
 
 #[cfg(test)]
@@ -167,7 +300,7 @@ mod tests {
     use crate::dataflow::{plan, CostModel};
     use crate::sim::dram;
     use crate::trace::gen::generate;
-    use crate::trace::{CmdKind, PerCore};
+    use crate::trace::{BankMask, CmdKind, PerCore};
 
     fn paper_trace(sys: System) -> (ArchConfig, Trace) {
         let g = resnet18_first8();
@@ -292,7 +425,9 @@ mod tests {
         let mut t = Trace::default();
         t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 * 1024 }, &[], None);
         t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], None);
-        t.push_dep(3, CmdKind::HostRead { bytes: 4096 }, &[], None);
+        // Interface-only host read (no bank annotation): its data hides
+        // fully under the bus traffic without touching the banks.
+        t.push_dep(3, CmdKind::HostRead { bytes: 4096, banks: BankMask::EMPTY }, &[], None);
         let ev = simulate(&cfg, &t);
         let a = audit(&cfg, &t).unwrap();
         assert!(a.backfilled > 0, "the host issue slot back-fills");
@@ -317,6 +452,50 @@ mod tests {
             a.starts[2],
             a.starts[1]
         );
+    }
+
+    #[test]
+    fn audit_certifies_host_bank_slices_and_act_slots() {
+        // A resident host write, a dependent near-bank fill, and a host
+        // read back: the audit's independent replay must certify the
+        // bank slices and ACT windows, and report their cycle totals.
+        let cfg = ArchConfig::baseline();
+        let banks = BankMask::all(16);
+        let mut t = Trace::default();
+        t.push_dep(0, CmdKind::HostWrite { bytes: 64 * 1024, banks }, &[], Some(0));
+        t.push_dep(1, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 4096) }, &[0], None);
+        t.push_dep(1, CmdKind::HostRead { bytes: 4096, banks }, &[0], None);
+        let a = audit(&cfg, &t).unwrap();
+        assert!(a.host_bank_cycles > 0, "host slices certified on the banks");
+        assert!(a.act_window_cycles > 0, "ACT slots certified in the windows");
+        // Residency off: same trace, no bank slices, audit still legal.
+        let off = cfg.clone().with_host_residency(false);
+        let a_off = audit(&off, &t).unwrap();
+        assert_eq!(a_off.host_bank_cycles, 0);
+    }
+
+    #[test]
+    fn host_residency_makes_dependent_fill_wait_and_charges_banks() {
+        // With residency on, the host write's completion (and its bank
+        // slices) push the dependent near-bank fill later than the
+        // interface-only model allows; bank occupancy grows by exactly
+        // the certified host slices.
+        let cfg = ArchConfig::baseline();
+        let off = cfg.clone().with_host_residency(false);
+        let banks = BankMask::all(16);
+        let mut t = Trace::default();
+        t.push_dep(0, CmdKind::HostWrite { bytes: 64 * 1024, banks }, &[], Some(0));
+        t.push_dep(1, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 4096) }, &[0], None);
+        let on_ev = simulate(&cfg, &t);
+        let off_ev = simulate(&off, &t);
+        let on_banks: u64 = on_ev.occupancy.bank_busy.iter().sum();
+        let off_banks: u64 = off_ev.occupancy.bank_busy.iter().sum();
+        assert!(on_banks > off_banks, "host residency must charge the banks");
+        let a = audit(&cfg, &t).unwrap();
+        assert_eq!(on_banks - off_banks, a.host_bank_cycles);
+        assert_eq!(on_ev.occupancy.host_bank_total(), a.host_bank_cycles);
+        // Action counts (energy) stay residency-independent.
+        assert_eq!(on_ev.result.actions, off_ev.result.actions);
     }
 
     #[test]
@@ -349,9 +528,14 @@ mod tests {
         assert!(occ.cmdbus_busy > 0, "every command pays an issue slot");
         assert!(occ.core_busy[..occ.num_cores].iter().all(|&b| b > 0));
         assert!(occ.bank_busy[..occ.num_banks].iter().all(|&b| b > 0));
+        assert_eq!(occ.num_groups, 4);
+        assert!(occ.host_bank_total() > 0, "paper traces stream host I/O through banks");
+        assert!(occ.act_busy_total() > 0, "row activations reserve window slots");
         let rendered = occ.render();
         assert!(rendered.contains("pimcore (max)"));
         assert!(rendered.contains("cmd bus"));
         assert!(rendered.contains("back-filled"));
+        assert!(rendered.contains("host/bank (max)"));
+        assert!(rendered.contains("act window (max)"));
     }
 }

@@ -22,20 +22,42 @@
 //! * a sequential cross-bank transfer reserves, besides the bus, a 1/N
 //!   **slice of each bank's timeline** at its staggered offset — the
 //!   bank-at-a-time occupancy that conflicts with near-bank streams;
+//! * host I/O (`HOST_WRITE`/`HOST_READ`) occupies the off-chip interface
+//!   for its whole duration **and** — when the config models host bank
+//!   residency — streams through its destination banks bank-at-a-time:
+//!   a 1/N slice of each annotated bank's timeline at a staggered
+//!   offset, with the write-recovery tail on writes, plus ACT-window
+//!   slots for the rows it touches. Host phases therefore contend with
+//!   PIM traffic for exactly the banks they load;
 //! * commands that write banks extend each bank reservation by the `tWR`
 //!   **write-recovery tail** (reserved, but not tallied as busy work), so
 //!   a read landing on that bank starts at least `tWR` after the write's
 //!   data completes;
 //! * row activations are metered per **bank group** on an activation
 //!   window timeline at [`DramTiming::act_slot_cycles`] per ACT (the
-//!   tFAW/tRRD constraint), capped at the command's own data span so the
-//!   analytic serial sum stays an upper bound on the schedule.
+//!   tFAW/tRRD constraint). [`DramTiming::act_layout`] spreads a
+//!   command's activations across its data span as **per-row interleaved
+//!   slots** (up to [`MAX_ACT_SLOTS`] windows per group), so two
+//!   dense-activation commands can interleave within one window instead
+//!   of queueing behind a front-loaded bulk reservation; a saturated
+//!   group degrades to the bulk window capped at the data span, which
+//!   keeps the analytic serial sum an upper bound on the schedule.
 //!
 //! [`DramTiming::act_slot_cycles`]: crate::config::DramTiming::act_slot_cycles
+//! [`DramTiming::act_layout`]: crate::config::DramTiming::act_layout
+//! [`MAX_ACT_SLOTS`]: crate::config::MAX_ACT_SLOTS
 
-use crate::config::ArchConfig;
+use crate::config::{ArchConfig, DramTiming};
 use crate::sim::engine::CmdCost;
 use crate::trace::{PerCore, MAX_CORES};
+
+/// Banks per tFAW/tRRD activation-window group (the GDDR6 bank-group
+/// granularity the rank-level ACT constraints apply to).
+pub const GROUP_BANKS: usize = 4;
+
+/// Activation-window groups in a full channel (one per [`GROUP_BANKS`]
+/// banks) — the size of [`ResourceOccupancy::act_busy`].
+pub const NUM_ACT_GROUPS: usize = MAX_CORES.div_ceil(GROUP_BANKS);
 
 /// Busy-cycle totals per resource, plus the schedule makespan — the
 /// event engine's per-resource utilization breakdown.
@@ -45,6 +67,8 @@ pub struct ResourceOccupancy {
     pub num_cores: usize,
     /// Banks in the channel (valid prefix of `bank_busy`).
     pub num_banks: usize,
+    /// Activation-window bank groups (valid prefix of `act_busy`).
+    pub num_groups: usize,
     /// Total schedule length in cycles (== the event engine's `cycles`).
     pub makespan: u64,
     /// Busy cycles per PIMcore datapath (streams + broadcast snooping).
@@ -65,6 +89,14 @@ pub struct ResourceOccupancy {
     /// frontier — work the v1 scalar busy-until timelines could never
     /// back-fill. Summed over all resources.
     pub backfilled: u64,
+    /// Host-slice busy cycles per bank: the share of `bank_busy` charged
+    /// by `HOST_WRITE`/`HOST_READ` residency (zero when the config runs
+    /// the interface-only host model).
+    pub host_bank_busy: [u64; MAX_CORES],
+    /// Reserved ACT-window cycles per bank group — tFAW/tRRD throttling
+    /// slots, reserved but not tallied as busy work (so they never enter
+    /// `busiest`).
+    pub act_busy: [u64; NUM_ACT_GROUPS],
 }
 
 impl ResourceOccupancy {
@@ -88,6 +120,28 @@ impl ResourceOccupancy {
         self.makespan.saturating_sub(self.busiest())
     }
 
+    /// Total bank cycles charged to host I/O residency across the channel.
+    pub fn host_bank_total(&self) -> u64 {
+        self.host_bank_busy[..self.num_banks].iter().sum()
+    }
+
+    /// Total reserved ACT-window cycles across all bank groups.
+    pub fn act_busy_total(&self) -> u64 {
+        self.act_busy[..self.num_groups].iter().sum()
+    }
+
+    /// ACT-slot utilization: the share of all groups' window-cycles the
+    /// tFAW/tRRD slots reserve (1.0 ⇒ every group's activation window is
+    /// saturated for the whole schedule).
+    pub fn act_utilization(&self) -> f64 {
+        let denom = self.num_groups as u64 * self.makespan;
+        if denom == 0 {
+            0.0
+        } else {
+            self.act_busy_total() as f64 / denom as f64
+        }
+    }
+
     fn stat(vals: &[u64]) -> (u64, u64) {
         let max = vals.iter().copied().max().unwrap_or(0);
         let mean = if vals.is_empty() { 0 } else { vals.iter().sum::<u64>() / vals.len() as u64 };
@@ -109,6 +163,8 @@ impl ResourceOccupancy {
         let idle = |busy: u64| self.makespan.saturating_sub(busy).to_string();
         let (core_max, core_mean) = Self::stat(&self.core_busy[..self.num_cores]);
         let (bank_max, bank_mean) = Self::stat(&self.bank_busy[..self.num_banks]);
+        let (hostbk_max, hostbk_mean) = Self::stat(&self.host_bank_busy[..self.num_banks]);
+        let (act_max, act_mean) = Self::stat(&self.act_busy[..self.num_groups]);
         let mut t = Table::new(vec!["resource", "busy_cycles", "idle_cycles", "utilization"]);
         let mut line = |name: &str, busy: u64| {
             t.row(vec![name.to_string(), busy.to_string(), idle(busy), share(busy)]);
@@ -121,6 +177,13 @@ impl ResourceOccupancy {
         line("pimcore (mean)", core_mean);
         line("bank (max)", bank_max);
         line("bank (mean)", bank_mean);
+        // Host residency's share of the bank rows above, and the
+        // tFAW/tRRD window occupancy per 4-bank group (reserved
+        // throttling, so "busy" here means "no further ACT may land").
+        line("host/bank (max)", hostbk_max);
+        line("host/bank (mean)", hostbk_mean);
+        line("act window (max)", act_max);
+        line("act window (mean)", act_mean);
         // Aggregate across all resources, so neither an idle count nor a
         // single-resource utilization applies (the sum can exceed the
         // makespan).
@@ -207,11 +270,6 @@ struct ReqItem {
     tally: bool,
 }
 
-/// Banks per tFAW/tRRD activation-window group (the GDDR6 bank-group
-/// granularity the rank-level ACT constraints apply to).
-const GROUP_BANKS: usize = 4;
-const NUM_GROUPS: usize = MAX_CORES.div_ceil(GROUP_BANKS);
-
 // Fixed arena layout: the scalar resources, then the ACT windows, then
 // cores and banks (always MAX_CORES of each; unused ones stay empty).
 const CMDBUS: usize = 0;
@@ -219,9 +277,41 @@ const BUS: usize = 1;
 const GBCORE: usize = 2;
 const HOST: usize = 3;
 const ACT0: usize = 4;
-const CORE0: usize = ACT0 + NUM_GROUPS;
+const CORE0: usize = ACT0 + NUM_ACT_GROUPS;
 const BANK0: usize = CORE0 + MAX_CORES;
-const NUM_RES: usize = BANK0 + MAX_CORES;
+pub(crate) const NUM_RES: usize = BANK0 + MAX_CORES;
+
+/// Which bank a resource-arena index addresses, if any (for the audit's
+/// independent replay of recorded reservations).
+pub(crate) fn res_bank(res: usize) -> Option<usize> {
+    if (BANK0..BANK0 + MAX_CORES).contains(&res) {
+        Some(res - BANK0)
+    } else {
+        None
+    }
+}
+
+/// Which ACT-window group a resource-arena index addresses, if any.
+pub(crate) fn res_act_group(res: usize) -> Option<usize> {
+    if (ACT0..ACT0 + NUM_ACT_GROUPS).contains(&res) {
+        Some(res - ACT0)
+    } else {
+        None
+    }
+}
+
+/// One command's committed reservations, captured when the scheduler
+/// runs in audit mode: per resource the absolute `[start, end)` interval
+/// (recovery tails included) plus the streamed span without the tail,
+/// the command's data span, and the per-group activation counts its
+/// reservation request metered.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct IssueRecord {
+    pub(crate) data_span: u64,
+    pub(crate) group_acts: [u64; NUM_ACT_GROUPS],
+    /// `(resource, start, end_with_tail, streamed_span)` per reservation.
+    pub(crate) resv: Vec<(usize, u64, u64, u64)>,
+}
 
 /// Issue result: the command's issue-slot start and its completion
 /// (issue slot + data span + any write-recovery window).
@@ -239,10 +329,16 @@ pub(crate) struct Timelines {
     banks_per_core: usize,
     t_cmd: u64,
     t_wr: u64,
-    act_slot: u64,
+    timing: DramTiming,
     tl: Vec<Timeline>,
     req: Vec<ReqItem>,
-    group_acts: [u64; NUM_GROUPS],
+    group_acts: [u64; NUM_ACT_GROUPS],
+    /// Host-slice cycles charged per bank (occupancy attribution).
+    host_bank: [u64; MAX_CORES],
+    /// Reserved ACT-window cycles per group (occupancy attribution).
+    act_resv: [u64; NUM_ACT_GROUPS],
+    /// Per-command reservation records, kept only in audit mode.
+    records: Option<Vec<IssueRecord>>,
 }
 
 impl Timelines {
@@ -253,11 +349,29 @@ impl Timelines {
             banks_per_core: cfg.banks_per_pimcore,
             t_cmd: cfg.timing.t_cmd,
             t_wr: cfg.timing.t_wr,
-            act_slot: cfg.timing.act_slot_cycles(),
+            timing: cfg.timing,
             tl: vec![Timeline::default(); NUM_RES],
-            req: Vec::with_capacity(2 + NUM_GROUPS + 2 * MAX_CORES),
-            group_acts: [0; NUM_GROUPS],
+            req: Vec::with_capacity(2 + NUM_ACT_GROUPS + 2 * MAX_CORES),
+            group_acts: [0; NUM_ACT_GROUPS],
+            host_bank: [0; MAX_CORES],
+            act_resv: [0; NUM_ACT_GROUPS],
+            records: None,
         }
+    }
+
+    /// A scheduler that additionally records every command's committed
+    /// reservation intervals — what [`crate::sim::event::audit`] replays
+    /// to certify the schedule independently of `reserve`'s asserts.
+    pub(crate) fn with_recording(cfg: &ArchConfig) -> Self {
+        let mut t = Self::new(cfg);
+        t.records = Some(Vec::new());
+        t
+    }
+
+    /// Take the recorded per-command reservations (empty unless built
+    /// via [`Timelines::with_recording`]).
+    pub(crate) fn take_records(&mut self) -> Vec<IssueRecord> {
+        self.records.take().unwrap_or_default()
     }
 
     /// Bank indices owned by PIMcore `i`, clamped to the channel.
@@ -282,6 +396,16 @@ impl Timelines {
         let start = self.fit(ready);
         for it in &self.req {
             self.tl[it.res].reserve(start + it.off, it.span, it.tail, it.tally);
+        }
+        if let Some(records) = &mut self.records {
+            let mut resv = Vec::with_capacity(self.req.len());
+            for it in &self.req {
+                if it.span + it.tail > 0 {
+                    let end = start + it.off + it.span + it.tail;
+                    resv.push((it.res, start + it.off, end, it.span));
+                }
+            }
+            records.push(IssueRecord { data_span: span, group_acts: self.group_acts, resv });
         }
         Issue { start, done: start + self.t_cmd + span + post }
     }
@@ -312,7 +436,7 @@ impl Timelines {
     /// command's data span and its write-recovery window.
     fn build_request(&mut self, c: &CmdCost) -> (u64, u64) {
         let t_cmd = self.t_cmd;
-        self.group_acts = [0; NUM_GROUPS];
+        self.group_acts = [0; NUM_ACT_GROUPS];
         match c {
             CmdCost::Pimcore { core, bcast, write, acts } => {
                 let post = if *write { self.t_wr } else { 0 };
@@ -338,36 +462,89 @@ impl Timelines {
             CmdCost::CrossBank { total, slice, write, acts } => {
                 let post = if *write { self.t_wr } else { 0 };
                 self.req.push(ReqItem { res: BUS, off: t_cmd, span: *total, tail: 0, tally: true });
-                if *slice > 0 {
-                    // Bank-at-a-time: bank b is occupied for its 1/N
-                    // slice of the interval, at its staggered offset.
-                    for b in 0..self.num_banks {
-                        let off_b = b as u64 * slice;
-                        if off_b >= *total {
-                            break;
-                        }
-                        self.req.push(ReqItem {
-                            res: BANK0 + b,
-                            off: t_cmd + off_b,
-                            span: slice.min(total - off_b),
-                            tail: post,
-                            tally: true,
-                        });
-                    }
-                }
-                let groups = self.num_banks.div_ceil(GROUP_BANKS).max(1).min(NUM_GROUPS);
+                self.slice_items(0..self.num_banks, *total, *slice, post, false);
+                let groups = self.num_banks.div_ceil(GROUP_BANKS).max(1).min(NUM_ACT_GROUPS);
                 let per_group = acts.div_ceil(groups as u64);
                 self.group_acts[..groups].fill(per_group);
                 self.act_items(*total);
                 (*total, post)
             }
-            // Host I/O occupies the off-chip interface only; its bank
-            // residency is not modeled (ROADMAP follow-on).
-            CmdCost::Host(d) => {
-                self.req.push(ReqItem { res: HOST, off: t_cmd, span: *d, tail: 0, tally: true });
-                (*d, 0)
+            CmdCost::Host { total, slice, banks, write, acts } => {
+                let host = ReqItem { res: HOST, off: t_cmd, span: *total, tail: 0, tally: true };
+                self.req.push(host);
+                let post = if *write && *slice > 0 { self.t_wr } else { 0 };
+                // Physically the host stream also moves through its
+                // destination banks — the same bank-at-a-time staggered
+                // slices as the cross-bank path (shared [`slice_items`],
+                // so the two stagger models cannot diverge). Host phases
+                // therefore genuinely contend with PIM traffic for
+                // exactly the banks they load.
+                let groups = self.slice_items(banks.iter(), *total, *slice, post, true);
+                // The rows the host touches activate like any other
+                // stream: meter them through the windows of the groups
+                // its banks span.
+                let ng = groups.iter().filter(|&&g| g).count() as u64;
+                if ng > 0 && *acts > 0 {
+                    let per_group = acts.div_ceil(ng);
+                    for (g, hit) in groups.iter().enumerate() {
+                        if *hit {
+                            self.group_acts[g] += per_group;
+                        }
+                    }
+                }
+                self.act_items(*total);
+                (*total, post)
             }
         }
+    }
+
+    /// Per-bank 1/N slice reservations of a sequential bank-at-a-time
+    /// transfer: the i-th participating bank holds
+    /// `[i*slice, i*slice + min(slice, total - i*slice))` of the data
+    /// interval at its staggered offset, extended by the write-recovery
+    /// `tail`. One shared implementation for the cross-bank and host
+    /// paths, so a change to the stagger model (e.g. the ROADMAP
+    /// slice-pipelining follow-on) applies to both at once. Banks outside
+    /// the channel are skipped; with `attribute_host` set the slice spans
+    /// are additionally tallied into the per-bank host-residency
+    /// breakdown. Returns which ACT groups the sliced banks span.
+    fn slice_items(
+        &mut self,
+        banks: impl Iterator<Item = usize>,
+        total: u64,
+        slice: u64,
+        tail: u64,
+        attribute_host: bool,
+    ) -> [bool; NUM_ACT_GROUPS] {
+        let t_cmd = self.t_cmd;
+        let mut groups = [false; NUM_ACT_GROUPS];
+        if slice == 0 {
+            return groups;
+        }
+        let mut i = 0u64;
+        for b in banks {
+            if b >= self.num_banks {
+                continue;
+            }
+            let off_b = i * slice;
+            if off_b >= total {
+                break;
+            }
+            let span_b = slice.min(total - off_b);
+            if attribute_host {
+                self.host_bank[b] += span_b;
+            }
+            groups[b / GROUP_BANKS] = true;
+            self.req.push(ReqItem {
+                res: BANK0 + b,
+                off: t_cmd + off_b,
+                span: span_b,
+                tail,
+                tally: true,
+            });
+            i += 1;
+        }
+        groups
     }
 
     /// Items for a lockstep all-PIMcores command (`PIMcore_CMP`,
@@ -417,22 +594,30 @@ impl Timelines {
 
     /// Activation-window items from the accumulated per-group ACT
     /// counts: each group sustains at most one ACT per
-    /// `act_slot_cycles()`, modeled as a bulk reservation at the front of
-    /// the data phase. Capped at the command's own data span so a
-    /// command's schedule charge never exceeds its analytic charge
-    /// (with GDDR6 timing the cap never binds: per-row data time always
-    /// exceeds the ACT slot).
+    /// `act_slot_cycles()`. [`DramTiming::act_layout`] spreads the
+    /// command's activations across its data span as per-row interleaved
+    /// slots — up to `MAX_ACT_SLOTS` disjoint windows per group — so an
+    /// independent command's windows can land in the gaps. A saturated
+    /// group degrades to one bulk window capped at the data span, which
+    /// keeps a command's schedule charge bounded by its analytic charge.
     fn act_items(&mut self, span: u64) {
         let t_cmd = self.t_cmd;
-        for g in 0..NUM_GROUPS {
+        for g in 0..NUM_ACT_GROUPS {
             let a = self.group_acts[g];
             if a == 0 {
                 continue;
             }
-            let w = (a * self.act_slot).min(span);
-            if w > 0 {
-                self.req.push(ReqItem { res: ACT0 + g, off: t_cmd, span: w, tail: 0, tally: false });
+            let l = self.timing.act_layout(a, span);
+            for k in 0..l.slots {
+                self.req.push(ReqItem {
+                    res: ACT0 + g,
+                    off: t_cmd + k * l.stride,
+                    span: l.span,
+                    tail: 0,
+                    tally: false,
+                });
             }
+            self.act_resv[g] += l.slots * l.span;
         }
     }
 
@@ -440,6 +625,7 @@ impl Timelines {
         let mut occ = ResourceOccupancy {
             num_cores: self.num_cores,
             num_banks: self.num_banks,
+            num_groups: self.num_banks.div_ceil(GROUP_BANKS).max(1).min(NUM_ACT_GROUPS),
             makespan,
             ..Default::default()
         };
@@ -451,6 +637,8 @@ impl Timelines {
             occ.core_busy[i] = self.tl[CORE0 + i].busy;
             occ.bank_busy[i] = self.tl[BANK0 + i].busy;
         }
+        occ.host_bank_busy = self.host_bank;
+        occ.act_busy = self.act_resv;
         occ.backfilled = self.tl.iter().map(|t| t.backfilled).sum();
         occ
     }
@@ -466,6 +654,29 @@ mod tests {
 
     fn cross(total: u64) -> CmdCost {
         CmdCost::CrossBank { total, slice: total.div_ceil(16), write: false, acts: 0 }
+    }
+
+    /// Interface-only host I/O (no bank residency), as a residency-off
+    /// config would expand it.
+    fn host_io(total: u64) -> CmdCost {
+        CmdCost::Host {
+            total,
+            slice: 0,
+            banks: crate::trace::BankMask::EMPTY,
+            write: false,
+            acts: 0,
+        }
+    }
+
+    /// Resident host I/O across the first `n` banks.
+    fn host_resident(total: u64, n: usize, write: bool, acts: u64) -> CmdCost {
+        CmdCost::Host {
+            total,
+            slice: total.div_ceil(n as u64),
+            banks: crate::trace::BankMask::all(n),
+            write,
+            acts,
+        }
     }
 
     #[test]
@@ -645,14 +856,150 @@ mod tests {
     }
 
     #[test]
+    fn timeline_earliest_fit_edge_cases() {
+        let mut t = Timeline::default();
+        t.reserve(10, 5, 0, true);
+        t.reserve(20, 5, 0, true);
+        // Zero-span requests always fit at the asked-for time, even
+        // inside a reservation.
+        assert_eq!(t.earliest_fit(0, 0), 0);
+        assert_eq!(t.earliest_fit(12, 0), 12);
+        // Gaps exactly the requested span fit flush at both boundaries.
+        assert_eq!(t.earliest_fit(0, 10), 0);
+        assert_eq!(t.earliest_fit(15, 5), 15);
+        assert_eq!(t.earliest_fit(11, 5), 15, "mid-reservation start pushes to the gap");
+        // Reserving exactly a between-gap coalesces all three intervals.
+        t.reserve(15, 5, 0, true);
+        assert_eq!(t.iv, vec![(10, 25)], "adjacent reservations coalesce");
+        assert_eq!(t.earliest_fit(10, 1), 25, "the merged run is solid");
+        // Reserve flush against the run's front (merge-next path).
+        t.reserve(5, 5, 0, true);
+        assert_eq!(t.iv, vec![(5, 25)]);
+        // Fits starting exactly on a gap boundary.
+        t.reserve(30, 5, 0, true);
+        assert_eq!(t.earliest_fit(25, 5), 25);
+        assert_eq!(t.earliest_fit(25, 6), 35, "one cycle too long for the gap");
+    }
+
+    #[test]
+    fn host_slices_stagger_and_conflict_with_near_bank_streams() {
+        let mut t = tl();
+        // A resident host stream across all 16 banks: slice = 10.
+        let h = t.issue(0, &host_resident(160, 16, false, 0));
+        assert_eq!((h.start, h.done), (0, 161));
+        assert_eq!(t.tl[BANK0].iv, vec![(1, 11)], "bank 0 holds the first slice");
+        assert_eq!(t.tl[BANK0 + 15].iv, vec![(151, 161)], "bank 15 the last");
+        assert_eq!(t.tl[HOST].busy, 160);
+        // A near-bank stream on core 0 queues behind bank 0's host slice
+        // — host phases are no longer invisible to bank contention.
+        let mut c0 = PerCore::zero(16);
+        c0.set(0, 5);
+        let b = t.issue(0, &near(c0, false));
+        assert_eq!(b.start + 1, 11, "bank 0 frees after its host slice");
+        let occ = t.into_occupancy(200);
+        assert_eq!(occ.host_bank_busy[0], 10);
+        assert_eq!(occ.host_bank_total(), 160, "slices partition the stream");
+        assert_eq!(occ.bank_busy[0], 15, "host slice + near-bank stream");
+    }
+
+    #[test]
+    fn interface_only_host_leaves_banks_idle() {
+        let mut t = tl();
+        t.issue(0, &host_io(160));
+        assert_eq!(t.tl[HOST].busy, 160);
+        let occ = t.into_occupancy(200);
+        assert_eq!(occ.host_bank_total(), 0);
+        assert!(occ.bank_busy.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn host_write_recovery_blocks_bank_reuse() {
+        let mut t = tl();
+        let w = t.issue(0, &host_resident(160, 16, true, 0));
+        assert_eq!(w.done, 1 + 160 + 24, "completion includes the recovery window");
+        // An independent read of bank 15 too long to back-fill the gap
+        // before the slice starts >= t_wr after the slice's data end
+        // (151 + 10), not right after it.
+        let mut c15 = PerCore::zero(16);
+        c15.set(15, 150);
+        let r = t.issue(0, &near(c15, false));
+        assert_eq!(r.start + 1, 161 + 24);
+        assert_eq!(t.tl[BANK0 + 15].busy, 160, "recovery reserved, not busy");
+    }
+
+    #[test]
+    fn host_acts_meter_the_groups_its_banks_span() {
+        // A resident host stream over banks 0..4 (group 0 only) with two
+        // row activations reserves that group's window; group 1 stays
+        // untouched.
+        let mut t = tl();
+        t.issue(0, &host_resident(160, 4, false, 2));
+        assert!(t.tl[ACT0].iv.len() == 2, "two interleaved ACT slots: {:?}", t.tl[ACT0].iv);
+        assert!(t.tl[ACT0 + 1].iv.is_empty());
+        let occ = t.into_occupancy(200);
+        assert_eq!(occ.act_busy[0], 16, "2 ACTs * 8-cycle slot");
+        assert_eq!(occ.act_busy_total(), 16);
+        assert!(occ.act_utilization() > 0.0);
+    }
+
+    #[test]
+    fn per_row_act_slots_let_dense_commands_interleave() {
+        // Satellite: two dense-activation commands on one 4-bank group
+        // must overlap tighter than the old bulk-window bound
+        // (acts * act_slot reserved at the front), but never tighter than
+        // one act_slot_cycles() per row.
+        let mut t = tl(); // act_slot = 8
+        let span = crate::sim::dram::near_bank_stream_cycles(&ArchConfig::baseline().timing, 4096);
+        assert_eq!(span, 224, "2-row stream: 128 cols + 2 row opens");
+        let dense = |core_idx: usize| {
+            let mut c = PerCore::zero(16);
+            c.set(core_idx, 4096 / 32 + 96); // 224-cycle stream
+            let mut a = PerCore::zero(16);
+            a.set(core_idx, 2);
+            CmdCost::NearBank { core: c, write: false, acts: a }
+        };
+        let first = t.issue(0, &dense(0));
+        assert_eq!(first.start, 0);
+        // The first command's 2 ACT slots sit at the span's ends, not as
+        // a bulk [0, 16) window.
+        assert_eq!(t.tl[ACT0].iv, vec![(1, 9), (217, 225)]);
+        // Banks 0/1 are distinct, so only the ACT window couples the two:
+        // the second command slots in one act_slot later — tighter than
+        // the 16-cycle bulk bound, exactly one slot per row.
+        let second = t.issue(0, &dense(1));
+        assert_eq!(second.start, 8, "one act_slot, not the 16-cycle bulk window");
+        // A third dense command pays one more slot.
+        let third = t.issue(0, &dense(2));
+        assert_eq!(third.start, 16, "two act_slots behind the first");
+    }
+
+    #[test]
+    fn saturated_act_group_still_serializes() {
+        // The act_window_throttles test's extreme-tFAW case relies on the
+        // saturated fallback: acts * slot >= span reserves one bulk
+        // window capped at the span, fully serializing the group.
+        let mut cfg = ArchConfig::baseline();
+        cfg.timing.t_faw = 4000; // act_slot = 1000 >> span
+        let mut t = Timelines::new(&cfg);
+        let mut c0 = PerCore::zero(16);
+        c0.set(0, 112);
+        let mut a0 = PerCore::zero(16);
+        a0.set(0, 4);
+        t.issue(0, &CmdCost::NearBank { core: c0, write: false, acts: a0 });
+        assert_eq!(t.tl[ACT0].iv, vec![(1, 113)], "bulk window capped at the data span");
+    }
+
+    #[test]
     fn backfill_places_short_work_into_gaps() {
         let mut t = tl();
         // Two bus transfers leave the command bus with a gap [1, 160+1).
         t.issue(0, &cross(160));
         t.issue(0, &cross(16));
         // An independent host transfer back-fills its issue slot into
-        // that gap instead of queuing behind the second command's slot.
-        let h = t.issue(0, &CmdCost::Host(40));
+        // that gap instead of queuing behind the second command's slot
+        // (interface-only here: bank slices would conflict with the
+        // cross-bank transfers' own slices).
+        let h = t.issue(0, &host_io(40));
         assert_eq!(h.start, 1);
         let occ = t.into_occupancy(400);
         assert_eq!(occ.backfilled, 1, "the back-filled cmd-bus slot");
@@ -665,6 +1012,7 @@ mod tests {
         let mut occ = ResourceOccupancy {
             num_cores: 2,
             num_banks: 2,
+            num_groups: 1,
             makespan: 100,
             bus_busy: 40,
             gbcore_busy: 10,
@@ -677,8 +1025,14 @@ mod tests {
         occ.core_busy[1] = 20;
         occ.bank_busy[0] = 30;
         occ.bank_busy[1] = 10;
+        occ.host_bank_busy[0] = 6;
+        occ.host_bank_busy[1] = 2;
+        occ.act_busy[0] = 50;
         assert_eq!(occ.busiest(), 60);
         assert_eq!(occ.bottleneck_idle(), 40);
+        assert_eq!(occ.host_bank_total(), 8);
+        assert_eq!(occ.act_busy_total(), 50);
+        assert!((occ.act_utilization() - 0.5).abs() < 1e-12);
         let s = occ.render();
         assert!(s.contains("idle_cycles"), "{s}");
         // bus row: busy 40, idle 60, 40.0%.
@@ -692,12 +1046,19 @@ mod tests {
         assert!(s.contains(" 12 |"), "{s}");
         // pimcore mean = 40, bank mean = 20.
         assert!(s.contains("20.0%"), "{s}");
+        // Host-residency and ACT-window rows: host/bank max 6 (6.0%),
+        // act window max 50 (50.0%).
+        assert!(s.contains("| host/bank (max) "), "{s}");
+        assert!(s.contains("6.0%"), "{s}");
+        assert!(s.contains("| act window (max) "), "{s}");
+        assert!(s.contains("50.0%"), "{s}");
     }
 
     #[test]
     fn zero_makespan_renders_zero_utilization() {
         let occ = ResourceOccupancy::default();
         assert_eq!(occ.busiest(), 0);
+        assert_eq!(occ.act_utilization(), 0.0, "empty schedule is 0, not NaN");
         assert!(occ.render().contains("0.0%"));
     }
 }

@@ -19,7 +19,10 @@
 //!   (the AiM GBUF conflict-avoidance rule, §III-B);
 //! * GBUF broadcasts share the single bus: one column per cycle, serial;
 //! * `GBcore_CMP` streams operands through the GBUF port (16 elem/cycle);
-//! * host I/O crosses the off-chip interface at the external burst rate.
+//! * host I/O crosses the off-chip interface at the external burst rate
+//!   and, with `ArchConfig::host_residency` (the default), also streams
+//!   through its destination banks — so host phases contend with PIM
+//!   traffic for banks and tFAW/tRRD activation windows.
 //!
 //! Two engines turn those per-command costs into total cycles, selected
 //! by [`crate::config::Engine`] on the `ArchConfig` (DESIGN.md §6):

@@ -11,7 +11,7 @@ use crate::cnn::{Graph, NodeId, Op};
 use crate::config::{ArchConfig, ELEM_BYTES};
 use crate::dataflow::tiling::{tile_segment, TileDemand};
 use crate::dataflow::{CostModel, Plan, PlanStep};
-use crate::trace::{CmdKind, ExecFlags, PerCore, Trace};
+use crate::trace::{BankMask, CmdKind, ExecFlags, PerCore, Trace};
 use std::collections::HashMap;
 
 /// Where a feature map currently lives in the channel.
@@ -47,8 +47,11 @@ impl<'a> TraceGen<'a> {
         // PIMcores fetch L0 inputs from banks, each handling a different
         // spatial segment") — halo replication is still charged when the
         // fused kernel fetches it.
+        // Either way the input is partitioned across every bank in the
+        // channel, so the host stream physically touches them all.
         let input_bytes = self.g.nodes[0].shape.bytes() as u64;
-        self.trace.push_dep(0, CmdKind::HostWrite { bytes: input_bytes }, &[], Some(0));
+        let banks = BankMask::all(self.cfg.num_banks.min(crate::trace::MAX_CORES));
+        self.trace.push_dep(0, CmdKind::HostWrite { bytes: input_bytes, banks }, &[], Some(0));
         let first_layout = match plan.steps.first() {
             Some(PlanStep::Fused { grid, .. }) => Layout::Spatial { ty: grid.0, tx: grid.1 },
             _ => Layout::CoutBanked,
@@ -62,11 +65,12 @@ impl<'a> TraceGen<'a> {
             }
         }
 
-        // Host reads the final output.
+        // Host reads the final output from wherever its layout placed it
+        // (both layouts stripe the map across all banks).
         let out = self.g.nodes.last().unwrap();
         self.trace.push_dep(
             out.id,
-            CmdKind::HostRead { bytes: out.shape.bytes() as u64 },
+            CmdKind::HostRead { bytes: out.shape.bytes() as u64, banks },
             &[out.id],
             None,
         );
@@ -438,10 +442,16 @@ mod tests {
             let s = t.stats();
             assert!(s.num_cmds > 50, "{sys:?} trace too small");
             assert!(s.total_macs > 1_500_000_000, "{sys:?} lost MACs");
-            // Host writes input and reads output exactly once.
+            // Host writes input and reads output exactly once, and both
+            // carry the full channel as their destination-bank set.
             let hw = t.cmds.iter().filter(|c| matches!(c.kind, CmdKind::HostWrite { .. })).count();
             let hr = t.cmds.iter().filter(|c| matches!(c.kind, CmdKind::HostRead { .. })).count();
             assert_eq!((hw, hr), (1, 1));
+            for c in &t.cmds {
+                if let CmdKind::HostWrite { banks, .. } | CmdKind::HostRead { banks, .. } = c.kind {
+                    assert_eq!(banks.count(), 16, "{sys:?}: host I/O spans every bank");
+                }
+            }
         }
     }
 

@@ -83,6 +83,48 @@ impl PerCore {
     }
 }
 
+/// The set of banks a host I/O command physically streams through, as a
+/// bitmask over the channel's (≤ [`MAX_CORES`]) banks. The trace
+/// generator annotates `HOST_WRITE`/`HOST_READ` with their destination
+/// banks so the engines can charge bank residency — the network input is
+/// written partitioned across all banks, and the output is read back
+/// from wherever the final layer's layout placed it (DESIGN.md §6.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BankMask(u16);
+
+impl BankMask {
+    /// No banks — host traffic with no modeled residency.
+    pub const EMPTY: BankMask = BankMask(0);
+
+    /// The first `n` banks of the channel.
+    pub fn all(n: usize) -> Self {
+        assert!(n <= MAX_CORES);
+        if n == 0 {
+            BankMask(0)
+        } else {
+            BankMask(u16::MAX >> (MAX_CORES - n))
+        }
+    }
+
+    pub fn contains(&self, b: usize) -> bool {
+        b < MAX_CORES && self.0 & (1 << b) != 0
+    }
+
+    /// Number of banks in the set.
+    pub fn count(&self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+
+    /// Bank indices in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..MAX_CORES).filter(|&b| self.contains(b))
+    }
+}
+
 /// Execution flags of the compute commands (Table I note).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ExecFlags {
@@ -134,10 +176,11 @@ pub enum CmdKind {
     Bk2Gbuf { bytes: u64 },
     /// `PIM_GBUF2BK` — sequential GBUF→bank scatter (cross-bank write).
     Gbuf2Bk { bytes: u64 },
-    /// Host writes network input into banks over the channel interface.
-    HostWrite { bytes: u64 },
-    /// Host reads network output.
-    HostRead { bytes: u64 },
+    /// Host writes network input into banks over the channel interface,
+    /// streaming through the destination `banks` bank-at-a-time.
+    HostWrite { bytes: u64, banks: BankMask },
+    /// Host reads network output from the `banks` holding it.
+    HostRead { bytes: u64, banks: BankMask },
 }
 
 /// Upper bound on feature maps one command reads (`ADD_RELU`'s operand
@@ -288,7 +331,7 @@ impl Trace {
                 CmdKind::Lbuf2Bk { bytes } => s.lbuf_spill += bytes.sum(),
                 CmdKind::Bk2Gbuf { bytes } => s.cross_bank_read += bytes,
                 CmdKind::Gbuf2Bk { bytes } => s.cross_bank_write += bytes,
-                CmdKind::HostWrite { bytes } | CmdKind::HostRead { bytes } => {
+                CmdKind::HostWrite { bytes, .. } | CmdKind::HostRead { bytes, .. } => {
                     s.host_bytes += bytes
                 }
             }
@@ -322,8 +365,12 @@ impl Trace {
                 }
                 CmdKind::Bk2Gbuf { bytes } => format!("PIM_BK2GBUF  {bytes}B (sequential)"),
                 CmdKind::Gbuf2Bk { bytes } => format!("PIM_GBUF2BK  {bytes}B (sequential)"),
-                CmdKind::HostWrite { bytes } => format!("HOST_WRITE   {bytes}B"),
-                CmdKind::HostRead { bytes } => format!("HOST_READ    {bytes}B"),
+                CmdKind::HostWrite { bytes, banks } => {
+                    format!("HOST_WRITE   {bytes}B -> {} banks", banks.count())
+                }
+                CmdKind::HostRead { bytes, banks } => {
+                    format!("HOST_READ    {bytes}B <- {} banks", banks.count())
+                }
             };
             out += &format!("{i:>5}  node {:>3}  {desc}\n", c.node);
         }
@@ -413,10 +460,30 @@ mod tests {
     #[test]
     fn dump_is_line_per_cmd() {
         let mut t = Trace::default();
-        t.push(0, CmdKind::HostWrite { bytes: 42 });
+        t.push(0, CmdKind::HostWrite { bytes: 42, banks: BankMask::all(16) });
         t.push(1, CmdKind::Bk2Gbuf { bytes: 7 });
         let d = t.dump(10);
         assert_eq!(d.lines().count(), 2);
         assert!(d.contains("PIM_BK2GBUF"));
+        assert!(d.contains("-> 16 banks"), "host dump names its destination banks: {d}");
+    }
+
+    #[test]
+    fn bank_mask_set_operations() {
+        assert!(BankMask::EMPTY.is_empty());
+        assert_eq!(BankMask::all(0), BankMask::EMPTY);
+        let all = BankMask::all(16);
+        assert_eq!(all.count(), 16);
+        assert_eq!(all.iter().count(), 16);
+        let four = BankMask::all(4);
+        assert_eq!(four.iter().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(four.contains(3) && !four.contains(4));
+        assert!(!all.contains(16), "out-of-range queries are just absent");
+    }
+
+    #[test]
+    #[should_panic]
+    fn bank_mask_bounds_checked() {
+        BankMask::all(17);
     }
 }

@@ -122,6 +122,7 @@ fn golden_results() -> SweepResults {
     let mut occ = ResourceOccupancy {
         num_cores: 4,
         num_banks: 16,
+        num_groups: 4,
         makespan: 90,
         bus_busy: 40,
         gbcore_busy: 10,
@@ -135,7 +136,9 @@ fn golden_results() -> SweepResults {
     }
     for b in 0..16 {
         occ.bank_busy[b] = b as u64;
+        occ.host_bank_busy[b] = (b % 4) as u64;
     }
+    occ.act_busy = [12, 9, 6, 3];
     let ev_report = PpaReport {
         label: ev_cfg.label(),
         workload: Workload::Fig1.name().to_string(),
@@ -201,7 +204,7 @@ fn json_golden_output() {
       "energy_pj": 1.5,
       "area_mm2": 0.25,
       "norm": {"cycles": 0.45, "energy": 0.75, "area": 1},
-      "utilization": {"makespan": 90, "bus": 40, "cmdbus": 3, "gbcore": 10, "host": 5, "backfilled": 7, "cores": [80, 79, 78, 77], "banks": [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]},
+      "utilization": {"makespan": 90, "bus": 40, "cmdbus": 3, "gbcore": 10, "host": 5, "backfilled": 7, "cores": [80, 79, 78, 77], "banks": [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15], "host_banks": [0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3], "act_windows": [12, 9, 6, 3]},
       "error": null
     },
     {
@@ -226,10 +229,10 @@ fn json_golden_output() {
 
 #[test]
 fn csv_golden_output() {
-    let want = "config,system,gbuf_bytes,lbuf_bytes,workload,engine,cycles,energy_pj,area_mm2,norm_cycles,norm_energy,norm_area,error\n\
-                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,analytic,100,1.5,0.25,0.5,0.75,1,\n\
-                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,event,90,1.5,0.25,0.45,0.75,1,\n\
-                AiM-like/G2K_L0,AiM-like,2048,0,Fig1_Example,analytic,,,,,,,\"boom \"\"quoted\"\"\"\n";
+    let want = "config,system,gbuf_bytes,lbuf_bytes,workload,engine,cycles,energy_pj,area_mm2,norm_cycles,norm_energy,norm_area,host_bank_busy,act_window_busy,error\n\
+                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,analytic,100,1.5,0.25,0.5,0.75,1,,,\n\
+                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,event,90,1.5,0.25,0.45,0.75,1,24,30,\n\
+                AiM-like/G2K_L0,AiM-like,2048,0,Fig1_Example,analytic,,,,,,,,,\"boom \"\"quoted\"\"\"\n";
     assert_eq!(golden_results().to_csv(), want);
 }
 
@@ -239,6 +242,7 @@ fn real_sweep_serializes_consistently() {
     let results = SweepGrid::new()
         .systems([System::Fused4, System::Fused16])
         .gbuf_bytes([2048, 8192])
+        .engines(Engine::ALL)
         .workload(Workload::Fig1)
         .run(&session)
         .unwrap();
@@ -248,6 +252,9 @@ fn real_sweep_serializes_consistently() {
     assert_eq!(json.matches("\"config\":").count(), results.len());
     assert_eq!(json.matches("\"error\": null").count(), results.len());
     assert_eq!(json.matches('{').count(), json.matches('}').count());
+    // Event rows carry the host-residency and ACT-window breakdowns.
+    assert_eq!(json.matches("\"host_banks\": [").count(), results.len() / 2);
+    assert_eq!(json.matches("\"act_windows\": [").count(), results.len() / 2);
 
     let csv = results.to_csv();
     let lines: Vec<&str> = csv.trim_end().lines().collect();
