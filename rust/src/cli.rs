@@ -30,6 +30,7 @@ commands:
   simulate   one PPA point          --config <sys:GmK_Ln> --workload <w>
                                     [--engine analytic|event] [--json]
                                     [--host-residency on|off]
+                                    [--slice-pipelining on|off]
   sweep      buffer design sweep    --systems aim,fused16,fused4 --gbuf 2K,32K
                                     --lbuf 0,256 --workload <w>
                                     [--engine analytic|event] [--json]
@@ -43,6 +44,8 @@ workloads: full | first8 | fig1 | fig3 | small
 systems:   aim | fused16 | fused4        bufcfg: e.g. fused4:G32K_L256
 engines:   analytic (serial sum) | event (overlap-aware, reports utilization)
 host-residency: model host I/O's bank occupancy (default on; off = interface-only)
+slice-pipelining: let per-bank transfer slices slide around busy banks (default on;
+                  off = rigid i/N stagger)
 ";
 
 /// Options that are flags (no value); everything else takes `--key value`.
@@ -104,6 +107,14 @@ impl Args {
         }
     }
 
+    fn slice_pipelining(&self) -> Result<bool> {
+        match self.opts.get("slice-pipelining").map(String::as_str) {
+            None | Some("on") => Ok(true),
+            Some("off") => Ok(false),
+            Some(other) => bail!("--slice-pipelining must be on|off, got {other:?}\n{USAGE}"),
+        }
+    }
+
     fn flag(&self, name: &str) -> bool {
         self.opts.get(name).map(String::as_str) == Some("true")
     }
@@ -125,11 +136,19 @@ pub fn run(args: &Args) -> Result<String> {
     let session = Session::with_model(model);
     match args.cmd.as_str() {
         "simulate" => {
-            args.check_opts(&["config", "workload", "engine", "json", "host-residency"])?;
+            args.check_opts(&[
+                "config",
+                "workload",
+                "engine",
+                "json",
+                "host-residency",
+                "slice-pipelining",
+            ])?;
             let cfg = args
                 .config()?
                 .with_engine(args.engine()?)
-                .with_host_residency(args.host_residency()?);
+                .with_host_residency(args.host_residency()?)
+                .with_slice_pipelining(args.slice_pipelining()?);
             let w = args.workload()?;
             let results = SweepGrid::from_points(vec![SweepPoint { cfg, workload: w }])
                 .run(&session)?;
@@ -168,6 +187,10 @@ pub fn run(args: &Args) -> Result<String> {
                         crate::util::table::pct(a),
                     ));
                 }
+                out.push_str(&format!(
+                    "slice pipelining: {} slice-cycles slid off the rigid stagger\n",
+                    occ.slid_slices,
+                ));
             }
             Ok(out)
         }
@@ -390,11 +413,14 @@ mod tests {
         assert!(out.contains("act window (max)"));
         assert!(out.contains("host bank residency:"));
         assert!(out.contains("act-slot utilization:"));
+        assert!(out.contains("slice pipelining:"));
+        assert!(out.contains("slid slices"));
         // The analytic default prints no occupancy table.
         let b = parse_args(&argv("simulate --config fused4:G32K_L256 --workload fig1")).unwrap();
         let out = run(&b).unwrap();
         assert!(out.contains("(analytic engine)"));
         assert!(!out.contains("per-resource occupancy"));
+        assert!(!out.contains("slice pipelining:"));
     }
 
     #[test]
@@ -427,6 +453,27 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("unknown option --host-residency"), "{e}");
+    }
+
+    #[test]
+    fn simulate_slice_pipelining_flag() {
+        // --slice-pipelining off pins slices at the rigid stagger: the
+        // JSON utilization reports zero slid cycles.
+        let base = "simulate --config aim:G2K_L0 --workload fig1 --engine event --json";
+        let off_spec = format!("{base} --slice-pipelining off");
+        let off = run(&parse_args(&argv(&off_spec)).unwrap()).unwrap();
+        assert!(off.contains("\"slid\": 0"), "rigid stagger never slides: {off}");
+        // The default (on) still serializes the field.
+        let on = run(&parse_args(&argv(base)).unwrap()).unwrap();
+        assert!(on.contains("\"slid\": "), "{on}");
+        // Bad values fail with usage; other subcommands reject the flag.
+        let bad = parse_args(&argv("simulate --workload fig1 --slice-pipelining maybe")).unwrap();
+        let e = run(&bad).unwrap_err().to_string();
+        assert!(e.contains("--slice-pipelining must be on|off"), "{e}");
+        let e = run(&parse_args(&argv("sweep --slice-pipelining off")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown option --slice-pipelining"), "{e}");
     }
 
     #[test]

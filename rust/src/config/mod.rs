@@ -38,10 +38,12 @@ pub enum Dataflow {
 }
 
 impl Dataflow {
+    /// Whether this dataflow fuses shallow layers into spatial kernels.
     pub fn is_fused(&self) -> bool {
         matches!(self, Dataflow::PimFused { .. })
     }
 
+    /// The spatial tile grid (`1×1` for layer-by-layer).
     pub fn tile_grid(&self) -> (usize, usize) {
         match self {
             Dataflow::LayerByLayer => (1, 1),
@@ -75,6 +77,7 @@ const ENGINE_TABLE: &[(Engine, &str, &[&str])] = &[
 ];
 
 impl Engine {
+    /// Every engine, in `ENGINE_TABLE` order.
     pub const ALL: [Engine; 2] = [Engine::Analytic, Engine::Event];
 
     fn row(&self) -> &'static (Engine, &'static str, &'static [&'static str]) {
@@ -124,6 +127,7 @@ const SYSTEM_TABLE: &[(System, &str, &[&str])] = &[
 ];
 
 impl System {
+    /// Every named system, in the paper's order.
     pub const ALL: [System; 3] = [System::AimLike, System::Fused16, System::Fused4];
 
     fn row(&self) -> &'static (System, &'static str, &'static [&'static str]) {
@@ -186,6 +190,15 @@ pub struct ArchConfig {
     /// addition to occupying the off-chip interface. On by default —
     /// `false` reproduces the interface-only model (DESIGN.md §6.2).
     pub host_residency: bool,
+    /// Let a sequential transfer's per-bank slices *slide* inside its
+    /// bus/interface interval: the event scheduler places each bank's
+    /// slice at that bank's earliest fit at-or-after its nominal stagger
+    /// offset (modeling a controller that serves busy banks later in the
+    /// burst order); when no sliding placement fits the window, the
+    /// whole transfer slides forward minimally, degenerating to the
+    /// rigid `i/N` stagger in the worst case. On by default — `false`
+    /// pins every slice at its fixed offset (DESIGN.md §6.2).
+    pub slice_pipelining: bool,
 }
 
 impl ArchConfig {
@@ -210,6 +223,7 @@ impl ArchConfig {
             timing: DramTiming::gddr6(),
             engine: Engine::Analytic,
             host_residency: true,
+            slice_pipelining: true,
         }
     }
 
@@ -223,6 +237,14 @@ impl ArchConfig {
     /// `with_host_residency(false)` restores the interface-only host model.
     pub fn with_host_residency(mut self, on: bool) -> Self {
         self.host_residency = on;
+        self
+    }
+
+    /// Builder-style slice-pipelining selection (see the field docs);
+    /// `with_slice_pipelining(false)` pins every per-bank slice at its
+    /// rigid stagger offset for A/B comparison.
+    pub fn with_slice_pipelining(mut self, on: bool) -> Self {
+        self.slice_pipelining = on;
         self
     }
 
@@ -370,6 +392,16 @@ mod tests {
         }
         let c = ArchConfig::baseline().with_host_residency(false);
         assert!(!c.host_residency);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn slice_pipelining_defaults_on() {
+        for sys in System::ALL {
+            assert!(ArchConfig::system(sys, 2048, 0).slice_pipelining);
+        }
+        let c = ArchConfig::baseline().with_slice_pipelining(false);
+        assert!(!c.slice_pipelining);
         c.validate().unwrap();
     }
 

@@ -51,6 +51,7 @@ impl DramTiming {
         }
     }
 
+    /// Sanity-check the timing constants' internal consistency.
     pub fn validate(&self) -> Result<(), String> {
         if self.t_ccd == 0 || self.t_rcd == 0 || self.t_rp == 0 {
             return Err("core DRAM timings must be non-zero".into());
@@ -140,8 +141,11 @@ pub const MAX_ACT_SLOTS: u64 = 8;
 /// are disjoint) and the last window ends within the data span.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ActLayout {
+    /// Number of disjoint ACT windows to reserve.
     pub slots: u64,
+    /// Cycles each window spans.
     pub span: u64,
+    /// Cycles between consecutive window starts (0 for a single slot).
     pub stride: u64,
 }
 

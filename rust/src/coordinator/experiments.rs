@@ -24,11 +24,17 @@ use anyhow::Result;
 /// the same engine* (so the ratios compare like with like).
 #[derive(Debug, Clone)]
 pub struct FigRow {
+    /// The named system of this bar.
     pub system: System,
+    /// GBUF size in bytes.
     pub gbuf: usize,
+    /// LBUF size in bytes.
     pub lbuf: usize,
+    /// The workload this point ran.
     pub workload: Workload,
+    /// The simulation engine that produced the cycles.
     pub engine: Engine,
+    /// PPA ratios vs the matching baseline run.
     pub norm: Normalized,
 }
 
@@ -164,11 +170,13 @@ pub fn render(rows: &[FigRow]) -> String {
 /// tiles (paper: +18.2% replication, +17.3% redundant computation, 91.2%
 /// performance improvement), plus the measured cycle gain.
 pub struct TakeawayStats {
+    /// The fusion's data replication and redundant-MAC factors.
     pub fusion: FusionCost,
     /// Fused4 first8 cycles / AiM-like first8 cycles (well-buffered).
     pub perf_improvement: f64,
 }
 
+/// Compute [`TakeawayStats`] (the §V-D fusion-cost statistics).
 pub fn vd_stats(model: CostModel) -> Result<TakeawayStats> {
     let session = Session::with_model(model);
     let g = session.graph(Workload::ResNet18First8)?;

@@ -1,7 +1,7 @@
 //! [`SweepGrid`]: the typed cartesian sweep builder of Experiment API v2,
 //! and [`SweepResults`], the normalized result collection it produces.
 //!
-//! ```no_run
+//! ```
 //! use pimfused::config::System;
 //! use pimfused::coordinator::{Session, SweepGrid};
 //! use pimfused::workload::Workload;
@@ -11,11 +11,15 @@
 //!     .systems(System::ALL)
 //!     .gbuf_bytes([2 * 1024, 32 * 1024])
 //!     .lbuf_bytes([0, 256])
-//!     .workloads(Workload::PAPER)
+//!     .workload(Workload::Fig1)
 //!     .run(&session)
 //!     .unwrap();
+//! assert_eq!(results.len(), 3 * 2 * 2);
 //! println!("{}", results.table());
 //! ```
+//!
+//! (A runnable doctest — `Fig1_Example` keeps it fast; swap in
+//! `.workloads(Workload::PAPER)` for the paper's grids.)
 //!
 //! Point order is deterministic and documented: workload-major, then
 //! system, then buffer config (GBUF-major). Results keep that order, so
@@ -32,7 +36,9 @@ use anyhow::{bail, Result};
 /// One point of a parameter sweep.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
+    /// The architecture configuration to evaluate.
     pub cfg: ArchConfig,
+    /// The workload to run it on.
     pub workload: Workload,
 }
 
@@ -92,6 +98,7 @@ pub struct SweepGrid {
 }
 
 impl SweepGrid {
+    /// An empty grid; unset axes fill in defaults (see the type docs).
     pub fn new() -> Self {
         Self::default()
     }
@@ -103,16 +110,19 @@ impl SweepGrid {
         Self { explicit_points: points, ..Self::default() }
     }
 
+    /// Systems to sweep (default: all three named systems).
     pub fn systems(mut self, systems: impl IntoIterator<Item = System>) -> Self {
         self.systems = systems.into_iter().collect();
         self
     }
 
+    /// GBUF sizes to sweep, in bytes (default: the 2 KB baseline).
     pub fn gbuf_bytes(mut self, gbufs: impl IntoIterator<Item = usize>) -> Self {
         self.gbufs = gbufs.into_iter().collect();
         self
     }
 
+    /// LBUF sizes to sweep, in bytes (default: no LBUF).
     pub fn lbuf_bytes(mut self, lbufs: impl IntoIterator<Item = usize>) -> Self {
         self.lbufs = lbufs.into_iter().collect();
         self
@@ -124,6 +134,7 @@ impl SweepGrid {
         self
     }
 
+    /// Workloads to sweep (default: `ResNet18_Full`).
     pub fn workloads(mut self, workloads: impl IntoIterator<Item = Workload>) -> Self {
         self.workloads = workloads.into_iter().collect();
         self
@@ -214,9 +225,9 @@ impl SweepGrid {
         pts
     }
 
-    /// Evaluate every point through the session (parallel above
-    /// [`PARALLEL_THRESHOLD`] points) and normalize per-workload against
-    /// the session baseline. `Err` only for baseline failures; per-point
+    /// Evaluate every point through the session (parallel above the
+    /// internal `PARALLEL_THRESHOLD`, 64 points) and normalize
+    /// per-workload against the session baseline. `Err` only for baseline failures; per-point
     /// failures are recorded in their [`SweepRow`].
     pub fn run(&self, session: &Session) -> Result<SweepResults> {
         self.run_with_progress(session, |_| {})
@@ -230,15 +241,15 @@ impl SweepGrid {
         F: Fn(SweepProgress<'_>) + Send + Sync,
     {
         let points = self.points();
-        // Warm each distinct (workload, engine) baseline (and thereby the
+        // Warm each distinct baseline axis combination (and thereby the
         // workload's graph) and each distinct (workload, dataflow) plan
         // serially, so every parallel worker and every normalization hits
         // the session cache: exactly one baseline run per key, and no
         // worker ever builds while holding a cache mutex.
-        let mut warmed: Vec<(Workload, Engine, bool)> = Vec::new();
+        let mut warmed: Vec<(Workload, Engine, bool, bool)> = Vec::new();
         let mut warmed_plans: Vec<(Workload, Dataflow)> = Vec::new();
         for p in &points {
-            let bkey = (p.workload, p.cfg.engine, p.cfg.host_residency);
+            let bkey = (p.workload, p.cfg.engine, p.cfg.host_residency, p.cfg.slice_pipelining);
             if !warmed.contains(&bkey) {
                 session.baseline_matched(p.workload, &p.cfg)?;
                 warmed.push(bkey);
@@ -276,8 +287,11 @@ impl SweepGrid {
 /// its normalization against the session baseline for its workload.
 #[derive(Debug)]
 pub struct SweepRow {
+    /// The input point this row evaluated.
     pub point: SweepPoint,
+    /// The evaluation's report, or the error that failed it.
     pub report: Result<PpaReport>,
+    /// Normalization against the session baseline (`None` on failure).
     pub norm: Option<Normalized>,
 }
 
@@ -294,14 +308,17 @@ pub struct SweepResults {
 }
 
 impl SweepResults {
+    /// Number of evaluated points.
     pub fn len(&self) -> usize {
         self.rows.len()
     }
 
+    /// Whether the sweep had no points at all.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Iterate the rows in point order.
     pub fn iter(&self) -> std::slice::Iter<'_, SweepRow> {
         self.rows.iter()
     }

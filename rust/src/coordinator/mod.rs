@@ -25,12 +25,38 @@
 //! The paper's figures live in [`experiments`], one function per figure,
 //! all driven through a session. The v1 free functions (`run_ppa`,
 //! `run_ppa_with`, `sweep`) were deprecated shims for one release (PR 1)
-//! and are now gone; see CHANGES.md for the old → new migration table.
+//! and are now gone; the doctest below is the runnable migration guide
+//! (`cargo test` keeps it compiling and passing):
+//!
+//! ```
+//! use pimfused::config::{ArchConfig, System};
+//! use pimfused::coordinator::{Session, SweepGrid};
+//! use pimfused::workload::Workload;
+//!
+//! // v1: `run_ppa(&cfg, w)`            → v2: a session experiment.
+//! let session = Session::new();
+//! let cfg = ArchConfig::system(System::Fused4, 8 * 1024, 128);
+//! let report = session.experiment(cfg.clone()).workload(Workload::Fig1).run().unwrap();
+//! assert!(report.cycles > 0);
+//!
+//! // v1: manual baseline + `normalize` → v2: the session-cached baseline.
+//! let norm = session.normalized(&cfg, Workload::Fig1).unwrap();
+//! assert!(norm.cycles > 0.0);
+//!
+//! // v1: hand-rolled point loops       → v2: a typed cartesian grid.
+//! let results = SweepGrid::new()
+//!     .systems([System::AimLike, System::Fused4])
+//!     .gbuf_bytes([2 * 1024, 32 * 1024])
+//!     .workload(Workload::Fig1)
+//!     .run(&session)
+//!     .unwrap();
+//! assert_eq!(results.len(), 4);
+//! ```
 //!
 //! Every experiment carries an [`crate::config::Engine`] selection on its
-//! `ArchConfig`: sessions cache baseline reports per `(workload, engine)`
-//! so normalization always compares like with like, and [`SweepGrid`] can
-//! sweep the engine as an axis.
+//! `ArchConfig`: sessions cache baseline reports per `(workload, engine,
+//! host_residency, slice_pipelining)` so normalization always compares
+//! like with like, and [`SweepGrid`] can sweep the engine as an axis.
 
 mod grid;
 mod serialize;

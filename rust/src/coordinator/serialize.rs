@@ -85,7 +85,7 @@ impl SweepResults {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "config,system,gbuf_bytes,lbuf_bytes,workload,engine,cycles,energy_pj,area_mm2,\
-             norm_cycles,norm_energy,norm_area,host_bank_busy,act_window_busy,error\n",
+             norm_cycles,norm_energy,norm_area,host_bank_busy,act_window_busy,slid_slices,error\n",
         );
         for row in &self.rows {
             let cfg = &row.point.cfg;
@@ -104,9 +104,10 @@ impl SweepResults {
                     let occ = r.occupancy;
                     let host_bk = occ.map(|o| o.host_bank_total().to_string()).unwrap_or_default();
                     let act_bk = occ.map(|o| o.act_busy_total().to_string()).unwrap_or_default();
+                    let slid = occ.map(|o| o.slid_slices.to_string()).unwrap_or_default();
                     let _ = writeln!(
                         out,
-                        "{},{},{},{},{},{},{},{},",
+                        "{},{},{},{},{},{},{},{},{},",
                         r.cycles,
                         r.energy_pj,
                         r.area_mm2,
@@ -114,12 +115,13 @@ impl SweepResults {
                         n.energy,
                         n.area,
                         host_bk,
-                        act_bk
+                        act_bk,
+                        slid
                     );
                 }
                 _ => {
                     let err = row.report.as_ref().err().map(|e| e.to_string()).unwrap_or_default();
-                    let _ = writeln!(out, ",,,,,,,,{}", csv_escape(&err));
+                    let _ = writeln!(out, ",,,,,,,,,{}", csv_escape(&err));
                 }
             }
         }
@@ -130,21 +132,24 @@ impl SweepResults {
 /// The per-resource utilization object for event-engine rows: busy cycles
 /// per resource plus the schedule makespan (consumers derive fractions),
 /// the contended command-bus occupancy, the total back-filled cycles the
-/// scheduler placed into timeline gaps, the host-residency share of every
-/// bank (`host_banks`, zero when residency is disabled), and the reserved
-/// tFAW/tRRD window cycles per bank group (`act_windows`).
+/// scheduler placed into timeline gaps, the slice cycles placed off
+/// their rigid stagger offsets (`slid`, zero when slice pipelining is
+/// disabled), the host-residency share of every bank (`host_banks`,
+/// zero when residency is disabled), and the reserved tFAW/tRRD window
+/// cycles per bank group (`act_windows`).
 fn json_utilization(occ: &crate::sim::ResourceOccupancy) -> String {
     let list = |vals: &[u64]| {
         vals.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
     };
     format!(
-        "{{\"makespan\": {}, \"bus\": {}, \"cmdbus\": {}, \"gbcore\": {}, \"host\": {}, \"backfilled\": {}, \"cores\": [{}], \"banks\": [{}], \"host_banks\": [{}], \"act_windows\": [{}]}}",
+        "{{\"makespan\": {}, \"bus\": {}, \"cmdbus\": {}, \"gbcore\": {}, \"host\": {}, \"backfilled\": {}, \"slid\": {}, \"cores\": [{}], \"banks\": [{}], \"host_banks\": [{}], \"act_windows\": [{}]}}",
         occ.makespan,
         occ.bus_busy,
         occ.cmdbus_busy,
         occ.gbcore_busy,
         occ.host_busy,
         occ.backfilled,
+        occ.slid_slices,
         list(&occ.core_busy[..occ.num_cores]),
         list(&occ.bank_busy[..occ.num_banks]),
         list(&occ.host_bank_busy[..occ.num_banks]),

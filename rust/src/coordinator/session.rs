@@ -8,7 +8,7 @@
 //! which is what makes large design-space sweeps cheap (ROADMAP: scale,
 //! speed, new workloads).
 //!
-//! ```no_run
+//! ```
 //! use pimfused::config::{ArchConfig, System};
 //! use pimfused::coordinator::Session;
 //! use pimfused::workload::Workload;
@@ -16,14 +16,18 @@
 //! let session = Session::new();
 //! let report = session
 //!     .experiment(ArchConfig::system(System::Fused4, 32 * 1024, 256))
-//!     .workload(Workload::ResNet18Full)
+//!     .workload(Workload::Fig1)
 //!     .run()
 //!     .unwrap();
+//! assert!(report.cycles > 0);
 //! println!("{}: {} cycles", report.label, report.cycles);
 //! ```
 //!
 //! All caches are interior-mutable behind mutexes, so a `&Session` can be
 //! shared across the sweep executor's worker threads.
+//!
+//! The example above is a runnable doctest (`cargo test` keeps it
+//! compiling and passing); `Fig1_Example` keeps it fast.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -40,7 +44,7 @@ use anyhow::{Context, Result};
 
 /// Shared, memoized state for a family of PPA evaluations.
 ///
-/// See the [module docs](self) for the overall shape. Construction is
+/// See the module-level docs for the overall shape. Construction is
 /// cheap; nothing is evaluated until the first [`Session::run`] /
 /// [`Experiment::run`] / [`crate::coordinator::SweepGrid::run`].
 pub struct Session {
@@ -51,14 +55,19 @@ pub struct Session {
     // only `cfg.dataflow` (LayerByLayer vs PimFused tile grid), so two
     // configs differing only in buffers/timing share one mapped plan.
     plans: Mutex<HashMap<(Workload, Dataflow), Arc<Plan>>>,
-    // Baselines are keyed by (workload, engine, host-residency):
-    // normalization always compares like with like, so an event-engine
-    // experiment is measured against the baseline config run through the
-    // event engine, and an interface-only host model against an
-    // interface-only baseline.
-    baselines: Mutex<HashMap<(Workload, Engine, bool), Arc<PpaReport>>>,
+    // Baselines are keyed by (workload, engine, host-residency,
+    // slice-pipelining): normalization always compares like with like,
+    // so an event-engine experiment is measured against the baseline
+    // config run through the event engine, an interface-only host model
+    // against an interface-only baseline, and a rigid-stagger run
+    // against a rigid-stagger baseline.
+    baselines: Mutex<BaselineCache>,
     counters: Counters,
 }
+
+/// Baseline memo: one entry per `(workload, engine, host_residency,
+/// slice_pipelining)` normalization axis combination.
+type BaselineCache = HashMap<(Workload, Engine, bool, bool), Arc<PpaReport>>;
 
 #[derive(Default)]
 struct Counters {
@@ -158,14 +167,14 @@ impl Session {
     }
 
     /// The memoized baseline report matching an experiment config's
-    /// normalization axes — engine **and** host-residency model: one
-    /// evaluation of [`Session::baseline_config`] per distinct
-    /// `(workload, engine, host_residency)` triple, shared by every
-    /// normalization afterwards. Any axis that changes what a cycle
-    /// count *means* must match between numerator and baseline, or the
-    /// ratio mixes models.
+    /// normalization axes — engine, host-residency model **and** slice
+    /// pipelining: one evaluation of [`Session::baseline_config`] per
+    /// distinct `(workload, engine, host_residency, slice_pipelining)`
+    /// tuple, shared by every normalization afterwards. Any axis that
+    /// changes what a cycle count *means* must match between numerator
+    /// and baseline, or the ratio mixes models.
     pub fn baseline_matched(&self, w: Workload, cfg: &ArchConfig) -> Result<Arc<PpaReport>> {
-        let key = (w, cfg.engine, cfg.host_residency);
+        let key = (w, cfg.engine, cfg.host_residency, cfg.slice_pipelining);
         let mut m = self.baselines.lock().unwrap();
         if let Some(b) = m.get(&key) {
             return Ok(b.clone());
@@ -175,7 +184,8 @@ impl Session {
             .baseline_cfg
             .clone()
             .with_engine(cfg.engine)
-            .with_host_residency(cfg.host_residency);
+            .with_host_residency(cfg.host_residency)
+            .with_slice_pipelining(cfg.slice_pipelining);
         let r = Arc::new(
             self.run_with_model(&baseline_cfg, w, self.model)
                 .with_context(|| format!("evaluating baseline {}", baseline_cfg.label()))?,
@@ -192,8 +202,9 @@ impl Session {
     }
 
     /// [`Session::run`] plus normalization against the memoized baseline
-    /// report for the same workload, the same engine, **and** the same
-    /// host-residency model (so neither axis ever skews a ratio).
+    /// report for the same workload, the same engine, the same
+    /// host-residency model, **and** the same slice-pipelining model (so
+    /// no axis ever skews a ratio).
     pub fn normalized(&self, cfg: &ArchConfig, w: Workload) -> Result<Normalized> {
         let r = self.run(cfg, w)?;
         let b = self.baseline_matched(w, cfg)?;
@@ -409,6 +420,21 @@ mod tests {
         let n = s.normalized(&base_off, Workload::Fig1).unwrap();
         assert!((n.cycles - 1.0).abs() < 1e-12, "interface-only self-normalization");
         assert_eq!(s.stats().baseline_runs, 2, "residency gets its own baseline");
+    }
+
+    #[test]
+    fn baselines_are_keyed_by_slice_pipelining() {
+        // A --slice-pipelining off point must normalize against a
+        // rigid-stagger baseline: the baseline config itself, pipelining
+        // off, is exactly 1.0 and earns its own cache entry.
+        let s = Session::new();
+        let base_ev = ArchConfig::baseline().with_engine(crate::config::Engine::Event);
+        let base_off = base_ev.clone().with_slice_pipelining(false);
+        s.normalized(&base_ev, Workload::Fig1).unwrap();
+        assert_eq!(s.stats().baseline_runs, 1);
+        let n = s.normalized(&base_off, Workload::Fig1).unwrap();
+        assert!((n.cycles - 1.0).abs() < 1e-12, "rigid-stagger self-normalization");
+        assert_eq!(s.stats().baseline_runs, 2, "slice pipelining gets its own baseline");
     }
 
     #[test]

@@ -20,9 +20,11 @@ pub struct PpaReport {
     pub energy_pj: f64,
     /// PIM-addition area in mm².
     pub area_mm2: f64,
-    /// Full breakdowns for audits.
+    /// Full simulation breakdown for audits (per-path cycles, actions).
     pub sim: SimResult,
+    /// Per-component energy breakdown.
     pub energy: EnergyReport,
+    /// Per-component area breakdown.
     pub area: AreaReport,
     /// Per-resource utilization (event engine only).
     pub occupancy: Option<ResourceOccupancy>,
@@ -32,12 +34,16 @@ pub struct PpaReport {
 /// to AiM-like @ G2K_L0).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Normalized {
+    /// Cycle ratio vs the baseline (lower is faster).
     pub cycles: f64,
+    /// Energy ratio vs the baseline.
     pub energy: f64,
+    /// Area ratio vs the baseline.
     pub area: f64,
 }
 
 impl PpaReport {
+    /// The PPA ratios of this report relative to `base`.
     pub fn normalize(&self, base: &PpaReport) -> Normalized {
         Normalized {
             cycles: self.cycles as f64 / base.cycles as f64,

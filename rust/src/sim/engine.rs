@@ -1,9 +1,9 @@
 //! The analytic (back-to-back) simulation engine: command stream → memory
 //! cycles + action counts.
 //!
-//! This module also owns the pieces both engines share: [`cost`] expands a
-//! macro command into the per-resource cycle demands of [`CmdCost`], and
-//! [`tally`] accumulates its [`ActionCounts`]. The analytic engine sums
+//! This module also owns the pieces both engines share: `cost` expands a
+//! macro command into the per-resource cycle demands of `CmdCost`, and
+//! `tally` accumulates its [`ActionCounts`]. The analytic engine sums
 //! command durations; the event engine ([`super::event`]) schedules the
 //! same costs onto per-resource timelines. Because both tally through the
 //! same code path, their action counts — and therefore energy reports —
@@ -12,7 +12,7 @@
 use super::dram;
 use super::ActionCounts;
 use crate::config::ArchConfig;
-use crate::trace::{BankMask, Cmd, CmdKind, PerCore, Trace};
+use crate::trace::{Cmd, CmdKind, PerCore, RowMap, Trace};
 
 /// Result of simulating one trace on one architecture.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -63,11 +63,12 @@ pub(crate) enum CmdCost {
     /// (`total`), touching each bank for one `slice` of the interval.
     CrossBank { total: u64, slice: u64, write: bool, acts: u64 },
     /// `HOST_WRITE` / `HOST_READ`: off-chip interface occupancy (`total`)
-    /// plus — when the config models host bank residency — a 1/N `slice`
-    /// of each destination bank's timeline and `acts` row activations
-    /// metered through the tFAW/tRRD windows. `slice == 0` (residency off
-    /// or no annotated banks) degrades to the interface-only model.
-    Host { total: u64, slice: u64, banks: BankMask, write: bool, acts: u64 },
+    /// plus — when the config models host bank residency — a slice of
+    /// each destination bank's timeline sized by its share of the `rows`
+    /// map, whose per-bank counts also meter the tFAW/tRRD windows of
+    /// the groups they land in. An empty map (residency off or no
+    /// annotated banks) degrades to the interface-only model.
+    Host { total: u64, rows: RowMap, write: bool },
 }
 
 /// Expand one macro command into its per-resource cycle demands using the
@@ -124,16 +125,13 @@ pub(crate) fn cost(cfg: &ArchConfig, cmd: &Cmd) -> CmdCost {
                 acts: rows_touched(*bytes),
             }
         }
-        CmdKind::HostWrite { bytes, banks } | CmdKind::HostRead { bytes, banks } => {
+        CmdKind::HostWrite { bytes, rows } | CmdKind::HostRead { bytes, rows } => {
             let total = dram::host_stream_cycles(t, *bytes);
-            let n = banks.count() as u64;
-            let resident = cfg.host_residency && n > 0 && total > 0;
+            let resident = cfg.host_residency && !rows.is_empty() && total > 0;
             CmdCost::Host {
                 total,
-                slice: if resident { total.div_ceil(n) } else { 0 },
-                banks: *banks,
+                rows: if resident { *rows } else { RowMap::EMPTY },
                 write: matches!(cmd.kind, CmdKind::HostWrite { .. }),
-                acts: if resident { rows_touched(*bytes) } else { 0 },
             }
         }
     }
@@ -224,11 +222,11 @@ pub(crate) fn charge(cfg: &ArchConfig, c: &CmdCost, r: &mut SimResult) -> u64 {
             r.cross_bank_cycles += d;
             d
         }
-        CmdCost::Host { total, slice, write, .. } => {
+        CmdCost::Host { total, rows, write } => {
             // With bank residency modeled, a host write's destination
             // banks must restore before the next access — the same tWR
             // the event engine's slice tails reserve.
-            let d = total + t_cmd + recovery(*write && *slice > 0);
+            let d = total + t_cmd + recovery(*write && !rows.is_empty());
             r.host_cycles += d;
             d
         }
@@ -307,7 +305,7 @@ mod tests {
 
     #[test]
     fn host_write_residency_charges_write_recovery() {
-        use crate::trace::BankMask;
+        use crate::trace::RowMap;
         // With bank residency on, a host write's destination banks must
         // restore (tWR) before the next access; a host read pays nothing
         // extra, and turning residency off restores the old charge.
@@ -319,16 +317,16 @@ mod tests {
             step(cfg, &t.cmds[0], &mut r);
             r
         };
-        let banks = BankMask::all(16);
-        let wr = run_one(&cfg, CmdKind::HostWrite { bytes: 4096, banks });
-        let rd = run_one(&cfg, CmdKind::HostRead { bytes: 4096, banks });
+        let rows = RowMap::striped(4096, 16);
+        let wr = run_one(&cfg, CmdKind::HostWrite { bytes: 4096, rows });
+        let rd = run_one(&cfg, CmdKind::HostRead { bytes: 4096, rows });
         assert_eq!(wr.cycles - rd.cycles, cfg.timing.t_wr);
         let off = cfg.clone().with_host_residency(false);
-        let wr_off = run_one(&off, CmdKind::HostWrite { bytes: 4096, banks });
+        let wr_off = run_one(&off, CmdKind::HostWrite { bytes: 4096, rows });
         assert_eq!(wr_off.cycles, rd.cycles, "residency off: interface-only charge");
         // An un-annotated host command also degrades to interface-only.
-        let wr_nobanks = run_one(&cfg, CmdKind::HostWrite { bytes: 4096, banks: BankMask::EMPTY });
-        assert_eq!(wr_nobanks.cycles, rd.cycles);
+        let wr_norows = run_one(&cfg, CmdKind::HostWrite { bytes: 4096, rows: RowMap::EMPTY });
+        assert_eq!(wr_norows.cycles, rd.cycles);
         // Action counts (energy) never depend on the residency switch.
         assert_eq!(wr.actions, wr_off.actions);
     }

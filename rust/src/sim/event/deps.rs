@@ -225,16 +225,16 @@ mod tests {
 
     #[test]
     fn host_io_bounds_the_dag() {
-        use crate::trace::BankMask;
+        use crate::trace::RowMap;
         // HOST_WRITE defines the input map: the first consumer waits on
         // it. HOST_READ consumes the output map: it waits on the final
         // writer, but not on unrelated commands.
-        let banks = BankMask::all(16);
+        let rows = RowMap::striped(1024, 16);
         let mut t = Trace::default();
-        t.push_dep(0, CmdKind::HostWrite { bytes: 1024, banks }, &[], Some(0));
+        t.push_dep(0, CmdKind::HostWrite { bytes: 1024, rows }, &[], Some(0));
         t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 1024 }, &[0], None);
         t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 512 }, &[], Some(2));
-        t.push_dep(2, CmdKind::HostRead { bytes: 512, banks }, &[2], None);
+        t.push_dep(2, CmdKind::HostRead { bytes: 512, rows }, &[2], None);
         let d = build(&t);
         assert_eq!(d.preds[1].sorted(), vec![0], "consumer waits on the host write");
         assert_eq!(d.preds[3].sorted(), vec![2], "host read waits on the output's writer");

@@ -9,19 +9,23 @@
 //! This engine instead runs a ready-queue list scheduler (scheduler v2,
 //! DESIGN.md §6.2):
 //!
-//! 1. [`deps`] derives a command DAG from the trace's data-flow
+//! 1. `deps` derives a command DAG from the trace's data-flow
 //!    annotations: same-node commands chain; across nodes a command waits
 //!    on the last writer of each feature map it reads (RAW), and a map
 //!    rewrite additionally drains the map's prior writer and every open
 //!    reader (WAW/WAR). The DAG exposes successor lists and indegrees.
-//! 2. [`resources`] keeps an *interval timeline* (sorted gap list) per
+//! 2. `resources` keeps an *interval timeline* (sorted gap list) per
 //!    resource: every bank, every PIMcore, the shared internal bus /
 //!    GBUF port, the GBcore, the host interface, the contended command
 //!    bus, and a tFAW/tRRD activation window per bank group. Short
 //!    commands back-fill idle windows earlier reservations left behind.
 //!    Host I/O holds per-bank slices of its destination banks (true bank
-//!    residency) and row activations spread over a command's data span
-//!    as per-row interleaved ACT slots — see the module docs there.
+//!    residency) sized by the trace's [`RowMap`] — the rows that
+//!    actually land in each bank — and row activations spread over a
+//!    command's data span as per-row interleaved ACT slots. With
+//!    [`ArchConfig::slice_pipelining`](crate::config::ArchConfig::slice_pipelining)
+//!    a transfer's per-bank slices may *slide* inside the bus interval
+//!    to dodge busy banks — see the module docs there.
 //! 3. Commands issue in *readiness order*: a binary min-heap of
 //!    `(ready_cycle, trace_index)` pops the earliest-ready command, the
 //!    timelines find the earliest start where its issue slot and every
@@ -32,13 +36,17 @@
 //! `tests/engine_agreement.rs`, see the proof sketch in DESIGN.md §6.2):
 //!
 //! * action counts — and therefore energy — are identical to the
-//!   analytic engine's (same [`engine::tally`] path);
+//!   analytic engine's (same `engine::tally` path);
 //! * total cycles never exceed the analytic serial sum (every
 //!   reservation a command makes ends by its completion, so a popped
-//!   command can always start by the latest completion so far);
+//!   command can always start by the latest completion so far — and a
+//!   sliding slice placement degrades to the rigid stagger on idle
+//!   banks, so the bound survives slice pipelining);
 //! * total cycles never undercut the busiest single resource's occupancy
 //!   (reservations on one timeline cannot overlap — [`audit`] certifies
 //!   this together with dependency correctness).
+//!
+//! [`RowMap`]: crate::trace::RowMap
 
 mod deps;
 mod resources;
@@ -50,7 +58,7 @@ use resources::NUM_ACT_GROUPS;
 use super::engine::{self, charge, cost, tally, CmdCost};
 use super::SimResult;
 use crate::config::ArchConfig;
-use crate::trace::{CmdKind, Trace};
+use crate::trace::{CmdKind, Trace, MAX_CORES};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -59,7 +67,9 @@ use std::collections::BinaryHeap;
 /// plus the per-resource occupancy breakdown.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EventReport {
+    /// Cycles, action counts, and per-path breakdowns.
     pub result: SimResult,
+    /// Per-resource busy-cycle breakdown of the schedule.
     pub occupancy: ResourceOccupancy,
 }
 
@@ -74,7 +84,9 @@ pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> EventReport {
 /// data span, and any write-recovery window).
 #[derive(Debug, Clone, Default)]
 pub struct ScheduleAudit {
+    /// Issue-slot start cycle per command, in trace order.
     pub starts: Vec<u64>,
+    /// Completion cycle per command, in trace order.
     pub dones: Vec<u64>,
     /// Total busy cycles the scheduler back-filled into timeline gaps.
     pub backfilled: u64,
@@ -83,6 +95,11 @@ pub struct ScheduleAudit {
     pub host_bank_cycles: u64,
     /// Reserved tFAW/tRRD window cycles certified across all bank groups.
     pub act_window_cycles: u64,
+    /// Slice cycles certified at placements past their rigid stagger
+    /// offsets — the slice-pipelining relaxation at work. Always zero
+    /// when `ArchConfig::slice_pipelining` is off (the audit rejects a
+    /// slid slice outright in that case).
+    pub slid_cycles: u64,
 }
 
 /// Re-run the schedule in recording mode and certify its legality:
@@ -95,8 +112,15 @@ pub struct ScheduleAudit {
 ///   covers the host-command bank slices in particular: two host phases,
 ///   or a host phase and a PIM stream, can never hold one bank at once);
 /// * host commands reserve bank slices exactly on their annotated
-///   destination banks, inside their own data window — and reserve none
+///   destination banks, inside their own data window, each span equal to
+///   that bank's share of the trace's row map and the per-group ACT
+///   metering equal to the map's per-bank row counts — and reserve none
 ///   when the config disables host residency;
+/// * sliding slices are legal: every cross-bank and host slice sits
+///   at-or-after its rigid stagger offset (exactly on it when
+///   `slice_pipelining` is off), still inside its command's window, and
+///   the audit reports the certified slid cycles
+///   ([`ScheduleAudit::slid_cycles`]);
 /// * every row activation lands in a legal tFAW/tRRD slot: each ACT
 ///   reservation lies within its command's data window, and per bank
 ///   group the reserved window cycles cover the command's activations at
@@ -150,14 +174,33 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
         let data_lo = sched.starts[i] + t_cmd;
         let data_hi = data_lo + rec.data_span;
 
-        // Host bank residency: slices sit exactly on the annotated banks.
-        if let CmdKind::HostWrite { banks, .. } | CmdKind::HostRead { banks, .. } =
+        // Host bank residency: every slice sits on an annotated bank,
+        // inside the command's window, with exactly the span its share
+        // of the trace's row map dictates — and at or after its rigid
+        // stagger offset (exactly on it when slice pipelining is off).
+        if let CmdKind::HostWrite { rows, .. } | CmdKind::HostRead { rows, .. } =
             &trace.cmds[i].kind
         {
             let c = cost(cfg, &trace.cmds[i]);
-            let resident = matches!(c, CmdCost::Host { slice, .. } if slice > 0);
-            let mut sliced = 0u64;
-            let mut touched = 0usize;
+            let resident = matches!(c, CmdCost::Host { rows: r, .. } if !r.is_empty());
+            // Expected per-bank (rigid offset, span), recomputed from
+            // the row map independently of the scheduler's arithmetic.
+            let mut want = [(0u64, 0u64); MAX_CORES];
+            let in_channel: u64 =
+                rows.iter().filter(|&(b, _)| b < cfg.num_banks).map(|(_, r)| r).sum();
+            if resident && in_channel > 0 {
+                let mut acc = 0u64;
+                for (b, r) in rows.iter() {
+                    if b >= cfg.num_banks {
+                        continue;
+                    }
+                    let lo = rec.data_span * acc / in_channel;
+                    acc += r;
+                    let hi = rec.data_span * acc / in_channel;
+                    want[b] = (lo, hi - lo);
+                }
+            }
+            let mut seen = [0u64; MAX_CORES];
             for &(res, s, e, span) in &rec.resv {
                 if let Some(b) = resources::res_bank(res) {
                     if !resident {
@@ -165,7 +208,7 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
                             "host command {i} reserved bank {b} with residency off"
                         ));
                     }
-                    if !banks.contains(b) || b >= cfg.num_banks {
+                    if b >= cfg.num_banks || rows.get(b) == 0 {
                         return Err(format!(
                             "host command {i} reserved bank {b} outside its destination set"
                         ));
@@ -176,15 +219,112 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
                             sched.dones[i]
                         ));
                     }
+                    if span != want[b].1 {
+                        return Err(format!(
+                            "host command {i}: bank {b} slice span {span} disagrees with its row share {}",
+                            want[b].1
+                        ));
+                    }
+                    if s < data_lo + want[b].0 {
+                        return Err(format!(
+                            "host command {i}: bank {b} slice at {s} precedes its stagger offset"
+                        ));
+                    }
+                    if s != data_lo + want[b].0 {
+                        if !cfg.slice_pipelining {
+                            return Err(format!(
+                                "host command {i}: bank {b} slice slid with pipelining off"
+                            ));
+                        }
+                        sched.slid_cycles += span;
+                    }
                     // Recovery tails are reserved but not streamed.
-                    sliced += span;
-                    touched += 1;
+                    seen[b] += span;
                 }
             }
-            if resident && touched == 0 {
-                return Err(format!("host command {i} models residency but reserved no banks"));
+            for b in 0..cfg.num_banks.min(MAX_CORES) {
+                if seen[b] != want[b].1 {
+                    return Err(format!(
+                        "host command {i}: bank {b} reserved {} slice cycles, the row map expects {}",
+                        seen[b], want[b].1
+                    ));
+                }
             }
-            sched.host_bank_cycles += sliced;
+            sched.host_bank_cycles += seen.iter().sum::<u64>();
+
+            // The scheduler's per-group ACT metering must equal the
+            // trace's per-bank row counts, group by group — the audit
+            // certifies no `div_ceil` share survives on the host path.
+            let mut want_acts = [0u64; NUM_ACT_GROUPS];
+            if resident {
+                for (b, r) in rows.iter() {
+                    if b < cfg.num_banks {
+                        want_acts[b / resources::GROUP_BANKS] += r;
+                    }
+                }
+            }
+            if rec.group_acts != want_acts {
+                return Err(format!(
+                    "host command {i}: metered ACT counts {:?} disagree with the row map's {:?}",
+                    rec.group_acts, want_acts
+                ));
+            }
+        }
+
+        // Cross-bank slices: the uniform 1/N walk over the channel, each
+        // slice in-window and at-or-after its rigid offset (exactly on
+        // it when slice pipelining is off).
+        if matches!(trace.cmds[i].kind, CmdKind::Bk2Gbuf { .. } | CmdKind::Gbuf2Bk { .. }) {
+            let c = cost(cfg, &trace.cmds[i]);
+            let mut want = [(0u64, 0u64); MAX_CORES];
+            if let CmdCost::CrossBank { total, slice, .. } = c {
+                if slice > 0 {
+                    for (b, w) in want.iter_mut().enumerate().take(cfg.num_banks.min(MAX_CORES)) {
+                        let off = b as u64 * slice;
+                        if off >= total {
+                            break;
+                        }
+                        *w = (off, slice.min(total - off));
+                    }
+                }
+            }
+            let mut seen = [0u64; MAX_CORES];
+            for &(res, s, e, span) in &rec.resv {
+                if let Some(b) = resources::res_bank(res) {
+                    if b >= MAX_CORES || want[b].1 == 0 {
+                        return Err(format!(
+                            "cross-bank command {i} reserved bank {b} outside its walk"
+                        ));
+                    }
+                    if s < data_lo || e > sched.dones[i] || s + span > data_hi {
+                        return Err(format!(
+                            "cross-bank command {i}: bank {b} slice [{s}, {e}) escapes its window"
+                        ));
+                    }
+                    if span != want[b].1 || s < data_lo + want[b].0 {
+                        return Err(format!(
+                            "cross-bank command {i}: bank {b} slice [{s}, {e}) breaks the 1/N walk"
+                        ));
+                    }
+                    if s != data_lo + want[b].0 {
+                        if !cfg.slice_pipelining {
+                            return Err(format!(
+                                "cross-bank command {i}: bank {b} slice slid with pipelining off"
+                            ));
+                        }
+                        sched.slid_cycles += span;
+                    }
+                    seen[b] += span;
+                }
+            }
+            for b in 0..MAX_CORES {
+                if seen[b] != want[b].1 {
+                    return Err(format!(
+                        "cross-bank command {i}: bank {b} reserved {} slice cycles, expected {}",
+                        seen[b], want[b].1
+                    ));
+                }
+            }
         }
 
         // ACT slots: in-window, and enough reserved cycles per group to
@@ -300,7 +440,7 @@ mod tests {
     use crate::dataflow::{plan, CostModel};
     use crate::sim::dram;
     use crate::trace::gen::generate;
-    use crate::trace::{BankMask, CmdKind, PerCore};
+    use crate::trace::{CmdKind, PerCore, RowMap};
 
     fn paper_trace(sys: System) -> (ArchConfig, Trace) {
         let g = resnet18_first8();
@@ -427,7 +567,7 @@ mod tests {
         t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], None);
         // Interface-only host read (no bank annotation): its data hides
         // fully under the bus traffic without touching the banks.
-        t.push_dep(3, CmdKind::HostRead { bytes: 4096, banks: BankMask::EMPTY }, &[], None);
+        t.push_dep(3, CmdKind::HostRead { bytes: 4096, rows: RowMap::EMPTY }, &[], None);
         let ev = simulate(&cfg, &t);
         let a = audit(&cfg, &t).unwrap();
         assert!(a.backfilled > 0, "the host issue slot back-fills");
@@ -460,11 +600,11 @@ mod tests {
         // read back: the audit's independent replay must certify the
         // bank slices and ACT windows, and report their cycle totals.
         let cfg = ArchConfig::baseline();
-        let banks = BankMask::all(16);
+        let rows = RowMap::striped(64 * 1024, 16);
         let mut t = Trace::default();
-        t.push_dep(0, CmdKind::HostWrite { bytes: 64 * 1024, banks }, &[], Some(0));
+        t.push_dep(0, CmdKind::HostWrite { bytes: 64 * 1024, rows }, &[], Some(0));
         t.push_dep(1, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 4096) }, &[0], None);
-        t.push_dep(1, CmdKind::HostRead { bytes: 4096, banks }, &[0], None);
+        t.push_dep(1, CmdKind::HostRead { bytes: 4096, rows }, &[0], None);
         let a = audit(&cfg, &t).unwrap();
         assert!(a.host_bank_cycles > 0, "host slices certified on the banks");
         assert!(a.act_window_cycles > 0, "ACT slots certified in the windows");
@@ -482,9 +622,9 @@ mod tests {
         // the certified host slices.
         let cfg = ArchConfig::baseline();
         let off = cfg.clone().with_host_residency(false);
-        let banks = BankMask::all(16);
+        let rows = RowMap::striped(64 * 1024, 16);
         let mut t = Trace::default();
-        t.push_dep(0, CmdKind::HostWrite { bytes: 64 * 1024, banks }, &[], Some(0));
+        t.push_dep(0, CmdKind::HostWrite { bytes: 64 * 1024, rows }, &[], Some(0));
         t.push_dep(1, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 4096) }, &[0], None);
         let on_ev = simulate(&cfg, &t);
         let off_ev = simulate(&off, &t);
@@ -496,6 +636,44 @@ mod tests {
         assert_eq!(on_ev.occupancy.host_bank_total(), a.host_bank_cycles);
         // Action counts (energy) stay residency-independent.
         assert_eq!(on_ev.result.actions, off_ev.result.actions);
+    }
+
+    #[test]
+    fn sliding_slices_overlap_where_the_rigid_stagger_cannot() {
+        // An independent near-bank stream holds bank 0 while a
+        // cross-bank gather wants the channel: with slice pipelining the
+        // gather's bank-0 slice slides behind the stream and the
+        // transfer starts almost immediately; with the rigid stagger the
+        // whole transfer queues until bank 0 frees.
+        let on = ArchConfig::baseline();
+        let off = on.clone().with_slice_pipelining(false);
+        let mut t = Trace::default();
+        let mut c0 = PerCore::zero(16);
+        c0.set(0, 4096);
+        t.push(1, CmdKind::Bk2Lbuf { bytes: c0 });
+        t.push(2, CmdKind::Bk2Gbuf { bytes: 4096 });
+        let ev_on = simulate(&on, &t);
+        let ev_off = simulate(&off, &t);
+        assert!(
+            ev_on.result.cycles < ev_off.result.cycles,
+            "sliding {} must beat rigid {}",
+            ev_on.result.cycles,
+            ev_off.result.cycles
+        );
+        assert_eq!(ev_on.occupancy.slid_slices, 40, "exactly the 40-cycle bank-0 slice slid");
+        assert_eq!(ev_off.occupancy.slid_slices, 0);
+        // The audit certifies the slid cycles and stays legal either way.
+        let a_on = audit(&on, &t).unwrap();
+        let a_off = audit(&off, &t).unwrap();
+        assert_eq!(a_on.slid_cycles, 40);
+        assert_eq!(a_off.slid_cycles, 0);
+        // Both placements keep the three engine-agreement invariants.
+        for (cfg, ev) in [(&on, &ev_on), (&off, &ev_off)] {
+            let an = engine::simulate(cfg, &t);
+            assert_eq!(ev.result.actions, an.actions);
+            assert!(ev.result.cycles <= an.cycles);
+            assert!(ev.result.cycles >= ev.occupancy.busiest());
+        }
     }
 
     #[test]

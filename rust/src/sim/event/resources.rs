@@ -20,15 +20,26 @@
 //!   timeline (one command per slot), and the data phase begins only
 //!   after the issue slot;
 //! * a sequential cross-bank transfer reserves, besides the bus, a 1/N
-//!   **slice of each bank's timeline** at its staggered offset — the
-//!   bank-at-a-time occupancy that conflicts with near-bank streams;
+//!   **slice of each bank's timeline** — the bank-at-a-time occupancy
+//!   that conflicts with near-bank streams. With
+//!   [`ArchConfig::slice_pipelining`] (the default) each slice *slides*
+//!   to its bank's earliest fit at-or-after its staggered offset inside
+//!   the data window (the controller serves a busy bank later in its
+//!   burst order — slid lock windows of one transfer may then overlap
+//!   across banks, a documented relaxation: the bus interval still
+//!   serializes the data, DESIGN.md §6.3). When no sliding placement
+//!   fits, the whole command slides forward minimally, degenerating to
+//!   the rigid stagger in the worst case; with the toggle off every
+//!   slice sits at its fixed `i/N` offset;
 //! * host I/O (`HOST_WRITE`/`HOST_READ`) occupies the off-chip interface
 //!   for its whole duration **and** — when the config models host bank
 //!   residency — streams through its destination banks bank-at-a-time:
-//!   a 1/N slice of each annotated bank's timeline at a staggered
-//!   offset, with the write-recovery tail on writes, plus ACT-window
-//!   slots for the rows it touches. Host phases therefore contend with
-//!   PIM traffic for exactly the banks they load;
+//!   a slice of each annotated bank's timeline sized by that bank's
+//!   share of the command's [`RowMap`] (the same sliding placement as
+//!   the cross-bank path), with the write-recovery tail on writes, plus
+//!   ACT-window slots metered per bank group from the rows that
+//!   actually land in it. Host phases therefore contend with PIM
+//!   traffic for exactly the banks they load;
 //! * commands that write banks extend each bank reservation by the `tWR`
 //!   **write-recovery tail** (reserved, but not tallied as busy work), so
 //!   a read landing on that bank starts at least `tWR` after the write's
@@ -46,6 +57,8 @@
 //! [`DramTiming::act_slot_cycles`]: crate::config::DramTiming::act_slot_cycles
 //! [`DramTiming::act_layout`]: crate::config::DramTiming::act_layout
 //! [`MAX_ACT_SLOTS`]: crate::config::MAX_ACT_SLOTS
+//! [`ArchConfig::slice_pipelining`]: crate::config::ArchConfig::slice_pipelining
+//! [`RowMap`]: crate::trace::RowMap
 
 use crate::config::{ArchConfig, DramTiming};
 use crate::sim::engine::CmdCost;
@@ -89,6 +102,12 @@ pub struct ResourceOccupancy {
     /// frontier — work the v1 scalar busy-until timelines could never
     /// back-fill. Summed over all resources.
     pub backfilled: u64,
+    /// Per-bank slice cycles the scheduler placed *off* their rigid
+    /// stagger offsets (slice pipelining): how much of the cross-bank
+    /// and host bank-at-a-time traffic the modeled controller reordered
+    /// around busy banks. Zero when `slice_pipelining` is off. Summed
+    /// over all banks.
+    pub slid_slices: u64,
     /// Host-slice busy cycles per bank: the share of `bank_busy` charged
     /// by `HOST_WRITE`/`HOST_READ` residency (zero when the config runs
     /// the interface-only host model).
@@ -184,12 +203,18 @@ impl ResourceOccupancy {
         line("host/bank (mean)", hostbk_mean);
         line("act window (max)", act_max);
         line("act window (mean)", act_mean);
-        // Aggregate across all resources, so neither an idle count nor a
-        // single-resource utilization applies (the sum can exceed the
+        // Aggregates across all resources, so neither an idle count nor
+        // a single-resource utilization applies (the sums can exceed the
         // makespan).
         t.row(vec![
             "back-filled".to_string(),
             self.backfilled.to_string(),
+            "-".to_string(),
+            "-".to_string(),
+        ]);
+        t.row(vec![
+            "slid slices".to_string(),
+            self.slid_slices.to_string(),
             "-".to_string(),
             "-".to_string(),
         ]);
@@ -270,6 +295,18 @@ struct ReqItem {
     tally: bool,
 }
 
+/// One per-bank slice of a sequential bank-at-a-time transfer: `span`
+/// cycles on `bank`, nominally at `off` into the data window (the rigid
+/// stagger — the running sum of the preceding slices' spans). With slice
+/// pipelining the scheduler may place it later than `off`, wherever the
+/// bank's timeline first fits it inside the window.
+#[derive(Debug, Clone, Copy)]
+struct SliceReq {
+    bank: usize,
+    off: u64,
+    span: u64,
+}
+
 // Fixed arena layout: the scalar resources, then the ACT windows, then
 // cores and banks (always MAX_CORES of each; unused ones stay empty).
 const CMDBUS: usize = 0;
@@ -330,13 +367,27 @@ pub(crate) struct Timelines {
     t_cmd: u64,
     t_wr: u64,
     timing: DramTiming,
+    /// Whether per-bank slices may slide off their rigid stagger
+    /// offsets ([`ArchConfig::slice_pipelining`]).
+    sliding: bool,
     tl: Vec<Timeline>,
     req: Vec<ReqItem>,
+    /// The current command's per-bank slice group (empty for commands
+    /// without a bank-at-a-time walk).
+    slices: Vec<SliceReq>,
+    /// Write-recovery tail on every slice of the current group.
+    slice_tail: u64,
+    /// The data-window length the slices must stay inside.
+    slice_window: u64,
+    /// Absolute start cycle [`Timelines::fit`] chose for each slice.
+    place: Vec<u64>,
     group_acts: [u64; NUM_ACT_GROUPS],
     /// Host-slice cycles charged per bank (occupancy attribution).
     host_bank: [u64; MAX_CORES],
     /// Reserved ACT-window cycles per group (occupancy attribution).
     act_resv: [u64; NUM_ACT_GROUPS],
+    /// Slice cycles committed off their rigid stagger offsets.
+    slid: u64,
     /// Per-command reservation records, kept only in audit mode.
     records: Option<Vec<IssueRecord>>,
 }
@@ -350,11 +401,17 @@ impl Timelines {
             t_cmd: cfg.timing.t_cmd,
             t_wr: cfg.timing.t_wr,
             timing: cfg.timing,
+            sliding: cfg.slice_pipelining,
             tl: vec![Timeline::default(); NUM_RES],
             req: Vec::with_capacity(2 + NUM_ACT_GROUPS + 2 * MAX_CORES),
+            slices: Vec::with_capacity(MAX_CORES),
+            slice_tail: 0,
+            slice_window: 0,
+            place: Vec::with_capacity(MAX_CORES),
             group_acts: [0; NUM_ACT_GROUPS],
             host_bank: [0; MAX_CORES],
             act_resv: [0; NUM_ACT_GROUPS],
+            slid: 0,
             records: None,
         }
     }
@@ -384,9 +441,15 @@ impl Timelines {
     /// Schedule one command no earlier than `ready`: find the earliest
     /// start where its issue slot and every resource interval it needs
     /// are simultaneously free (back-filling gaps where possible),
-    /// reserve them all, and return the issue time and completion.
+    /// reserve them all — per-bank slices at the placements [`fit`]
+    /// chose, which may slide off the rigid stagger — and return the
+    /// issue time and completion.
+    ///
+    /// [`fit`]: Timelines::fit
     pub(crate) fn issue(&mut self, ready: u64, c: &CmdCost) -> Issue {
         self.req.clear();
+        self.slices.clear();
+        self.place.clear();
         if self.t_cmd > 0 {
             // The issue slot on the contended command bus: one command
             // per slot; the data phase starts after it.
@@ -397,13 +460,25 @@ impl Timelines {
         for it in &self.req {
             self.tl[it.res].reserve(start + it.off, it.span, it.tail, it.tally);
         }
+        debug_assert_eq!(self.place.len(), self.slices.len());
+        for (k, s) in self.slices.iter().enumerate() {
+            let at = self.place[k];
+            self.tl[BANK0 + s.bank].reserve(at, s.span, self.slice_tail, true);
+            if at != start + self.t_cmd + s.off {
+                self.slid += s.span;
+            }
+        }
         if let Some(records) = &mut self.records {
-            let mut resv = Vec::with_capacity(self.req.len());
+            let mut resv = Vec::with_capacity(self.req.len() + self.slices.len());
             for it in &self.req {
                 if it.span + it.tail > 0 {
                     let end = start + it.off + it.span + it.tail;
                     resv.push((it.res, start + it.off, end, it.span));
                 }
+            }
+            for (k, s) in self.slices.iter().enumerate() {
+                let end = self.place[k] + s.span + self.slice_tail;
+                resv.push((BANK0 + s.bank, self.place[k], end, s.span));
             }
             records.push(IssueRecord { data_span: span, group_acts: self.group_acts, resv });
         }
@@ -414,7 +489,22 @@ impl Timelines {
     /// push `t` past each item's nearest conflict until a fixed point.
     /// Each pass either returns or strictly advances `t` beyond at least
     /// one existing reservation, so the loop terminates.
-    fn fit(&self, ready: u64) -> u64 {
+    ///
+    /// The per-bank slice group is placed once the plain items fit. With
+    /// slice pipelining, each slice slides to its bank's earliest fit
+    /// at-or-after its rigid offset; the placement is accepted as long
+    /// as every slice still ends inside the data window. A free bank
+    /// yields exactly its rigid offset (`earliest_fit` of a free
+    /// interval is its start), so sliding strictly relaxes the rigid
+    /// constraint set — wherever the rigid stagger fits, sliding places
+    /// identically, and a command never starts later than it would
+    /// under the rigid stagger. When some slice cannot fit its window,
+    /// the whole command slides forward *minimally* — just far enough
+    /// for that bank's earliest fit to sit inside the window (in the
+    /// worst case that degenerates to queueing behind the bank, i.e.
+    /// the rigid shape). With pipelining off, the rigid offsets
+    /// constrain `t` like any other item.
+    fn fit(&mut self, ready: u64) -> u64 {
         let mut t = ready;
         loop {
             let mut moved = false;
@@ -425,7 +515,58 @@ impl Timelines {
                     moved = true;
                 }
             }
+            if moved {
+                continue;
+            }
+            if self.slices.is_empty() {
+                return t;
+            }
+            if self.sliding {
+                self.place.clear();
+                let data = t + self.t_cmd;
+                let mut push_to = None;
+                for s in &self.slices {
+                    let len = s.span + self.slice_tail;
+                    let at = self.tl[BANK0 + s.bank].earliest_fit(data + s.off, len);
+                    if at + s.span <= data + self.slice_window {
+                        self.place.push(at);
+                    } else {
+                        // The fit lies past the window: slide the whole
+                        // command forward just far enough for it to sit
+                        // inside (at + span > data + window, so this
+                        // strictly advances `t` and cannot underflow).
+                        push_to = Some(at + s.span - self.t_cmd - self.slice_window);
+                        break;
+                    }
+                }
+                match push_to {
+                    None => return t,
+                    Some(next) if next > t => {
+                        t = next;
+                        continue;
+                    }
+                    // Defensive (unreachable: the failing fit lies past
+                    // the window): fall through to the rigid push below
+                    // so the loop always advances.
+                    Some(_) => {}
+                }
+            }
+            // Rigid stagger (pipelining off): every slice constrains
+            // `t` at its fixed offset.
+            let mut moved = false;
+            for s in &self.slices {
+                let off = self.t_cmd + s.off;
+                let at = self.tl[BANK0 + s.bank].earliest_fit(t + off, s.span + self.slice_tail);
+                if at > t + off {
+                    t = at - off;
+                    moved = true;
+                }
+            }
             if !moved {
+                self.place.clear();
+                for s in &self.slices {
+                    self.place.push(t + self.t_cmd + s.off);
+                }
                 return t;
             }
         }
@@ -462,89 +603,100 @@ impl Timelines {
             CmdCost::CrossBank { total, slice, write, acts } => {
                 let post = if *write { self.t_wr } else { 0 };
                 self.req.push(ReqItem { res: BUS, off: t_cmd, span: *total, tail: 0, tally: true });
-                self.slice_items(0..self.num_banks, *total, *slice, post, false);
+                // The bank walk visits every channel bank for one 1/N
+                // share of the interval.
+                let mut spans = [(0usize, 0u64); MAX_CORES];
+                let mut n = 0;
+                if *slice > 0 {
+                    for b in 0..self.num_banks {
+                        let off = b as u64 * *slice;
+                        if off >= *total {
+                            break;
+                        }
+                        spans[n] = (b, (*slice).min(*total - off));
+                        n += 1;
+                    }
+                }
+                self.slice_items(&spans[..n], post, false, *total);
+                // No row map on the cross-bank path: activations split
+                // evenly across the channel's groups (§6.3 ledger).
                 let groups = self.num_banks.div_ceil(GROUP_BANKS).max(1).min(NUM_ACT_GROUPS);
                 let per_group = acts.div_ceil(groups as u64);
                 self.group_acts[..groups].fill(per_group);
                 self.act_items(*total);
                 (*total, post)
             }
-            CmdCost::Host { total, slice, banks, write, acts } => {
-                let host = ReqItem { res: HOST, off: t_cmd, span: *total, tail: 0, tally: true };
-                self.req.push(host);
-                let post = if *write && *slice > 0 { self.t_wr } else { 0 };
-                // Physically the host stream also moves through its
-                // destination banks — the same bank-at-a-time staggered
-                // slices as the cross-bank path (shared [`slice_items`],
-                // so the two stagger models cannot diverge). Host phases
-                // therefore genuinely contend with PIM traffic for
-                // exactly the banks they load.
-                let groups = self.slice_items(banks.iter(), *total, *slice, post, true);
-                // The rows the host touches activate like any other
-                // stream: meter them through the windows of the groups
-                // its banks span.
-                let ng = groups.iter().filter(|&&g| g).count() as u64;
-                if ng > 0 && *acts > 0 {
-                    let per_group = acts.div_ceil(ng);
-                    for (g, hit) in groups.iter().enumerate() {
-                        if *hit {
-                            self.group_acts[g] += per_group;
+            CmdCost::Host { total, rows, write } => {
+                self.req.push(ReqItem { res: HOST, off: t_cmd, span: *total, tail: 0, tally: true });
+                // Rows on banks outside the channel cannot be resident.
+                let in_channel: u64 =
+                    rows.iter().filter(|&(b, _)| b < self.num_banks).map(|(_, r)| r).sum();
+                let resident = in_channel > 0 && *total > 0;
+                let post = if *write && resident { self.t_wr } else { 0 };
+                if resident {
+                    // Physically the host stream also moves through its
+                    // destination banks — the same bank-at-a-time slices
+                    // as the cross-bank path (shared `slice_items`, so
+                    // the two placement models cannot diverge), but each
+                    // bank's span is its share of the rows that actually
+                    // land there: the cumulative rounding below
+                    // partitions the interval exactly, with no
+                    // `div_ceil` share left on the host path.
+                    let mut spans = [(0usize, 0u64); MAX_CORES];
+                    let mut n = 0;
+                    let mut acc = 0u64;
+                    for (b, r) in rows.iter() {
+                        if b >= self.num_banks {
+                            continue;
                         }
+                        let lo = *total * acc / in_channel;
+                        acc += r;
+                        let hi = *total * acc / in_channel;
+                        spans[n] = (b, hi - lo);
+                        n += 1;
+                        // The rows activate in the bank group they land
+                        // in — metered exactly, per the trace's map.
+                        self.group_acts[b / GROUP_BANKS] += r;
                     }
+                    self.slice_items(&spans[..n], post, true, *total);
+                    self.act_items(*total);
                 }
-                self.act_items(*total);
                 (*total, post)
             }
         }
     }
 
-    /// Per-bank 1/N slice reservations of a sequential bank-at-a-time
-    /// transfer: the i-th participating bank holds
-    /// `[i*slice, i*slice + min(slice, total - i*slice))` of the data
-    /// interval at its staggered offset, extended by the write-recovery
-    /// `tail`. One shared implementation for the cross-bank and host
-    /// paths, so a change to the stagger model (e.g. the ROADMAP
-    /// slice-pipelining follow-on) applies to both at once. Banks outside
-    /// the channel are skipped; with `attribute_host` set the slice spans
-    /// are additionally tallied into the per-bank host-residency
-    /// breakdown. Returns which ACT groups the sliced banks span.
+    /// Queue the per-bank slice group of a sequential bank-at-a-time
+    /// transfer. `spans` lists `(bank, span)` in the controller's
+    /// nominal walk order; each slice's rigid offset is the running sum
+    /// of the spans before it, and [`Timelines::fit`] decides whether it
+    /// stays there or slides later inside the data window. One shared
+    /// implementation for the cross-bank and host paths, so the two
+    /// placement models cannot diverge. Callers pass only in-channel
+    /// banks; zero-span entries are skipped. With `attribute_host` set
+    /// the slice spans are additionally tallied into the per-bank
+    /// host-residency breakdown.
     fn slice_items(
         &mut self,
-        banks: impl Iterator<Item = usize>,
-        total: u64,
-        slice: u64,
+        spans: &[(usize, u64)],
         tail: u64,
         attribute_host: bool,
-    ) -> [bool; NUM_ACT_GROUPS] {
-        let t_cmd = self.t_cmd;
-        let mut groups = [false; NUM_ACT_GROUPS];
-        if slice == 0 {
-            return groups;
-        }
-        let mut i = 0u64;
-        for b in banks {
-            if b >= self.num_banks {
+        window: u64,
+    ) {
+        let mut off = 0u64;
+        for &(b, span) in spans {
+            if span == 0 {
                 continue;
             }
-            let off_b = i * slice;
-            if off_b >= total {
-                break;
-            }
-            let span_b = slice.min(total - off_b);
+            debug_assert!(b < self.num_banks);
             if attribute_host {
-                self.host_bank[b] += span_b;
+                self.host_bank[b] += span;
             }
-            groups[b / GROUP_BANKS] = true;
-            self.req.push(ReqItem {
-                res: BANK0 + b,
-                off: t_cmd + off_b,
-                span: span_b,
-                tail,
-                tally: true,
-            });
-            i += 1;
+            self.slices.push(SliceReq { bank: b, off, span });
+            off += span;
         }
-        groups
+        self.slice_tail = tail;
+        self.slice_window = window;
     }
 
     /// Items for a lockstep all-PIMcores command (`PIMcore_CMP`,
@@ -640,6 +792,7 @@ impl Timelines {
         occ.host_bank_busy = self.host_bank;
         occ.act_busy = self.act_resv;
         occ.backfilled = self.tl.iter().map(|t| t.backfilled).sum();
+        occ.slid_slices = self.slid;
         occ
     }
 }
@@ -647,6 +800,7 @@ impl Timelines {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::RowMap;
 
     fn tl() -> Timelines {
         Timelines::new(&ArchConfig::baseline())
@@ -659,24 +813,13 @@ mod tests {
     /// Interface-only host I/O (no bank residency), as a residency-off
     /// config would expand it.
     fn host_io(total: u64) -> CmdCost {
-        CmdCost::Host {
-            total,
-            slice: 0,
-            banks: crate::trace::BankMask::EMPTY,
-            write: false,
-            acts: 0,
-        }
+        CmdCost::Host { total, rows: RowMap::EMPTY, write: false }
     }
 
-    /// Resident host I/O across the first `n` banks.
-    fn host_resident(total: u64, n: usize, write: bool, acts: u64) -> CmdCost {
-        CmdCost::Host {
-            total,
-            slice: total.div_ceil(n as u64),
-            banks: crate::trace::BankMask::all(n),
-            write,
-            acts,
-        }
+    /// Resident host I/O with one row in each of the first `n` banks
+    /// (the uniform map degenerates to the even 1/N slice split).
+    fn host_resident(total: u64, n: usize, write: bool) -> CmdCost {
+        CmdCost::Host { total, rows: RowMap::uniform(n, 1), write }
     }
 
     #[test]
@@ -884,8 +1027,9 @@ mod tests {
     #[test]
     fn host_slices_stagger_and_conflict_with_near_bank_streams() {
         let mut t = tl();
-        // A resident host stream across all 16 banks: slice = 10.
-        let h = t.issue(0, &host_resident(160, 16, false, 0));
+        // A resident host stream across all 16 banks: slice = 10. On
+        // idle banks the sliding placement is exactly the rigid stagger.
+        let h = t.issue(0, &host_resident(160, 16, false));
         assert_eq!((h.start, h.done), (0, 161));
         assert_eq!(t.tl[BANK0].iv, vec![(1, 11)], "bank 0 holds the first slice");
         assert_eq!(t.tl[BANK0 + 15].iv, vec![(151, 161)], "bank 15 the last");
@@ -915,7 +1059,7 @@ mod tests {
     #[test]
     fn host_write_recovery_blocks_bank_reuse() {
         let mut t = tl();
-        let w = t.issue(0, &host_resident(160, 16, true, 0));
+        let w = t.issue(0, &host_resident(160, 16, true));
         assert_eq!(w.done, 1 + 160 + 24, "completion includes the recovery window");
         // An independent read of bank 15 too long to back-fill the gap
         // before the slice starts >= t_wr after the slice's data end
@@ -929,17 +1073,56 @@ mod tests {
 
     #[test]
     fn host_acts_meter_the_groups_its_banks_span() {
-        // A resident host stream over banks 0..4 (group 0 only) with two
-        // row activations reserves that group's window; group 1 stays
-        // untouched.
+        // A resident host stream whose rows land only in banks 0 and 1
+        // (group 0) reserves that group's window for exactly its two
+        // activations; group 1 stays untouched.
         let mut t = tl();
-        t.issue(0, &host_resident(160, 4, false, 2));
+        t.issue(0, &CmdCost::Host { total: 160, rows: RowMap::from_rows(&[1, 1]), write: false });
         assert!(t.tl[ACT0].iv.len() == 2, "two interleaved ACT slots: {:?}", t.tl[ACT0].iv);
         assert!(t.tl[ACT0 + 1].iv.is_empty());
         let occ = t.into_occupancy(200);
         assert_eq!(occ.act_busy[0], 16, "2 ACTs * 8-cycle slot");
         assert_eq!(occ.act_busy_total(), 16);
         assert!(occ.act_utilization() > 0.0);
+    }
+
+    #[test]
+    fn host_rows_in_one_bank_hold_it_for_the_whole_stream() {
+        // A skewed row map with every row in bank 0: its slice is the
+        // entire data interval, no other bank is touched, and only
+        // group 0's ACT window is metered — at the exact row count.
+        let mut t = tl();
+        t.issue(0, &CmdCost::Host { total: 160, rows: RowMap::from_rows(&[4]), write: false });
+        assert_eq!(t.tl[BANK0].iv, vec![(1, 161)], "bank 0 holds the full stream");
+        assert!(t.tl[BANK0 + 1].iv.is_empty());
+        let occ = t.into_occupancy(200);
+        assert_eq!(occ.host_bank_busy[0], 160);
+        assert_eq!(occ.host_bank_total(), 160);
+        assert_eq!(occ.act_busy[0], 4 * 8, "4 ACTs at one 8-cycle slot each");
+        assert_eq!(occ.act_busy_total(), 32);
+    }
+
+    #[test]
+    fn host_row_map_skew_meters_act_windows_exactly() {
+        // Rows split 7/1 across banks 0 (group 0) and 4 (group 1). The
+        // old `div_ceil` share metered ceil(8/2) = 4 ACTs per spanned
+        // group — under-reserving group 0 (7 real rows) and
+        // over-reserving group 1 (1 real row) — and gave both banks an
+        // even half of the interval. The row map meters each group at
+        // its actual count and sizes each bank's slice by its row share.
+        let mut t = tl();
+        let mut rows = RowMap::EMPTY;
+        rows.set(0, 7);
+        rows.set(4, 1);
+        t.issue(0, &CmdCost::Host { total: 160, rows, write: false });
+        assert_eq!(t.tl[BANK0].iv, vec![(1, 141)], "bank 0 carries 7/8 of the interval");
+        assert_eq!(t.tl[BANK0 + 4].iv, vec![(141, 161)], "bank 4 the remaining 1/8");
+        let occ = t.into_occupancy(200);
+        assert_eq!(occ.host_bank_busy[0], 140);
+        assert_eq!(occ.host_bank_busy[4], 20);
+        assert_eq!(occ.act_busy[0], 7 * 8, "group 0 reserved for its 7 real ACTs, not 4");
+        assert_eq!(occ.act_busy[1], 8, "group 1 for its 1 real ACT, not 4");
+        assert_eq!(occ.act_busy[2], 0);
     }
 
     #[test]
@@ -990,6 +1173,88 @@ mod tests {
     }
 
     #[test]
+    fn sliding_slices_dodge_a_busy_bank() {
+        // A near-bank stream holds bank 0; an independent cross-bank
+        // transfer's rigid walk starts with bank 0 and would have to
+        // wait for it. Slice pipelining instead serves bank 0 later in
+        // the burst order: the transfer starts as soon as the command
+        // bus frees, and only bank 0's slice slides past the stream.
+        let mut t = tl();
+        let mut c0 = PerCore::zero(16);
+        c0.set(0, 50);
+        t.issue(0, &near(c0, false)); // bank 0 busy [1, 51)
+        let x = t.issue(0, &cross(160)); // slice 10, bank 0's rigid offset 0
+        assert_eq!(x.start, 1, "only the cmd-bus slot delays the transfer");
+        assert_eq!(x.done, 1 + 1 + 160);
+        // Bank 0's slice slid behind the stream; bank 1 kept its offset.
+        assert_eq!(t.tl[BANK0].iv, vec![(1, 61)], "stream [1,51) + slid slice [51,61)");
+        assert_eq!(t.tl[BANK0 + 1].iv, vec![(12, 22)]);
+        let occ = t.into_occupancy(400);
+        assert_eq!(occ.slid_slices, 10, "exactly bank 0's slice slid");
+    }
+
+    #[test]
+    fn sliding_window_slides_forward_minimally_when_a_slice_cannot_fit() {
+        // Bank 0 is busy for almost the whole transfer window: its
+        // earliest fit [156, 166) cannot sit inside the window at t = 1
+        // ([2, 162)). Instead of queueing the entire walk behind bank 0
+        // (the rigid start would be 155), the command slides forward
+        // just far enough — start 5, window [6, 166) — for the slice to
+        // fit at the window's very end.
+        let mut t = tl();
+        let mut c0 = PerCore::zero(16);
+        c0.set(0, 155);
+        t.issue(0, &near(c0, false)); // bank 0 busy [1, 156)
+        let x = t.issue(0, &cross(160));
+        assert_eq!(x.start, 5, "minimal forward slide, not the rigid wait");
+        assert_eq!(t.tl[BANK0].iv, vec![(1, 166)], "stream [1,156) + slid slice [156,166)");
+        let occ = t.into_occupancy(400);
+        assert_eq!(occ.slid_slices, 10);
+
+        // The same scenario under the rigid stagger queues behind bank 0.
+        let cfg = ArchConfig::baseline().with_slice_pipelining(false);
+        let mut tr = Timelines::new(&cfg);
+        let mut c0 = PerCore::zero(16);
+        c0.set(0, 155);
+        tr.issue(0, &near(c0, false));
+        assert_eq!(tr.issue(0, &cross(160)).start, 155);
+    }
+
+    #[test]
+    fn rigid_stagger_waits_for_the_busy_bank() {
+        // The same scenario with slice pipelining off: the whole
+        // transfer queues until bank 0 can take the first slice, and
+        // nothing slides.
+        let cfg = ArchConfig::baseline().with_slice_pipelining(false);
+        let mut t = Timelines::new(&cfg);
+        let mut c0 = PerCore::zero(16);
+        c0.set(0, 50);
+        t.issue(0, &near(c0, false));
+        let x = t.issue(0, &cross(160));
+        assert_eq!(x.start, 50, "the rigid walk waits for bank 0");
+        assert_eq!(t.tl[BANK0].iv, vec![(1, 61)], "stream, then the first slice right behind");
+        assert_eq!(t.tl[BANK0 + 1].iv, vec![(61, 71)]);
+        let occ = t.into_occupancy(400);
+        assert_eq!(occ.slid_slices, 0);
+    }
+
+    #[test]
+    fn sliding_host_slices_also_dodge_busy_banks() {
+        // The host path shares the sliding placement: a resident host
+        // stream behind a near-bank stream on bank 0 starts immediately
+        // and slides only that bank's slice.
+        let mut t = tl();
+        let mut c0 = PerCore::zero(16);
+        c0.set(0, 50);
+        t.issue(0, &near(c0, false));
+        let h = t.issue(0, &host_resident(160, 16, false));
+        assert_eq!(h.start, 1);
+        let occ = t.into_occupancy(400);
+        assert_eq!(occ.slid_slices, 10);
+        assert_eq!(occ.host_bank_total(), 160, "slices still partition the stream");
+    }
+
+    #[test]
     fn backfill_places_short_work_into_gaps() {
         let mut t = tl();
         // Two bus transfers leave the command bus with a gap [1, 160+1).
@@ -1019,6 +1284,7 @@ mod tests {
             host_busy: 5,
             cmdbus_busy: 8,
             backfilled: 12,
+            slid_slices: 9,
             ..Default::default()
         };
         occ.core_busy[0] = 60;
@@ -1040,10 +1306,13 @@ mod tests {
         assert!(s.contains("40.0%"), "{s}");
         assert!(s.contains("| cmd bus "), "{s}");
         assert!(s.contains("8.0%"), "{s}");
-        // The back-filled row is a cross-resource aggregate: it reports
-        // the cycle count with no idle/utilization cells.
+        // The back-filled and slid-slices rows are cross-resource
+        // aggregates: they report cycle counts with no idle/utilization
+        // cells.
         assert!(s.contains("| back-filled "), "{s}");
         assert!(s.contains(" 12 |"), "{s}");
+        assert!(s.contains("| slid slices "), "{s}");
+        assert!(s.contains(" 9 |"), "{s}");
         // pimcore mean = 40, bank mean = 20.
         assert!(s.contains("20.0%"), "{s}");
         // Host-residency and ACT-window rows: host/bank max 6 (6.0%),

@@ -36,9 +36,10 @@
 //!   window per bank group), with command ordering derived from the
 //!   trace's per-node data-flow annotations. Independent commands
 //!   overlap, short commands back-fill idle gaps, cross-bank transfers
-//!   reserve per-bank 1/N slices, and bank writes charge `tWR`
-//!   recovery; the result adds a per-resource [`ResourceOccupancy`]
-//!   breakdown.
+//!   reserve per-bank slices that can slide around busy banks
+//!   (`ArchConfig::slice_pipelining`), host I/O is metered per bank by
+//!   the trace's row map, and bank writes charge `tWR` recovery; the
+//!   result adds a per-resource [`ResourceOccupancy`] breakdown.
 //!
 //! Both engines tally identical [`ActionCounts`] for the energy model,
 //! so energy reports never depend on engine choice.
@@ -58,7 +59,9 @@ use crate::trace::Trace;
 /// event engine produced one.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimOutcome {
+    /// Cycles, action counts, and per-path breakdowns.
     pub result: SimResult,
+    /// Per-resource busy-cycle breakdown (event engine only).
     pub occupancy: Option<ResourceOccupancy>,
 }
 
@@ -78,26 +81,32 @@ pub fn run(cfg: &ArchConfig, trace: &Trace) -> SimOutcome {
 pub struct ActionCounts {
     /// DRAM row activations (ACT+PRE pairs).
     pub row_activations: u64,
-    /// Near-bank column reads/writes, in bytes (PIMcore↔local bank).
+    /// Near-bank column reads, in bytes (PIMcore←local bank).
     pub near_col_read_bytes: u64,
+    /// Near-bank column writes, in bytes (PIMcore→local bank).
     pub near_col_write_bytes: u64,
     /// Near-bank operand-feed bytes served by the open row buffer
     /// (column-mux energy only; see DESIGN.md §5).
     pub near_col_hit_bytes: u64,
-    /// Cross-bank column reads/writes, in bytes (bank↔GBUF via bus).
+    /// Cross-bank column reads, in bytes (bank→GBUF via the bus).
     pub cross_col_read_bytes: u64,
+    /// Cross-bank column writes, in bytes (GBUF→bank via the bus).
     pub cross_col_write_bytes: u64,
     /// Bytes that crossed the shared internal bus (cross-bank + broadcast).
     pub bus_bytes: u64,
-    /// GBUF SRAM accesses, bytes.
+    /// GBUF SRAM reads, bytes.
     pub gbuf_read_bytes: u64,
+    /// GBUF SRAM writes, bytes.
     pub gbuf_write_bytes: u64,
-    /// LBUF SRAM accesses, bytes.
+    /// LBUF SRAM reads, bytes.
     pub lbuf_read_bytes: u64,
+    /// LBUF SRAM writes, bytes.
     pub lbuf_write_bytes: u64,
-    /// Arithmetic.
+    /// MACs retired across all PIMcores.
     pub pimcore_macs: u64,
+    /// Element-wise ops retired across all PIMcores.
     pub pimcore_eltwise: u64,
+    /// Element-wise ops retired on the channel-level GBcore.
     pub gbcore_eltwise: u64,
     /// Off-chip host interface bytes.
     pub host_bytes: u64,

@@ -8,10 +8,10 @@
 //! GBUF route) based on the current data layout of every feature map.
 
 use crate::cnn::{Graph, NodeId, Op};
-use crate::config::{ArchConfig, ELEM_BYTES};
-use crate::dataflow::tiling::{tile_segment, TileDemand};
+use crate::config::{ArchConfig, ELEM_BYTES, ROW_BYTES};
+use crate::dataflow::tiling::{tile_grid, tile_segment, TileDemand};
 use crate::dataflow::{CostModel, Plan, PlanStep};
-use crate::trace::{BankMask, CmdKind, ExecFlags, PerCore, Trace};
+use crate::trace::{CmdKind, ExecFlags, PerCore, RowMap, Trace, MAX_CORES};
 use std::collections::HashMap;
 
 /// Where a feature map currently lives in the channel.
@@ -48,14 +48,14 @@ impl<'a> TraceGen<'a> {
         // spatial segment") — halo replication is still charged when the
         // fused kernel fetches it.
         // Either way the input is partitioned across every bank in the
-        // channel, so the host stream physically touches them all.
+        // channel; the row map records how many DRAM rows land in each.
         let input_bytes = self.g.nodes[0].shape.bytes() as u64;
-        let banks = BankMask::all(self.cfg.num_banks.min(crate::trace::MAX_CORES));
-        self.trace.push_dep(0, CmdKind::HostWrite { bytes: input_bytes, banks }, &[], Some(0));
         let first_layout = match plan.steps.first() {
             Some(PlanStep::Fused { grid, .. }) => Layout::Spatial { ty: grid.0, tx: grid.1 },
             _ => Layout::CoutBanked,
         };
+        let rows = self.host_row_map(0, first_layout);
+        self.trace.push_dep(0, CmdKind::HostWrite { bytes: input_bytes, rows }, &[], Some(0));
         self.layout.insert(0, first_layout);
 
         for step in &plan.steps {
@@ -66,14 +66,54 @@ impl<'a> TraceGen<'a> {
         }
 
         // Host reads the final output from wherever its layout placed it
-        // (both layouts stripe the map across all banks).
+        // (both layouts stripe the map across all banks; the recorded
+        // layout of the last layer decides each bank's row count).
         let out = self.g.nodes.last().unwrap();
+        let out_layout = self.layout.get(&out.id).copied().unwrap_or(Layout::CoutBanked);
+        let rows = self.host_row_map(out.id, out_layout);
         self.trace.push_dep(
             out.id,
-            CmdKind::HostRead { bytes: out.shape.bytes() as u64, banks },
+            CmdKind::HostRead { bytes: out.shape.bytes() as u64, rows },
             &[out.id],
             None,
         );
+    }
+
+    /// The per-bank row map of node `id`'s feature map under `layout` —
+    /// what the host I/O commands are annotated with (DESIGN.md §6.2).
+    ///
+    /// * `CoutBanked` maps stripe their bytes evenly across the channel
+    ///   (channel-interleaved placement), so each bank activates the
+    ///   rows of its 1/N byte share — with the remainder rows skewed to
+    ///   the lowest banks.
+    /// * `Spatial` maps give each PIMcore its own tile: the tile's
+    ///   demanded bytes (its pixel share of the map) land in that core's
+    ///   banks, so uneven tile grids produce genuinely uneven row maps.
+    fn host_row_map(&self, id: NodeId, layout: Layout) -> RowMap {
+        let n = self.cfg.num_banks.min(MAX_CORES);
+        let shape = &self.g.nodes[id].shape;
+        match layout {
+            Layout::CoutBanked => RowMap::striped(shape.bytes() as u64, n),
+            Layout::Spatial { ty, tx } => {
+                let bpc = self.cfg.banks_per_pimcore;
+                let mut m = RowMap::EMPTY;
+                for (core, rect) in tile_grid(shape.h, shape.w, ty, tx).iter().enumerate() {
+                    let bytes = (rect.pixels() * shape.c * ELEM_BYTES) as u64;
+                    // The tile stripes across its core's bank fan-in.
+                    let banks = bpc as u64;
+                    let (per, rem) = (bytes / banks, bytes % banks);
+                    for k in 0..bpc {
+                        let b = core * bpc + k;
+                        if b >= n {
+                            break;
+                        }
+                        let share = per + u64::from((k as u64) < rem);
+                        m.set(b, share.div_ceil(ROW_BYTES as u64));
+                    }
+                }
+                m
+            }
+        }
     }
 
     // ---------------------------------------------------------------
@@ -443,15 +483,44 @@ mod tests {
             assert!(s.num_cmds > 50, "{sys:?} trace too small");
             assert!(s.total_macs > 1_500_000_000, "{sys:?} lost MACs");
             // Host writes input and reads output exactly once, and both
-            // carry the full channel as their destination-bank set.
+            // row maps span the full channel with at least one row per
+            // bank (ResNet18's input and output stripe across all banks).
             let hw = t.cmds.iter().filter(|c| matches!(c.kind, CmdKind::HostWrite { .. })).count();
             let hr = t.cmds.iter().filter(|c| matches!(c.kind, CmdKind::HostRead { .. })).count();
             assert_eq!((hw, hr), (1, 1));
             for c in &t.cmds {
-                if let CmdKind::HostWrite { banks, .. } | CmdKind::HostRead { banks, .. } = c.kind {
-                    assert_eq!(banks.count(), 16, "{sys:?}: host I/O spans every bank");
+                if let CmdKind::HostWrite { rows, .. } | CmdKind::HostRead { rows, .. } = c.kind {
+                    assert_eq!(rows.bank_count(), 16, "{sys:?}: host I/O spans every bank");
+                    assert!(rows.total() >= 16, "{sys:?}: every bank activates a row");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn host_row_maps_follow_the_tensor_layout() {
+        let g = resnet18();
+        let input_rows = |t: &Trace| match &t.cmds[0].kind {
+            CmdKind::HostWrite { rows, .. } => *rows,
+            k => panic!("trace must open with the host input write, got {k:?}"),
+        };
+        // CoutBanked input: 224·224·3·2 B striped across 16 banks is
+        // 18816 B per bank — exactly 10 rows each.
+        let lbl = input_rows(&trace_for(System::AimLike, &g, 2048, 0));
+        assert!(lbl.iter().all(|(_, r)| r == 10), "{lbl:?}");
+        // Spatial input (Fused4, 2×2 grid): each 112×112 tile stripes
+        // its 75264 B over the core's 4 banks — the same 10 rows per
+        // bank, but derived from the tile geometry.
+        let fused = input_rows(&trace_for(System::Fused4, &g, 2048, 0));
+        assert_eq!(fused, lbl, "even tilings agree with the striped map");
+        // Output (FC, 2000 B): 125 B per bank still opens one row each.
+        let t = trace_for(System::Fused16, &g, 2048, 0);
+        match &t.cmds.last().unwrap().kind {
+            CmdKind::HostRead { rows, .. } => {
+                assert_eq!(rows.bank_count(), 16);
+                assert!(rows.iter().all(|(_, r)| r == 1), "{rows:?}");
+            }
+            k => panic!("trace must end with the host output read, got {k:?}"),
         }
     }
 

@@ -34,6 +34,7 @@ pub struct PerCore {
 }
 
 impl PerCore {
+    /// Zero on each of `n` cores (1 ≤ `n` ≤ [`MAX_CORES`]).
     pub fn zero(n: usize) -> Self {
         assert!(n >= 1 && n <= MAX_CORES);
         Self { vals: [0; MAX_CORES], n }
@@ -46,49 +47,56 @@ impl PerCore {
         pc
     }
 
+    /// One value per core, in core order.
     pub fn from_slice(vs: &[u64]) -> Self {
         let mut pc = Self::zero(vs.len());
         pc.vals[..vs.len()].copy_from_slice(vs);
         pc
     }
 
+    /// Number of cores the array covers.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Whether the array covers no cores at all.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
 
+    /// Core `i`'s value (panics out of range).
     pub fn get(&self, i: usize) -> u64 {
         assert!(i < self.n);
         self.vals[i]
     }
 
+    /// Set core `i`'s value (panics out of range).
     pub fn set(&mut self, i: usize, v: u64) {
         assert!(i < self.n);
         self.vals[i] = v;
     }
 
+    /// The largest per-core value (what bounds a lockstep command).
     pub fn max(&self) -> u64 {
         self.vals[..self.n].iter().copied().max().unwrap_or(0)
     }
 
+    /// The sum across cores (what the energy model tallies).
     pub fn sum(&self) -> u64 {
         self.vals[..self.n].iter().sum()
     }
 
+    /// Per-core values in core order.
     pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
         self.vals[..self.n].iter().copied()
     }
 }
 
-/// The set of banks a host I/O command physically streams through, as a
-/// bitmask over the channel's (≤ [`MAX_CORES`]) banks. The trace
-/// generator annotates `HOST_WRITE`/`HOST_READ` with their destination
-/// banks so the engines can charge bank residency — the network input is
-/// written partitioned across all banks, and the output is read back
-/// from wherever the final layer's layout placed it (DESIGN.md §6.2).
+/// A set of banks, as a bitmask over the channel's (≤ [`MAX_CORES`])
+/// banks. The engines themselves consume the finer-grained [`RowMap`]
+/// (which generalizes and superseded this type on the host-I/O path);
+/// the mask survives as the compact public "which banks at all" view a
+/// [`RowMap::banks`] projects out for downstream tooling.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct BankMask(u16);
 
@@ -106,6 +114,7 @@ impl BankMask {
         }
     }
 
+    /// Whether bank `b` is in the set (out-of-range banks never are).
     pub fn contains(&self, b: usize) -> bool {
         b < MAX_CORES && self.0 & (1 << b) != 0
     }
@@ -115,6 +124,7 @@ impl BankMask {
         self.0.count_ones() as usize
     }
 
+    /// Whether the set holds no banks at all.
     pub fn is_empty(&self) -> bool {
         self.0 == 0
     }
@@ -125,12 +135,120 @@ impl BankMask {
     }
 }
 
+/// Per-bank DRAM row counts of a host I/O command: which of the
+/// channel's (≤ [`MAX_CORES`]) banks the stream physically lands in, and
+/// how many 2-KB rows ([`crate::config::ROW_BYTES`]) it activates in
+/// each. Generalizes [`BankMask`] — where the mask only said *which*
+/// banks host traffic touches, the row map says *how much* lands in
+/// each, so the event engine can meter every bank's slice span and every
+/// bank group's ACT window from the rows that actually hit it instead of
+/// even `div_ceil` shares (DESIGN.md §6.2). The trace generator computes
+/// it from the feature map's tensor layout ([`gen`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RowMap {
+    rows: [u32; MAX_CORES],
+}
+
+impl RowMap {
+    /// No banks — host traffic with no modeled residency.
+    pub const EMPTY: RowMap = RowMap { rows: [0; MAX_CORES] };
+
+    /// Row counts per bank, in bank order (`vs[b]` rows land in bank `b`).
+    pub fn from_rows(vs: &[u64]) -> Self {
+        assert!(vs.len() <= MAX_CORES, "row map wider than the channel");
+        let mut m = RowMap::EMPTY;
+        for (b, &r) in vs.iter().enumerate() {
+            m.set(b, r);
+        }
+        m
+    }
+
+    /// The same row count in each of the first `n` banks.
+    pub fn uniform(n: usize, rows: u64) -> Self {
+        assert!(n <= MAX_CORES);
+        let mut m = RowMap::EMPTY;
+        for b in 0..n {
+            m.set(b, rows);
+        }
+        m
+    }
+
+    /// The row map of `bytes` striped evenly across the first `n` banks
+    /// (remainder bytes to the lowest banks), each bank activating
+    /// `ceil(its bytes / ROW_BYTES)` rows — the channel-interleaved
+    /// layout of a `CoutBanked` feature map.
+    pub fn striped(bytes: u64, n: usize) -> Self {
+        assert!(n <= MAX_CORES);
+        let mut m = RowMap::EMPTY;
+        if bytes == 0 || n == 0 {
+            return m;
+        }
+        let (per, rem) = (bytes / n as u64, bytes % n as u64);
+        for b in 0..n {
+            let share = per + u64::from((b as u64) < rem);
+            m.set(b, share.div_ceil(crate::config::ROW_BYTES as u64));
+        }
+        m
+    }
+
+    /// Set bank `b`'s row count.
+    pub fn set(&mut self, b: usize, rows: u64) {
+        assert!(b < MAX_CORES);
+        self.rows[b] = u32::try_from(rows).expect("per-bank row count exceeds u32");
+    }
+
+    /// Rows landing in bank `b` (0 for out-of-range banks).
+    pub fn get(&self, b: usize) -> u64 {
+        if b < MAX_CORES {
+            self.rows[b] as u64
+        } else {
+            0
+        }
+    }
+
+    /// Total rows across all banks. Per-bank rounding means this can
+    /// exceed `ceil(bytes / ROW_BYTES)` — each bank opens its own rows.
+    pub fn total(&self) -> u64 {
+        self.rows.iter().map(|&r| r as u64).sum()
+    }
+
+    /// The banks with at least one row, as a [`BankMask`].
+    pub fn banks(&self) -> BankMask {
+        let mut bits = 0u16;
+        for (b, &r) in self.rows.iter().enumerate() {
+            if r > 0 {
+                bits |= 1 << b;
+            }
+        }
+        BankMask(bits)
+    }
+
+    /// Number of banks with at least one row.
+    pub fn bank_count(&self) -> usize {
+        self.rows.iter().filter(|&&r| r > 0).count()
+    }
+
+    /// Whether no bank holds any rows (interface-only host traffic).
+    pub fn is_empty(&self) -> bool {
+        self.rows.iter().all(|&r| r == 0)
+    }
+
+    /// `(bank, rows)` pairs for every non-empty bank, ascending.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.rows.iter().enumerate().filter(|(_, &r)| r > 0).map(|(b, &r)| (b, r as u64))
+    }
+}
+
 /// Execution flags of the compute commands (Table I note).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ExecFlags {
+    /// Convolution with fused batch-norm.
     ConvBn,
+    /// Convolution with fused batch-norm and ReLU.
     ConvBnRelu,
+    /// Max/average pooling.
     Pool,
+    /// Residual add with fused ReLU.
     AddRelu,
     /// FC runs on the MAC datapath like CONV (1×1 spatial).
     Gemv,
@@ -147,6 +265,7 @@ pub enum ExecFlags {
 pub enum CmdKind {
     /// `PIMcore_CMP` — all PIMcores execute concurrently.
     PimcoreCmp {
+        /// Fused-operation selector (Table I note).
         flags: ExecFlags,
         /// MACs retired per core (max across cores bounds compute time).
         macs: PerCore,
@@ -166,21 +285,49 @@ pub enum CmdKind {
         gbuf_stream: u64,
     },
     /// `GBcore_CMP` — pool/add/gap on the channel-level GBcore.
-    GbcoreCmp { flags: ExecFlags, eltwise: u64 },
+    GbcoreCmp {
+        /// Fused-operation selector (POOL / ADD_RELU / GAP).
+        flags: ExecFlags,
+        /// Element-wise ops the GBcore retires.
+        eltwise: u64,
+    },
     /// `PIM_BK2LBUF` — parallel bank→LBUF fill (all cores at once).
-    Bk2Lbuf { bytes: PerCore },
+    Bk2Lbuf {
+        /// Bytes each core fills from its local bank(s).
+        bytes: PerCore,
+    },
     /// `PIM_LBUF2BK` — parallel LBUF→bank spill.
-    Lbuf2Bk { bytes: PerCore },
+    Lbuf2Bk {
+        /// Bytes each core spills to its local bank(s).
+        bytes: PerCore,
+    },
     /// `PIM_BK2GBUF` — sequential bank-at-a-time gather into the GBUF
     /// (the cross-bank read path).
-    Bk2Gbuf { bytes: u64 },
+    Bk2Gbuf {
+        /// Total bytes gathered over the shared bus.
+        bytes: u64,
+    },
     /// `PIM_GBUF2BK` — sequential GBUF→bank scatter (cross-bank write).
-    Gbuf2Bk { bytes: u64 },
+    Gbuf2Bk {
+        /// Total bytes scattered over the shared bus.
+        bytes: u64,
+    },
     /// Host writes network input into banks over the channel interface,
-    /// streaming through the destination `banks` bank-at-a-time.
-    HostWrite { bytes: u64, banks: BankMask },
-    /// Host reads network output from the `banks` holding it.
-    HostRead { bytes: u64, banks: BankMask },
+    /// streaming bank-at-a-time through the banks of its row map (which
+    /// records how many DRAM rows land in each destination bank).
+    HostWrite {
+        /// Bytes crossing the off-chip interface.
+        bytes: u64,
+        /// Per-bank DRAM rows the stream lands in ([`RowMap`]).
+        rows: RowMap,
+    },
+    /// Host reads network output from the banks its row map says hold it.
+    HostRead {
+        /// Bytes crossing the off-chip interface.
+        bytes: u64,
+        /// Per-bank DRAM rows the stream reads back ([`RowMap`]).
+        rows: RowMap,
+    },
 }
 
 /// Upper bound on feature maps one command reads (`ADD_RELU`'s operand
@@ -199,6 +346,7 @@ impl Deps {
     /// No dependencies (what [`Trace::push`] records).
     pub const EMPTY: Deps = Deps { ids: [0; MAX_DEPS], n: 0 };
 
+    /// The dependency set of the given feature-map ids (≤ [`MAX_DEPS`]).
     pub fn from_slice(ids: &[NodeId]) -> Self {
         assert!(ids.len() <= MAX_DEPS, "command reads more than {MAX_DEPS} feature maps");
         let mut d = Deps::EMPTY;
@@ -209,14 +357,17 @@ impl Deps {
         d
     }
 
+    /// Number of feature maps in the set.
     pub fn len(&self) -> usize {
         self.n as usize
     }
 
+    /// Whether the set is empty (no cross-node ordering constraints).
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
 
+    /// The feature-map ids, in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.ids[..self.n as usize].iter().copied()
     }
@@ -226,7 +377,9 @@ impl Deps {
 /// annotations (see the module docs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Cmd {
+    /// The graph node this command serves (per-layer auditing).
     pub node: NodeId,
+    /// The macro command and its analytic volumes.
     pub kind: CmdKind,
     /// Feature maps whose current layout this command consumes.
     pub reads: Deps,
@@ -237,6 +390,7 @@ pub struct Cmd {
 /// A full workload trace.
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
+    /// The command stream, in controller issue order.
     pub cmds: Vec<Cmd>,
 }
 
@@ -244,6 +398,7 @@ pub struct Trace {
 /// contrasts (cross-bank bytes vs local reuse).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TraceStats {
+    /// Commands in the trace.
     pub num_cmds: usize,
     /// Bytes moved over the shared bus through the GBUF, bank→GBUF.
     pub cross_bank_read: u64,
@@ -257,14 +412,17 @@ pub struct TraceStats {
     pub near_bank_hit: u64,
     /// Near-bank bytes written.
     pub near_bank_write: u64,
-    /// Parallel bank↔LBUF transfer bytes (sum over cores).
+    /// Parallel bank→LBUF fill bytes (sum over cores).
     pub lbuf_fill: u64,
+    /// Parallel LBUF→bank spill bytes (sum over cores).
     pub lbuf_spill: u64,
     /// Host interface bytes.
     pub host_bytes: u64,
-    /// Total MACs and element-wise ops (for energy).
+    /// Total MACs (for energy).
     pub total_macs: u64,
+    /// Total PIMcore element-wise ops (BN/ReLU/pool/add).
     pub total_eltwise: u64,
+    /// Element-wise ops executed on the channel-level GBcore.
     pub gbcore_eltwise: u64,
 }
 
@@ -312,6 +470,7 @@ impl Trace {
         m
     }
 
+    /// Aggregate the trace's transfer volumes by path ([`TraceStats`]).
     pub fn stats(&self) -> TraceStats {
         let mut s = TraceStats { num_cmds: self.cmds.len(), ..Default::default() };
         for c in &self.cmds {
@@ -365,11 +524,19 @@ impl Trace {
                 }
                 CmdKind::Bk2Gbuf { bytes } => format!("PIM_BK2GBUF  {bytes}B (sequential)"),
                 CmdKind::Gbuf2Bk { bytes } => format!("PIM_GBUF2BK  {bytes}B (sequential)"),
-                CmdKind::HostWrite { bytes, banks } => {
-                    format!("HOST_WRITE   {bytes}B -> {} banks", banks.count())
+                CmdKind::HostWrite { bytes, rows } => {
+                    format!(
+                        "HOST_WRITE   {bytes}B -> {} banks / {} rows",
+                        rows.bank_count(),
+                        rows.total()
+                    )
                 }
-                CmdKind::HostRead { bytes, banks } => {
-                    format!("HOST_READ    {bytes}B <- {} banks", banks.count())
+                CmdKind::HostRead { bytes, rows } => {
+                    format!(
+                        "HOST_READ    {bytes}B <- {} banks / {} rows",
+                        rows.bank_count(),
+                        rows.total()
+                    )
                 }
             };
             out += &format!("{i:>5}  node {:>3}  {desc}\n", c.node);
@@ -460,12 +627,12 @@ mod tests {
     #[test]
     fn dump_is_line_per_cmd() {
         let mut t = Trace::default();
-        t.push(0, CmdKind::HostWrite { bytes: 42, banks: BankMask::all(16) });
+        t.push(0, CmdKind::HostWrite { bytes: 42, rows: RowMap::uniform(16, 1) });
         t.push(1, CmdKind::Bk2Gbuf { bytes: 7 });
         let d = t.dump(10);
         assert_eq!(d.lines().count(), 2);
         assert!(d.contains("PIM_BK2GBUF"));
-        assert!(d.contains("-> 16 banks"), "host dump names its destination banks: {d}");
+        assert!(d.contains("-> 16 banks / 16 rows"), "host dump names its row map: {d}");
     }
 
     #[test]
@@ -485,5 +652,51 @@ mod tests {
     #[should_panic]
     fn bank_mask_bounds_checked() {
         BankMask::all(17);
+    }
+
+    #[test]
+    fn row_map_accessors() {
+        assert!(RowMap::EMPTY.is_empty());
+        assert_eq!(RowMap::EMPTY.total(), 0);
+        let m = RowMap::from_rows(&[3, 0, 5]);
+        assert_eq!(m.get(0), 3);
+        assert_eq!(m.get(1), 0);
+        assert_eq!(m.get(2), 5);
+        assert_eq!(m.get(99), 0, "out-of-range banks hold nothing");
+        assert_eq!(m.total(), 8);
+        assert_eq!(m.bank_count(), 2);
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![(0, 3), (2, 5)]);
+        // The mask view lists exactly the non-empty banks.
+        assert!(m.banks().contains(0) && !m.banks().contains(1) && m.banks().contains(2));
+        assert_eq!(m.banks().count(), 2);
+        let u = RowMap::uniform(4, 2);
+        assert_eq!(u.total(), 8);
+        assert_eq!(u.banks().iter().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn row_map_striped_splits_bytes_then_rounds_rows() {
+        use crate::config::ROW_BYTES;
+        let row = ROW_BYTES as u64;
+        // 16 banks × exactly 10 rows each.
+        let even = RowMap::striped(16 * 10 * row, 16);
+        assert!(even.iter().all(|(_, r)| r == 10));
+        assert_eq!(even.total(), 160);
+        // A remainder byte lands in bank 0 and costs it one extra row.
+        let skew = RowMap::striped(16 * 10 * row + 1, 16);
+        assert_eq!(skew.get(0), 11);
+        assert_eq!(skew.get(1), 10);
+        // Fewer bytes than banks: the lowest banks carry one row each.
+        let tiny = RowMap::striped(3, 16);
+        assert_eq!(tiny.bank_count(), 3);
+        assert_eq!(tiny.total(), 3);
+        assert_eq!(RowMap::striped(0, 16), RowMap::EMPTY);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_map_bounds_checked() {
+        let mut m = RowMap::EMPTY;
+        m.set(MAX_CORES, 1);
     }
 }

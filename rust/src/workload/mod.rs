@@ -1,6 +1,6 @@
 //! Workload scenarios evaluated by the paper (§V-A2).
 //!
-//! Every variant's canonical name and CLI aliases live in one [`TABLE`];
+//! Every variant's canonical name and CLI aliases live in one `TABLE`;
 //! [`Workload::ALL`], [`Workload::name`] and [`Workload::parse`] are all
 //! driven from it, so adding a workload is a one-row change (plus its
 //! graph builder) and the accessors cannot drift apart.
@@ -35,7 +35,7 @@ const TABLE: &[(Workload, &str, &[&str])] = &[
 ];
 
 impl Workload {
-    /// Every workload, in [`TABLE`] order (checked by a test).
+    /// Every workload, in `TABLE` order (checked by a test).
     pub const ALL: [Workload; 5] = [
         Workload::ResNet18Full,
         Workload::ResNet18First8,
@@ -47,6 +47,7 @@ impl Workload {
     /// The two workloads the paper's figures evaluate.
     pub const PAPER: [Workload; 2] = [Workload::ResNet18First8, Workload::ResNet18Full];
 
+    /// Build the workload's validated CNN graph.
     pub fn graph(&self) -> Graph {
         match self {
             Workload::ResNet18Full => resnet18(),

@@ -73,10 +73,11 @@ fn event_beats_serial_on_full_resnet18_everywhere() {
 
 #[test]
 fn engines_agree_on_random_configs() {
-    // Random (system, buffers, workload, host-residency) points over all
-    // Workload::ALL plans: the agreement invariants are config-independent
-    // and hold for both host models (resident bank slices and
-    // interface-only).
+    // Random (system, buffers, workload, host-residency,
+    // slice-pipelining) points over all Workload::ALL plans: the
+    // agreement invariants are config-independent and hold for both host
+    // models (resident bank slices and interface-only) and both slice
+    // placements (sliding and rigid stagger).
     let session = Session::new();
     check_no_shrink(
         "engine-agreement-random",
@@ -87,15 +88,22 @@ fn engines_agree_on_random_configs() {
             let lbuf = *g.choose(&[0usize, 64, 256]);
             let w = *g.choose(&Workload::ALL);
             let residency = g.bool();
-            (sys, gbuf, lbuf, w, residency)
+            let pipelining = g.bool();
+            (sys, gbuf, lbuf, w, residency, pipelining)
         },
-        |&(sys, gbuf, lbuf, w, residency)| {
-            let cfg = ArchConfig::system(sys, gbuf, lbuf).with_host_residency(residency);
+        |&(sys, gbuf, lbuf, w, residency, pipelining)| {
+            let cfg = ArchConfig::system(sys, gbuf, lbuf)
+                .with_host_residency(residency)
+                .with_slice_pipelining(pipelining);
             let (a, e) = pair(&session, &cfg, w);
             assert_agreement(
                 &a,
                 &e,
-                &format!("{} on {} (residency {residency})", w.name(), cfg.label()),
+                &format!(
+                    "{} on {} (residency {residency}, pipelining {pipelining})",
+                    w.name(),
+                    cfg.label()
+                ),
             );
             true
         },
@@ -121,19 +129,31 @@ fn backfilled_schedules_stay_legal_on_random_configs() {
             let lbuf = *g.choose(&[0usize, 64, 256]);
             let w = *g.choose(&Workload::ALL);
             let residency = g.bool();
-            (sys, gbuf, lbuf, w, residency)
+            let pipelining = g.bool();
+            (sys, gbuf, lbuf, w, residency, pipelining)
         },
-        |&(sys, gbuf, lbuf, w, residency)| {
-            let cfg = ArchConfig::system(sys, gbuf, lbuf).with_host_residency(residency);
+        |&(sys, gbuf, lbuf, w, residency, pipelining)| {
+            let cfg = ArchConfig::system(sys, gbuf, lbuf)
+                .with_host_residency(residency)
+                .with_slice_pipelining(pipelining);
             let graph = w.graph();
             let p = plan(&graph, &cfg);
             let tr = generate(&graph, &cfg, &p, CostModel::default());
-            let ctx = format!("{} on {} (residency {residency})", w.name(), cfg.label());
+            let ctx = format!(
+                "{} on {} (residency {residency}, pipelining {pipelining})",
+                w.name(),
+                cfg.label()
+            );
             let a = event::audit(&cfg, &tr).unwrap_or_else(|e| panic!("{ctx}: {e}"));
             // The audit's certified host-bank traffic exists exactly when
             // residency is on (every generated trace has host I/O).
             assert_eq!(a.host_bank_cycles > 0, residency, "{ctx}");
             assert!(a.act_window_cycles > 0, "{ctx}: traces always activate rows");
+            // The rigid stagger never slides a slice; the audit would
+            // have rejected one outright.
+            if !pipelining {
+                assert_eq!(a.slid_cycles, 0, "{ctx}");
+            }
             a.starts.len() == tr.cmds.len() && a.dones.len() == tr.cmds.len()
         },
     );
@@ -189,20 +209,67 @@ fn host_residency_charges_banks_during_host_phases_on_resnet18() {
 }
 
 #[test]
+fn slice_pipelining_never_slows_resnet18() {
+    // Pinned acceptance (ISSUE 5): on full ResNet18, letting slices
+    // slide never *increases* event cycles versus the rigid stagger, for
+    // every system. Per command the sliding constraint set is strictly
+    // weaker than the rigid one (a command never starts later), which
+    // makes this hold in practice — but greedy list schedulers admit
+    // anomalies in principle, so treat this as an empirical regression
+    // pin: if a model change trips it, diff the two schedules before
+    // hunting for a scheduler bug. Both runs must also keep all three
+    // engine-agreement invariants.
+    for sys in System::ALL {
+        let on = ArchConfig::system(sys, 8192, 128).with_engine(Engine::Event);
+        let off = on.clone().with_slice_pipelining(false);
+        let graph = Workload::ResNet18Full.graph();
+        let p = plan(&graph, &on);
+        let tr = generate(&graph, &on, &p, CostModel::default());
+        let ev_on = event::simulate(&on, &tr);
+        let ev_off = event::simulate(&off, &tr);
+        assert!(
+            ev_on.result.cycles <= ev_off.result.cycles,
+            "{sys:?}: sliding {} must not exceed rigid {}",
+            ev_on.result.cycles,
+            ev_off.result.cycles
+        );
+        // The rigid run never slides; both runs' audits certify legal
+        // schedules and agree with the occupancy's slid tally.
+        assert_eq!(ev_off.occupancy.slid_slices, 0, "{sys:?}");
+        let a_on = event::audit(&on, &tr).unwrap_or_else(|e| panic!("{sys:?}: {e}"));
+        let a_off = event::audit(&off, &tr).unwrap_or_else(|e| panic!("{sys:?}: {e}"));
+        assert_eq!(a_on.slid_cycles, ev_on.occupancy.slid_slices, "{sys:?}");
+        assert_eq!(a_off.slid_cycles, 0, "{sys:?}");
+        for (cfg, ev) in [(&on, &ev_on), (&off, &ev_off)] {
+            let an = pimfused::sim::simulate(cfg, &tr);
+            assert_eq!(ev.result.actions, an.actions, "{sys:?}");
+            assert!(ev.result.cycles <= an.cycles, "{sys:?}");
+            assert!(ev.result.cycles >= ev.occupancy.busiest(), "{sys:?}");
+        }
+    }
+}
+
+#[test]
 fn normalization_is_engine_consistent() {
-    // Each (engine, host-residency) pair normalizes against its own
-    // baseline, so the baseline config itself is exactly 1.0 under every
-    // combination — no ratio ever mixes models.
+    // Each (engine, host-residency, slice-pipelining) combination
+    // normalizes against its own baseline, so the baseline config itself
+    // is exactly 1.0 under every combination — no ratio ever mixes
+    // models.
     let session = Session::new();
     for engine in Engine::ALL {
         for residency in [true, false] {
-            let cfg = ArchConfig::baseline().with_engine(engine).with_host_residency(residency);
-            let n = session.normalized(&cfg, Workload::ResNet18First8).unwrap();
-            assert!(
-                (n.cycles - 1.0).abs() < 1e-12,
-                "{engine:?} residency={residency} self-normalization"
-            );
-            assert!((n.energy - 1.0).abs() < 1e-12);
+            for pipelining in [true, false] {
+                let cfg = ArchConfig::baseline()
+                    .with_engine(engine)
+                    .with_host_residency(residency)
+                    .with_slice_pipelining(pipelining);
+                let n = session.normalized(&cfg, Workload::ResNet18First8).unwrap();
+                assert!(
+                    (n.cycles - 1.0).abs() < 1e-12,
+                    "{engine:?} residency={residency} pipelining={pipelining}"
+                );
+                assert!((n.energy - 1.0).abs() < 1e-12);
+            }
         }
     }
 }

@@ -129,6 +129,7 @@ fn golden_results() -> SweepResults {
         host_busy: 5,
         cmdbus_busy: 3,
         backfilled: 7,
+        slid_slices: 4,
         ..Default::default()
     };
     for i in 0..4 {
@@ -204,7 +205,7 @@ fn json_golden_output() {
       "energy_pj": 1.5,
       "area_mm2": 0.25,
       "norm": {"cycles": 0.45, "energy": 0.75, "area": 1},
-      "utilization": {"makespan": 90, "bus": 40, "cmdbus": 3, "gbcore": 10, "host": 5, "backfilled": 7, "cores": [80, 79, 78, 77], "banks": [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15], "host_banks": [0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3], "act_windows": [12, 9, 6, 3]},
+      "utilization": {"makespan": 90, "bus": 40, "cmdbus": 3, "gbcore": 10, "host": 5, "backfilled": 7, "slid": 4, "cores": [80, 79, 78, 77], "banks": [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15], "host_banks": [0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3], "act_windows": [12, 9, 6, 3]},
       "error": null
     },
     {
@@ -229,10 +230,10 @@ fn json_golden_output() {
 
 #[test]
 fn csv_golden_output() {
-    let want = "config,system,gbuf_bytes,lbuf_bytes,workload,engine,cycles,energy_pj,area_mm2,norm_cycles,norm_energy,norm_area,host_bank_busy,act_window_busy,error\n\
-                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,analytic,100,1.5,0.25,0.5,0.75,1,,,\n\
-                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,event,90,1.5,0.25,0.45,0.75,1,24,30,\n\
-                AiM-like/G2K_L0,AiM-like,2048,0,Fig1_Example,analytic,,,,,,,,,\"boom \"\"quoted\"\"\"\n";
+    let want = "config,system,gbuf_bytes,lbuf_bytes,workload,engine,cycles,energy_pj,area_mm2,norm_cycles,norm_energy,norm_area,host_bank_busy,act_window_busy,slid_slices,error\n\
+                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,analytic,100,1.5,0.25,0.5,0.75,1,,,,\n\
+                Fused4/G2K_L0,Fused4,2048,0,Fig1_Example,event,90,1.5,0.25,0.45,0.75,1,24,30,4,\n\
+                AiM-like/G2K_L0,AiM-like,2048,0,Fig1_Example,analytic,,,,,,,,,,\"boom \"\"quoted\"\"\"\n";
     assert_eq!(golden_results().to_csv(), want);
 }
 
