@@ -1,0 +1,71 @@
+//! Serving-throughput bench: simulated requests per wall-clock second
+//! through the serving driver (`ServeDriver::run`). The per-`(workload,
+//! config)` schedule is memoized, so after the first run the steady-state
+//! loop is a pure queue replay — the `schedule_runs` count printed below
+//! must stay at 1 no matter how many streams replay.
+//!
+//! CI runs this in `--smoke` mode (one timed iteration per shape) and
+//! uploads the stdout next to `bench_sched.txt`; the machine-readable
+//! `serve-bench:` lines carry the tracked numbers.
+
+use pimfused::benchkit::{bench, section};
+use pimfused::config::{ArchConfig, Engine, System};
+use pimfused::coordinator::Session;
+use pimfused::serve::{ServeConfig, ServeDriver};
+use pimfused::workload::Workload;
+
+fn main() {
+    let mut smoke = false;
+    for a in std::env::args().skip(1) {
+        match a.as_str() {
+            "--smoke" => smoke = true,
+            // Cargo appends `--bench` to every bench executable it runs.
+            "--bench" => {}
+            other => panic!("unknown bench_serve option {other:?} (supported: --smoke)"),
+        }
+    }
+    let (requests, warmup, iters) = if smoke { (10_000usize, 1, 3) } else { (100_000, 2, 20) };
+
+    let session = Session::new();
+    let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256).with_engine(Engine::Event);
+    let workload = Workload::ResNet18Small;
+    // Offer 1.2x the single-inference service rate: past the knee, so the
+    // queue stays busy and batching has work to amortize.
+    let single = session.run(&cfg, workload).expect("schedule workload").cycles.max(1);
+    let rate = 1.2 * cfg.timing.clock_hz() / single as f64;
+
+    section(&format!(
+        "serving replay throughput, {} on {} ({requests} requests/stream)",
+        cfg.label(),
+        workload.name()
+    ));
+    let driver = ServeDriver::new(&session);
+    for batch in [1usize, 8] {
+        let sc = ServeConfig::new(cfg.clone(), workload, rate)
+            .requests(requests)
+            .batch(batch)
+            .queue_depth(1024.max(batch));
+        // Warm the schedule memo so the timed loop measures replay only.
+        let r = driver.run(&sc).expect("serve run");
+        let b = bench(
+            &format!("batch={batch:<3} stream replay ({requests} reqs)"),
+            warmup,
+            iters,
+            || driver.run(&sc).expect("serve run").completed,
+        );
+        let simulated_rps = requests as f64 / b.median.as_secs_f64().max(f64::MIN_POSITIVE);
+        println!(
+            "  serve-bench: batch={} requests={} simulated_req_per_s={:.0} schedule_runs={} \
+             completed={} dropped={} sustained_rps={:.0} p99_cycles={}",
+            batch,
+            requests,
+            simulated_rps,
+            driver.schedule_runs(),
+            r.completed,
+            r.dropped,
+            r.throughput_rps,
+            r.latency.p99,
+        );
+        assert_eq!(driver.schedule_runs(), 1, "replays must not reschedule");
+    }
+}

@@ -4,6 +4,7 @@
 //! pimfused simulate --config fused4:G32K_L256 --workload full [--engine event] [--json]
 //! pimfused fig5|fig6|fig7|takeaways|headline
 //! pimfused sweep --systems aim,fused16,fused4 --gbuf 2K,32K --lbuf 0,256 --workload full [--engine event] [--json]
+//! pimfused serve --workload full --rate 20000 --requests 1000 --batch 8 [--json|--csv]
 //! pimfused trace --config fused16:G2K_L0 --workload fig3 [--limit 40]
 //! pimfused validate --config fused4:G8K_L128
 //! pimfused cmdset
@@ -15,8 +16,11 @@
 //! a non-zero exit and the usage text.
 
 use crate::config::{ArchConfig, Engine, System};
-use crate::coordinator::{experiments, Session, SweepGrid, SweepPoint, SweepResults};
+use crate::coordinator::{
+    experiments, serve_to_csv, serve_to_json, Session, SweepGrid, SweepPoint, SweepResults,
+};
 use crate::dataflow::{plan, CostModel};
+use crate::serve::{ArrivalKind, ServeConfig};
 use crate::trace::gen::generate;
 use crate::util::size::parse_bytes;
 use crate::workload::Workload;
@@ -37,6 +41,11 @@ commands:
   fig5 | fig6 | fig7                regenerate the paper's figures
                                     [--engine analytic|event]
   takeaways | headline              §V-D statistics / the headline claim
+  serve      request-stream serving --workload <w> --rate <req/s> | --rates r1,r2,..
+                                    [--requests N] [--batch K] [--batch-timeout CYC]
+                                    [--queue-depth D] [--seed S] [--warmup F]
+                                    [--arrival poisson|fixed] [--config <sys:GmK_Ln>]
+                                    [--engine analytic|event] [--json|--csv]
   trace      dump a command trace   --config <sys:GmK_Ln> --workload <w> [--limit N]
   validate   functional validation  --config <sys:GmK_Ln>
   cmdset     list the Table-I PIM commands
@@ -46,15 +55,20 @@ engines:   analytic (serial sum) | event (overlap-aware, reports utilization)
 host-residency: model host I/O's bank occupancy (default on; off = interface-only)
 slice-pipelining: let per-bank transfer slices slide around busy banks (default on;
                   off = rigid i/N stagger)
+serve: open-loop steady-state latency/throughput (DESIGN.md §9); --rates sweeps
+       the offered load for the utilization-vs-latency curve; defaults to the
+       event engine (batching only pipelines there)
 ";
 
 /// Options that are flags (no value); everything else takes `--key value`.
-const FLAGS: &[&str] = &["json"];
+const FLAGS: &[&str] = &["json", "csv"];
 
 /// Parsed command line: subcommand plus `--key value` options.
 #[derive(Debug, Clone)]
 pub struct Args {
+    /// The subcommand word, e.g. `simulate`.
     pub cmd: String,
+    /// `--key value` options (flags store `"true"`).
     pub opts: HashMap<String, String>,
 }
 
@@ -95,8 +109,16 @@ impl Args {
     }
 
     fn engine(&self) -> Result<Engine> {
-        let e = self.opts.get("engine").map(String::as_str).unwrap_or("analytic");
-        Engine::parse(e).map_err(anyhow::Error::msg)
+        self.engine_or(Engine::Analytic)
+    }
+
+    /// `--engine`, defaulting to `default` when absent (`serve` defaults
+    /// to the event engine; everything else to analytic).
+    fn engine_or(&self, default: Engine) -> Result<Engine> {
+        match self.opts.get("engine") {
+            None => Ok(default),
+            Some(e) => Engine::parse(e).map_err(anyhow::Error::msg),
+        }
     }
 
     fn host_residency(&self) -> Result<bool> {
@@ -259,6 +281,150 @@ pub fn run(args: &Args) -> Result<String> {
                 "Fused4 @ G32K_L256 vs AiM-like @ G2K_L0 (ResNet18_Full):\n  measured: {}\n  paper   : cycles=30.6% energy=83.4% area=76.5%\n",
                 n.render()
             ))
+        }
+        "serve" => {
+            args.check_opts(&[
+                "config",
+                "workload",
+                "engine",
+                "rate",
+                "rates",
+                "requests",
+                "batch",
+                "batch-timeout",
+                "queue-depth",
+                "seed",
+                "arrival",
+                "warmup",
+                "json",
+                "csv",
+                "host-residency",
+                "slice-pipelining",
+            ])?;
+            if args.flag("json") && args.flag("csv") {
+                bail!("--json and --csv are mutually exclusive\n{USAGE}");
+            }
+            let num = |key: &str| -> Result<Option<f64>> {
+                args.opts
+                    .get(key)
+                    .map(|s| {
+                        s.parse::<f64>()
+                            .map_err(|_| anyhow!("--{key} must be a number, got {s:?}\n{USAGE}"))
+                    })
+                    .transpose()
+            };
+            let int = |key: &str| -> Result<Option<u64>> {
+                args.opts
+                    .get(key)
+                    .map(|s| {
+                        s.parse::<u64>()
+                            .map_err(|_| anyhow!("--{key} must be an integer, got {s:?}\n{USAGE}"))
+                    })
+                    .transpose()
+            };
+            let rate = num("rate")?;
+            let rates: Option<Vec<f64>> = args
+                .opts
+                .get("rates")
+                .map(|s| {
+                    s.split(',')
+                        .map(|r| {
+                            r.trim().parse::<f64>().map_err(|_| {
+                                anyhow!("--rates must be comma-separated numbers, got {r:?}\n{USAGE}")
+                            })
+                        })
+                        .collect()
+                })
+                .transpose()?;
+            if rate.is_some() && rates.is_some() {
+                bail!("--rate and --rates are mutually exclusive\n{USAGE}");
+            }
+            if rate.is_none() && rates.is_none() {
+                bail!("serve needs --rate <req/s> or --rates r1,r2,...\n{USAGE}");
+            }
+            for r in rate.iter().chain(rates.iter().flatten()) {
+                if !r.is_finite() || *r <= 0.0 {
+                    bail!("--rate must be > 0 (got {r})\n{USAGE}");
+                }
+            }
+            let batch = int("batch")?.unwrap_or(1) as usize;
+            if batch < 1 {
+                bail!("--batch must be >= 1\n{USAGE}");
+            }
+            // The default queue depth grows to fit one full batch.
+            let queue_depth = int("queue-depth")?.map(|d| d as usize).unwrap_or(64.max(batch));
+            if queue_depth < batch {
+                bail!("--queue-depth must be >= --batch ({queue_depth} < {batch})\n{USAGE}");
+            }
+            let arrival = match args.opts.get("arrival") {
+                None => ArrivalKind::Poisson,
+                Some(a) => ArrivalKind::parse(a).map_err(anyhow::Error::msg)?,
+            };
+            let cfg = args
+                .config()?
+                .with_engine(args.engine_or(Engine::Event)?)
+                .with_host_residency(args.host_residency()?)
+                .with_slice_pipelining(args.slice_pipelining()?);
+            let sc = ServeConfig::new(cfg, args.workload()?, rate.unwrap_or(1.0))
+                .arrival(arrival)
+                .requests(int("requests")?.unwrap_or(1000) as usize)
+                .batch(batch)
+                .batch_timeout(int("batch-timeout")?.unwrap_or(0))
+                .queue_depth(queue_depth)
+                .seed(int("seed")?.unwrap_or(42))
+                .warmup(num("warmup")?.unwrap_or(0.1));
+            match rates {
+                None => {
+                    let r = session.serve(&sc)?;
+                    if args.flag("json") {
+                        Ok(serve_to_json(&[r]))
+                    } else if args.flag("csv") {
+                        Ok(serve_to_csv(&[r]))
+                    } else {
+                        Ok(r.render())
+                    }
+                }
+                Some(rates) => {
+                    let reports = session.serve_sweep(&sc, &rates, true)?;
+                    if args.flag("json") {
+                        return Ok(serve_to_json(&reports));
+                    }
+                    if args.flag("csv") {
+                        return Ok(serve_to_csv(&reports));
+                    }
+                    let mut t = crate::util::table::Table::new(vec![
+                        "rate req/s",
+                        "tput req/s",
+                        "p50 cyc",
+                        "p99 cyc",
+                        "mean cyc",
+                        "util",
+                        "queue",
+                        "dropped",
+                    ]);
+                    for r in &reports {
+                        t.row(vec![
+                            format!("{:.0}", r.rate_rps),
+                            format!("{:.0}", r.throughput_rps),
+                            r.latency.p50.to_string(),
+                            r.latency.p99.to_string(),
+                            format!("{:.0}", r.latency.mean),
+                            crate::util::table::pct(r.utilization),
+                            format!("{:.2}", r.queue_mean),
+                            r.dropped.to_string(),
+                        ]);
+                    }
+                    Ok(format!(
+                        "serve sweep: {} on {} ({} engine, batch<={}, seed {})\n{}",
+                        sc.cfg.label(),
+                        sc.workload.name(),
+                        sc.cfg.engine.name(),
+                        sc.batch,
+                        sc.seed,
+                        t.render()
+                    ))
+                }
+            }
         }
         "trace" => {
             args.check_opts(&["config", "workload", "limit"])?;
@@ -541,6 +707,92 @@ mod tests {
         let e = run(&parse_args(&argv("bogus")).unwrap()).unwrap_err().to_string();
         assert!(e.contains("unknown subcommand"));
         assert!(e.contains("usage: pimfused"));
+    }
+
+    #[test]
+    fn serve_runs_and_reports() {
+        let a = parse_args(&argv(
+            "serve --config fused4:G32K_L256 --workload fig1 --rate 50000 --requests 100 --seed 7",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("serve: Fused4/G32K_L256 on Fig1_Example"), "{out}");
+        assert!(out.contains("(event engine"), "serve defaults to the event engine: {out}");
+        assert!(out.contains("p99 latency"), "{out}");
+        assert!(out.contains("throughput"), "{out}");
+        // Deterministic: same invocation, same bytes.
+        assert_eq!(run(&a).unwrap(), out);
+    }
+
+    #[test]
+    fn serve_json_and_csv_outputs() {
+        let base = "serve --workload fig1 --rate 50000 --requests 100";
+        let json = run(&parse_args(&argv(&format!("{base} --json"))).unwrap()).unwrap();
+        assert!(json.trim_start().starts_with('{'), "{json}");
+        assert!(json.contains("\"engine\": \"event\""), "{json}");
+        assert!(json.contains("\"arrival\": \"poisson\""), "{json}");
+        assert!(json.contains("\"p99_cycles\": "), "{json}");
+        assert!(json.contains("\"throughput_rps\": "), "{json}");
+        let csv = run(&parse_args(&argv(&format!("{base} --csv"))).unwrap()).unwrap();
+        let header = csv.lines().next().unwrap();
+        assert!(header.starts_with("config,system,workload,engine,arrival,rate_rps,"), "{header}");
+        assert_eq!(csv.lines().count(), 2, "header + one row: {csv}");
+    }
+
+    #[test]
+    fn serve_rates_sweeps_the_offered_load() {
+        let a = parse_args(&argv(
+            "serve --workload fig1 --rates 10000,20000,40000 --requests 100",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("serve sweep:"), "{out}");
+        assert!(out.contains("rate req/s"), "{out}");
+        assert_eq!(out.matches("req/s |").count(), 2, "two rate-ish headers: {out}");
+        let json = run(&parse_args(&argv(
+            "serve --workload fig1 --rates 10000,20000,40000 --requests 100 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert_eq!(json.matches("\"rate_rps\":").count(), 3, "{json}");
+    }
+
+    #[test]
+    fn serve_validates_its_options() {
+        let err = |s: &str| run(&parse_args(&argv(s)).unwrap()).unwrap_err().to_string();
+        let e = err("serve --workload fig1");
+        assert!(e.contains("needs --rate"), "{e}");
+        let e = err("serve --workload fig1 --rate 0");
+        assert!(e.contains("--rate must be > 0"), "{e}");
+        let e = err("serve --workload fig1 --rate -3");
+        assert!(e.contains("--rate must be > 0"), "{e}");
+        let e = err("serve --workload fig1 --rate 100 --batch 0");
+        assert!(e.contains("--batch must be >= 1"), "{e}");
+        let e = err("serve --workload fig1 --rate 100 --batch 8 --queue-depth 2");
+        assert!(e.contains("--queue-depth must be >= --batch"), "{e}");
+        let e = err("serve --workload fig1 --rate 100 --rates 1,2");
+        assert!(e.contains("mutually exclusive"), "{e}");
+        let e = err("serve --workload fig1 --rate 100 --json --csv");
+        assert!(e.contains("--json and --csv are mutually exclusive"), "{e}");
+        let e = err("serve --workload fig1 --rate abc");
+        assert!(e.contains("--rate must be a number"), "{e}");
+        let e = err("serve --workload fig1 --rate 100 --arrival sometimes");
+        assert!(e.contains("unknown arrival process"), "{e}");
+        let e = err("serve --workload fig1 --rate 100 --bogus 1");
+        assert!(e.contains("unknown option --bogus"), "{e}");
+        assert!(e.contains("usage: pimfused"), "{e}");
+    }
+
+    #[test]
+    fn serve_default_queue_depth_fits_the_batch() {
+        // --batch 100 with no --queue-depth must not trip the
+        // queue>=batch validation: the default grows to fit.
+        let a = parse_args(&argv(
+            "serve --workload fig1 --rate 50000 --requests 50 --batch 100 --json",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("\"queue_depth\": 100"), "{out}");
     }
 
     #[test]

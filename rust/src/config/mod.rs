@@ -7,7 +7,7 @@
 
 mod timing;
 
-pub use timing::{ActLayout, DramTiming, MAX_ACT_SLOTS};
+pub use timing::{ActLayout, DramTiming, MAX_ACT_SLOTS, TCK_NS};
 
 use crate::util::size::{fmt_bufcfg, parse_bufcfg};
 
@@ -158,7 +158,11 @@ impl System {
 }
 
 /// Full architecture configuration for one simulated DRAM-PIM channel.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Eq + Hash` (every field is an integer, bool, or enum) so configs can
+/// key memo caches — the serving driver caches one service profile per
+/// `(Workload, ArchConfig)`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ArchConfig {
     /// Which named system this configuration instantiates.
     pub system: System,

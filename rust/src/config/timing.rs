@@ -6,8 +6,13 @@
 //! what matters is that the ratios between row activation, column access,
 //! and PIM command overheads are realistic — these are.
 
+/// Command-clock period in nanoseconds (tCK at the 16 Gb/s/pin GDDR6
+/// operating point the module docs assume). The serving simulator uses
+/// it to convert wall-clock offered load (req/s) into memory cycles.
+pub const TCK_NS: f64 = 0.75;
+
 /// DRAM timing constraints (cycles).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct DramTiming {
     /// ACT to internal RD/WR delay.
     pub t_rcd: u64,
@@ -49,6 +54,13 @@ impl DramTiming {
             t_cmd: 1,
             t_bus_hop: 2,
         }
+    }
+
+    /// The command-clock frequency in Hz implied by [`TCK_NS`]
+    /// (≈ 1.33 GHz). All cycle counts in this crate are in this clock;
+    /// the serving simulator divides by it to report req/s.
+    pub fn clock_hz(&self) -> f64 {
+        1e9 / TCK_NS
     }
 
     /// Sanity-check the timing constants' internal consistency.

@@ -65,6 +65,7 @@ mod session;
 pub mod experiments;
 
 pub use grid::{SweepGrid, SweepPoint, SweepProgress, SweepResults, SweepRow};
+pub use serialize::{serve_to_csv, serve_to_json};
 pub use session::{Experiment, Session, SessionStats};
 
 #[cfg(test)]

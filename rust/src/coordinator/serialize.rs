@@ -1,11 +1,14 @@
-//! Hand-rolled JSON / CSV serialization for [`SweepResults`].
+//! Hand-rolled JSON / CSV serialization for [`SweepResults`] and
+//! [`ServeReport`] lists.
 //!
 //! The offline crate set has no `serde`, so the writers below emit the
-//! formats directly. The schema is flat and stable — it is golden-tested
-//! in `tests/session_api.rs`, so treat any change as a breaking change to
-//! downstream tooling parsing `pimfused ... --json` output.
+//! formats directly. The schemas are flat and stable — golden-tested in
+//! `tests/session_api.rs` and `tests/serve_api.rs`, so treat any change
+//! as a breaking change to downstream tooling parsing
+//! `pimfused ... --json` / `--csv` output.
 
 use super::grid::{SweepResults, SweepRow};
+use crate::serve::ServeReport;
 use std::fmt::Write as _;
 
 /// Escape a string for a JSON string literal (without the quotes).
@@ -129,6 +132,132 @@ impl SweepResults {
     }
 }
 
+/// The flat per-report field list shared by the serve JSON and CSV
+/// writers (one definition, so the two schemas cannot drift): name,
+/// value-as-JSON (strings pre-quoted/escaped).
+fn serve_fields(r: &ServeReport) -> Vec<(&'static str, String)> {
+    vec![
+        ("config", format!("\"{}\"", json_escape(&r.label))),
+        ("system", format!("\"{}\"", json_escape(&r.system))),
+        ("workload", format!("\"{}\"", json_escape(&r.workload))),
+        ("engine", format!("\"{}\"", r.engine.name())),
+        ("arrival", format!("\"{}\"", r.arrival.name())),
+        ("rate_rps", json_f64(r.rate_rps)),
+        ("seed", r.seed.to_string()),
+        ("requests", r.requests.to_string()),
+        ("batch", r.batch.to_string()),
+        ("batch_timeout", r.batch_timeout.to_string()),
+        ("queue_depth", r.queue_depth.to_string()),
+        ("completed", r.completed.to_string()),
+        ("dropped", r.dropped.to_string()),
+        ("batches", r.batches.to_string()),
+        ("mean_batch", json_f64(r.mean_batch)),
+        ("warmup_trimmed", r.warmup_trimmed.to_string()),
+        ("p50_cycles", r.latency.p50.to_string()),
+        ("p95_cycles", r.latency.p95.to_string()),
+        ("p99_cycles", r.latency.p99.to_string()),
+        ("mean_cycles", json_f64(r.latency.mean)),
+        ("max_cycles", r.latency.max.to_string()),
+        ("throughput_rps", json_f64(r.throughput_rps)),
+        ("utilization", json_f64(r.utilization)),
+        ("queue_depth_mean", json_f64(r.queue_mean)),
+        ("queue_depth_max", r.queue_max.to_string()),
+        ("service_single_cycles", r.service_single.to_string()),
+        ("service_steady_cycles", r.service_steady.to_string()),
+        ("batch_shapes", r.batch_shapes.to_string()),
+        ("makespan_cycles", r.makespan_cycles.to_string()),
+    ]
+}
+
+/// Serialize serving reports to pretty-printed JSON (2-space indent),
+/// `{"rows": [...]}` with one flat object per report. Deterministic:
+/// field order is fixed and every value is a pure function of the
+/// [`crate::serve::ServeConfig`].
+pub fn serve_to_json(reports: &[ServeReport]) -> String {
+    let mut out = String::from("{\n  \"rows\": [");
+    for (i, r) in reports.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n    {\n");
+        let fields = serve_fields(r);
+        for (j, (name, value)) in fields.iter().enumerate() {
+            let sep = if j + 1 == fields.len() { "" } else { "," };
+            let _ = writeln!(out, "      \"{name}\": {value}{sep}");
+        }
+        out.push_str("    }");
+    }
+    if !reports.is_empty() {
+        out.push('\n');
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Serialize serving reports to CSV: a fixed header row (the
+/// [`serve_fields`] names, in order) plus one row per report.
+pub fn serve_to_csv(reports: &[ServeReport]) -> String {
+    let mut out = String::new();
+    for r in reports {
+        let fields = serve_fields(r);
+        if out.is_empty() {
+            let names: Vec<&str> = fields.iter().map(|(n, _)| *n).collect();
+            out.push_str(&names.join(","));
+            out.push('\n');
+        }
+        let row: Vec<String> = fields
+            .into_iter()
+            // JSON string values come pre-quoted; CSV wants them bare.
+            .map(|(_, v)| csv_escape(v.trim_matches('"')))
+            .collect();
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    if out.is_empty() {
+        // Header-only output for an empty report list.
+        let header: Vec<&str> = serve_field_names();
+        out.push_str(&header.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// The serve schema's column names (kept adjacent to [`serve_fields`];
+/// a unit test asserts they agree).
+fn serve_field_names() -> Vec<&'static str> {
+    vec![
+        "config",
+        "system",
+        "workload",
+        "engine",
+        "arrival",
+        "rate_rps",
+        "seed",
+        "requests",
+        "batch",
+        "batch_timeout",
+        "queue_depth",
+        "completed",
+        "dropped",
+        "batches",
+        "mean_batch",
+        "warmup_trimmed",
+        "p50_cycles",
+        "p95_cycles",
+        "p99_cycles",
+        "mean_cycles",
+        "max_cycles",
+        "throughput_rps",
+        "utilization",
+        "queue_depth_mean",
+        "queue_depth_max",
+        "service_single_cycles",
+        "service_steady_cycles",
+        "batch_shapes",
+        "makespan_cycles",
+    ]
+}
+
 /// The per-resource utilization object for event-engine rows: busy cycles
 /// per resource plus the schedule makespan (consumers derive fractions),
 /// the contended command-bus occupancy, the total back-filled cycles the
@@ -233,5 +362,63 @@ mod tests {
         assert_eq!(json_f64(1.0), "1");
         assert_eq!(json_f64(f64::NAN), "null");
         assert_eq!(json_f64(f64::INFINITY), "null");
+    }
+
+    fn sample_report() -> ServeReport {
+        use crate::config::Engine;
+        use crate::serve::{ArrivalKind, LatencyStats};
+        ServeReport {
+            label: "Fused4/G32K_L256".to_string(),
+            system: "Fused4".to_string(),
+            workload: "Fig1_Example".to_string(),
+            engine: Engine::Event,
+            arrival: ArrivalKind::Poisson,
+            rate_rps: 50000.0,
+            requests: 100,
+            batch: 4,
+            batch_timeout: 0,
+            queue_depth: 64,
+            seed: 42,
+            completed: 100,
+            dropped: 0,
+            batches: 30,
+            mean_batch: 100.0 / 30.0,
+            warmup_trimmed: 10,
+            latency: LatencyStats { samples: 90, p50: 5000, p95: 7000, p99: 7500, mean: 5100.5, max: 8000 },
+            throughput_rps: 49000.25,
+            utilization: 0.75,
+            queue_mean: 1.5,
+            queue_max: 9,
+            service_single: 4000,
+            service_steady: 1500,
+            batch_shapes: 3,
+            makespan_cycles: 272000,
+        }
+    }
+
+    #[test]
+    fn serve_schemas_cannot_drift() {
+        let fields = serve_fields(&sample_report());
+        let names: Vec<&str> = fields.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, serve_field_names());
+    }
+
+    #[test]
+    fn serve_json_and_csv_carry_the_same_values() {
+        let r = sample_report();
+        let json = serve_to_json(&[r.clone()]);
+        assert!(json.starts_with("{\n  \"rows\": [\n"));
+        assert!(json.contains("\"config\": \"Fused4/G32K_L256\","));
+        assert!(json.contains("\"p99_cycles\": 7500,"));
+        assert!(json.contains("\"makespan_cycles\": 272000\n"));
+        let csv = serve_to_csv(&[r]);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), serve_field_names().join(","));
+        let row = lines.next().unwrap();
+        assert!(row.starts_with("Fused4/G32K_L256,Fused4,Fig1_Example,event,poisson,50000,42,"));
+        assert!(row.ends_with(",272000"));
+        assert!(lines.next().is_none());
+        // Empty input still yields the header (a parseable CSV).
+        assert_eq!(serve_to_csv(&[]).lines().next().unwrap(), serve_field_names().join(","));
     }
 }

@@ -30,6 +30,10 @@
 //!   progress callbacks, engine axis) and [`coordinator::SweepResults`]
 //!   with JSON/CSV serialization; plus [`coordinator::experiments`], the
 //!   paper-figure registry.
+//! * [`serve`] — request-stream serving simulator: open-loop arrivals,
+//!   a bounded batching queue, and steady-state p50/p99/throughput on
+//!   top of the memoized schedules ([`coordinator::Session::serve`] /
+//!   `pimfused serve`).
 //! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts (stubbed
 //!   unless built with the `pjrt` feature).
 //! * [`validate`] — functional dataflow validator (real tensor movement).
@@ -47,7 +51,6 @@
 
 #[allow(missing_docs)]
 pub mod benchkit;
-#[allow(missing_docs)]
 pub mod cli;
 #[allow(missing_docs)]
 pub mod cnn;
@@ -57,13 +60,13 @@ pub mod dataflow;
 #[allow(missing_docs)]
 pub mod energy;
 pub mod ppa;
+pub mod serve;
 pub mod workload;
 pub mod sim;
 pub mod trace;
 pub mod config;
 #[allow(missing_docs)]
 pub mod runtime;
-#[allow(missing_docs)]
 pub mod util;
 #[allow(missing_docs)]
 pub mod validate;

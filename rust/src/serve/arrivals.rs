@@ -1,0 +1,134 @@
+//! Open-loop arrival processes for the serving simulator.
+//!
+//! Open-loop means requests arrive on their own schedule regardless of
+//! how the server is doing — the honest model for internet traffic,
+//! where a slow server does not slow the users down, it just grows the
+//! queue. Both processes are driven by the crate PRNG
+//! ([`crate::util::rng::XorShift64`]) from an explicit seed, so a
+//! [`crate::serve::ServeReport`] is byte-reproducible.
+
+use crate::util::rng::XorShift64;
+
+/// The arrival process shaping the request stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArrivalKind {
+    /// Poisson process: exponential interarrival gaps around the mean.
+    /// The standard open-loop traffic model; bursts happen.
+    Poisson,
+    /// Deterministic fixed-rate arrivals: every gap is exactly the mean.
+    /// Useful for queueing-theory sanity tests (a D/D/1 stream below
+    /// saturation never queues).
+    Fixed,
+}
+
+/// One row per kind: (variant, display name, CLI aliases) — the same
+/// table treatment as [`crate::config::Engine`].
+const ARRIVAL_TABLE: &[(ArrivalKind, &str, &[&str])] = &[
+    (ArrivalKind::Poisson, "poisson", &["exp"]),
+    (ArrivalKind::Fixed, "fixed", &["det"]),
+];
+
+impl ArrivalKind {
+    /// Every arrival kind, in `ARRIVAL_TABLE` order.
+    pub const ALL: [ArrivalKind; 2] = [ArrivalKind::Poisson, ArrivalKind::Fixed];
+
+    fn row(&self) -> &'static (ArrivalKind, &'static str, &'static [&'static str]) {
+        ARRIVAL_TABLE
+            .iter()
+            .find(|row| row.0 == *self)
+            .expect("every ArrivalKind variant must have an ARRIVAL_TABLE row")
+    }
+
+    /// Display name, e.g. `poisson`.
+    pub fn name(&self) -> &'static str {
+        self.row().1
+    }
+
+    /// Parse a CLI spelling: the display name or any alias,
+    /// case-insensitively.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let t = s.trim().to_ascii_lowercase();
+        for &(k, name, aliases) in ARRIVAL_TABLE {
+            if t == name || aliases.contains(&t.as_str()) {
+                return Ok(k);
+            }
+        }
+        let names: Vec<&str> = ARRIVAL_TABLE.iter().map(|row| row.1).collect();
+        Err(format!("unknown arrival process {s:?} ({})", names.join("|")))
+    }
+}
+
+/// Generate `n` request arrival times in cycles, sorted non-decreasing,
+/// with mean interarrival gap `mean_gap` cycles. Gaps accumulate in f64
+/// and each cumulative time rounds to the nearest cycle, so scaling the
+/// rate scales the whole stream (same seed → same unit draws).
+pub fn arrival_times(kind: ArrivalKind, n: usize, mean_gap: f64, seed: u64) -> Vec<u64> {
+    debug_assert!(mean_gap > 0.0);
+    let mut rng = XorShift64::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let gap = match kind {
+            ArrivalKind::Fixed => mean_gap,
+            ArrivalKind::Poisson => rng.next_exp(mean_gap),
+        };
+        t += gap;
+        out.push(t.round() as u64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_drives_name_and_parse() {
+        assert_eq!(ARRIVAL_TABLE.len(), ArrivalKind::ALL.len());
+        for (row, k) in ARRIVAL_TABLE.iter().zip(ArrivalKind::ALL) {
+            assert_eq!(row.0, k, "ARRIVAL_TABLE and ALL must agree on order");
+        }
+        for k in ArrivalKind::ALL {
+            assert_eq!(ArrivalKind::parse(k.name()).unwrap(), k);
+            assert_eq!(ArrivalKind::parse(&k.name().to_ascii_uppercase()).unwrap(), k);
+        }
+        assert_eq!(ArrivalKind::parse("exp").unwrap(), ArrivalKind::Poisson);
+        assert_eq!(ArrivalKind::parse("det").unwrap(), ArrivalKind::Fixed);
+        let e = ArrivalKind::parse("nope").unwrap_err();
+        assert!(e.contains("poisson|fixed"), "{e}");
+    }
+
+    #[test]
+    fn fixed_arrivals_are_exact_multiples() {
+        let ts = arrival_times(ArrivalKind::Fixed, 5, 100.0, 42);
+        assert_eq!(ts, vec![100, 200, 300, 400, 500]);
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_deterministic() {
+        for kind in ArrivalKind::ALL {
+            let a = arrival_times(kind, 500, 37.5, 7);
+            let b = arrival_times(kind, 500, 37.5, 7);
+            assert_eq!(a, b, "{} not deterministic", kind.name());
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{} not sorted", kind.name());
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_is_roughly_right() {
+        let n = 50_000;
+        let ts = arrival_times(ArrivalKind::Poisson, n, 200.0, 11);
+        let mean = *ts.last().unwrap() as f64 / n as f64;
+        assert!((mean - 200.0).abs() < 200.0 * 0.03, "mean gap {mean}");
+    }
+
+    #[test]
+    fn rate_scaling_scales_the_stream() {
+        // Same seed, double the gap: every arrival lands ~2x later.
+        let fast = arrival_times(ArrivalKind::Poisson, 100, 50.0, 3);
+        let slow = arrival_times(ArrivalKind::Poisson, 100, 100.0, 3);
+        for (f, s) in fast.iter().zip(&slow) {
+            assert!((*s as f64 - 2.0 * *f as f64).abs() <= 2.0, "{f} vs {s}");
+        }
+    }
+}

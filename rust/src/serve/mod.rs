@@ -1,0 +1,207 @@
+//! Request-stream serving simulator: open-loop arrivals, a bounded
+//! batching queue, and steady-state latency/throughput metrics layered on
+//! the PPA engines (DESIGN.md §9).
+//!
+//! One inference's cycle count answers "how fast is one picture?"; a
+//! serving simulation answers the deployment question — *what latency do
+//! requests see at a given offered load, and where does the system
+//! saturate?* The pieces:
+//!
+//! - [`arrivals`]: deterministic-seed Poisson or fixed-rate request
+//!   streams ([`ArrivalKind`]), open-loop (arrivals never back off).
+//! - [`queue`]: a bounded FIFO admission queue ([`AdmissionQueue`]) that
+//!   drops on overflow and tracks time-weighted depth.
+//! - [`sim`]: the driver ([`ServeDriver`]) — memoizes one schedule per
+//!   `(workload, config)` into a [`ServiceProfile`] and replays it per
+//!   batch; [`simulate_stream`] is the pure event loop.
+//! - [`stats`]: warmup-trimmed nearest-rank percentiles
+//!   ([`LatencyStats`]) and the full [`ServeReport`].
+//!
+//! Entry points: [`crate::coordinator::Session::serve`] for one rate,
+//! [`crate::coordinator::Session::serve_sweep`] for a
+//! utilization-vs-latency curve, and the `pimfused serve` subcommand.
+//!
+//! ```
+//! use pimfused::config::{ArchConfig, Engine, System};
+//! use pimfused::coordinator::Session;
+//! use pimfused::serve::ServeConfig;
+//! use pimfused::workload::Workload;
+//!
+//! let session = Session::new();
+//! let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256)
+//!     .with_engine(Engine::Event);
+//! let sc = ServeConfig::new(cfg, Workload::Fig1, 50_000.0).requests(200);
+//! let report = session.serve(&sc).unwrap();
+//! assert_eq!(report.completed + report.dropped, 200);
+//! assert!(report.latency.p99 >= report.latency.p50);
+//! ```
+
+pub mod arrivals;
+pub mod queue;
+pub mod sim;
+pub mod stats;
+
+pub use arrivals::{arrival_times, ArrivalKind};
+pub use queue::AdmissionQueue;
+pub use sim::{simulate_stream, ServeDriver, ServiceProfile};
+pub use stats::{latency_stats, LatencyStats, ServeReport};
+
+use crate::config::ArchConfig;
+use crate::workload::Workload;
+
+/// Everything one serving run needs: the system under test, the workload,
+/// and the request-stream shape. Build with [`ServeConfig::new`] plus the
+/// builder setters; [`ServeConfig::validate`] runs before every
+/// simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Architecture configuration to serve on (its engine decides the
+    /// service profile's fidelity — see [`ServiceProfile::from_report`]).
+    pub cfg: ArchConfig,
+    /// Workload every request runs (one request = one inference).
+    pub workload: Workload,
+    /// Arrival process (default [`ArrivalKind::Poisson`]).
+    pub arrival: ArrivalKind,
+    /// Offered load in requests per second of wall-clock time.
+    pub rate: f64,
+    /// Number of requests to generate (default 1000).
+    pub requests: usize,
+    /// Maximum batch size the dispatcher forms (default 1 = no batching).
+    pub batch: usize,
+    /// Cycles a partial batch waits for stragglers before dispatching
+    /// anyway (default 0 = dispatch eagerly whenever the server is free).
+    pub batch_timeout: u64,
+    /// Admission queue capacity; arrivals beyond it are dropped
+    /// (default 64).
+    pub queue_depth: usize,
+    /// Seed for the arrival stream (default 42).
+    pub seed: u64,
+    /// Fraction of completions trimmed from the front as warmup before
+    /// computing latency statistics, in `[0, 1)` (default 0.1).
+    pub warmup: f64,
+}
+
+impl ServeConfig {
+    /// A serving config at the given offered rate with the defaults
+    /// documented on each field.
+    pub fn new(cfg: ArchConfig, workload: Workload, rate: f64) -> Self {
+        ServeConfig {
+            cfg,
+            workload,
+            arrival: ArrivalKind::Poisson,
+            rate,
+            requests: 1000,
+            batch: 1,
+            batch_timeout: 0,
+            queue_depth: 64,
+            seed: 42,
+            warmup: 0.1,
+        }
+    }
+
+    /// Builder-style arrival-process selection.
+    pub fn arrival(mut self, a: ArrivalKind) -> Self {
+        self.arrival = a;
+        self
+    }
+
+    /// Builder-style request-count selection.
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+
+    /// Builder-style maximum batch size.
+    pub fn batch(mut self, b: usize) -> Self {
+        self.batch = b;
+        self
+    }
+
+    /// Builder-style batch timeout in cycles.
+    pub fn batch_timeout(mut self, t: u64) -> Self {
+        self.batch_timeout = t;
+        self
+    }
+
+    /// Builder-style admission-queue capacity.
+    pub fn queue_depth(mut self, d: usize) -> Self {
+        self.queue_depth = d;
+        self
+    }
+
+    /// Builder-style arrival seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Builder-style warmup fraction.
+    pub fn warmup(mut self, w: f64) -> Self {
+        self.warmup = w;
+        self
+    }
+
+    /// Sanity-check the stream parameters (and the architecture config);
+    /// the driver calls this before every run so misconfigurations fail
+    /// loudly instead of producing silent nonsense.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            return Err(format!("rate must be a positive finite req/s (got {})", self.rate));
+        }
+        if self.requests == 0 {
+            return Err("requests must be >= 1".into());
+        }
+        if self.batch == 0 {
+            return Err("batch must be >= 1".into());
+        }
+        if self.queue_depth < self.batch {
+            return Err(format!(
+                "queue depth {} must be >= batch {} (a full batch must fit)",
+                self.queue_depth, self.batch
+            ));
+        }
+        if !self.warmup.is_finite() || !(0.0..1.0).contains(&self.warmup) {
+            return Err(format!("warmup must be in [0, 1) (got {})", self.warmup));
+        }
+        self.cfg.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ServeConfig {
+        ServeConfig::new(ArchConfig::baseline(), Workload::Fig1, 1000.0)
+    }
+
+    #[test]
+    fn defaults_are_documented_values() {
+        let sc = base();
+        assert_eq!(sc.arrival, ArrivalKind::Poisson);
+        assert_eq!(sc.requests, 1000);
+        assert_eq!(sc.batch, 1);
+        assert_eq!(sc.batch_timeout, 0);
+        assert_eq!(sc.queue_depth, 64);
+        assert_eq!(sc.seed, 42);
+        assert_eq!(sc.warmup, 0.1);
+        sc.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        assert!(ServeConfig { rate: 0.0, ..base() }.validate().is_err());
+        assert!(ServeConfig { rate: -5.0, ..base() }.validate().is_err());
+        assert!(ServeConfig { rate: f64::NAN, ..base() }.validate().is_err());
+        assert!(base().requests(0).validate().is_err());
+        assert!(base().batch(0).validate().is_err());
+        let e = base().batch(8).queue_depth(4).validate().unwrap_err();
+        assert!(e.contains("must be >= batch"), "{e}");
+        assert!(base().warmup(1.0).validate().is_err());
+        assert!(base().warmup(-0.1).validate().is_err());
+        // Architecture validation is included.
+        let mut sc = base();
+        sc.cfg.banks_per_pimcore = 3;
+        assert!(sc.validate().is_err());
+    }
+}

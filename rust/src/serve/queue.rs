@@ -1,0 +1,172 @@
+//! Bounded admission queue with time-weighted depth accounting.
+//!
+//! Requests that arrive while the queue is full are **dropped** (counted,
+//! never retried — open-loop clients don't back off). The queue tracks
+//! its maximum depth and a time-weighted depth integral so the driver
+//! can report mean queue depth over the run. Capacity counts *waiting*
+//! requests only; a batch in service has already left the queue.
+
+use std::collections::VecDeque;
+
+/// FIFO admission queue of request arrival times, bounded at `depth`.
+#[derive(Debug, Clone)]
+pub struct AdmissionQueue {
+    waiting: VecDeque<u64>,
+    depth: usize,
+    dropped: usize,
+    max_depth: usize,
+    /// Sum of `queue length × cycles` over the events seen so far.
+    depth_integral: u128,
+    last_event: u64,
+}
+
+impl AdmissionQueue {
+    /// An empty queue holding at most `depth` waiting requests.
+    pub fn new(depth: usize) -> Self {
+        Self {
+            waiting: VecDeque::with_capacity(depth.min(4096)),
+            depth,
+            dropped: 0,
+            max_depth: 0,
+            depth_integral: 0,
+            last_event: 0,
+        }
+    }
+
+    /// Advance the depth integral to `now`. Events must arrive in
+    /// non-decreasing time order (the driver's event loop guarantees it).
+    fn advance(&mut self, now: u64) {
+        debug_assert!(now >= self.last_event, "queue events must be time-ordered");
+        self.depth_integral +=
+            (now - self.last_event) as u128 * self.waiting.len() as u128;
+        self.last_event = now;
+    }
+
+    /// Offer a request arriving at `arrival`; returns `false` (and counts
+    /// a drop) when the queue is full.
+    pub fn offer(&mut self, arrival: u64) -> bool {
+        self.advance(arrival);
+        if self.waiting.len() >= self.depth {
+            self.dropped += 1;
+            return false;
+        }
+        self.waiting.push_back(arrival);
+        self.max_depth = self.max_depth.max(self.waiting.len());
+        true
+    }
+
+    /// Pop up to `k` requests (their arrival times, FIFO order) at
+    /// dispatch time `now`. Never pops a request that has not arrived by
+    /// `now` — a batch can only contain requests that exist yet.
+    pub fn take(&mut self, now: u64, k: usize) -> Vec<u64> {
+        self.advance(now);
+        let mut n = 0;
+        while n < k && self.waiting.get(n).map_or(false, |&a| a <= now) {
+            n += 1;
+        }
+        self.waiting.drain(..n).collect()
+    }
+
+    /// Waiting requests right now.
+    pub fn len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Whether nothing is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.waiting.is_empty()
+    }
+
+    /// Arrival time of the oldest waiting request, if any.
+    pub fn head_arrival(&self) -> Option<u64> {
+        self.waiting.front().copied()
+    }
+
+    /// Arrival time of the `idx`-th oldest waiting request, if any. The
+    /// dispatcher uses `nth_arrival(batch - 1)` as the instant a full
+    /// batch came into existence.
+    pub fn nth_arrival(&self, idx: usize) -> Option<u64> {
+        self.waiting.get(idx).copied()
+    }
+
+    /// Arrival time of the newest waiting request, if any.
+    pub fn back_arrival(&self) -> Option<u64> {
+        self.waiting.back().copied()
+    }
+
+    /// Requests dropped because the queue was full.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// The deepest the queue ever got.
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    /// Time-weighted mean depth over `[0, end]` (the driver passes the
+    /// run's makespan; the queue is empty after the last dispatch, so no
+    /// depth is unaccounted).
+    pub fn mean_depth(&self, end: u64) -> f64 {
+        if end == 0 {
+            return 0.0;
+        }
+        let total = self.depth_integral
+            + (end.saturating_sub(self.last_event)) as u128 * self.waiting.len() as u128;
+        total as f64 / end as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_bounded_drops() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.offer(10));
+        assert!(q.offer(20));
+        assert!(!q.offer(30), "third offer exceeds depth 2");
+        assert_eq!(q.dropped(), 1);
+        assert_eq!(q.max_depth(), 2);
+        assert_eq!(q.head_arrival(), Some(10));
+        assert_eq!(q.take(50, 2), vec![10, 20]);
+        assert!(q.is_empty());
+        // Space freed: the next offer is admitted again.
+        assert!(q.offer(60));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn take_caps_at_queue_length() {
+        let mut q = AdmissionQueue::new(8);
+        q.offer(1);
+        q.offer(2);
+        assert_eq!(q.take(5, 100), vec![1, 2]);
+        assert_eq!(q.take(6, 4), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn nth_and_back_arrivals() {
+        let mut q = AdmissionQueue::new(8);
+        q.offer(5);
+        q.offer(9);
+        q.offer(12);
+        assert_eq!(q.nth_arrival(0), Some(5));
+        assert_eq!(q.nth_arrival(2), Some(12));
+        assert_eq!(q.nth_arrival(3), None);
+        assert_eq!(q.back_arrival(), Some(12));
+    }
+
+    #[test]
+    fn mean_depth_is_time_weighted() {
+        let mut q = AdmissionQueue::new(8);
+        q.offer(0); // depth 1 over [0, 10)
+        q.offer(10); // depth 2 over [10, 20)
+        let taken = q.take(20, 2); // empty over [20, 40)
+        assert_eq!(taken.len(), 2);
+        // (1*10 + 2*10 + 0*20) / 40 = 0.75
+        assert!((q.mean_depth(40) - 0.75).abs() < 1e-12);
+        assert_eq!(q.mean_depth(0), 0.0);
+    }
+}

@@ -1,0 +1,355 @@
+//! The steady-state serving driver.
+//!
+//! The expensive part of serving — turning `(workload, config)` into a
+//! cycle count — is the regular PPA pipeline, and it is **memoized**: the
+//! driver schedules each distinct `(workload, config)` exactly once
+//! (through the [`Session`] caches) into a [`ServiceProfile`], then
+//! replays that profile per admitted batch. A 10 000-request run costs
+//! one schedule plus 10 000 profile lookups.
+//!
+//! Batches follow a pipeline initiation-interval model: the first request
+//! of a batch costs the full single-inference schedule, each further
+//! request costs only the bottleneck resource's busy time (the channel
+//! cannot retire inferences faster than its busiest resource). Under the
+//! analytic engine there is no occupancy breakdown, so the steady-state
+//! cost equals the single-inference cost and batching does not help —
+//! the contrast against the event engine is itself a fidelity statement
+//! (DESIGN.md §9).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::ArchConfig;
+use crate::coordinator::Session;
+use crate::ppa::PpaReport;
+use crate::serve::arrivals::arrival_times;
+use crate::serve::queue::AdmissionQueue;
+use crate::serve::stats::{latency_stats, ServeReport};
+use crate::serve::ServeConfig;
+use crate::workload::Workload;
+use anyhow::Result;
+
+/// The memoized service cost of one `(workload, config)` pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceProfile {
+    /// Cycles one isolated inference takes (the schedule's makespan).
+    pub single_cycles: u64,
+    /// Marginal cycles per additional request in a batch: the pipeline
+    /// initiation interval, bounded below by the busiest resource.
+    pub steady_cycles: u64,
+}
+
+impl ServiceProfile {
+    /// Derive a profile from a PPA report. Event-engine reports carry a
+    /// per-resource occupancy breakdown, whose busiest entry is the
+    /// initiation interval; analytic reports have none, so the steady
+    /// cost degenerates to the full single-inference cost.
+    pub fn from_report(report: &PpaReport) -> Self {
+        let single = report.cycles.max(1);
+        let steady = match &report.occupancy {
+            Some(occ) => occ.busiest().clamp(1, single),
+            None => single,
+        };
+        ServiceProfile { single_cycles: single, steady_cycles: steady }
+    }
+
+    /// Service cycles for a batch of `b` requests (`b >= 1`): the first
+    /// request pays the full schedule, the rest pay the initiation
+    /// interval each.
+    pub fn batch_cycles(&self, b: usize) -> u64 {
+        debug_assert!(b >= 1);
+        self.single_cycles + (b as u64 - 1) * self.steady_cycles
+    }
+}
+
+/// Serving driver bound to a [`Session`]. Holds the per-`(workload,
+/// config)` [`ServiceProfile`] memo; everything downstream of the memo is
+/// pure, so a `&ServeDriver` is shareable across sweep worker threads.
+pub struct ServeDriver<'s> {
+    session: &'s Session,
+    profiles: Mutex<HashMap<(Workload, ArchConfig), ServiceProfile>>,
+    schedule_runs: AtomicUsize,
+}
+
+impl<'s> ServeDriver<'s> {
+    /// A driver with an empty profile memo.
+    pub fn new(session: &'s Session) -> Self {
+        ServeDriver {
+            session,
+            profiles: Mutex::new(HashMap::new()),
+            schedule_runs: AtomicUsize::new(0),
+        }
+    }
+
+    /// The memoized service profile for `(workload, cfg)`; schedules
+    /// through the session pipeline on first use. The pipeline runs
+    /// outside the memo lock ([`Session::serve_sweep`] warms the memo
+    /// serially before fanning out, so parallel workers only take hits).
+    pub fn profile(&self, w: Workload, cfg: &ArchConfig) -> Result<ServiceProfile> {
+        let key = (w, cfg.clone());
+        if let Some(p) = self.profiles.lock().unwrap().get(&key) {
+            return Ok(*p);
+        }
+        let report = self.session.run(cfg, w)?;
+        self.schedule_runs.fetch_add(1, Ordering::Relaxed);
+        let prof = ServiceProfile::from_report(&report);
+        Ok(*self.profiles.lock().unwrap().entry(key).or_insert(prof))
+    }
+
+    /// How many times the driver ran the full schedule pipeline (the
+    /// memoization test asserts this stays at one per distinct pair).
+    pub fn schedule_runs(&self) -> usize {
+        self.schedule_runs.load(Ordering::Relaxed)
+    }
+
+    /// Run one serving simulation end-to-end: validate, resolve the
+    /// service profile, replay the request stream.
+    pub fn run(&self, sc: &ServeConfig) -> Result<ServeReport> {
+        sc.validate().map_err(anyhow::Error::msg)?;
+        let prof = self.profile(sc.workload, &sc.cfg)?;
+        Ok(simulate_stream(sc, prof))
+    }
+}
+
+/// Replay an open-loop request stream against a service profile. Pure:
+/// the report is a function of `(sc, prof)` alone, which is what makes
+/// serving results byte-reproducible across runs and thread schedules.
+///
+/// The event loop merges two time-ordered streams — arrivals and batch
+/// dispatches — always processing the earlier event (arrival wins ties,
+/// so a request landing exactly at dispatch time joins the batch). A
+/// dispatch fires at the earliest instant the server is free **and** the
+/// dispatch condition holds: a full batch exists, the batch timeout has
+/// expired at the queue head, or the arrival stream is exhausted (no
+/// straggler is coming, so partial batches drain eagerly).
+pub fn simulate_stream(sc: &ServeConfig, prof: ServiceProfile) -> ServeReport {
+    let clock = sc.cfg.timing.clock_hz();
+    let arrivals = arrival_times(sc.arrival, sc.requests, clock / sc.rate, sc.seed);
+    let mut q = AdmissionQueue::new(sc.queue_depth);
+    let mut shapes: HashMap<usize, u64> = HashMap::new();
+    let mut latencies: Vec<u64> = Vec::with_capacity(sc.requests);
+    let mut free_at = 0u64;
+    let mut busy = 0u64;
+    let mut batches = 0usize;
+    let mut i = 0usize;
+    while i < arrivals.len() || !q.is_empty() {
+        let dispatch = if q.is_empty() {
+            None
+        } else {
+            let head = q.head_arrival().unwrap();
+            let trigger = if q.len() >= sc.batch {
+                // Full batch: ready the instant its batch-th member arrived.
+                q.nth_arrival(sc.batch - 1).unwrap()
+            } else if i >= arrivals.len() {
+                // Stream over: drain the partial batch eagerly.
+                q.back_arrival().unwrap()
+            } else if sc.batch_timeout == 0 {
+                head
+            } else {
+                head.saturating_add(sc.batch_timeout)
+            };
+            Some(free_at.max(trigger))
+        };
+        match (arrivals.get(i).copied(), dispatch) {
+            (Some(a), d) if d.map_or(true, |dt| a <= dt) => {
+                q.offer(a);
+                i += 1;
+            }
+            (_, Some(dt)) => {
+                let taken = q.take(dt, sc.batch);
+                debug_assert!(!taken.is_empty(), "dispatch must make progress");
+                let b = taken.len();
+                let service = *shapes.entry(b).or_insert_with(|| prof.batch_cycles(b));
+                let done = dt + service;
+                busy += service;
+                for t in taken {
+                    latencies.push(done - t);
+                }
+                batches += 1;
+                free_at = done;
+            }
+            (None, None) => unreachable!("loop invariant: arrivals or queue non-empty"),
+        }
+    }
+    let makespan = free_at;
+    let completed = latencies.len();
+    let mut trimmed = (sc.warmup * completed as f64).floor() as usize;
+    if completed > 0 {
+        // Always keep at least one post-warmup sample.
+        trimmed = trimmed.min(completed - 1);
+    }
+    let latency = latency_stats(&latencies[trimmed..]);
+    let throughput_rps = if makespan > 0 {
+        completed as f64 / makespan as f64 * clock
+    } else {
+        0.0
+    };
+    ServeReport {
+        label: sc.cfg.label(),
+        system: sc.cfg.system.name().to_string(),
+        workload: sc.workload.name().to_string(),
+        engine: sc.cfg.engine,
+        arrival: sc.arrival,
+        rate_rps: sc.rate,
+        requests: sc.requests,
+        batch: sc.batch,
+        batch_timeout: sc.batch_timeout,
+        queue_depth: sc.queue_depth,
+        seed: sc.seed,
+        completed,
+        dropped: q.dropped(),
+        batches,
+        mean_batch: if batches > 0 { completed as f64 / batches as f64 } else { 0.0 },
+        warmup_trimmed: trimmed,
+        latency,
+        throughput_rps,
+        utilization: if makespan > 0 { busy as f64 / makespan as f64 } else { 0.0 },
+        queue_mean: q.mean_depth(makespan),
+        queue_max: q.max_depth(),
+        service_single: prof.single_cycles,
+        service_steady: prof.steady_cycles,
+        batch_shapes: shapes.len(),
+        makespan_cycles: makespan,
+    }
+}
+
+impl Session {
+    /// Run one serving simulation on this session (see
+    /// [`crate::serve`]). Convenience for
+    /// `ServeDriver::new(self).run(sc)`; sweeping several rates through
+    /// [`Session::serve_sweep`] shares one driver (and one schedule).
+    pub fn serve(&self, sc: &ServeConfig) -> Result<ServeReport> {
+        ServeDriver::new(self).run(sc)
+    }
+
+    /// Evaluate `base` at each offered rate — the utilization-vs-latency
+    /// curve. The service profile is warmed serially first, so the
+    /// parallel path only takes memo hits and the report list is
+    /// byte-identical to the serial path's (asserted in
+    /// `tests/serve_api.rs`).
+    pub fn serve_sweep(
+        &self,
+        base: &ServeConfig,
+        rates: &[f64],
+        parallel: bool,
+    ) -> Result<Vec<ServeReport>> {
+        base.validate().map_err(anyhow::Error::msg)?;
+        let driver = ServeDriver::new(self);
+        driver.profile(base.workload, &base.cfg)?;
+        let eval = |rate: &f64| -> Result<ServeReport> {
+            let mut sc = base.clone();
+            sc.rate = *rate;
+            driver.run(&sc)
+        };
+        if !parallel || rates.len() < 2 {
+            return rates.iter().map(eval).collect();
+        }
+        let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let chunk = crate::util::ceil_div(rates.len(), n_threads);
+        let reports: Vec<Result<ServeReport>> = std::thread::scope(|s| {
+            let eval = &eval;
+            let handles: Vec<_> = rates
+                .chunks(chunk.max(1))
+                .map(|rs| s.spawn(move || rs.iter().map(eval).collect::<Vec<_>>()))
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("serve sweep worker panicked"))
+                .collect()
+        });
+        reports.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::arrivals::ArrivalKind;
+
+    fn sc_with(rate_gap_cycles: f64) -> ServeConfig {
+        let cfg = ArchConfig::baseline();
+        let clock = cfg.timing.clock_hz();
+        ServeConfig::new(cfg, Workload::Fig1, clock / rate_gap_cycles)
+            .arrival(ArrivalKind::Fixed)
+            .requests(50)
+            .warmup(0.0)
+    }
+
+    #[test]
+    fn batch_cycles_is_affine() {
+        let p = ServiceProfile { single_cycles: 1000, steady_cycles: 40 };
+        assert_eq!(p.batch_cycles(1), 1000);
+        assert_eq!(p.batch_cycles(2), 1040);
+        assert_eq!(p.batch_cycles(9), 1320);
+    }
+
+    #[test]
+    fn low_load_latency_equals_service_time() {
+        // Gap 1000 cycles, service 100: no request ever waits.
+        let sc = sc_with(1000.0);
+        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 100 };
+        let r = simulate_stream(&sc, prof);
+        assert_eq!(r.completed, 50);
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.batches, 50, "every request is its own batch");
+        assert_eq!((r.latency.p50, r.latency.p99, r.latency.max), (100, 100, 100));
+        assert_eq!(r.latency.mean, 100.0);
+        assert_eq!(r.makespan_cycles, 50 * 1000 + 100);
+        assert!(r.utilization < 0.11, "mostly idle: {}", r.utilization);
+    }
+
+    #[test]
+    fn saturation_drops_and_pegs_utilization() {
+        // Gap 100 cycles, service 1000: offered load is 10x capacity.
+        let sc = sc_with(100.0).requests(200).queue_depth(4);
+        let prof = ServiceProfile { single_cycles: 1000, steady_cycles: 1000 };
+        let r = simulate_stream(&sc, prof);
+        assert!(r.dropped > 0, "overload must overflow the queue");
+        assert_eq!(r.completed + r.dropped, 200);
+        assert_eq!(r.queue_max, 4, "queue pegged at its capacity");
+        assert!(r.utilization > 0.95, "server never idles: {}", r.utilization);
+    }
+
+    #[test]
+    fn batch_timeout_delays_partial_batches() {
+        // Gap 1000, batch 4 never fills, timeout 500: each request
+        // dispatches alone at arrival + 500 — except the last, which
+        // drains eagerly once the stream is over.
+        let sc = sc_with(1000.0).requests(3).batch(4).batch_timeout(500);
+        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 10 };
+        let r = simulate_stream(&sc, prof);
+        assert_eq!(r.completed, 3);
+        assert_eq!(r.batches, 3);
+        // Two timeout-delayed requests at 600 cycles, one eager at 100.
+        assert_eq!(r.latency.max, 600);
+        assert_eq!(r.latency.p50, 600);
+        assert_eq!(r.latency.mean, (600.0 + 600.0 + 100.0) / 3.0);
+    }
+
+    #[test]
+    fn batching_amortizes_service() {
+        // Gap 100, single 1000, steady 10: batch 8 sustains the load
+        // (8 requests cost 1070 cycles vs 800 cycles of arrivals is
+        // still over, but far less over than 8x1000).
+        let sc1 = sc_with(100.0).requests(160).queue_depth(200);
+        let sc8 = sc_with(100.0).requests(160).queue_depth(200).batch(8);
+        let prof = ServiceProfile { single_cycles: 1000, steady_cycles: 10 };
+        let r1 = simulate_stream(&sc1, prof);
+        let r8 = simulate_stream(&sc8, prof);
+        assert!(r8.mean_batch > 1.0, "batches must actually form");
+        assert!(r8.throughput_rps > r1.throughput_rps, "batching must raise throughput");
+        assert!(r8.batch_shapes >= 1);
+        // Pure function: an identical rerun is identical.
+        assert_eq!(simulate_stream(&sc8, prof), r8);
+    }
+
+    #[test]
+    fn warmup_trims_the_front() {
+        let sc = sc_with(1000.0).requests(10).warmup(0.3);
+        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 100 };
+        let r = simulate_stream(&sc, prof);
+        assert_eq!(r.warmup_trimmed, 3);
+        assert_eq!(r.latency.samples, 7);
+    }
+}

@@ -1,0 +1,203 @@
+//! Latency percentile accumulation and the serving report.
+//!
+//! Percentiles use the **nearest-rank** definition (the smallest sample
+//! such that at least `q·n` samples are ≤ it): no interpolation, so every
+//! reported latency is one a request actually saw, and fixed inputs give
+//! byte-identical reports.
+
+use crate::config::Engine;
+use crate::serve::arrivals::ArrivalKind;
+use crate::util::table::{pct, Table};
+use std::fmt::Write as _;
+
+/// Summary statistics over a set of per-request latencies (cycles).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencyStats {
+    /// Number of samples the percentiles were computed over.
+    pub samples: usize,
+    /// Median latency in cycles (nearest rank).
+    pub p50: u64,
+    /// 95th-percentile latency in cycles (nearest rank).
+    pub p95: u64,
+    /// 99th-percentile latency in cycles (nearest rank).
+    pub p99: u64,
+    /// Arithmetic mean latency in cycles.
+    pub mean: f64,
+    /// Worst-case latency in cycles.
+    pub max: u64,
+}
+
+/// Nearest-rank percentile of a sorted slice: element at ceil(q·n), 1-based.
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    debug_assert!(!sorted.is_empty());
+    let n = sorted.len();
+    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+/// Compute [`LatencyStats`] over a latency sample set (any order). An
+/// empty slice yields the all-zero default.
+pub fn latency_stats(latencies: &[u64]) -> LatencyStats {
+    if latencies.is_empty() {
+        return LatencyStats::default();
+    }
+    let mut sorted = latencies.to_vec();
+    sorted.sort_unstable();
+    let sum: u128 = sorted.iter().map(|&v| v as u128).sum();
+    LatencyStats {
+        samples: sorted.len(),
+        p50: percentile(&sorted, 0.50),
+        p95: percentile(&sorted, 0.95),
+        p99: percentile(&sorted, 0.99),
+        mean: sum as f64 / sorted.len() as f64,
+        max: *sorted.last().unwrap(),
+    }
+}
+
+/// Everything one serving run produced: the configuration echo (so a
+/// report is self-describing in JSON/CSV output) plus steady-state
+/// latency, throughput, and queue metrics.
+///
+/// Deterministic by construction: every field is a pure function of the
+/// [`crate::serve::ServeConfig`], so two runs with the same config — or
+/// the serial and threaded sweep paths — serialize byte-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    /// Config label in paper notation, e.g. `Fused4/G32K_L256`.
+    pub label: String,
+    /// System display name, e.g. `Fused4`.
+    pub system: String,
+    /// Workload display name, e.g. `ResNet18_Full`.
+    pub workload: String,
+    /// Simulation engine that produced the service profile.
+    pub engine: Engine,
+    /// Arrival process the request stream was drawn from.
+    pub arrival: ArrivalKind,
+    /// Offered load in requests per second of wall-clock time.
+    pub rate_rps: f64,
+    /// Requests generated (arrived, whether admitted or dropped).
+    pub requests: usize,
+    /// Maximum batch size the dispatcher forms.
+    pub batch: usize,
+    /// Cycles a partial batch waits for stragglers (0 = dispatch eagerly).
+    pub batch_timeout: u64,
+    /// Admission queue capacity (waiting requests).
+    pub queue_depth: usize,
+    /// PRNG seed the arrival stream was drawn from.
+    pub seed: u64,
+    /// Requests that completed service.
+    pub completed: usize,
+    /// Requests dropped at admission because the queue was full.
+    pub dropped: usize,
+    /// Batches dispatched.
+    pub batches: usize,
+    /// Mean requests per dispatched batch.
+    pub mean_batch: f64,
+    /// Completed requests trimmed from the front as warmup before
+    /// computing [`ServeReport::latency`].
+    pub warmup_trimmed: usize,
+    /// Latency statistics over the post-warmup completions, in cycles.
+    pub latency: LatencyStats,
+    /// Completed requests per second of wall-clock time over the makespan.
+    pub throughput_rps: f64,
+    /// Fraction of the makespan the channel was busy serving batches.
+    pub utilization: f64,
+    /// Time-weighted mean admission-queue depth over the makespan.
+    pub queue_mean: f64,
+    /// Deepest the admission queue ever got.
+    pub queue_max: usize,
+    /// Service cycles for a batch of one (the memoized schedule result).
+    pub service_single: u64,
+    /// Marginal service cycles per extra request in a batch (the
+    /// pipeline initiation interval).
+    pub service_steady: u64,
+    /// Distinct batch sizes dispatched (each costed once, then looked up).
+    pub batch_shapes: usize,
+    /// Cycle at which the last batch finished service.
+    pub makespan_cycles: u64,
+}
+
+impl ServeReport {
+    /// Render the report as a human-readable text block (the default
+    /// `pimfused serve` output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "serve: {} on {} ({} engine, {} arrivals, seed {})",
+            self.label,
+            self.workload,
+            self.engine.name(),
+            self.arrival.name(),
+            self.seed
+        );
+        let _ = writeln!(
+            out,
+            "offered {:.1} req/s, {} requests, batch<={} (timeout {} cyc), queue depth {}",
+            self.rate_rps, self.requests, self.batch, self.batch_timeout, self.queue_depth
+        );
+        let mut t = Table::new(vec!["metric", "value"]);
+        t.row(vec!["completed".to_string(), self.completed.to_string()]);
+        t.row(vec!["dropped".to_string(), self.dropped.to_string()]);
+        t.row(vec![
+            "batches".to_string(),
+            format!("{} (mean {:.2} req)", self.batches, self.mean_batch),
+        ]);
+        t.row(vec!["throughput".to_string(), format!("{:.1} req/s", self.throughput_rps)]);
+        t.row(vec!["utilization".to_string(), pct(self.utilization)]);
+        t.row(vec!["p50 latency".to_string(), format!("{} cyc", self.latency.p50)]);
+        t.row(vec!["p95 latency".to_string(), format!("{} cyc", self.latency.p95)]);
+        t.row(vec!["p99 latency".to_string(), format!("{} cyc", self.latency.p99)]);
+        t.row(vec!["mean latency".to_string(), format!("{:.1} cyc", self.latency.mean)]);
+        t.row(vec!["max latency".to_string(), format!("{} cyc", self.latency.max)]);
+        t.row(vec![
+            "queue depth".to_string(),
+            format!("mean {:.2}, max {}", self.queue_mean, self.queue_max),
+        ]);
+        t.row(vec![
+            "service".to_string(),
+            format!("{} cyc single, {} cyc steady", self.service_single, self.service_steady),
+        ]);
+        t.row(vec!["makespan".to_string(), format!("{} cyc", self.makespan_cycles)]);
+        out += &t.render();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_sample_set_is_all_zero() {
+        assert_eq!(latency_stats(&[]), LatencyStats::default());
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let s = latency_stats(&[42]);
+        assert_eq!(s.samples, 1);
+        assert_eq!((s.p50, s.p95, s.p99, s.max), (42, 42, 42, 42));
+        assert_eq!(s.mean, 42.0);
+    }
+
+    #[test]
+    fn nearest_rank_on_a_known_set() {
+        // 1..=100: nearest-rank pNN of n=100 is exactly NN.
+        let v: Vec<u64> = (1..=100).collect();
+        let s = latency_stats(&v);
+        assert_eq!(s.p50, 50);
+        assert_eq!(s.p95, 95);
+        assert_eq!(s.p99, 99);
+        assert_eq!(s.max, 100);
+        assert_eq!(s.mean, 50.5);
+    }
+
+    #[test]
+    fn order_does_not_matter() {
+        let a = latency_stats(&[5, 1, 9, 3, 7]);
+        let b = latency_stats(&[9, 7, 5, 3, 1]);
+        assert_eq!(a, b);
+        assert_eq!(a.p50, 5);
+    }
+}

@@ -23,22 +23,27 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// A generator seeded deterministically (every run reproduces).
     pub fn new(seed: u64) -> Self {
         Self { rng: XorShift64::new(seed), size: 4 }
     }
 
+    /// Uniform usize in `[lo, hi]` inclusive.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         self.rng.range(lo, hi)
     }
 
+    /// A raw 64-bit draw.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// Uniform f32 in `[-1, 1)`.
     pub fn f32_signed(&mut self) -> f32 {
         self.rng.next_f32_signed()
     }
 
+    /// A fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.chance(0.5)
     }

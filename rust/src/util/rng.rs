@@ -58,10 +58,26 @@ impl XorShift64 {
         self.next_f32() * 2.0 - 1.0
     }
 
+    /// Uniform f64 in `[0, 1)` (53 mantissa bits).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Exponential draw with the given mean (inverse-CDF transform).
+    /// The Poisson arrival process in [`crate::serve`] draws its
+    /// interarrival gaps from this. `u < 1` always, so `ln(1 - u)` is
+    /// finite and the result is non-negative.
+    #[inline]
+    pub fn next_exp(&mut self, mean: f64) -> f64 {
+        debug_assert!(mean > 0.0);
+        -(1.0 - self.next_f64()).ln() * mean
+    }
+
     /// Bernoulli draw with probability `p`.
     #[inline]
     pub fn chance(&mut self, p: f64) -> bool {
-        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < p
+        self.next_f64() < p
     }
 }
 
@@ -113,6 +129,29 @@ mod tests {
         for _ in 0..10_000 {
             let v = r.next_f32();
             assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = XorShift64::new(13);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn exp_mean_is_roughly_right() {
+        let mut r = XorShift64::new(17);
+        let n = 100_000;
+        let mean = 250.0;
+        let sum: f64 = (0..n).map(|_| r.next_exp(mean)).sum();
+        let got = sum / n as f64;
+        assert!((got - mean).abs() < mean * 0.02, "sample mean {got} vs {mean}");
+        let mut s = XorShift64::new(17);
+        for _ in 0..10_000 {
+            assert!(s.next_exp(mean) >= 0.0);
         }
     }
 

@@ -11,6 +11,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers and no rows yet.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
         Self {
             header: header.into_iter().map(Into::into).collect(),
@@ -18,6 +19,7 @@ impl Table {
         }
     }
 
+    /// Append one row; panics if its width differs from the header's.
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(
@@ -31,10 +33,12 @@ impl Table {
         self
     }
 
+    /// Whether no rows have been added.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Render the table with `+---+` rules and aligned columns.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut w = vec![0usize; ncol];
