@@ -11,34 +11,44 @@
 //! CI runs this as a guardrail: `cargo bench --bench bench_sched --
 //! --assert-ratio 3` prints one machine-readable `guardrail:` line per
 //! system plus a `guardrail-summary:` line, and exits non-zero if the
-//! worst event/analytic ratio exceeds the bar. The captured stdout is
-//! uploaded as a build artifact so the tracked number has history.
+//! worst event/analytic ratio exceeds the bar. `--json <path>` writes
+//! the same numbers as a `pimfused-bench-v1` [`pimfused::obs::BenchRecord`]
+//! snapshot; both the stdout and the JSON are uploaded as build
+//! artifacts so the tracked number has history.
 
 use pimfused::benchkit::{bench, section};
 use pimfused::cnn::resnet::resnet18;
 use pimfused::config::{ArchConfig, System};
 use pimfused::dataflow::{plan, CostModel};
+use pimfused::obs::BenchRecord;
 use pimfused::sim::{event, simulate};
 use pimfused::trace::gen::generate;
 
 fn main() {
     let mut args = std::env::args().skip(1);
     let mut assert_ratio: Option<f64> = None;
+    let mut json_out: Option<std::path::PathBuf> = None;
     while let Some(a) = args.next() {
         match a.as_str() {
             "--assert-ratio" => {
                 let v = args.next().expect("--assert-ratio needs a value");
                 assert_ratio = Some(v.parse().expect("--assert-ratio must be a number"));
             }
+            "--json" => {
+                json_out = Some(args.next().expect("--json needs a path").into());
+            }
             // Cargo appends `--bench` to every bench executable it runs.
             "--bench" => {}
-            other => panic!("unknown bench_sched option {other:?} (supported: --assert-ratio N)"),
+            other => panic!(
+                "unknown bench_sched option {other:?} (supported: --assert-ratio N, --json PATH)"
+            ),
         }
     }
 
     let model = CostModel::default();
     let g = resnet18();
     let mut worst: (f64, &str) = (0.0, "");
+    let rec = BenchRecord::new("bench_sched", "full");
 
     section("scheduling throughput, ResNet18_Full @ G32K_L256");
     for sys in System::ALL {
@@ -70,6 +80,11 @@ fn main() {
             per_sec(ev.median),
             ratio,
         );
+        rec.metrics.inc("sched.systems");
+        rec.metrics.add(&format!("sched.{}.cmds", sys.name()), n as u64);
+        rec.metrics.gauge(&format!("sched.{}.analytic_cmds_per_s", sys.name()), per_sec(an.median));
+        rec.metrics.gauge(&format!("sched.{}.event_cmds_per_s", sys.name()), per_sec(ev.median));
+        rec.metrics.gauge(&format!("sched.{}.ratio", sys.name()), ratio);
     }
     println!(
         "guardrail-summary: worst_ratio={:.3} worst_system={} bar={}",
@@ -77,6 +92,15 @@ fn main() {
         worst.1,
         assert_ratio.map(|b| b.to_string()).unwrap_or_else(|| "none".into()),
     );
+    rec.metrics.gauge("sched.worst_ratio", worst.0);
+    if let Some(bar) = assert_ratio {
+        rec.metrics.gauge("sched.bar", bar);
+    }
+    // Write before the bar check so a failed run still leaves its numbers.
+    if let Some(path) = &json_out {
+        rec.write(path).expect("write --json output");
+        println!("bench_sched record written to {}", path.display());
+    }
     if let Some(bar) = assert_ratio {
         if worst.0 > bar {
             eprintln!(

@@ -6,22 +6,32 @@
 //!
 //! CI runs this in `--smoke` mode (one timed iteration per shape) and
 //! uploads the stdout next to `bench_sched.txt`; the machine-readable
-//! `serve-bench:` lines carry the tracked numbers.
+//! `serve-bench:` lines carry the tracked numbers, and `--json <path>`
+//! writes the same numbers as a `pimfused-bench-v1`
+//! [`pimfused::obs::BenchRecord`] snapshot.
 
 use pimfused::benchkit::{bench, section};
 use pimfused::config::{ArchConfig, Engine, System};
 use pimfused::coordinator::Session;
+use pimfused::obs::BenchRecord;
 use pimfused::serve::{ServeConfig, ServeDriver};
 use pimfused::workload::Workload;
 
 fn main() {
+    let mut args = std::env::args().skip(1);
     let mut smoke = false;
-    for a in std::env::args().skip(1) {
+    let mut json_out: Option<std::path::PathBuf> = None;
+    while let Some(a) = args.next() {
         match a.as_str() {
             "--smoke" => smoke = true,
+            "--json" => {
+                json_out = Some(args.next().expect("--json needs a path").into());
+            }
             // Cargo appends `--bench` to every bench executable it runs.
             "--bench" => {}
-            other => panic!("unknown bench_serve option {other:?} (supported: --smoke)"),
+            other => {
+                panic!("unknown bench_serve option {other:?} (supported: --smoke, --json PATH)")
+            }
         }
     }
     let (requests, warmup, iters) = if smoke { (10_000usize, 1, 3) } else { (100_000, 2, 20) };
@@ -40,6 +50,8 @@ fn main() {
         workload.name()
     ));
     let driver = ServeDriver::new(&session);
+    let rec = BenchRecord::new("bench_serve", if smoke { "smoke" } else { "full" });
+    rec.metrics.add("serve.requests_per_stream", requests as u64);
     for batch in [1usize, 8] {
         let sc = ServeConfig::new(cfg.clone(), workload, rate)
             .requests(requests)
@@ -66,6 +78,17 @@ fn main() {
             r.throughput_rps,
             r.latency.p99,
         );
+        let key = |m: &str| format!("serve.batch{batch}.{m}");
+        rec.metrics.gauge(&key("simulated_req_per_s"), simulated_rps);
+        rec.metrics.gauge(&key("sustained_rps"), r.throughput_rps);
+        rec.metrics.gauge(&key("p99_cycles"), r.latency.p99 as f64);
+        rec.metrics.add(&key("completed"), r.completed as u64);
+        rec.metrics.add(&key("dropped"), r.dropped as u64);
         assert_eq!(driver.schedule_runs(), 1, "replays must not reschedule");
+    }
+    driver.publish_metrics(&rec.metrics);
+    if let Some(path) = &json_out {
+        rec.write(path).expect("write --json output");
+        println!("bench_serve record written to {}", path.display());
     }
 }

@@ -11,14 +11,21 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label, as passed to [`bench`].
     pub name: String,
+    /// Timed iterations the statistics were computed over.
     pub iters: usize,
+    /// Arithmetic mean of the timed iterations.
     pub mean: Duration,
+    /// Median of the timed iterations (the stable number to track).
     pub median: Duration,
+    /// Fastest timed iteration.
     pub min: Duration,
 }
 
 impl BenchResult {
+    /// One-line `name iters=N min=… median=… mean=…` report (what
+    /// [`bench`] prints).
     pub fn report(&self) -> String {
         format!(
             "{:<44} iters={:<4} min={:>10.3?} median={:>10.3?} mean={:>10.3?}",

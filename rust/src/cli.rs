@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! pimfused simulate --config fused4:G32K_L256 --workload full [--engine event] [--json]
+//! pimfused profile --workload full [--config fused4:G32K_L256] [--top 5] [--trace-out chrome|csv]
 //! pimfused fig5|fig6|fig7|takeaways|headline
 //! pimfused sweep --systems aim,fused16,fused4 --gbuf 2K,32K --lbuf 0,256 --workload full [--engine event] [--json]
 //! pimfused serve --workload full --rate 20000 --requests 1000 --batch 8 [--json|--csv]
@@ -35,6 +36,11 @@ commands:
                                     [--engine analytic|event] [--json]
                                     [--host-residency on|off]
                                     [--slice-pipelining on|off]
+                                    [--trace-out chrome|csv]
+  profile    schedule profiling     --workload <w> [--config <sys:GmK_Ln>]
+                                    [--top N] [--trace-out chrome|csv]
+                                    [--host-residency on|off]
+                                    [--slice-pipelining on|off]
   sweep      buffer design sweep    --systems aim,fused16,fused4 --gbuf 2K,32K
                                     --lbuf 0,256 --workload <w>
                                     [--engine analytic|event] [--json]
@@ -46,6 +52,7 @@ commands:
                                     [--queue-depth D] [--seed S] [--warmup F]
                                     [--arrival poisson|fixed] [--config <sys:GmK_Ln>]
                                     [--engine analytic|event] [--json|--csv]
+                                    [--trace-out chrome|csv]
   trace      dump a command trace   --config <sys:GmK_Ln> --workload <w> [--limit N]
   validate   functional validation  --config <sys:GmK_Ln>
   cmdset     list the Table-I PIM commands
@@ -58,6 +65,11 @@ slice-pipelining: let per-bank transfer slices slide around busy banks (default 
 serve: open-loop steady-state latency/throughput (DESIGN.md §9); --rates sweeps
        the offered load for the utilization-vs-latency curve; defaults to the
        event engine (batching only pipelines there)
+profile: capture the event schedule timeline and print a per-layer phase
+         breakdown plus the busiest commands (DESIGN.md §10)
+trace-out: emit the captured timeline instead of the report — chrome is
+           chrome://tracing / Perfetto trace_events JSON (ts in cycles),
+           csv one row per reservation (event engine only)
 ";
 
 /// Options that are flags (no value); everything else takes `--key value`.
@@ -137,6 +149,17 @@ impl Args {
         }
     }
 
+    /// `--trace-out chrome|csv`, when given.
+    fn trace_out(&self) -> Result<Option<crate::obs::TraceFormat>> {
+        match self.opts.get("trace-out") {
+            None => Ok(None),
+            Some(s) => match crate::obs::TraceFormat::parse(s) {
+                Some(f) => Ok(Some(f)),
+                None => bail!("--trace-out must be chrome|csv, got {s:?}\n{USAGE}"),
+            },
+        }
+    }
+
     fn flag(&self, name: &str) -> bool {
         self.opts.get(name).map(String::as_str) == Some("true")
     }
@@ -165,12 +188,25 @@ pub fn run(args: &Args) -> Result<String> {
                 "json",
                 "host-residency",
                 "slice-pipelining",
+                "trace-out",
             ])?;
+            let trace_out = args.trace_out()?;
+            if trace_out.is_some() && args.flag("json") {
+                bail!("--trace-out and --json are mutually exclusive\n{USAGE}");
+            }
+            // --trace-out implies the event engine (the analytic engine
+            // has no schedule to trace) and turns capture on.
+            let engine = args
+                .engine_or(if trace_out.is_some() { Engine::Event } else { Engine::Analytic })?;
+            if trace_out.is_some() && engine != Engine::Event {
+                bail!("--trace-out needs --engine event\n{USAGE}");
+            }
             let cfg = args
                 .config()?
-                .with_engine(args.engine()?)
+                .with_engine(engine)
                 .with_host_residency(args.host_residency()?)
-                .with_slice_pipelining(args.slice_pipelining()?);
+                .with_slice_pipelining(args.slice_pipelining()?)
+                .with_tracing(trace_out.is_some());
             let w = args.workload()?;
             let results = SweepGrid::from_points(vec![SweepPoint { cfg, workload: w }])
                 .run(&session)?;
@@ -179,6 +215,16 @@ pub fn run(args: &Args) -> Result<String> {
                 return Ok(results.to_json());
             }
             let row = &results.rows[0];
+            if let Some(fmt) = trace_out {
+                let st = row
+                    .report
+                    .as_ref()
+                    .expect("ensure_ok")
+                    .schedule
+                    .as_ref()
+                    .expect("tracing was on");
+                return Ok(fmt.export(st));
+            }
             let r = row.report.as_ref().expect("ensure_ok");
             let n = row.norm.expect("ensure_ok");
             let mut out = format!(
@@ -300,9 +346,13 @@ pub fn run(args: &Args) -> Result<String> {
                 "csv",
                 "host-residency",
                 "slice-pipelining",
+                "trace-out",
             ])?;
             if args.flag("json") && args.flag("csv") {
                 bail!("--json and --csv are mutually exclusive\n{USAGE}");
+            }
+            if args.trace_out()?.is_some() && (args.flag("json") || args.flag("csv")) {
+                bail!("--trace-out and --json/--csv are mutually exclusive\n{USAGE}");
             }
             let num = |key: &str| -> Result<Option<f64>> {
                 args.opts
@@ -373,6 +423,17 @@ pub fn run(args: &Args) -> Result<String> {
                 .queue_depth(queue_depth)
                 .seed(int("seed")?.unwrap_or(42))
                 .warmup(num("warmup")?.unwrap_or(0.1));
+            if let Some(fmt) = args.trace_out()? {
+                // Export the single-inference schedule the serving
+                // profile replays (what every batch's cost derives from).
+                if sc.cfg.engine != Engine::Event {
+                    bail!("--trace-out needs --engine event\n{USAGE}");
+                }
+                let traced = sc.cfg.clone().with_tracing(true);
+                let r = session.run(&traced, sc.workload)?;
+                let st = r.schedule.as_ref().expect("tracing was on");
+                return Ok(fmt.export(st));
+            }
             match rates {
                 None => {
                     let r = session.serve(&sc)?;
@@ -425,6 +486,54 @@ pub fn run(args: &Args) -> Result<String> {
                     ))
                 }
             }
+        }
+        "profile" => {
+            args.check_opts(&[
+                "config",
+                "workload",
+                "top",
+                "trace-out",
+                "host-residency",
+                "slice-pipelining",
+            ])?;
+            let top: usize = args
+                .opts
+                .get("top")
+                .map(|s| s.parse())
+                .transpose()
+                .map_err(|_| anyhow!("--top must be an integer\n{USAGE}"))?
+                .unwrap_or(5);
+            let cfg = args
+                .config()?
+                .with_engine(Engine::Event)
+                .with_host_residency(args.host_residency()?)
+                .with_slice_pipelining(args.slice_pipelining()?)
+                .with_tracing(true);
+            let w = args.workload()?;
+            let r = session.run(&cfg, w)?;
+            let st = r.schedule.as_ref().expect("tracing was on");
+            if let Some(fmt) = args.trace_out()? {
+                return Ok(fmt.export(st));
+            }
+            let occ = r.occupancy.as_ref().expect("event engine");
+            // Certify the trace against the occupancy tallies before
+            // reporting anything derived from it.
+            st.verify(occ).map_err(anyhow::Error::msg)?;
+            let profile = crate::obs::PhaseProfile::from_trace(st);
+            let metrics = crate::obs::MetricsRegistry::new();
+            session.publish_metrics(&metrics);
+            let mut out = format!(
+                "profile: {} on {} (event engine)\nmakespan {} cycles, {} commands, {} reservations\n",
+                r.label,
+                r.workload,
+                st.makespan,
+                st.cmds.len(),
+                st.spans.len(),
+            );
+            out.push_str(&profile.render(top));
+            out.push_str("session metrics:\n");
+            out.push_str(&metrics.to_json());
+            Ok(out)
         }
         "trace" => {
             args.check_opts(&["config", "workload", "limit"])?;
@@ -793,6 +902,89 @@ mod tests {
         .unwrap();
         let out = run(&a).unwrap();
         assert!(out.contains("\"queue_depth\": 100"), "{out}");
+    }
+
+    #[test]
+    fn profile_command_prints_phase_breakdown() {
+        let a = parse_args(&argv("profile --config fused4:G32K_L256 --workload fig1 --top 3"))
+            .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("profile: Fused4/G32K_L256 on Fig1_Example"), "{out}");
+        assert!(out.contains("makespan"), "{out}");
+        assert!(out.contains("compute"), "{out}");
+        assert!(out.contains("near-bank"), "{out}");
+        assert!(out.contains("cross-bank"), "{out}");
+        assert!(out.contains("stall"), "{out}");
+        assert!(out.contains("top 3 commands by busy cycles:"), "{out}");
+        assert!(out.contains("session metrics:"), "{out}");
+        assert!(out.contains("\"session.points_run\": 1"), "{out}");
+        // Deterministic: same invocation, same bytes.
+        assert_eq!(run(&a).unwrap(), out);
+        // --top must be an integer.
+        let e = run(&parse_args(&argv("profile --workload fig1 --top many")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--top must be an integer"), "{e}");
+    }
+
+    #[test]
+    fn profile_trace_out_exports_the_timeline() {
+        let json = run(&parse_args(&argv("profile --workload fig1 --trace-out chrome")).unwrap())
+            .unwrap();
+        assert!(json.trim_start().starts_with('{'), "{json}");
+        assert!(json.contains("\"traceEvents\""), "{json}");
+        assert!(json.contains("\"ph\": \"X\""), "{json}");
+        assert!(json.contains("\"cat\": \"cmdbus\""), "{json}");
+        assert!(json.contains("\"name\": \"process_name\""), "{json}");
+        let csv = run(&parse_args(&argv("profile --workload fig1 --trace-out csv")).unwrap())
+            .unwrap();
+        assert!(csv.starts_with("cmd,node,kind,resource,res_index,start,end,busy,slid\n"), "{csv}");
+        // perfetto is an accepted alias for the chrome format.
+        let alias =
+            run(&parse_args(&argv("profile --workload fig1 --trace-out perfetto")).unwrap())
+                .unwrap();
+        assert_eq!(alias, json);
+        let e = run(&parse_args(&argv("profile --workload fig1 --trace-out bogus")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--trace-out must be chrome|csv"), "{e}");
+    }
+
+    #[test]
+    fn simulate_and_serve_accept_trace_out() {
+        // simulate --trace-out defaults the engine to event.
+        let out = run(&parse_args(&argv(
+            "simulate --config aim:G2K_L0 --workload fig1 --trace-out chrome",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(out.contains("\"traceEvents\""), "{out}");
+        let e = run(&parse_args(&argv(
+            "simulate --workload fig1 --engine analytic --trace-out csv",
+        ))
+        .unwrap())
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("--trace-out needs --engine event"), "{e}");
+        // serve --trace-out exports the single-inference schedule.
+        let out = run(&parse_args(&argv(
+            "serve --workload fig1 --rate 50000 --requests 10 --trace-out csv",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(out.starts_with("cmd,node,kind,"), "{out}");
+        let e = run(&parse_args(&argv(
+            "serve --workload fig1 --rate 100 --trace-out chrome --json",
+        ))
+        .unwrap())
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("mutually exclusive"), "{e}");
+        // Subcommands without the flag reject it.
+        let e = run(&parse_args(&argv("sweep --trace-out chrome")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown option --trace-out"), "{e}");
     }
 
     #[test]

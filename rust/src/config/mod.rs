@@ -203,6 +203,12 @@ pub struct ArchConfig {
     /// rigid `i/N` stagger in the worst case. On by default — `false`
     /// pins every slice at its fixed offset (DESIGN.md §6.2).
     pub slice_pipelining: bool,
+    /// Capture a per-command schedule timeline ([`crate::obs::ScheduleTrace`])
+    /// when the event engine runs this config. Off by default: tracing-off
+    /// runs take the ordinary non-recording scheduler path and their report
+    /// output is byte-identical to a build without the observability layer
+    /// (DESIGN.md §10).
+    pub tracing: bool,
 }
 
 impl ArchConfig {
@@ -228,6 +234,7 @@ impl ArchConfig {
             engine: Engine::Analytic,
             host_residency: true,
             slice_pipelining: true,
+            tracing: false,
         }
     }
 
@@ -249,6 +256,14 @@ impl ArchConfig {
     /// rigid stagger offset for A/B comparison.
     pub fn with_slice_pipelining(mut self, on: bool) -> Self {
         self.slice_pipelining = on;
+        self
+    }
+
+    /// Builder-style schedule-trace capture (see the field docs);
+    /// `with_tracing(true)` makes event-engine runs carry a
+    /// [`crate::obs::ScheduleTrace`] on their report.
+    pub fn with_tracing(mut self, on: bool) -> Self {
+        self.tracing = on;
         self
     }
 
@@ -406,6 +421,16 @@ mod tests {
         }
         let c = ArchConfig::baseline().with_slice_pipelining(false);
         assert!(!c.slice_pipelining);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn tracing_defaults_off() {
+        for sys in System::ALL {
+            assert!(!ArchConfig::system(sys, 2048, 0).tracing);
+        }
+        let c = ArchConfig::baseline().with_tracing(true);
+        assert!(c.tracing);
         c.validate().unwrap();
     }
 

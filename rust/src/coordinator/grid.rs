@@ -328,6 +328,18 @@ impl SweepResults {
         self.rows.iter().filter_map(|r| r.report.as_ref().ok())
     }
 
+    /// Publish the sweep's outcome counters into a metrics registry
+    /// (`sweep.*` namespace): points evaluated, failures, and a
+    /// `sweep.cycles` series in point order (failed points are skipped).
+    /// See [`crate::obs::MetricsRegistry`].
+    pub fn publish_metrics(&self, m: &crate::obs::MetricsRegistry) {
+        m.add("sweep.points", self.rows.len() as u64);
+        m.add("sweep.errors", self.rows.iter().filter(|r| r.report.is_err()).count() as u64);
+        for r in self.reports() {
+            m.push_sample("sweep.cycles", r.cycles as f64);
+        }
+    }
+
     /// Error out on the first failed point, if any.
     pub fn ensure_ok(&self) -> Result<&Self> {
         for row in &self.rows {

@@ -59,7 +59,7 @@
 //! like with like, and [`SweepGrid`] can sweep the engine as an axis.
 
 mod grid;
-mod serialize;
+pub(crate) mod serialize;
 mod session;
 
 pub mod experiments;

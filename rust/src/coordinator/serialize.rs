@@ -42,7 +42,7 @@ pub(crate) fn csv_escape(s: &str) -> String {
 
 /// A JSON number: f64 via `Display` (shortest round-trip form); non-finite
 /// values (never produced by the pipeline) degrade to `null`.
-fn json_f64(v: f64) -> String {
+pub(crate) fn json_f64(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {

@@ -262,7 +262,21 @@ impl Session {
         let g = self.graph(w)?;
         let p = self.plan_for(&g, cfg, w)?;
         let trace = generate(&g, cfg, &p, model);
-        let out = crate::sim::run(cfg, &trace);
+        // With tracing on (event engine only — the analytic engine has no
+        // schedule to trace), run the scheduler once in recording mode and
+        // keep the captured timeline; otherwise take the ordinary path, so
+        // tracing-off runs are byte-identical to a build without the
+        // observability layer.
+        let (out, schedule) = if cfg.tracing && cfg.engine == Engine::Event {
+            let (report, st) = crate::obs::ScheduleTrace::capture(cfg, &trace);
+            let out = crate::sim::SimOutcome {
+                result: report.result,
+                occupancy: Some(report.occupancy),
+            };
+            (out, Some(st))
+        } else {
+            (crate::sim::run(cfg, &trace), None)
+        };
         let e = energy::energy(cfg, &out.result.actions);
         let a = energy::area(cfg);
         self.counters.points_run.fetch_add(1, Ordering::Relaxed);
@@ -277,7 +291,18 @@ impl Session {
             energy: e,
             area: a,
             occupancy: out.occupancy,
+            schedule,
         })
+    }
+
+    /// Publish the session's cache/work counters into a metrics registry
+    /// (`session.*` namespace). See [`crate::obs::MetricsRegistry`].
+    pub fn publish_metrics(&self, m: &crate::obs::MetricsRegistry) {
+        let st = self.stats();
+        m.add("session.graph_builds", st.graph_builds as u64);
+        m.add("session.plan_builds", st.plan_builds as u64);
+        m.add("session.baseline_runs", st.baseline_runs as u64);
+        m.add("session.points_run", st.points_run as u64);
     }
 }
 

@@ -34,6 +34,10 @@
 //!   a bounded batching queue, and steady-state p50/p99/throughput on
 //!   top of the memoized schedules ([`coordinator::Session::serve`] /
 //!   `pimfused serve`).
+//! * [`obs`] — observability: [`obs::ScheduleTrace`] timeline capture
+//!   from the event scheduler's recording mode, Chrome-trace/CSV
+//!   exporters, per-layer [`obs::PhaseProfile`]s, and the
+//!   [`obs::MetricsRegistry`] (`pimfused profile`).
 //! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts (stubbed
 //!   unless built with the `pjrt` feature).
 //! * [`validate`] — functional dataflow validator (real tensor movement).
@@ -49,7 +53,6 @@
 // documenting that module.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod benchkit;
 pub mod cli;
 #[allow(missing_docs)]
@@ -59,6 +62,7 @@ pub mod coordinator;
 pub mod dataflow;
 #[allow(missing_docs)]
 pub mod energy;
+pub mod obs;
 pub mod ppa;
 pub mod serve;
 pub mod workload;
@@ -68,5 +72,4 @@ pub mod config;
 #[allow(missing_docs)]
 pub mod runtime;
 pub mod util;
-#[allow(missing_docs)]
 pub mod validate;

@@ -1,0 +1,180 @@
+//! Trace exporters: Chrome-trace / Perfetto JSON and a compact CSV.
+//!
+//! Both serializers are hand-rolled (no serde, like
+//! `coordinator/serialize.rs`) and byte-deterministic for a given
+//! [`ScheduleTrace`] — the golden tests in `tests/obs_api.rs` pin the
+//! exact bytes on a small schedule.
+
+use crate::coordinator::serialize::csv_escape;
+use crate::obs::schedule::{ResourceClass, ResourceId, ScheduleTrace};
+use std::fmt::Write as _;
+
+/// The trace export formats `--trace-out` selects between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// Chrome-trace / Perfetto `trace_events` JSON ([`chrome_trace_json`]).
+    Chrome,
+    /// Compact per-span CSV ([`trace_csv`]).
+    Csv,
+}
+
+/// One row per format: `(format, canonical name, aliases)`. Single source
+/// of truth for [`TraceFormat::name`] / [`TraceFormat::parse`].
+const FORMAT_TABLE: &[(TraceFormat, &str, &[&str])] = &[
+    (TraceFormat::Chrome, "chrome", &["perfetto", "json"]),
+    (TraceFormat::Csv, "csv", &[]),
+];
+
+impl TraceFormat {
+    /// Every format, in [`FORMAT_TABLE`] order.
+    pub const ALL: [TraceFormat; 2] = [TraceFormat::Chrome, TraceFormat::Csv];
+
+    fn row(&self) -> &'static (TraceFormat, &'static str, &'static [&'static str]) {
+        &FORMAT_TABLE[FORMAT_TABLE.iter().position(|(f, _, _)| f == self).unwrap()]
+    }
+
+    /// Canonical CLI name (`chrome` or `csv`).
+    pub fn name(&self) -> &'static str {
+        self.row().1
+    }
+
+    /// Parse a CLI spelling (canonical name or alias, e.g. `perfetto`).
+    pub fn parse(s: &str) -> Option<TraceFormat> {
+        FORMAT_TABLE
+            .iter()
+            .find(|(_, name, aliases)| *name == s || aliases.contains(&s))
+            .map(|(f, _, _)| *f)
+    }
+
+    /// Render `t` in this format (dispatches to [`chrome_trace_json`] /
+    /// [`trace_csv`]).
+    pub fn export(&self, t: &ScheduleTrace) -> String {
+        match self {
+            TraceFormat::Chrome => chrome_trace_json(t),
+            TraceFormat::Csv => trace_csv(t),
+        }
+    }
+}
+
+/// The distinct resources the trace touches, class-major sorted.
+fn resources_present(t: &ScheduleTrace) -> Vec<ResourceId> {
+    let mut v: Vec<ResourceId> = t.spans.iter().map(|s| s.res).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Serialize a schedule trace in the Chrome-trace `trace_events` JSON
+/// format (loadable in `chrome://tracing` and Perfetto).
+///
+/// Each [`ResourceClass`] becomes a pseudo-process (`process_name`
+/// metadata, pid = [`ResourceClass::pid`]); each resource in the class
+/// becomes a thread (`thread_name` metadata, tid = [`ResourceId::index`]).
+/// Every span is one complete (`"ph": "X"`) event named by its command's
+/// Table-I mnemonic, with `ts`/`dur` in **cycles** (not microseconds) and
+/// the command index, node, tallied busy cycles, and slide distance in
+/// `args`.
+pub fn chrome_trace_json(t: &ScheduleTrace) -> String {
+    let resources = resources_present(t);
+    let mut classes: Vec<ResourceClass> = resources.iter().map(|r| r.class()).collect();
+    classes.dedup(); // class-major sort ⇒ duplicates are adjacent
+    let mut events: Vec<String> =
+        Vec::with_capacity(classes.len() + resources.len() + t.spans.len());
+    for c in &classes {
+        events.push(format!(
+            "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {}, \"args\": {{\"name\": \"{}\"}}}}",
+            c.pid(),
+            c.name()
+        ));
+    }
+    for r in &resources {
+        events.push(format!(
+            "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {}, \"tid\": {}, \"args\": {{\"name\": \"{}\"}}}}",
+            r.class().pid(),
+            r.index(),
+            r.label()
+        ));
+    }
+    for sp in &t.spans {
+        events.push(format!(
+            "{{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \"pid\": {}, \"tid\": {}, \"args\": {{\"cmd\": {}, \"node\": {}, \"busy\": {}, \"slid\": {}}}}}",
+            sp.kind,
+            sp.res.class().name(),
+            sp.start,
+            sp.end - sp.start,
+            sp.res.class().pid(),
+            sp.res.index(),
+            sp.cmd,
+            sp.node,
+            sp.busy,
+            sp.slid
+        ));
+    }
+    let mut out = String::from("{\n  \"displayTimeUnit\": \"ns\",\n  \"traceEvents\": [\n");
+    for (i, e) in events.iter().enumerate() {
+        let sep = if i + 1 == events.len() { "" } else { "," };
+        let _ = writeln!(out, "    {e}{sep}");
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Header row of [`trace_csv`], one column per [`crate::obs::TraceSpan`]
+/// field (the resource splits into class name + index).
+pub const TRACE_CSV_HEADER: &str = "cmd,node,kind,resource,res_index,start,end,busy,slid";
+
+/// Serialize a schedule trace as compact CSV, one row per span in trace
+/// order, header [`TRACE_CSV_HEADER`].
+pub fn trace_csv(t: &ScheduleTrace) -> String {
+    let mut out = String::with_capacity(t.spans.len() * 40 + 64);
+    out.push_str(TRACE_CSV_HEADER);
+    out.push('\n');
+    for sp in &t.spans {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{}",
+            sp.cmd,
+            sp.node,
+            csv_escape(sp.kind),
+            sp.res.class().name(),
+            sp.res.index(),
+            sp.start,
+            sp.end,
+            sp.busy,
+            sp.slid
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_table_cannot_drift() {
+        assert_eq!(FORMAT_TABLE.len(), TraceFormat::ALL.len());
+        for (i, f) in TraceFormat::ALL.iter().enumerate() {
+            assert_eq!(FORMAT_TABLE[i].0, *f);
+            assert_eq!(TraceFormat::parse(f.name()), Some(*f), "canonical name parses");
+        }
+        assert_eq!(TraceFormat::parse("perfetto"), Some(TraceFormat::Chrome));
+        assert_eq!(TraceFormat::parse("json"), Some(TraceFormat::Chrome));
+        assert_eq!(TraceFormat::parse("bogus"), None);
+    }
+
+    #[test]
+    fn empty_trace_exports_are_well_formed() {
+        let t = ScheduleTrace {
+            makespan: 0,
+            num_cores: 0,
+            num_banks: 0,
+            num_groups: 0,
+            cmds: vec![],
+            spans: vec![],
+        };
+        let json = chrome_trace_json(&t);
+        assert!(json.contains("\"traceEvents\""));
+        assert_eq!(trace_csv(&t), format!("{TRACE_CSV_HEADER}\n"));
+    }
+}

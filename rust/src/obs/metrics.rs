@@ -1,0 +1,216 @@
+//! [`MetricsRegistry`]: a process-local counter/gauge/series registry.
+//!
+//! The coordinator's [`crate::coordinator::Session`], the sweep runner's
+//! [`crate::coordinator::SweepResults`], and the serving simulator all
+//! expose a `publish_metrics(&MetricsRegistry)` hook that folds their
+//! counters into one registry; [`MetricsRegistry::to_json`] snapshots
+//! everything as deterministic, hand-rolled JSON (schema
+//! `pimfused-metrics-v1`).
+//!
+//! [`BenchRecord`] wraps a registry with a bench name and mode so
+//! `bench_sched` / `bench_serve` emit their `guardrail:` numbers in one
+//! machine-readable schema (`pimfused-bench-v1`, `--json <path>`).
+
+use crate::coordinator::serialize::{json_escape, json_f64};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    series: BTreeMap<String, Vec<f64>>,
+}
+
+/// Thread-safe registry of named counters (monotonic `u64`), gauges
+/// (point-in-time `f64`) and series (append-only `f64` samples).
+///
+/// Interior-mutable behind one mutex, so a `&MetricsRegistry` can be
+/// shared with sweep worker threads the same way a
+/// [`crate::coordinator::Session`] is.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add 1 to counter `name` (creating it at 0).
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Add `v` to counter `name` (creating it at 0).
+    pub fn add(&self, name: &str, v: u64) {
+        *self.inner.lock().unwrap().counters.entry(name.to_string()).or_default() += v;
+    }
+
+    /// Set gauge `name` to `v` (last write wins).
+    pub fn gauge(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), v);
+    }
+
+    /// Append `v` to series `name`.
+    pub fn push_sample(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().series.entry(name.to_string()).or_default().push(v);
+    }
+
+    /// Current value of counter `name` (0 if never written).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current value of gauge `name`, if set.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    /// Number of samples in series `name` (0 if never written).
+    pub fn series_len(&self, name: &str) -> usize {
+        self.inner.lock().unwrap().series.get(name).map_or(0, Vec::len)
+    }
+
+    /// True when nothing has been published yet.
+    pub fn is_empty(&self) -> bool {
+        let m = self.inner.lock().unwrap();
+        m.counters.is_empty() && m.gauges.is_empty() && m.series.is_empty()
+    }
+
+    /// The `"counters": {...}, "gauges": {...}, "series": {...}` body
+    /// shared by the metrics and bench schemas (keys sorted, values in
+    /// insertion order for series).
+    fn body(&self, out: &mut String) {
+        let m = self.inner.lock().unwrap();
+        out.push_str("  \"counters\": {");
+        for (i, (k, v)) in m.counters.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let _ = write!(out, "{sep}\n    \"{}\": {v}", json_escape(k));
+        }
+        out.push_str(if m.counters.is_empty() { "},\n" } else { "\n  },\n" });
+        out.push_str("  \"gauges\": {");
+        for (i, (k, v)) in m.gauges.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let _ = write!(out, "{sep}\n    \"{}\": {}", json_escape(k), json_f64(*v));
+        }
+        out.push_str(if m.gauges.is_empty() { "},\n" } else { "\n  },\n" });
+        out.push_str("  \"series\": {");
+        for (i, (k, vs)) in m.series.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let vals: Vec<String> = vs.iter().map(|v| json_f64(*v)).collect();
+            let _ = write!(out, "{sep}\n    \"{}\": [{}]", json_escape(k), vals.join(", "));
+        }
+        out.push_str(if m.series.is_empty() { "}\n" } else { "\n  }\n" });
+    }
+
+    /// Snapshot the registry as deterministic JSON (schema
+    /// `pimfused-metrics-v1`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"pimfused-metrics-v1\",\n");
+        self.body(&mut out);
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// One benchmark emission: a named registry snapshot in the unified
+/// `pimfused-bench-v1` schema. `bench_sched` and `bench_serve` publish
+/// their `guardrail:` numbers here and write it with
+/// [`BenchRecord::write`] when invoked with `--json <path>`.
+pub struct BenchRecord {
+    /// Benchmark name (`bench_sched`, `bench_serve`).
+    pub bench: String,
+    /// Run mode (`full`, `smoke`).
+    pub mode: String,
+    /// The numbers: counters/gauges/series, bench-defined names.
+    pub metrics: MetricsRegistry,
+}
+
+impl BenchRecord {
+    /// An empty record for bench `bench` running in `mode`.
+    pub fn new(bench: &str, mode: &str) -> Self {
+        BenchRecord {
+            bench: bench.to_string(),
+            mode: mode.to_string(),
+            metrics: MetricsRegistry::new(),
+        }
+    }
+
+    /// Serialize as deterministic JSON (schema `pimfused-bench-v1`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"pimfused-bench-v1\",\n");
+        let _ = writeln!(out, "  \"bench\": \"{}\",", json_escape(&self.bench));
+        let _ = writeln!(out, "  \"mode\": \"{}\",", json_escape(&self.mode));
+        self.metrics.body(&mut out);
+        out.push_str("}\n");
+        out
+    }
+
+    /// Write [`BenchRecord::to_json`] to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_series_accumulate() {
+        let m = MetricsRegistry::new();
+        assert!(m.is_empty());
+        m.inc("a");
+        m.add("a", 2);
+        m.gauge("g", 1.5);
+        m.gauge("g", 2.5);
+        m.push_sample("s", 1.0);
+        m.push_sample("s", 2.0);
+        assert_eq!(m.counter("a"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        assert_eq!(m.gauge_value("g"), Some(2.5), "gauges overwrite");
+        assert_eq!(m.gauge_value("missing"), None);
+        assert_eq!(m.series_len("s"), 2);
+        assert!(!m.is_empty());
+    }
+
+    #[test]
+    fn empty_snapshot_is_stable() {
+        let m = MetricsRegistry::new();
+        assert_eq!(
+            m.to_json(),
+            "{\n  \"schema\": \"pimfused-metrics-v1\",\n  \"counters\": {},\n  \"gauges\": {},\n  \"series\": {}\n}\n"
+        );
+    }
+
+    #[test]
+    fn snapshot_sorts_keys_and_is_valid_shape() {
+        let m = MetricsRegistry::new();
+        m.inc("z.count");
+        m.inc("a.count");
+        m.gauge("mid", 0.5);
+        m.push_sample("q", 3.0);
+        let json = m.to_json();
+        let a = json.find("a.count").unwrap();
+        let z = json.find("z.count").unwrap();
+        assert!(a < z, "keys must serialize sorted");
+        assert!(json.contains("\"mid\": 0.5"));
+        assert!(json.contains("\"q\": [3]"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn bench_record_carries_name_and_mode() {
+        let b = BenchRecord::new("bench_sched", "smoke");
+        b.metrics.gauge("worst_ratio", 1.25);
+        let json = b.to_json();
+        assert!(json.starts_with("{\n  \"schema\": \"pimfused-bench-v1\",\n"));
+        assert!(json.contains("\"bench\": \"bench_sched\""));
+        assert!(json.contains("\"mode\": \"smoke\""));
+        assert!(json.contains("\"worst_ratio\": 1.25"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Observability: schedule tracing, timeline exports, phase profiles,
+//! and the metrics registry (DESIGN.md §10).
+//!
+//! The event scheduler already re-runs every schedule in a recording
+//! mode for its legality audit; this module turns those records into a
+//! first-class profiling surface:
+//!
+//! * [`ScheduleTrace`] — the committed per-command timeline (one
+//!   [`TraceSpan`] per resource reservation), certified against the
+//!   run's [`crate::sim::ResourceOccupancy`] by [`ScheduleTrace::verify`].
+//! * [`chrome_trace_json`] / [`trace_csv`] — exporters ([`TraceFormat`]
+//!   selects one from the CLI's `--trace-out` flag).
+//! * [`PhaseProfile`] — per-layer × per-phase cycle attribution plus the
+//!   busiest-command ranking (`pimfused profile`'s default output).
+//! * [`MetricsRegistry`] / [`BenchRecord`] — the counter/gauge/series
+//!   registry sessions, sweeps, the serving simulator and the guardrail
+//!   benches publish into.
+//!
+//! Capture is **opt-in**: set [`crate::config::ArchConfig::tracing`]
+//! (or call [`ScheduleTrace::capture`] directly, as below) and the
+//! trace rides on [`crate::ppa::PpaReport::schedule`]. With tracing off
+//! the scheduler takes its ordinary non-recording path and report
+//! output is byte-identical to a build without this module.
+//!
+//! ```
+//! use pimfused::config::ArchConfig;
+//! use pimfused::obs::{chrome_trace_json, PhaseProfile, ScheduleTrace};
+//! use pimfused::trace::{CmdKind, Trace};
+//!
+//! // A two-command schedule: move a tile up to the GBUF, then back.
+//! let mut t = Trace::default();
+//! t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 2048 }, &[], Some(1));
+//! t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 1024 }, &[1], Some(2));
+//!
+//! let cfg = ArchConfig::baseline();
+//! let (report, trace) = ScheduleTrace::capture(&cfg, &t);
+//! trace.verify(&report.occupancy).unwrap();
+//!
+//! let json = chrome_trace_json(&trace);
+//! assert!(json.contains("\"traceEvents\""));
+//!
+//! let profile = PhaseProfile::from_trace(&trace);
+//! assert_eq!(profile.makespan, report.occupancy.makespan);
+//! assert_eq!(profile.layers.len(), 2);
+//! ```
+
+mod export;
+mod metrics;
+mod phase;
+mod schedule;
+
+pub use export::{chrome_trace_json, trace_csv, TraceFormat, TRACE_CSV_HEADER};
+pub use metrics::{BenchRecord, MetricsRegistry};
+pub use phase::{LayerPhase, PhaseProfile, TopCmd};
+pub use schedule::{CmdMeta, ResourceClass, ResourceId, ScheduleTrace, TraceSpan};

@@ -1,0 +1,258 @@
+//! Per-layer phase attribution: where each layer's cycles went.
+//!
+//! [`PhaseProfile::from_trace`] folds a [`ScheduleTrace`] into one row
+//! per CNN graph node (layer), splitting the layer's busy cycles into
+//! phases by a fixed attribution rule (DESIGN.md §10):
+//!
+//! * spans on the **command bus** count as `cmdbus` (issue slots),
+//! * spans on an **ACT group** count as `act` (reserved tFAW/tRRD
+//!   window cycles — reserved, not busy),
+//! * every other span counts by its command's Table-I mnemonic:
+//!   `PIMcore_CMP` / `GBcore_CMP` → `compute` (including their operand
+//!   streams on banks and the bus), `PIM_BK2LBUF` / `PIM_LBUF2BK` →
+//!   `near_bank`, `PIM_BK2GBUF` / `PIM_GBUF2BK` → `cross_bank`,
+//!   `HOST_WRITE` / `HOST_READ` → `host`.
+//!
+//! `stall` is the layer's wall-clock window minus the union of its busy
+//! intervals — cycles in which *no* resource was doing the layer's work
+//! (dependency or contention waits). Phases sum resource-cycles and can
+//! exceed the window (parallel resources); `stall` is wall-clock.
+
+use crate::obs::schedule::{ResourceClass, ScheduleTrace};
+use crate::trace::NodeId;
+use crate::util::table::Table;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Busy-cycle breakdown of one CNN graph node (layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LayerPhase {
+    /// The graph node id.
+    pub node: NodeId,
+    /// Commands the trace scheduled for this node.
+    pub cmds: usize,
+    /// First issue-slot cycle of the node's commands.
+    pub start: u64,
+    /// Last completion cycle of the node's commands.
+    pub end: u64,
+    /// Busy cycles of `PIMcore_CMP` / `GBcore_CMP` spans (compute plus
+    /// their operand streams).
+    pub compute: u64,
+    /// Busy cycles of `PIM_BK2LBUF` / `PIM_LBUF2BK` spans.
+    pub near_bank: u64,
+    /// Busy cycles of `PIM_BK2GBUF` / `PIM_GBUF2BK` spans.
+    pub cross_bank: u64,
+    /// Busy cycles of `HOST_WRITE` / `HOST_READ` spans.
+    pub host: u64,
+    /// Reserved ACT-window cycles (tFAW/tRRD throttling slots).
+    pub act_window: u64,
+    /// Command-bus issue-slot cycles.
+    pub cmdbus: u64,
+    /// Wall-clock cycles of the layer's window in which none of its
+    /// spans were busy.
+    pub stall: u64,
+}
+
+/// One entry of the bottleneck ranking: a command and its total tallied
+/// busy cycles across all resources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopCmd {
+    /// Command index in the source trace.
+    pub cmd: usize,
+    /// Graph node the command belongs to.
+    pub node: NodeId,
+    /// Table-I mnemonic.
+    pub kind: &'static str,
+    /// Total busy cycles the command's spans tallied.
+    pub busy: u64,
+    /// Issue-slot start cycle.
+    pub start: u64,
+    /// Completion cycle.
+    pub done: u64,
+}
+
+/// Per-layer × per-phase cycle attribution of one schedule, plus the
+/// commands ranked by total busy cycles. Built by
+/// [`PhaseProfile::from_trace`]; the table the `pimfused profile`
+/// subcommand prints is [`PhaseProfile::render`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseProfile {
+    /// Total schedule length in cycles.
+    pub makespan: u64,
+    /// One row per graph node, ascending node id.
+    pub layers: Vec<LayerPhase>,
+    /// Every command, descending total busy cycles (ties by index).
+    pub top: Vec<TopCmd>,
+}
+
+impl PhaseProfile {
+    /// Attribute a captured schedule trace (see the module docs for the
+    /// attribution rule).
+    pub fn from_trace(t: &ScheduleTrace) -> PhaseProfile {
+        let mut layers: BTreeMap<NodeId, LayerPhase> = BTreeMap::new();
+        let mut windows: BTreeMap<NodeId, Vec<(u64, u64)>> = BTreeMap::new();
+        let mut per_cmd: Vec<u64> = vec![0; t.cmds.len()];
+        for c in &t.cmds {
+            let e = layers.entry(c.node).or_insert(LayerPhase {
+                node: c.node,
+                start: c.start,
+                end: c.done,
+                ..LayerPhase::default()
+            });
+            e.cmds += 1;
+            e.start = e.start.min(c.start);
+            e.end = e.end.max(c.done);
+        }
+        for sp in &t.spans {
+            let e = layers.get_mut(&sp.node).expect("span without a command");
+            match sp.res.class() {
+                ResourceClass::CmdBus => e.cmdbus += sp.busy,
+                ResourceClass::Act => e.act_window += sp.end - sp.start,
+                _ => match sp.kind {
+                    "PIMcore_CMP" | "GBcore_CMP" => e.compute += sp.busy,
+                    "PIM_BK2LBUF" | "PIM_LBUF2BK" => e.near_bank += sp.busy,
+                    "PIM_BK2GBUF" | "PIM_GBUF2BK" => e.cross_bank += sp.busy,
+                    _ => e.host += sp.busy,
+                },
+            }
+            per_cmd[sp.cmd] += sp.busy;
+            if sp.busy > 0 {
+                windows.entry(sp.node).or_default().push((sp.start, sp.start + sp.busy));
+            }
+        }
+        for (node, iv) in windows.iter_mut() {
+            let e = layers.get_mut(node).unwrap();
+            e.stall = (e.end - e.start).saturating_sub(union_len(iv));
+        }
+        // A layer with no busy span at all stalls for its whole window.
+        for e in layers.values_mut() {
+            if !windows.contains_key(&e.node) {
+                e.stall = e.end - e.start;
+            }
+        }
+        let mut top: Vec<TopCmd> = t
+            .cmds
+            .iter()
+            .enumerate()
+            .map(|(i, c)| TopCmd {
+                cmd: i,
+                node: c.node,
+                kind: c.kind,
+                busy: per_cmd[i],
+                start: c.start,
+                done: c.done,
+            })
+            .collect();
+        top.sort_by(|a, b| b.busy.cmp(&a.busy).then(a.cmd.cmp(&b.cmd)));
+        PhaseProfile { makespan: t.makespan, layers: layers.into_values().collect(), top }
+    }
+
+    /// The `k` busiest commands (fewer if the trace is shorter).
+    pub fn top_k(&self, k: usize) -> &[TopCmd] {
+        &self.top[..k.min(self.top.len())]
+    }
+
+    /// Render the per-layer breakdown table plus the top-`top` bottleneck
+    /// commands — the default `pimfused profile` output.
+    pub fn render(&self, top: usize) -> String {
+        let mut t = Table::new(vec![
+            "node",
+            "cmds",
+            "window",
+            "compute",
+            "near-bank",
+            "cross-bank",
+            "host",
+            "act",
+            "cmdbus",
+            "stall",
+        ]);
+        let mut total = LayerPhase::default();
+        for l in &self.layers {
+            t.row(vec![
+                l.node.to_string(),
+                l.cmds.to_string(),
+                format!("{}..{}", l.start, l.end),
+                l.compute.to_string(),
+                l.near_bank.to_string(),
+                l.cross_bank.to_string(),
+                l.host.to_string(),
+                l.act_window.to_string(),
+                l.cmdbus.to_string(),
+                l.stall.to_string(),
+            ]);
+            total.cmds += l.cmds;
+            total.compute += l.compute;
+            total.near_bank += l.near_bank;
+            total.cross_bank += l.cross_bank;
+            total.host += l.host;
+            total.act_window += l.act_window;
+            total.cmdbus += l.cmdbus;
+            total.stall += l.stall;
+        }
+        t.row(vec![
+            "total".to_string(),
+            total.cmds.to_string(),
+            format!("0..{}", self.makespan),
+            total.compute.to_string(),
+            total.near_bank.to_string(),
+            total.cross_bank.to_string(),
+            total.host.to_string(),
+            total.act_window.to_string(),
+            total.cmdbus.to_string(),
+            total.stall.to_string(),
+        ]);
+        let mut out = t.render();
+        let _ = writeln!(out, "top {} commands by busy cycles:", top.min(self.top.len()));
+        let mut tt = Table::new(vec!["cmd", "node", "kind", "busy_cycles", "start", "done"]);
+        for c in self.top_k(top) {
+            tt.row(vec![
+                c.cmd.to_string(),
+                c.node.to_string(),
+                c.kind.to_string(),
+                c.busy.to_string(),
+                c.start.to_string(),
+                c.done.to_string(),
+            ]);
+        }
+        out += &tt.render();
+        out
+    }
+}
+
+/// Total length of the union of (possibly overlapping) intervals.
+/// Sorts in place.
+fn union_len(iv: &mut [(u64, u64)]) -> u64 {
+    iv.sort_unstable();
+    let mut total = 0u64;
+    let mut cur: Option<(u64, u64)> = None;
+    for &(s, e) in iv.iter() {
+        match cur {
+            Some((cs, ce)) if s <= ce => cur = Some((cs, ce.max(e))),
+            Some((cs, ce)) => {
+                total += ce - cs;
+                cur = Some((s, e));
+            }
+            None => cur = Some((s, e)),
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_len_merges_overlaps() {
+        assert_eq!(union_len(&mut []), 0);
+        assert_eq!(union_len(&mut [(0, 10)]), 10);
+        assert_eq!(union_len(&mut [(0, 10), (5, 15)]), 15);
+        assert_eq!(union_len(&mut [(20, 30), (0, 10)]), 20);
+        assert_eq!(union_len(&mut [(0, 10), (10, 20)]), 20, "touching intervals merge");
+        assert_eq!(union_len(&mut [(0, 30), (5, 10)]), 30, "contained interval adds nothing");
+    }
+}

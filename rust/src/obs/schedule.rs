@@ -1,0 +1,410 @@
+//! [`ScheduleTrace`]: the event scheduler's committed timeline as data.
+//!
+//! The event engine's recording mode ([`crate::sim::event`]) remembers
+//! every resource reservation each command's issue committed. This module
+//! promotes those records into a stable, self-describing trace — one
+//! [`TraceSpan`] per reservation, resolved from the scheduler's internal
+//! resource-arena indices to named [`ResourceId`]s — that the exporters
+//! ([`crate::obs::chrome_trace_json`] / [`crate::obs::trace_csv`]) and
+//! the phase profiler ([`crate::obs::PhaseProfile`]) consume.
+//!
+//! A trace is **certified**: [`ScheduleTrace::verify`] cross-checks it
+//! against the run's [`ResourceOccupancy`] — spans must be disjoint per
+//! resource, lie within the makespan, and their per-resource busy sums
+//! must equal the occupancy tallies *exactly* (no tolerance). The
+//! property test in `tests/obs_api.rs` runs this over random
+//! config × workload points.
+
+use crate::config::ArchConfig;
+use crate::sim::event::resources::{self, Resv};
+use crate::sim::{EventReport, ResourceOccupancy};
+use crate::trace::{NodeId, Trace, MAX_CORES};
+use std::collections::BTreeMap;
+
+/// The resource classes of the event scheduler's arena, in export order.
+///
+/// Each class becomes one pseudo-process in the Chrome-trace export
+/// (pid = [`ResourceClass::pid`]); resources within a class (banks,
+/// PIMcores, ACT groups) become its threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ResourceClass {
+    /// The contended command bus (one issue slot per command).
+    CmdBus,
+    /// The shared internal bus / GBUF port.
+    Bus,
+    /// The GBcore compute datapath.
+    Gbcore,
+    /// The off-chip host interface.
+    Host,
+    /// A tFAW/tRRD activation-window bank group.
+    Act,
+    /// A PIMcore datapath.
+    Core,
+    /// A DRAM bank.
+    Bank,
+}
+
+/// One row per class: `(class, export name)`. Single source of truth for
+/// [`ResourceClass::name`] and the drift test below.
+const CLASS_TABLE: &[(ResourceClass, &str)] = &[
+    (ResourceClass::CmdBus, "cmdbus"),
+    (ResourceClass::Bus, "bus"),
+    (ResourceClass::Gbcore, "gbcore"),
+    (ResourceClass::Host, "host"),
+    (ResourceClass::Act, "act"),
+    (ResourceClass::Core, "core"),
+    (ResourceClass::Bank, "bank"),
+];
+
+impl ResourceClass {
+    /// Every class, in export order.
+    pub const ALL: [ResourceClass; 7] = [
+        ResourceClass::CmdBus,
+        ResourceClass::Bus,
+        ResourceClass::Gbcore,
+        ResourceClass::Host,
+        ResourceClass::Act,
+        ResourceClass::Core,
+        ResourceClass::Bank,
+    ];
+
+    fn row(&self) -> &'static (ResourceClass, &'static str) {
+        &CLASS_TABLE[CLASS_TABLE.iter().position(|(c, _)| c == self).unwrap()]
+    }
+
+    /// Stable export name (`cmdbus`, `bus`, ..., `bank`) — the `cat`
+    /// field and process name in the Chrome-trace export, the `resource`
+    /// column in the CSV export.
+    pub fn name(&self) -> &'static str {
+        self.row().1
+    }
+
+    /// Chrome-trace pseudo-process id for this class (1-based, stable).
+    pub fn pid(&self) -> u64 {
+        CLASS_TABLE.iter().position(|(c, _)| c == self).unwrap() as u64 + 1
+    }
+}
+
+/// One named resource of the schedule: a class plus, for the per-bank /
+/// per-core / per-group classes, an index within the class.
+///
+/// Ordering is class-major then index — the order resources appear in
+/// the exports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ResourceId {
+    /// The command bus.
+    CmdBus,
+    /// The shared internal bus / GBUF port.
+    Bus,
+    /// The GBcore compute datapath.
+    Gbcore,
+    /// The host interface.
+    Host,
+    /// Activation-window slots of bank group `.0`.
+    ActGroup(usize),
+    /// PIMcore `.0`'s datapath.
+    Core(usize),
+    /// Bank `.0`.
+    Bank(usize),
+}
+
+impl ResourceId {
+    /// The class this resource belongs to.
+    pub fn class(&self) -> ResourceClass {
+        match self {
+            ResourceId::CmdBus => ResourceClass::CmdBus,
+            ResourceId::Bus => ResourceClass::Bus,
+            ResourceId::Gbcore => ResourceClass::Gbcore,
+            ResourceId::Host => ResourceClass::Host,
+            ResourceId::ActGroup(_) => ResourceClass::Act,
+            ResourceId::Core(_) => ResourceClass::Core,
+            ResourceId::Bank(_) => ResourceClass::Bank,
+        }
+    }
+
+    /// Index within the class (0 for the singleton classes) — the
+    /// Chrome-trace thread id and the CSV `res_index` column.
+    pub fn index(&self) -> usize {
+        match self {
+            ResourceId::ActGroup(i) | ResourceId::Core(i) | ResourceId::Bank(i) => *i,
+            _ => 0,
+        }
+    }
+
+    /// Human-readable label, e.g. `bus`, `bank3`, `core0`, `act1`.
+    pub fn label(&self) -> String {
+        match self {
+            ResourceId::ActGroup(_) | ResourceId::Core(_) | ResourceId::Bank(_) => {
+                format!("{}{}", self.class().name(), self.index())
+            }
+            _ => self.class().name().to_string(),
+        }
+    }
+}
+
+/// Map a scheduler resource-arena index to its public [`ResourceId`].
+fn res_id(res: usize) -> ResourceId {
+    match res {
+        resources::CMDBUS => ResourceId::CmdBus,
+        resources::BUS => ResourceId::Bus,
+        resources::GBCORE => ResourceId::Gbcore,
+        resources::HOST => ResourceId::Host,
+        _ => {
+            if let Some(g) = resources::res_act_group(res) {
+                ResourceId::ActGroup(g)
+            } else if let Some(c) = resources::res_core(res) {
+                ResourceId::Core(c)
+            } else if let Some(b) = resources::res_bank(res) {
+                ResourceId::Bank(b)
+            } else {
+                unreachable!("unknown resource-arena index {res}")
+            }
+        }
+    }
+}
+
+/// One committed resource reservation of one command.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSpan {
+    /// Index of the owning command in the source [`Trace`].
+    pub cmd: usize,
+    /// CNN graph node (layer) the command belongs to.
+    pub node: NodeId,
+    /// Table-I mnemonic of the owning command
+    /// ([`crate::trace::CmdKind::mnemonic`]).
+    pub kind: &'static str,
+    /// The reserved resource.
+    pub res: ResourceId,
+    /// Reservation start cycle (inclusive).
+    pub start: u64,
+    /// Reservation end cycle (exclusive); `end - start` includes any
+    /// non-busy tail (write recovery, ACT-window slots).
+    pub end: u64,
+    /// Cycles of the reservation tallied as busy work in
+    /// [`ResourceOccupancy`] — 0 for reserved-but-idle spans (ACT-window
+    /// slots, the GBcore's bus-blocking hold, write-recovery tails are
+    /// excluded from `busy` but included in `end`).
+    pub busy: u64,
+    /// How many cycles slice pipelining slid this span past its rigid
+    /// stagger offset (0 for non-slice spans and rigid placements).
+    pub slid: u64,
+}
+
+/// Per-command metadata: the issue/completion window of one command.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CmdMeta {
+    /// CNN graph node (layer) the command belongs to.
+    pub node: NodeId,
+    /// Table-I mnemonic of the command.
+    pub kind: &'static str,
+    /// Issue-slot start cycle.
+    pub start: u64,
+    /// Completion cycle (write recovery included).
+    pub done: u64,
+}
+
+/// The event scheduler's committed timeline for one trace: every
+/// reservation of every command, in trace order, plus per-command
+/// issue/completion windows.
+///
+/// Captured by [`ScheduleTrace::capture`] (or by any
+/// [`crate::coordinator::Session`] run whose config has
+/// [`crate::config::ArchConfig::tracing`] on — the trace then rides on
+/// [`crate::ppa::PpaReport::schedule`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleTrace {
+    /// Total schedule length in cycles.
+    pub makespan: u64,
+    /// PIMcores in the channel.
+    pub num_cores: usize,
+    /// Banks in the channel.
+    pub num_banks: usize,
+    /// Activation-window bank groups.
+    pub num_groups: usize,
+    /// Per-command issue/completion windows, indexed by command.
+    pub cmds: Vec<CmdMeta>,
+    /// Every committed reservation, grouped by command in trace order.
+    pub spans: Vec<TraceSpan>,
+}
+
+impl ScheduleTrace {
+    /// Run the event scheduler in recording mode on `trace` and capture
+    /// its committed timeline. Always uses the event engine regardless of
+    /// `cfg.engine` (the analytic engine has no schedule to trace); the
+    /// returned [`EventReport`] is the same result a plain event-engine
+    /// run of the same config produces.
+    pub fn capture(cfg: &ArchConfig, trace: &Trace) -> (EventReport, ScheduleTrace) {
+        let (report, sched, records) = crate::sim::event::simulate_recorded(cfg, trace);
+        let mut cmds = Vec::with_capacity(trace.cmds.len());
+        let mut spans = Vec::new();
+        for (i, rec) in records.iter().enumerate() {
+            let node = trace.cmds[i].node;
+            let kind = trace.cmds[i].kind.mnemonic();
+            cmds.push(CmdMeta { node, kind, start: sched.starts[i], done: sched.dones[i] });
+            for rv in &rec.resv {
+                let Resv { res, start, end, span, slid, tally } = *rv;
+                spans.push(TraceSpan {
+                    cmd: i,
+                    node,
+                    kind,
+                    res: res_id(res),
+                    start,
+                    end,
+                    busy: if tally { span } else { 0 },
+                    slid,
+                });
+            }
+        }
+        let occ = report.occupancy;
+        let st = ScheduleTrace {
+            makespan: occ.makespan,
+            num_cores: occ.num_cores,
+            num_banks: occ.num_banks,
+            num_groups: occ.num_groups,
+            cmds,
+            spans,
+        };
+        (report, st)
+    }
+
+    /// Certify this trace against the occupancy tallies of the run that
+    /// produced it. Checks, all exact:
+    ///
+    /// * spans are disjoint per resource and lie within the makespan;
+    /// * per-resource busy sums equal the [`ResourceOccupancy`] tallies
+    ///   (cores, banks, bus, GBcore, host, command bus);
+    /// * per-group reserved ACT cycles equal `act_busy`;
+    /// * busy cycles of slid spans equal `slid_slices`;
+    /// * per-bank host-command busy cycles equal `host_bank_busy`.
+    pub fn verify(&self, occ: &ResourceOccupancy) -> Result<(), String> {
+        if self.makespan != occ.makespan {
+            return Err(format!("makespan {} != occupancy {}", self.makespan, occ.makespan));
+        }
+        let mut by_res: BTreeMap<ResourceId, Vec<(u64, u64, usize)>> = BTreeMap::new();
+        let mut busy: BTreeMap<ResourceId, u64> = BTreeMap::new();
+        let mut reserved: BTreeMap<ResourceId, u64> = BTreeMap::new();
+        let mut slid_busy = 0u64;
+        let mut host_bank = [0u64; MAX_CORES];
+        for sp in &self.spans {
+            if sp.start > sp.end {
+                return Err(format!("cmd {} span on {:?} is inverted", sp.cmd, sp.res));
+            }
+            if sp.end > self.makespan {
+                return Err(format!(
+                    "cmd {} span on {:?} ends at {} past makespan {}",
+                    sp.cmd, sp.res, sp.end, self.makespan
+                ));
+            }
+            by_res.entry(sp.res).or_default().push((sp.start, sp.end, sp.cmd));
+            *busy.entry(sp.res).or_default() += sp.busy;
+            *reserved.entry(sp.res).or_default() += sp.end - sp.start;
+            if sp.slid > 0 {
+                slid_busy += sp.busy;
+            }
+            if let ResourceId::Bank(b) = sp.res {
+                if sp.kind.starts_with("HOST") {
+                    host_bank[b] += sp.busy;
+                }
+            }
+        }
+        for (res, iv) in by_res.iter_mut() {
+            iv.sort_unstable();
+            for w in iv.windows(2) {
+                if w[0].1 > w[1].0 {
+                    return Err(format!(
+                        "{:?} double-booked: cmd {} [{}, {}) overlaps cmd {} [{}, {})",
+                        res, w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
+                    ));
+                }
+            }
+        }
+        let got = |r: ResourceId| busy.get(&r).copied().unwrap_or(0);
+        let check = |name: String, traced: u64, tallied: u64| {
+            if traced != tallied {
+                Err(format!("{name}: traced busy {traced} != occupancy {tallied}"))
+            } else {
+                Ok(())
+            }
+        };
+        check("cmdbus".into(), got(ResourceId::CmdBus), occ.cmdbus_busy)?;
+        check("bus".into(), got(ResourceId::Bus), occ.bus_busy)?;
+        check("gbcore".into(), got(ResourceId::Gbcore), occ.gbcore_busy)?;
+        check("host".into(), got(ResourceId::Host), occ.host_busy)?;
+        for c in 0..self.num_cores {
+            check(format!("core{c}"), got(ResourceId::Core(c)), occ.core_busy[c])?;
+        }
+        for b in 0..self.num_banks {
+            check(format!("bank{b}"), got(ResourceId::Bank(b)), occ.bank_busy[b])?;
+            check(format!("host@bank{b}"), host_bank[b], occ.host_bank_busy[b])?;
+        }
+        for g in 0..self.num_groups {
+            let r = reserved.get(&ResourceId::ActGroup(g)).copied().unwrap_or(0);
+            check(format!("act{g}"), r, occ.act_busy[g])?;
+        }
+        check("slid slices".into(), slid_busy, occ.slid_slices)?;
+        for (i, c) in self.cmds.iter().enumerate() {
+            if c.start > c.done || c.done > self.makespan {
+                return Err(format!(
+                    "cmd {} window [{}, {}] escapes makespan {}",
+                    i, c.start, c.done, self.makespan
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_table_cannot_drift() {
+        assert_eq!(CLASS_TABLE.len(), ResourceClass::ALL.len());
+        for (i, c) in ResourceClass::ALL.iter().enumerate() {
+            assert_eq!(CLASS_TABLE[i].0, *c, "ALL and CLASS_TABLE must agree on order");
+            assert_eq!(c.pid(), i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn labels_and_indices() {
+        assert_eq!(ResourceId::Bus.label(), "bus");
+        assert_eq!(ResourceId::Bank(3).label(), "bank3");
+        assert_eq!(ResourceId::Core(0).label(), "core0");
+        assert_eq!(ResourceId::ActGroup(1).label(), "act1");
+        assert_eq!(ResourceId::Bank(3).index(), 3);
+        assert_eq!(ResourceId::Host.index(), 0);
+    }
+
+    #[test]
+    fn resource_order_is_class_major() {
+        let mut v =
+            vec![ResourceId::Bank(0), ResourceId::CmdBus, ResourceId::Core(2), ResourceId::Bus];
+        v.sort();
+        assert_eq!(
+            v,
+            vec![ResourceId::CmdBus, ResourceId::Bus, ResourceId::Core(2), ResourceId::Bank(0)]
+        );
+    }
+
+    #[test]
+    fn res_id_round_trips_the_arena() {
+        assert_eq!(res_id(resources::CMDBUS), ResourceId::CmdBus);
+        assert_eq!(res_id(resources::BUS), ResourceId::Bus);
+        assert_eq!(res_id(resources::GBCORE), ResourceId::Gbcore);
+        assert_eq!(res_id(resources::HOST), ResourceId::Host);
+        for r in 0..resources::NUM_RES {
+            let id = res_id(r); // must not hit the unreachable arm
+            if let Some(b) = resources::res_bank(r) {
+                assert_eq!(id, ResourceId::Bank(b));
+            }
+            if let Some(g) = resources::res_act_group(r) {
+                assert_eq!(id, ResourceId::ActGroup(g));
+            }
+            if let Some(c) = resources::res_core(r) {
+                assert_eq!(id, ResourceId::Core(c));
+            }
+        }
+    }
+}

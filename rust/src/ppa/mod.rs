@@ -28,6 +28,9 @@ pub struct PpaReport {
     pub area: AreaReport,
     /// Per-resource utilization (event engine only).
     pub occupancy: Option<ResourceOccupancy>,
+    /// The committed schedule timeline, captured only when the config ran
+    /// the event engine with [`crate::config::ArchConfig::tracing`] on.
+    pub schedule: Option<crate::obs::ScheduleTrace>,
 }
 
 /// PPA ratios relative to a baseline run (the paper normalizes everything
@@ -87,6 +90,13 @@ impl PpaReport {
     pub fn act_utilization(&self) -> Option<f64> {
         self.occupancy.map(|o| o.act_utilization())
     }
+
+    /// Per-layer phase attribution of the captured schedule
+    /// ([`crate::obs::PhaseProfile`]). `None` unless the report was run
+    /// with [`crate::config::ArchConfig::tracing`] on the event engine.
+    pub fn phase_profile(&self) -> Option<crate::obs::PhaseProfile> {
+        self.schedule.as_ref().map(crate::obs::PhaseProfile::from_trace)
+    }
 }
 
 impl Normalized {
@@ -125,6 +135,7 @@ mod tests {
                 control_mm2: 0.0,
             },
             occupancy: None,
+            schedule: None,
         }
     }
 

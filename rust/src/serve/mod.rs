@@ -43,7 +43,7 @@ pub mod stats;
 
 pub use arrivals::{arrival_times, ArrivalKind};
 pub use queue::AdmissionQueue;
-pub use sim::{simulate_stream, ServeDriver, ServiceProfile};
+pub use sim::{simulate_stream, simulate_stream_metered, ServeDriver, ServiceProfile};
 pub use stats::{latency_stats, LatencyStats, ServeReport};
 
 use crate::config::ArchConfig;

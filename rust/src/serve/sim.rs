@@ -103,6 +103,15 @@ impl<'s> ServeDriver<'s> {
         self.schedule_runs.load(Ordering::Relaxed)
     }
 
+    /// Publish the driver's memo counters into a metrics registry
+    /// (`serve.*` namespace): schedules actually built vs profile-memo
+    /// entries (the gap to requests served is the cache-hit count). See
+    /// [`crate::obs::MetricsRegistry`].
+    pub fn publish_metrics(&self, m: &crate::obs::MetricsRegistry) {
+        m.add("serve.schedule_runs", self.schedule_runs() as u64);
+        m.add("serve.profile_entries", self.profiles.lock().unwrap().len() as u64);
+    }
+
     /// Run one serving simulation end-to-end: validate, resolve the
     /// service profile, replay the request stream.
     pub fn run(&self, sc: &ServeConfig) -> Result<ServeReport> {
@@ -124,6 +133,19 @@ impl<'s> ServeDriver<'s> {
 /// expired at the queue head, or the arrival stream is exhausted (no
 /// straggler is coming, so partial batches drain eagerly).
 pub fn simulate_stream(sc: &ServeConfig, prof: ServiceProfile) -> ServeReport {
+    simulate_stream_metered(sc, prof, None)
+}
+
+/// [`simulate_stream`] with a live metrics tap: when a registry is given,
+/// the loop pushes a `serve.queue_depth` sample (waiting requests at each
+/// batch dispatch) and a `serve.latency_cycles` sample per completed
+/// request into it as the stream replays. `None` is exactly
+/// [`simulate_stream`] — the report is identical either way.
+pub fn simulate_stream_metered(
+    sc: &ServeConfig,
+    prof: ServiceProfile,
+    metrics: Option<&crate::obs::MetricsRegistry>,
+) -> ServeReport {
     let clock = sc.cfg.timing.clock_hz();
     let arrivals = arrival_times(sc.arrival, sc.requests, clock / sc.rate, sc.seed);
     let mut q = AdmissionQueue::new(sc.queue_depth);
@@ -157,6 +179,9 @@ pub fn simulate_stream(sc: &ServeConfig, prof: ServiceProfile) -> ServeReport {
                 i += 1;
             }
             (_, Some(dt)) => {
+                if let Some(m) = metrics {
+                    m.push_sample("serve.queue_depth", q.len() as f64);
+                }
                 let taken = q.take(dt, sc.batch);
                 debug_assert!(!taken.is_empty(), "dispatch must make progress");
                 let b = taken.len();
@@ -164,6 +189,9 @@ pub fn simulate_stream(sc: &ServeConfig, prof: ServiceProfile) -> ServeReport {
                 let done = dt + service;
                 busy += service;
                 for t in taken {
+                    if let Some(m) = metrics {
+                        m.push_sample("serve.latency_cycles", (done - t) as f64);
+                    }
                     latencies.push(done - t);
                 }
                 batches += 1;

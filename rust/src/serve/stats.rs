@@ -118,6 +118,26 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Publish the run's outcome into a metrics registry (`serve.*`
+    /// namespace): request/batch counters plus throughput, utilization,
+    /// queue and latency-percentile gauges. See
+    /// [`crate::obs::MetricsRegistry`].
+    pub fn publish_metrics(&self, m: &crate::obs::MetricsRegistry) {
+        m.add("serve.requests", self.requests as u64);
+        m.add("serve.completed", self.completed as u64);
+        m.add("serve.dropped", self.dropped as u64);
+        m.add("serve.batches", self.batches as u64);
+        m.gauge("serve.throughput_rps", self.throughput_rps);
+        m.gauge("serve.utilization", self.utilization);
+        m.gauge("serve.queue_mean", self.queue_mean);
+        m.gauge("serve.queue_max", self.queue_max as f64);
+        m.gauge("serve.latency_p50", self.latency.p50 as f64);
+        m.gauge("serve.latency_p95", self.latency.p95 as f64);
+        m.gauge("serve.latency_p99", self.latency.p99 as f64);
+        m.gauge("serve.latency_mean", self.latency.mean);
+        m.gauge("serve.latency_max", self.latency.max as f64);
+    }
+
     /// Render the report as a human-readable text block (the default
     /// `pimfused serve` output).
     pub fn render(&self) -> String {

@@ -49,7 +49,7 @@
 //! [`RowMap`]: crate::trace::RowMap
 
 mod deps;
-mod resources;
+pub(crate) mod resources;
 
 pub use resources::ResourceOccupancy;
 
@@ -77,6 +77,18 @@ pub struct EventReport {
 pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> EventReport {
     let dag = deps::build(trace);
     run_schedule(cfg, trace, &dag, false).0
+}
+
+/// Simulate in recording mode, returning the report together with the
+/// per-command schedule (starts/completions in trace order) and the
+/// committed reservation records — the raw material
+/// [`crate::obs::ScheduleTrace`] promotes into a stable timeline.
+pub(crate) fn simulate_recorded(
+    cfg: &ArchConfig,
+    trace: &Trace,
+) -> (EventReport, ScheduleAudit, Vec<resources::IssueRecord>) {
+    let dag = deps::build(trace);
+    run_schedule(cfg, trace, &dag, true)
 }
 
 /// Per-command schedule record, in trace order: issue-slot start and
@@ -152,8 +164,8 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
     // Independent double-booking replay over every resource.
     let mut per_res: Vec<Vec<(u64, u64, usize)>> = vec![Vec::new(); resources::NUM_RES];
     for (i, rec) in records.iter().enumerate() {
-        for &(res, s, e, _) in &rec.resv {
-            per_res[res].push((s, e, i));
+        for rv in &rec.resv {
+            per_res[rv.res].push((rv.start, rv.end, i));
         }
     }
     for (res, iv) in per_res.iter_mut().enumerate() {
@@ -201,8 +213,9 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
                 }
             }
             let mut seen = [0u64; MAX_CORES];
-            for &(res, s, e, span) in &rec.resv {
-                if let Some(b) = resources::res_bank(res) {
+            for rv in &rec.resv {
+                let (s, e, span) = (rv.start, rv.end, rv.span);
+                if let Some(b) = resources::res_bank(rv.res) {
                     if !resident {
                         return Err(format!(
                             "host command {i} reserved bank {b} with residency off"
@@ -289,8 +302,9 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
                 }
             }
             let mut seen = [0u64; MAX_CORES];
-            for &(res, s, e, span) in &rec.resv {
-                if let Some(b) = resources::res_bank(res) {
+            for rv in &rec.resv {
+                let (s, e, span) = (rv.start, rv.end, rv.span);
+                if let Some(b) = resources::res_bank(rv.res) {
                     if b >= MAX_CORES || want[b].1 == 0 {
                         return Err(format!(
                             "cross-bank command {i} reserved bank {b} outside its walk"
@@ -330,8 +344,9 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
         // ACT slots: in-window, and enough reserved cycles per group to
         // cover the command's activations at the legal rate.
         let mut reserved = [0u64; NUM_ACT_GROUPS];
-        for &(res, s, e, _) in &rec.resv {
-            if let Some(g) = resources::res_act_group(res) {
+        for rv in &rec.resv {
+            let (s, e) = (rv.start, rv.end);
+            if let Some(g) = resources::res_act_group(rv.res) {
                 if s < data_lo || e > data_hi {
                     return Err(format!(
                         "command {i}: ACT window [{s}, {e}) escapes the data phase [{data_lo}, {data_hi})"

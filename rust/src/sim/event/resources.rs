@@ -309,10 +309,12 @@ struct SliceReq {
 
 // Fixed arena layout: the scalar resources, then the ACT windows, then
 // cores and banks (always MAX_CORES of each; unused ones stay empty).
-const CMDBUS: usize = 0;
-const BUS: usize = 1;
-const GBCORE: usize = 2;
-const HOST: usize = 3;
+// The scalar indices are pub(crate) so the observability layer can map
+// recorded reservations back to named resources.
+pub(crate) const CMDBUS: usize = 0;
+pub(crate) const BUS: usize = 1;
+pub(crate) const GBCORE: usize = 2;
+pub(crate) const HOST: usize = 3;
 const ACT0: usize = 4;
 const CORE0: usize = ACT0 + NUM_ACT_GROUPS;
 const BANK0: usize = CORE0 + MAX_CORES;
@@ -337,6 +339,33 @@ pub(crate) fn res_act_group(res: usize) -> Option<usize> {
     }
 }
 
+/// Which PIMcore a resource-arena index addresses, if any (for the
+/// observability layer's resource naming).
+pub(crate) fn res_core(res: usize) -> Option<usize> {
+    if (CORE0..CORE0 + MAX_CORES).contains(&res) {
+        Some(res - CORE0)
+    } else {
+        None
+    }
+}
+
+/// One committed reservation of a recorded command: resource `res` held
+/// `[start, end)` (recovery tails included), of which `span` cycles were
+/// streamed data. `tally` mirrors the [`Timeline::reserve`] busy flag —
+/// only tallied reservations count toward a resource's busy cycles (ACT
+/// window slots and the GBcore's bus-blocking port hold are reserved but
+/// never busy). `slid` is how far a per-bank slice was committed past
+/// its rigid stagger offset (always 0 for non-slice reservations).
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct Resv {
+    pub(crate) res: usize,
+    pub(crate) start: u64,
+    pub(crate) end: u64,
+    pub(crate) span: u64,
+    pub(crate) slid: u64,
+    pub(crate) tally: bool,
+}
+
 /// One command's committed reservations, captured when the scheduler
 /// runs in audit mode: per resource the absolute `[start, end)` interval
 /// (recovery tails included) plus the streamed span without the tail,
@@ -346,8 +375,7 @@ pub(crate) fn res_act_group(res: usize) -> Option<usize> {
 pub(crate) struct IssueRecord {
     pub(crate) data_span: u64,
     pub(crate) group_acts: [u64; NUM_ACT_GROUPS],
-    /// `(resource, start, end_with_tail, streamed_span)` per reservation.
-    pub(crate) resv: Vec<(usize, u64, u64, u64)>,
+    pub(crate) resv: Vec<Resv>,
 }
 
 /// Issue result: the command's issue-slot start and its completion
@@ -472,13 +500,26 @@ impl Timelines {
             let mut resv = Vec::with_capacity(self.req.len() + self.slices.len());
             for it in &self.req {
                 if it.span + it.tail > 0 {
-                    let end = start + it.off + it.span + it.tail;
-                    resv.push((it.res, start + it.off, end, it.span));
+                    resv.push(Resv {
+                        res: it.res,
+                        start: start + it.off,
+                        end: start + it.off + it.span + it.tail,
+                        span: it.span,
+                        slid: 0,
+                        tally: it.tally,
+                    });
                 }
             }
             for (k, s) in self.slices.iter().enumerate() {
-                let end = self.place[k] + s.span + self.slice_tail;
-                resv.push((BANK0 + s.bank, self.place[k], end, s.span));
+                let at = self.place[k];
+                resv.push(Resv {
+                    res: BANK0 + s.bank,
+                    start: at,
+                    end: at + s.span + self.slice_tail,
+                    span: s.span,
+                    slid: at - (start + self.t_cmd + s.off),
+                    tally: true,
+                });
             }
             records.push(IssueRecord { data_span: span, group_acts: self.group_acts, resv });
         }

@@ -330,6 +330,24 @@ pub enum CmdKind {
     },
 }
 
+impl CmdKind {
+    /// The Table-I mnemonic of this command (`PIM_BK2GBUF`, `HOST_WRITE`,
+    /// ...): the stable name the trace dump and the observability
+    /// exporters ([`crate::obs`]) label commands with.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            CmdKind::PimcoreCmp { .. } => "PIMcore_CMP",
+            CmdKind::GbcoreCmp { .. } => "GBcore_CMP",
+            CmdKind::Bk2Lbuf { .. } => "PIM_BK2LBUF",
+            CmdKind::Lbuf2Bk { .. } => "PIM_LBUF2BK",
+            CmdKind::Bk2Gbuf { .. } => "PIM_BK2GBUF",
+            CmdKind::Gbuf2Bk { .. } => "PIM_GBUF2BK",
+            CmdKind::HostWrite { .. } => "HOST_WRITE",
+            CmdKind::HostRead { .. } => "HOST_READ",
+        }
+    }
+}
+
 /// Upper bound on feature maps one command reads (`ADD_RELU`'s operand
 /// pair is the widest consumer in the IR).
 pub const MAX_DEPS: usize = 2;
@@ -622,6 +640,27 @@ mod tests {
         assert_eq!(t.max_node(), 7);
         t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 8 }, &[], Some(9));
         assert_eq!(t.max_node(), 9);
+    }
+
+    #[test]
+    fn mnemonics_are_the_table_i_names() {
+        let cases: Vec<(CmdKind, &str)> = vec![
+            (CmdKind::Bk2Lbuf { bytes: PerCore::zero(1) }, "PIM_BK2LBUF"),
+            (CmdKind::Lbuf2Bk { bytes: PerCore::zero(1) }, "PIM_LBUF2BK"),
+            (CmdKind::Bk2Gbuf { bytes: 1 }, "PIM_BK2GBUF"),
+            (CmdKind::Gbuf2Bk { bytes: 1 }, "PIM_GBUF2BK"),
+            (CmdKind::HostWrite { bytes: 1, rows: RowMap::EMPTY }, "HOST_WRITE"),
+            (CmdKind::HostRead { bytes: 1, rows: RowMap::EMPTY }, "HOST_READ"),
+            (CmdKind::GbcoreCmp { flags: ExecFlags::Pool, eltwise: 1 }, "GBcore_CMP"),
+        ];
+        for (kind, want) in &cases {
+            assert_eq!(kind.mnemonic(), *want);
+            // The dump uses the same names, so the exporters and the
+            // `trace` subcommand cannot drift apart.
+            let mut t = Trace::default();
+            t.push(0, kind.clone());
+            assert!(t.dump(1).contains(want), "{want} missing from dump");
+        }
     }
 
     #[test]

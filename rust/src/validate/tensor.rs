@@ -17,18 +17,22 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// An all-zero `c`×`h`×`w` tensor.
     pub fn zeros(c: usize, h: usize, w: usize) -> Self {
         Self { c, h, w, data: vec![0.0; c * h * w] }
     }
 
+    /// The 0×0×0 tensor (placeholder for not-yet-materialized outputs).
     pub fn empty() -> Self {
         Self { c: 0, h: 0, w: 0, data: vec![] }
     }
 
+    /// True for the [`Tensor::empty`] placeholder (no elements).
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Build a `c`×`h`×`w` tensor element-wise from `f(c, y, x)`.
     pub fn from_fn(c: usize, h: usize, w: usize, mut f: impl FnMut(usize, usize, usize) -> f32) -> Self {
         let mut t = Self::zeros(c, h, w);
         for ci in 0..c {
@@ -42,14 +46,17 @@ impl Tensor {
         t
     }
 
+    /// The `(c, h, w)` shape.
     pub fn dims(&self) -> (usize, usize, usize) {
         (self.c, self.h, self.w)
     }
 
+    /// The backing storage, channel-major `(c, h, w)` row-major.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Element at `(c, y, x)` (debug-asserted in bounds).
     #[inline]
     pub fn at(&self, c: usize, y: usize, x: usize) -> f32 {
         debug_assert!(c < self.c && y < self.h && x < self.w);
@@ -157,22 +164,29 @@ impl Tensor {
         out
     }
 
+    /// Max-pool producing the full output map (pad taps ignored).
     pub fn maxpool(&self, k: usize, stride: usize, pad: usize) -> Tensor {
         let oh = (self.h + 2 * pad - k) / stride + 1;
         let ow = (self.w + 2 * pad - k) / stride + 1;
         self.maxpool_region(k, stride, pad, Rect::full(self.h, self.w), Rect::full(oh, ow))
     }
 
+    /// Max-pool over an output region; input covers absolute `in_rect`
+    /// (same halo contract as [`Tensor::conv2d_region`]).
     pub fn maxpool_region(&self, k: usize, stride: usize, pad: usize, in_rect: Rect, out_region: Rect) -> Tensor {
         self.pool_region(k, stride, pad, in_rect, out_region, true)
     }
 
+    /// Average-pool producing the full output map (`count_include_pad`,
+    /// the torch default: divisor is always `k*k`).
     pub fn avgpool(&self, k: usize, stride: usize, pad: usize) -> Tensor {
         let oh = (self.h + 2 * pad - k) / stride + 1;
         let ow = (self.w + 2 * pad - k) / stride + 1;
         self.avgpool_region(k, stride, pad, Rect::full(self.h, self.w), Rect::full(oh, ow))
     }
 
+    /// Average-pool over an output region; input covers absolute `in_rect`
+    /// (same halo contract as [`Tensor::conv2d_region`]).
     pub fn avgpool_region(&self, k: usize, stride: usize, pad: usize, in_rect: Rect, out_region: Rect) -> Tensor {
         self.pool_region(k, stride, pad, in_rect, out_region, false)
     }
@@ -216,6 +230,7 @@ impl Tensor {
         out
     }
 
+    /// Global average pool: each channel collapses to its spatial mean.
     pub fn global_avg(&self) -> Tensor {
         let mut out = Tensor::zeros(self.c, 1, 1);
         let n = (self.h * self.w) as f32;
@@ -231,6 +246,7 @@ impl Tensor {
         out
     }
 
+    /// Element-wise residual add followed by ReLU (`max(a + b, 0)`).
     pub fn add_relu(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.dims(), other.dims());
         let mut out = Tensor::zeros(self.c, self.h, self.w);

@@ -1,0 +1,338 @@
+//! Cross-layer tests of the observability surface (`pimfused::obs`):
+//! captured schedule traces certified against the occupancy tallies
+//! across the config grid, byte-exact exporter goldens on a synthetic
+//! schedule, phase attribution, metrics publishing, and the guarantee
+//! that tracing/metering never perturbs the numbers.
+
+use pimfused::config::{ArchConfig, Engine, System};
+use pimfused::coordinator::{Session, SweepGrid, SweepPoint};
+use pimfused::dataflow::{plan, CostModel};
+use pimfused::obs::{
+    chrome_trace_json, trace_csv, BenchRecord, CmdMeta, MetricsRegistry, PhaseProfile,
+    ResourceClass, ResourceId, ScheduleTrace, TraceFormat, TraceSpan, TRACE_CSV_HEADER,
+};
+use pimfused::serve::{simulate_stream_metered, ServeConfig, ServeDriver};
+use pimfused::sim::event;
+use pimfused::trace::gen::generate;
+use pimfused::trace::Trace;
+use pimfused::workload::Workload;
+
+/// Build the event-engine trace for a workload the same way the
+/// coordinator pipeline does.
+fn trace_for(session: &Session, cfg: &ArchConfig, w: Workload) -> Trace {
+    let g = session.graph(w).unwrap();
+    let p = plan(&g, cfg);
+    generate(&g, cfg, &p, CostModel::default())
+}
+
+/// Every captured trace must certify against its own run's occupancy,
+/// and recording must not perturb the schedule, over the full
+/// system × residency × pipelining × workload grid.
+#[test]
+fn captured_traces_certify_across_the_config_grid() {
+    let session = Session::new();
+    for sys in System::ALL {
+        for (hr, sp) in [(true, true), (true, false), (false, true), (false, false)] {
+            let cfg = ArchConfig::system(sys, 32 * 1024, 256)
+                .with_engine(Engine::Event)
+                .with_host_residency(hr)
+                .with_slice_pipelining(sp);
+            for w in [Workload::Fig1, Workload::Fig3, Workload::ResNet18Small] {
+                let tr = trace_for(&session, &cfg, w);
+                let (report, st) = ScheduleTrace::capture(&cfg, &tr);
+                let plain = event::simulate(&cfg, &tr);
+                assert_eq!(plain, report, "recording mode must not perturb the schedule");
+                st.verify(&report.occupancy).unwrap_or_else(|e| {
+                    panic!("{} {} hr={hr} sp={sp}: {e}", sys.name(), w.name())
+                });
+                assert_eq!(st.cmds.len(), tr.cmds.len());
+                assert!(!st.spans.is_empty());
+            }
+        }
+    }
+}
+
+/// The paper's acceptance check: on full ResNet18, the exported trace's
+/// per-resource-class busy totals equal the [`ResourceOccupancy`]
+/// tallies exactly, and both exporters stay structurally sound at scale.
+///
+/// [`ResourceOccupancy`]: pimfused::sim::ResourceOccupancy
+#[test]
+fn resnet18_trace_busy_totals_match_occupancy_exactly() {
+    let session = Session::new();
+    let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256).with_engine(Engine::Event);
+    let tr = trace_for(&session, &cfg, Workload::ResNet18Full);
+    let (report, st) = ScheduleTrace::capture(&cfg, &tr);
+    let occ = &report.occupancy;
+    st.verify(occ).unwrap();
+
+    let busy_of = |class: ResourceClass| -> u64 {
+        st.spans.iter().filter(|s| s.res.class() == class).map(|s| s.busy).sum()
+    };
+    assert_eq!(busy_of(ResourceClass::CmdBus), occ.cmdbus_busy);
+    assert_eq!(busy_of(ResourceClass::Bus), occ.bus_busy);
+    assert_eq!(busy_of(ResourceClass::Gbcore), occ.gbcore_busy);
+    assert_eq!(busy_of(ResourceClass::Host), occ.host_busy);
+    assert_eq!(busy_of(ResourceClass::Core), occ.core_busy.iter().sum::<u64>());
+    assert_eq!(busy_of(ResourceClass::Bank), occ.bank_busy.iter().sum::<u64>());
+    let act_reserved: u64 = st
+        .spans
+        .iter()
+        .filter(|s| s.res.class() == ResourceClass::Act)
+        .map(|s| s.end - s.start)
+        .sum();
+    assert_eq!(act_reserved, occ.act_busy.iter().sum::<u64>());
+
+    let json = chrome_trace_json(&st);
+    assert!(json.starts_with("{\n  \"displayTimeUnit\": \"ns\",\n  \"traceEvents\": [\n"));
+    assert!(json.ends_with("  ]\n}\n"));
+    assert_eq!(json.matches("\"ph\": \"X\"").count(), st.spans.len());
+    let csv = trace_csv(&st);
+    assert!(csv.starts_with(TRACE_CSV_HEADER));
+    assert_eq!(csv.lines().count(), st.spans.len() + 1);
+}
+
+/// A tiny hand-built schedule whose exports are computed by hand: two
+/// commands, four spans, one indexed resource. Pins both wire formats
+/// byte-for-byte.
+fn tiny_trace() -> ScheduleTrace {
+    ScheduleTrace {
+        makespan: 20,
+        num_cores: 1,
+        num_banks: 2,
+        num_groups: 1,
+        cmds: vec![
+            CmdMeta { node: 1, kind: "PIM_BK2GBUF", start: 0, done: 12 },
+            CmdMeta { node: 2, kind: "HOST_READ", start: 12, done: 20 },
+        ],
+        spans: vec![
+            TraceSpan {
+                cmd: 0,
+                node: 1,
+                kind: "PIM_BK2GBUF",
+                res: ResourceId::CmdBus,
+                start: 0,
+                end: 2,
+                busy: 2,
+                slid: 0,
+            },
+            TraceSpan {
+                cmd: 0,
+                node: 1,
+                kind: "PIM_BK2GBUF",
+                res: ResourceId::Bus,
+                start: 2,
+                end: 10,
+                busy: 8,
+                slid: 0,
+            },
+            TraceSpan {
+                cmd: 0,
+                node: 1,
+                kind: "PIM_BK2GBUF",
+                res: ResourceId::Bank(1),
+                start: 2,
+                end: 12,
+                busy: 8,
+                slid: 3,
+            },
+            TraceSpan {
+                cmd: 1,
+                node: 2,
+                kind: "HOST_READ",
+                res: ResourceId::Host,
+                start: 12,
+                end: 20,
+                busy: 8,
+                slid: 0,
+            },
+        ],
+    }
+}
+
+const TINY_CHROME: &str = r#"{
+  "displayTimeUnit": "ns",
+  "traceEvents": [
+    {"name": "process_name", "ph": "M", "pid": 1, "args": {"name": "cmdbus"}},
+    {"name": "process_name", "ph": "M", "pid": 2, "args": {"name": "bus"}},
+    {"name": "process_name", "ph": "M", "pid": 4, "args": {"name": "host"}},
+    {"name": "process_name", "ph": "M", "pid": 7, "args": {"name": "bank"}},
+    {"name": "thread_name", "ph": "M", "pid": 1, "tid": 0, "args": {"name": "cmdbus"}},
+    {"name": "thread_name", "ph": "M", "pid": 2, "tid": 0, "args": {"name": "bus"}},
+    {"name": "thread_name", "ph": "M", "pid": 4, "tid": 0, "args": {"name": "host"}},
+    {"name": "thread_name", "ph": "M", "pid": 7, "tid": 1, "args": {"name": "bank1"}},
+    {"name": "PIM_BK2GBUF", "cat": "cmdbus", "ph": "X", "ts": 0, "dur": 2, "pid": 1, "tid": 0, "args": {"cmd": 0, "node": 1, "busy": 2, "slid": 0}},
+    {"name": "PIM_BK2GBUF", "cat": "bus", "ph": "X", "ts": 2, "dur": 8, "pid": 2, "tid": 0, "args": {"cmd": 0, "node": 1, "busy": 8, "slid": 0}},
+    {"name": "PIM_BK2GBUF", "cat": "bank", "ph": "X", "ts": 2, "dur": 10, "pid": 7, "tid": 1, "args": {"cmd": 0, "node": 1, "busy": 8, "slid": 3}},
+    {"name": "HOST_READ", "cat": "host", "ph": "X", "ts": 12, "dur": 8, "pid": 4, "tid": 0, "args": {"cmd": 1, "node": 2, "busy": 8, "slid": 0}}
+  ]
+}
+"#;
+
+const TINY_CSV: &str = "cmd,node,kind,resource,res_index,start,end,busy,slid
+0,1,PIM_BK2GBUF,cmdbus,0,0,2,2,0
+0,1,PIM_BK2GBUF,bus,0,2,10,8,0
+0,1,PIM_BK2GBUF,bank,1,2,12,8,3
+1,2,HOST_READ,host,0,12,20,8,0
+";
+
+#[test]
+fn chrome_trace_golden_is_byte_exact() {
+    let t = tiny_trace();
+    assert_eq!(chrome_trace_json(&t), TINY_CHROME);
+    assert_eq!(TraceFormat::Chrome.export(&t), TINY_CHROME);
+}
+
+#[test]
+fn trace_csv_golden_is_byte_exact() {
+    let t = tiny_trace();
+    assert_eq!(trace_csv(&t), TINY_CSV);
+    assert_eq!(TraceFormat::Csv.export(&t), TINY_CSV);
+}
+
+/// Phase attribution on the hand-built schedule, checked against hand
+/// computation: the cross-bank move's bus+bank busy lands in
+/// `cross_bank`, its issue slot in `cmdbus`, the host read in `host`,
+/// and `stall` is the window minus the union of busy intervals.
+#[test]
+fn phase_attribution_matches_hand_computation() {
+    let t = tiny_trace();
+    let p = PhaseProfile::from_trace(&t);
+    assert_eq!(p.makespan, 20);
+    assert_eq!(p.layers.len(), 2);
+
+    let l1 = &p.layers[0];
+    assert_eq!((l1.node, l1.cmds, l1.start, l1.end), (1, 1, 0, 12));
+    assert_eq!(l1.cmdbus, 2);
+    assert_eq!(l1.cross_bank, 16, "bus 8 + bank 8");
+    assert_eq!((l1.compute, l1.near_bank, l1.host, l1.act_window), (0, 0, 0, 0));
+    // Busy intervals (0,2), (2,10), (2,10) union to (0,10); window is 12.
+    assert_eq!(l1.stall, 2);
+
+    let l2 = &p.layers[1];
+    assert_eq!((l2.node, l2.cmds, l2.start, l2.end), (2, 1, 12, 20));
+    assert_eq!(l2.host, 8);
+    assert_eq!(l2.stall, 0);
+
+    assert_eq!(p.top.len(), 2);
+    assert_eq!((p.top[0].cmd, p.top[0].busy), (0, 18));
+    assert_eq!((p.top[1].cmd, p.top[1].busy), (1, 8));
+    assert_eq!(p.top_k(1).len(), 1);
+    assert_eq!(p.top_k(99).len(), 2);
+
+    let rendered = p.render(2);
+    assert!(rendered.contains("total"));
+    assert!(rendered.contains("top 2 commands by busy cycles:"));
+    assert!(rendered.contains("PIM_BK2GBUF"));
+}
+
+/// `ArchConfig::tracing` controls capture through the session pipeline:
+/// on → a certified [`ScheduleTrace`] rides on the report; off (or the
+/// analytic engine) → `None`, and the numbers are identical either way.
+#[test]
+fn session_tracing_flag_controls_schedule_capture() {
+    let session = Session::new();
+    let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256).with_engine(Engine::Event);
+
+    let off = session.run(&cfg, Workload::Fig1).unwrap();
+    assert!(off.schedule.is_none(), "tracing defaults off");
+    assert!(off.phase_profile().is_none());
+
+    let on = session.run(&cfg.clone().with_tracing(true), Workload::Fig1).unwrap();
+    let st = on.schedule.as_ref().expect("tracing on captures a schedule");
+    st.verify(on.occupancy.as_ref().unwrap()).unwrap();
+    assert_eq!(off.cycles, on.cycles, "tracing must not change the result");
+    assert_eq!(off.occupancy, on.occupancy);
+    let prof = on.phase_profile().expect("profile rides on the traced report");
+    assert_eq!(prof.makespan, on.occupancy.as_ref().unwrap().makespan);
+
+    let analytic = ArchConfig::system(System::Fused4, 32 * 1024, 256).with_tracing(true);
+    let an = session.run(&analytic, Workload::Fig1).unwrap();
+    assert!(an.schedule.is_none(), "the analytic engine has no schedule to trace");
+}
+
+/// Sweep serialization is byte-identical with tracing on or off — the
+/// schedule is observability-only and never leaks into reports.
+#[test]
+fn tracing_does_not_change_sweep_serialization() {
+    let session = Session::new();
+    let run = |tracing: bool| {
+        let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256)
+            .with_engine(Engine::Event)
+            .with_tracing(tracing);
+        let grid = SweepGrid::from_points(vec![SweepPoint { cfg, workload: Workload::Fig1 }]);
+        grid.run(&session).unwrap()
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.to_json(), on.to_json());
+    assert_eq!(off.to_csv(), on.to_csv());
+    assert_eq!(off.table(), on.table());
+}
+
+/// Session, sweep, serving driver, and serving report all publish into
+/// one registry, and the serving loop's live tap (queue-depth and
+/// latency series) records exactly one sample per dispatch/completion
+/// without changing the report.
+#[test]
+fn metrics_registry_collects_all_publishers() {
+    let session = Session::new();
+    let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256).with_engine(Engine::Event);
+    let m = MetricsRegistry::new();
+
+    let grid = SweepGrid::from_points(vec![SweepPoint {
+        cfg: cfg.clone(),
+        workload: Workload::Fig1,
+    }]);
+    let results = grid.run(&session).unwrap();
+    results.publish_metrics(&m);
+    session.publish_metrics(&m);
+    assert_eq!(m.counter("sweep.points"), 1);
+    assert_eq!(m.counter("sweep.errors"), 0);
+    assert_eq!(m.series_len("sweep.cycles"), 1);
+    assert!(m.counter("session.points_run") >= 1);
+
+    let single = session.run(&cfg, Workload::Fig1).unwrap().cycles.max(1);
+    let rate = 1.2 * cfg.timing.clock_hz() / single as f64;
+    let sc = ServeConfig::new(cfg.clone(), Workload::Fig1, rate)
+        .requests(200)
+        .batch(4)
+        .queue_depth(32);
+    let driver = ServeDriver::new(&session);
+    let r = driver.run(&sc).unwrap();
+    let prof = driver.profile(Workload::Fig1, &cfg).unwrap();
+
+    let tap = MetricsRegistry::new();
+    let r_tap = simulate_stream_metered(&sc, prof, Some(&tap));
+    assert_eq!(r_tap, r, "metering must not change the report");
+    assert_eq!(tap.series_len("serve.queue_depth"), r.batches);
+    assert_eq!(tap.series_len("serve.latency_cycles"), r.completed);
+
+    r.publish_metrics(&tap);
+    driver.publish_metrics(&tap);
+    assert_eq!(tap.counter("serve.requests"), 200);
+    assert_eq!(tap.counter("serve.completed"), r.completed as u64);
+    assert_eq!(tap.counter("serve.schedule_runs"), 1);
+    assert!(tap.gauge_value("serve.latency_p99").is_some());
+
+    let snapshot = tap.to_json();
+    assert!(snapshot.starts_with("{\n  \"schema\": \"pimfused-metrics-v1\",\n"));
+    assert_eq!(snapshot.matches('{').count(), snapshot.matches('}').count());
+}
+
+/// The unified bench schema round-trips to disk byte-for-byte — the
+/// `--json` path `bench_sched` / `bench_serve` use.
+#[test]
+fn bench_record_round_trips_to_disk() {
+    let rec = BenchRecord::new("bench_obs_api", "smoke");
+    rec.metrics.gauge("sched.worst_ratio", 1.25);
+    rec.metrics.add("sched.systems", 3);
+    let path = std::env::temp_dir().join("pimfused_obs_api_bench.json");
+    rec.write(&path).unwrap();
+    let back = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back, rec.to_json());
+    assert!(back.contains("\"bench\": \"bench_obs_api\""));
+    assert!(back.contains("\"mode\": \"smoke\""));
+    assert!(back.contains("\"sched.worst_ratio\": 1.25"));
+}

@@ -115,6 +115,7 @@ fn golden_results() -> SweepResults {
         energy: EnergyReport { components: vec![] },
         area: dummy_area.clone(),
         occupancy: None,
+        schedule: None,
     };
     // A Fused4 event-engine row with a hand-built occupancy (4 cores,
     // 16 banks) locks the utilization schema.
@@ -151,6 +152,7 @@ fn golden_results() -> SweepResults {
         energy: EnergyReport { components: vec![] },
         area: dummy_area,
         occupancy: Some(occ),
+        schedule: None,
     };
     let err_cfg = ArchConfig::system(System::AimLike, 2048, 0);
     SweepResults {
