@@ -10,7 +10,8 @@
 //!
 //! CI runs this as a guardrail: `cargo bench --bench bench_sched --
 //! --assert-ratio 3` prints one machine-readable `guardrail:` line per
-//! system plus a `guardrail-summary:` line, and exits non-zero if the
+//! system (plus a degraded `Fused4-faulty` point that times the replay
+//! loop) and a `guardrail-summary:` line, and exits non-zero if the
 //! worst event/analytic ratio exceeds the bar. `--json <path>` writes
 //! the same numbers as a `pimfused-bench-v1` [`pimfused::obs::BenchRecord`]
 //! snapshot; both the stdout and the JSON are uploaded as build
@@ -20,6 +21,7 @@ use pimfused::benchkit::{bench, section};
 use pimfused::cnn::resnet::resnet18;
 use pimfused::config::{ArchConfig, System};
 use pimfused::dataflow::{plan, CostModel};
+use pimfused::fault::FaultConfig;
 use pimfused::obs::BenchRecord;
 use pimfused::sim::{event, simulate};
 use pimfused::trace::gen::generate;
@@ -86,6 +88,45 @@ fn main() {
         rec.metrics.gauge(&format!("sched.{}.event_cmds_per_s", sys.name()), per_sec(ev.median));
         rec.metrics.gauge(&format!("sched.{}.ratio", sys.name()), ratio);
     }
+    // Degraded path: the replay loop and survivor remap must not blow the
+    // scheduler's throughput past the same bar. One representative point
+    // (Fused4, 4 retired banks, 2% transient rate) keeps the bench cheap;
+    // its ratio folds into the guardrail summary like any system's.
+    section("scheduling throughput, degraded (faults banks=4,p=0.02,retries=3)");
+    {
+        let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256).with_faults(FaultConfig {
+            seed: 7,
+            retired_banks: 4,
+            dead_cores: 0,
+            transient_ppm: 20_000,
+            max_retries: 3,
+        });
+        let p = plan(&g, &cfg);
+        let tr = generate(&g, &cfg, &p, model);
+        let n = tr.cmds.len();
+        let an = bench(&format!("Fused4   analytic walk, faulty ({n} cmds)"), 3, 200, || {
+            simulate(&cfg, &tr).cycles
+        });
+        let ev = bench(&format!("Fused4   event schedule, faulty ({n} cmds)"), 3, 200, || {
+            event::simulate(&cfg, &tr).result.cycles
+        });
+        let per_sec = |d: std::time::Duration| n as f64 / d.as_secs_f64();
+        let ratio = ev.median.as_secs_f64() / an.median.as_secs_f64().max(f64::MIN_POSITIVE);
+        if ratio > worst.0 {
+            worst = (ratio, "Fused4-faulty");
+        }
+        println!(
+            "  guardrail: system=Fused4-faulty analytic_cmds_per_s={:.0} event_cmds_per_s={:.0} ratio={:.3}",
+            per_sec(an.median),
+            per_sec(ev.median),
+            ratio,
+        );
+        rec.metrics.add("sched.faulty.cmds", n as u64);
+        rec.metrics.gauge("sched.faulty.analytic_cmds_per_s", per_sec(an.median));
+        rec.metrics.gauge("sched.faulty.event_cmds_per_s", per_sec(ev.median));
+        rec.metrics.gauge("sched.faulty.ratio", ratio);
+    }
+
     println!(
         "guardrail-summary: worst_ratio={:.3} worst_system={} bar={}",
         worst.0,

@@ -36,11 +36,11 @@ commands:
                                     [--engine analytic|event] [--json]
                                     [--host-residency on|off]
                                     [--slice-pipelining on|off]
-                                    [--trace-out chrome|csv]
+                                    [--trace-out chrome|csv] [--faults <spec>]
   profile    schedule profiling     --workload <w> [--config <sys:GmK_Ln>]
                                     [--top N] [--trace-out chrome|csv]
                                     [--host-residency on|off]
-                                    [--slice-pipelining on|off]
+                                    [--slice-pipelining on|off] [--faults <spec>]
   sweep      buffer design sweep    --systems aim,fused16,fused4 --gbuf 2K,32K
                                     --lbuf 0,256 --workload <w>
                                     [--engine analytic|event] [--json]
@@ -52,7 +52,11 @@ commands:
                                     [--queue-depth D] [--seed S] [--warmup F]
                                     [--arrival poisson|fixed] [--config <sys:GmK_Ln>]
                                     [--engine analytic|event] [--json|--csv]
-                                    [--trace-out chrome|csv]
+                                    [--trace-out chrome|csv] [--faults <spec>]
+                                    [--deadline CYC] [--retries N] [--backoff CYC]
+  degrade    graceful-degradation   --workload <w> [--config <sys:GmK_Ln>]
+             sweep                  [--requests N] [--rate <req/s>] [--seed S]
+                                    [--step BANKS] [--faults <spec>] [--json|--csv]
   trace      dump a command trace   --config <sys:GmK_Ln> --workload <w> [--limit N]
   validate   functional validation  --config <sys:GmK_Ln>
   cmdset     list the Table-I PIM commands
@@ -70,6 +74,18 @@ profile: capture the event schedule timeline and print a per-layer phase
 trace-out: emit the captured timeline instead of the report — chrome is
            chrome://tracing / Perfetto trace_events JSON (ts in cycles),
            csv one row per reservation (event engine only)
+faults: inject failures, e.g. --faults banks=4,cores=1,p=0.001,retries=3,seed=7
+        banks=N retired banks, cores=N dead PIMcores (permanent; work remaps
+        onto the survivors), p = per-command transient error probability in
+        [0,1] (errored commands replay up to retries times), seed for the
+        deterministic fault plan
+degrade: sweep retired banks from 0 to num_banks - banks_per_pimcore (step
+         defaults to one PIMcore's banks) and serve the same stream at each
+         point; analytic engine, batch 1, drop-free queue, so goodput decays
+         monotonically as capacity is lost
+deadline/retries/backoff: per-request SLO in cycles (admission sheds doomed
+         requests, late completions count as misses); rejected clients
+         re-offer up to N times with exponential backoff
 ";
 
 /// Options that are flags (no value); everything else takes `--key value`.
@@ -160,6 +176,59 @@ impl Args {
         }
     }
 
+    /// `--faults banks=N,cores=N,p=F,retries=R,seed=S` (all parts
+    /// optional, any order). `p` is a probability in `[0, 1]`, converted
+    /// to the fault model's integer parts-per-million.
+    fn faults(&self) -> Result<Option<crate::fault::FaultConfig>> {
+        let Some(spec) = self.opts.get("faults") else {
+            return Ok(None);
+        };
+        let mut fc = crate::fault::FaultConfig::default();
+        for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--faults parts are key=value, got {part:?}\n{USAGE}"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let int = || {
+                v.parse::<u64>()
+                    .map_err(|_| anyhow!("--faults {k} must be an integer, got {v:?}\n{USAGE}"))
+            };
+            match k {
+                "banks" => fc.retired_banks = int()? as usize,
+                "cores" => fc.dead_cores = int()? as usize,
+                "p" => {
+                    let p: f64 = v.parse().map_err(|_| {
+                        anyhow!("--faults p must be a number, got {v:?}\n{USAGE}")
+                    })?;
+                    if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                        bail!("--faults p must be in [0, 1], got {v:?}\n{USAGE}");
+                    }
+                    fc.transient_ppm = (p * 1_000_000.0).round() as u32;
+                }
+                "retries" => fc.max_retries = int()? as u32,
+                "seed" => fc.seed = int()?,
+                other => {
+                    bail!("unknown --faults key {other:?} (banks|cores|p|retries|seed)\n{USAGE}")
+                }
+            }
+        }
+        Ok(Some(fc))
+    }
+
+    /// Apply `--faults` to a config, validating the fault counts against
+    /// the config's geometry up front so impossible plans (e.g. retiring
+    /// every bank) fail with the usage text instead of deep in a run.
+    fn with_faults_checked(&self, cfg: ArchConfig) -> Result<ArchConfig> {
+        match self.faults()? {
+            None => Ok(cfg),
+            Some(fc) => {
+                fc.validate(cfg.num_banks, cfg.banks_per_pimcore)
+                    .map_err(|e| anyhow!("{e}\n{USAGE}"))?;
+                Ok(cfg.with_faults(fc))
+            }
+        }
+    }
+
     fn flag(&self, name: &str) -> bool {
         self.opts.get(name).map(String::as_str) == Some("true")
     }
@@ -189,6 +258,7 @@ pub fn run(args: &Args) -> Result<String> {
                 "host-residency",
                 "slice-pipelining",
                 "trace-out",
+                "faults",
             ])?;
             let trace_out = args.trace_out()?;
             if trace_out.is_some() && args.flag("json") {
@@ -201,12 +271,14 @@ pub fn run(args: &Args) -> Result<String> {
             if trace_out.is_some() && engine != Engine::Event {
                 bail!("--trace-out needs --engine event\n{USAGE}");
             }
-            let cfg = args
-                .config()?
-                .with_engine(engine)
-                .with_host_residency(args.host_residency()?)
-                .with_slice_pipelining(args.slice_pipelining()?)
-                .with_tracing(trace_out.is_some());
+            let cfg = args.with_faults_checked(
+                args.config()?
+                    .with_engine(engine)
+                    .with_host_residency(args.host_residency()?)
+                    .with_slice_pipelining(args.slice_pipelining()?)
+                    .with_tracing(trace_out.is_some()),
+            )?;
+            let faults = cfg.faults;
             let w = args.workload()?;
             let results = SweepGrid::from_points(vec![SweepPoint { cfg, workload: w }])
                 .run(&session)?;
@@ -258,6 +330,14 @@ pub fn run(args: &Args) -> Result<String> {
                 out.push_str(&format!(
                     "slice pipelining: {} slice-cycles slid off the rigid stagger\n",
                     occ.slid_slices,
+                ));
+            }
+            if !faults.is_none() {
+                out.push_str(&format!(
+                    "faults: {}\n  replayed cycles: {} | escalated commands: {}\n",
+                    faults.summary(),
+                    r.sim.replayed_cycles,
+                    r.sim.escalated_cmds,
                 ));
             }
             Ok(out)
@@ -342,6 +422,10 @@ pub fn run(args: &Args) -> Result<String> {
                 "seed",
                 "arrival",
                 "warmup",
+                "deadline",
+                "retries",
+                "backoff",
+                "faults",
                 "json",
                 "csv",
                 "host-residency",
@@ -410,11 +494,12 @@ pub fn run(args: &Args) -> Result<String> {
                 None => ArrivalKind::Poisson,
                 Some(a) => ArrivalKind::parse(a).map_err(anyhow::Error::msg)?,
             };
-            let cfg = args
-                .config()?
-                .with_engine(args.engine_or(Engine::Event)?)
-                .with_host_residency(args.host_residency()?)
-                .with_slice_pipelining(args.slice_pipelining()?);
+            let cfg = args.with_faults_checked(
+                args.config()?
+                    .with_engine(args.engine_or(Engine::Event)?)
+                    .with_host_residency(args.host_residency()?)
+                    .with_slice_pipelining(args.slice_pipelining()?),
+            )?;
             let sc = ServeConfig::new(cfg, args.workload()?, rate.unwrap_or(1.0))
                 .arrival(arrival)
                 .requests(int("requests")?.unwrap_or(1000) as usize)
@@ -422,7 +507,10 @@ pub fn run(args: &Args) -> Result<String> {
                 .batch_timeout(int("batch-timeout")?.unwrap_or(0))
                 .queue_depth(queue_depth)
                 .seed(int("seed")?.unwrap_or(42))
-                .warmup(num("warmup")?.unwrap_or(0.1));
+                .warmup(num("warmup")?.unwrap_or(0.1))
+                .deadline(int("deadline")?.unwrap_or(0))
+                .client_retries(int("retries")?.unwrap_or(0) as u32)
+                .backoff(int("backoff")?.unwrap_or(0));
             if let Some(fmt) = args.trace_out()? {
                 // Export the single-inference schedule the serving
                 // profile replays (what every batch's cost derives from).
@@ -487,6 +575,66 @@ pub fn run(args: &Args) -> Result<String> {
                 }
             }
         }
+        "degrade" => {
+            args.check_opts(&[
+                "config", "workload", "requests", "rate", "seed", "step", "faults", "json", "csv",
+            ])?;
+            if args.flag("json") && args.flag("csv") {
+                bail!("--json and --csv are mutually exclusive\n{USAGE}");
+            }
+            let int = |key: &str| -> Result<Option<u64>> {
+                args.opts
+                    .get(key)
+                    .map(|s| {
+                        s.parse::<u64>()
+                            .map_err(|_| anyhow!("--{key} must be an integer, got {s:?}\n{USAGE}"))
+                    })
+                    .transpose()
+            };
+            // The analytic engine keeps the sweep's monotone-goodput
+            // guarantee (the event engine's list scheduler can exhibit
+            // timing anomalies); --faults contributes the per-step
+            // constants (dead cores, transient rate, seed) while the
+            // sweep itself drives the retired-bank count.
+            let cfg = args.with_faults_checked(args.config()?)?;
+            let requests = int("requests")?.unwrap_or(200) as usize;
+            if requests == 0 {
+                bail!("--requests must be >= 1\n{USAGE}");
+            }
+            let clock = cfg.timing.clock_hz();
+            let rate = match args.opts.get("rate") {
+                // Default: one request per cycle — service-bound, so
+                // goodput reads directly as serving capacity.
+                None => clock,
+                Some(s) => {
+                    let r: f64 = s.parse().map_err(|_| {
+                        anyhow!("--rate must be a number, got {s:?}\n{USAGE}")
+                    })?;
+                    if !r.is_finite() || r <= 0.0 {
+                        bail!("--rate must be > 0 (got {r})\n{USAGE}");
+                    }
+                    r
+                }
+            };
+            let step = match int("step")? {
+                None => cfg.banks_per_pimcore,
+                Some(0) => bail!("--step must be >= 1\n{USAGE}"),
+                Some(s) => s as usize,
+            };
+            let sc = ServeConfig::new(cfg, args.workload()?, rate)
+                .arrival(ArrivalKind::Fixed)
+                .requests(requests)
+                .queue_depth(requests)
+                .seed(int("seed")?.unwrap_or(42));
+            let r = session.degrade_sweep(&sc, step)?;
+            if args.flag("json") {
+                Ok(r.to_json())
+            } else if args.flag("csv") {
+                Ok(r.to_csv())
+            } else {
+                Ok(r.render())
+            }
+        }
         "profile" => {
             args.check_opts(&[
                 "config",
@@ -495,6 +643,7 @@ pub fn run(args: &Args) -> Result<String> {
                 "trace-out",
                 "host-residency",
                 "slice-pipelining",
+                "faults",
             ])?;
             let top: usize = args
                 .opts
@@ -503,12 +652,13 @@ pub fn run(args: &Args) -> Result<String> {
                 .transpose()
                 .map_err(|_| anyhow!("--top must be an integer\n{USAGE}"))?
                 .unwrap_or(5);
-            let cfg = args
-                .config()?
-                .with_engine(Engine::Event)
-                .with_host_residency(args.host_residency()?)
-                .with_slice_pipelining(args.slice_pipelining()?)
-                .with_tracing(true);
+            let cfg = args.with_faults_checked(
+                args.config()?
+                    .with_engine(Engine::Event)
+                    .with_host_residency(args.host_residency()?)
+                    .with_slice_pipelining(args.slice_pipelining()?)
+                    .with_tracing(true),
+            )?;
             let w = args.workload()?;
             let r = session.run(&cfg, w)?;
             let st = r.schedule.as_ref().expect("tracing was on");
@@ -890,6 +1040,103 @@ mod tests {
         let e = err("serve --workload fig1 --rate 100 --bogus 1");
         assert!(e.contains("unknown option --bogus"), "{e}");
         assert!(e.contains("usage: pimfused"), "{e}");
+    }
+
+    #[test]
+    fn faults_option_parses_and_validates() {
+        let a = parse_args(&argv(
+            "simulate --config fused4:G8K_L128 --workload fig1 --engine event \
+             --faults banks=4,cores=1,p=0.001,retries=3,seed=9",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("faults: "), "{out}");
+        assert!(out.contains("replayed cycles"), "{out}");
+        // Deterministic: same invocation, same bytes.
+        assert_eq!(run(&a).unwrap(), out);
+
+        let err = |s: &str| run(&parse_args(&argv(s)).unwrap()).unwrap_err().to_string();
+        let e = err("simulate --workload fig1 --faults p=1.5");
+        assert!(e.contains("--faults p must be in [0, 1]"), "{e}");
+        assert!(e.contains("usage: pimfused"), "{e}");
+        let e = err("simulate --workload fig1 --faults p=-0.1");
+        assert!(e.contains("--faults p must be in [0, 1]"), "{e}");
+        let e = err("simulate --workload fig1 --faults banks=16");
+        assert!(e.contains("usage: pimfused"), "retiring every bank must fail: {e}");
+        let e = err("simulate --workload fig1 --faults banks=two");
+        assert!(e.contains("--faults banks must be an integer"), "{e}");
+        let e = err("simulate --workload fig1 --faults junk=1");
+        assert!(e.contains("unknown --faults key"), "{e}");
+        let e = err("simulate --workload fig1 --faults banks");
+        assert!(e.contains("--faults parts are key=value"), "{e}");
+        let e = err("sweep --faults banks=1");
+        assert!(e.contains("unknown option --faults"), "{e}");
+    }
+
+    #[test]
+    fn degrade_sweeps_and_reports() {
+        let a = parse_args(&argv(
+            "degrade --config fused4:G8K_L128 --workload fig1 --requests 20",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("degrade: Fused4/G8K_L128 on Fig1_Example"), "{out}");
+        assert!(out.contains("goodput_rps"), "{out}");
+        assert_eq!(run(&a).unwrap(), out, "deterministic");
+        let json = run(&parse_args(&argv(
+            "degrade --config fused4:G8K_L128 --workload fig1 --requests 20 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(json.contains("\"retired_banks\": 0"), "{json}");
+        assert!(json.contains("\"retired_banks\": 12"), "worst case always measured: {json}");
+        let csv = run(&parse_args(&argv(
+            "degrade --config fused4:G8K_L128 --workload fig1 --requests 20 --csv",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(
+            csv.lines().next().unwrap().starts_with("retired_banks,alive_cores,surviving_banks,"),
+            "{csv}"
+        );
+        let err = |s: &str| run(&parse_args(&argv(s)).unwrap()).unwrap_err().to_string();
+        let e = err("degrade --workload fig1 --step 0");
+        assert!(e.contains("--step must be >= 1"), "{e}");
+        let e = err("degrade --workload fig1 --engine event");
+        assert!(e.contains("unknown option --engine"), "degrade is analytic-only: {e}");
+        let e = err("degrade --workload fig1 --rate 0");
+        assert!(e.contains("--rate must be > 0"), "{e}");
+    }
+
+    #[test]
+    fn serve_deadline_and_retry_flags() {
+        let json = run(&parse_args(&argv(
+            "serve --workload fig1 --rate 50000 --requests 100 \
+             --deadline 200000 --retries 2 --backoff 1000 --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(json.contains("\"deadline_cycles\": 200000"), "{json}");
+        assert!(json.contains("\"client_retries\": 2"), "{json}");
+        assert!(json.contains("\"backoff_cycles\": 1000"), "{json}");
+        assert!(json.contains("\"dropped_queue_full\": "), "{json}");
+        assert!(json.contains("\"dropped_deadline_shed\": "), "{json}");
+        assert!(json.contains("\"dropped_deadline_miss\": "), "{json}");
+        assert!(json.contains("\"dropped_retry_exhausted\": "), "{json}");
+        assert!(json.contains("\"goodput_rps\": "), "{json}");
+        // Text output surfaces the SLO line and the drop split.
+        let text = run(&parse_args(&argv(
+            "serve --workload fig1 --rate 50000 --requests 100 --deadline 200000",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(text.contains("deadline 200000 cyc"), "{text}");
+        assert!(text.contains("drop split"), "{text}");
+        assert!(text.contains("goodput"), "{text}");
+        let e = run(&parse_args(&argv("serve --workload fig1 --rate 100 --deadline soon")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--deadline must be an integer"), "{e}");
     }
 
     #[test]

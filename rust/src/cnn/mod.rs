@@ -15,20 +15,26 @@ use crate::config::ELEM_BYTES;
 /// Feature-map shape, channel-major (`c`, `h`, `w`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Shape {
+    /// Channels.
     pub c: usize,
+    /// Spatial height.
     pub h: usize,
+    /// Spatial width.
     pub w: usize,
 }
 
 impl Shape {
+    /// A `c × h × w` shape.
     pub fn new(c: usize, h: usize, w: usize) -> Self {
         Self { c, h, w }
     }
 
+    /// Total element count (`c·h·w`).
     pub fn elems(&self) -> usize {
         self.c * self.h * self.w
     }
 
+    /// Total size in bytes at the model's element width.
     pub fn bytes(&self) -> usize {
         self.elems() * ELEM_BYTES
     }
@@ -37,7 +43,9 @@ impl Shape {
 /// Pooling flavor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PoolKind {
+    /// Max pooling (window compare).
     Max,
+    /// Average pooling (window accumulate + scale).
     Avg,
 }
 
@@ -77,8 +85,11 @@ pub type NodeId = usize;
 /// One graph node: operator plus data-dependency edges.
 #[derive(Debug, Clone)]
 pub struct Node {
+    /// Topological, layer-sequential id (position in [`Graph::nodes`]).
     pub id: NodeId,
+    /// Human-readable layer name (e.g. `conv2_1a`).
     pub name: String,
+    /// The layer operator.
     pub op: Op,
     /// Producer nodes (1 for most ops, 2 for AddRelu, 0 for Input).
     pub inputs: Vec<NodeId>,
@@ -147,7 +158,9 @@ impl Node {
 /// A CNN as an ordered DAG of nodes. Node 0 is always the [`Op::Input`].
 #[derive(Debug, Clone)]
 pub struct Graph {
+    /// Network name (the workload label in reports).
     pub name: String,
+    /// Nodes in topological id order (`nodes[i].id == i`).
     pub nodes: Vec<Node>,
 }
 

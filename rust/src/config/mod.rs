@@ -209,6 +209,11 @@ pub struct ArchConfig {
     /// output is byte-identical to a build without the observability layer
     /// (DESIGN.md §10).
     pub tracing: bool,
+    /// Fault-injection knobs ([`crate::fault::FaultConfig`]): retired
+    /// banks, dead PIMcores, and per-command transient errors. The
+    /// all-zero default injects nothing and leaves every code path and
+    /// serialized byte identical to a fault-free build (DESIGN.md §11).
+    pub faults: crate::fault::FaultConfig,
 }
 
 impl ArchConfig {
@@ -235,6 +240,7 @@ impl ArchConfig {
             host_residency: true,
             slice_pipelining: true,
             tracing: false,
+            faults: crate::fault::FaultConfig::default(),
         }
     }
 
@@ -264,6 +270,14 @@ impl ArchConfig {
     /// [`crate::obs::ScheduleTrace`] on their report.
     pub fn with_tracing(mut self, on: bool) -> Self {
         self.tracing = on;
+        self
+    }
+
+    /// Builder-style fault injection (see the field docs);
+    /// `with_faults(FaultConfig::default())` restores the fault-free
+    /// model.
+    pub fn with_faults(mut self, faults: crate::fault::FaultConfig) -> Self {
+        self.faults = faults;
         self
     }
 
@@ -318,6 +332,7 @@ impl ArchConfig {
                 ));
             }
         }
+        self.faults.validate(self.num_banks, self.banks_per_pimcore)?;
         self.timing.validate()
     }
 }
@@ -432,6 +447,42 @@ mod tests {
         let c = ArchConfig::baseline().with_tracing(true);
         assert!(c.tracing);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn faults_default_to_none() {
+        use crate::fault::FaultConfig;
+        for sys in System::ALL {
+            assert!(ArchConfig::system(sys, 2048, 0).faults.is_none());
+        }
+        let fc = FaultConfig { seed: 7, retired_banks: 2, ..Default::default() };
+        let c = ArchConfig::baseline().with_faults(fc);
+        assert_eq!(c.faults, fc);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_validation_is_wired_into_config_validate() {
+        use crate::fault::FaultConfig;
+        // Too many retired banks for the channel.
+        let c = ArchConfig::baseline()
+            .with_faults(FaultConfig { retired_banks: 16, ..Default::default() });
+        assert!(c.validate().is_err());
+        // All cores dead.
+        let c = ArchConfig::baseline()
+            .with_faults(FaultConfig { dead_cores: 16, ..Default::default() });
+        assert!(c.validate().is_err());
+        // Probability above 1.
+        let c = ArchConfig::baseline()
+            .with_faults(FaultConfig { transient_ppm: 1_000_001, ..Default::default() });
+        assert!(c.validate().is_err());
+        // A 4-bank-fan-in system tolerates at most 12 retired banks.
+        let good = ArchConfig::system(System::Fused4, 2048, 0)
+            .with_faults(FaultConfig { retired_banks: 12, ..Default::default() });
+        good.validate().unwrap();
+        let bad = ArchConfig::system(System::Fused4, 2048, 0)
+            .with_faults(FaultConfig { retired_banks: 13, ..Default::default() });
+        assert!(bad.validate().is_err());
     }
 
     #[test]

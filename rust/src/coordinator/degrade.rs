@@ -1,0 +1,253 @@
+//! Graceful-degradation sweep: serve the same request stream while
+//! retiring progressively more banks, and report how goodput decays.
+//!
+//! Each step clones the base [`ServeConfig`], sets
+//! `cfg.faults.retired_banks` to the step's count (every other fault
+//! parameter — seed, dead cores, transient rate — is inherited from the
+//! base config), and runs one full serving simulation through a shared
+//! [`ServeDriver`]. Retirement sets are nested by construction
+//! ([`FaultPlan::build`]), so each step's failure set strictly extends
+//! the previous one — the sweep is a single system losing capacity, not
+//! sixteen unrelated systems.
+//!
+//! Under the `pimfused degrade` defaults — analytic engine, batch 1, no
+//! deadline, queue deep enough that nothing drops — every request
+//! completes and goodput is `requests / makespan`, which is provably
+//! monotone non-increasing in the retired-bank count (losing a PIMcore
+//! concentrates its work on the survivors, and the analytic engine
+//! charges the slowest core). The property test below and
+//! `tests/fault_api.rs` hold that line.
+
+use crate::coordinator::serialize::{csv_escape, serve_fields};
+use crate::coordinator::Session;
+use crate::fault::FaultPlan;
+use crate::serve::{ServeConfig, ServeDriver, ServeReport};
+use crate::util::table::Table;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// One point of a degradation sweep: the failure state plus the full
+/// serving outcome under it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeStep {
+    /// Banks retired at this step.
+    pub retired_banks: usize,
+    /// PIMcores still alive (a retired bank takes its whole core offline).
+    pub alive_cores: usize,
+    /// Banks still serviceable (the alive cores' banks).
+    pub surviving_banks: usize,
+    /// The serving report for this failure state.
+    pub serve: ServeReport,
+}
+
+/// A full degradation sweep (see [`Session::degrade_sweep`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeReport {
+    /// Config label of the healthy base system.
+    pub label: String,
+    /// Workload display name.
+    pub workload: String,
+    /// One step per retired-bank count, in increasing order starting
+    /// at 0 (the healthy reference).
+    pub steps: Vec<DegradeStep>,
+}
+
+impl DegradeReport {
+    /// Render the sweep as a human-readable table (the default
+    /// `pimfused degrade` output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "degrade: {} on {}", self.label, self.workload);
+        let mut t = Table::new(vec![
+            "retired", "cores", "banks", "completed", "dropped", "goodput_rps", "p99_cyc",
+        ]);
+        for s in &self.steps {
+            t.row(vec![
+                s.retired_banks.to_string(),
+                s.alive_cores.to_string(),
+                s.surviving_banks.to_string(),
+                s.serve.completed.to_string(),
+                s.serve.dropped.to_string(),
+                format!("{:.1}", s.serve.goodput_rps),
+                s.serve.latency.p99.to_string(),
+            ]);
+        }
+        out += &t.render();
+        out
+    }
+
+    /// Serialize to pretty-printed JSON: `{"rows": [...]}` with one flat
+    /// object per step — the failure-state columns followed by the full
+    /// serve schema (same field set as `pimfused serve --json`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"rows\": [");
+        for (i, s) in self.steps.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    {\n");
+            let fields = self.step_fields(s);
+            for (j, (name, value)) in fields.iter().enumerate() {
+                let sep = if j + 1 == fields.len() { "" } else { "," };
+                let _ = writeln!(out, "      \"{name}\": {value}{sep}");
+            }
+            out.push_str("    }");
+        }
+        if !self.steps.is_empty() {
+            out.push('\n');
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Serialize to CSV: a fixed header (failure-state columns followed
+    /// by the serve schema's names) plus one row per step.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        for s in &self.steps {
+            let fields = self.step_fields(s);
+            if out.is_empty() {
+                let names: Vec<&str> = fields.iter().map(|(n, _)| *n).collect();
+                out.push_str(&names.join(","));
+                out.push('\n');
+            }
+            let row: Vec<String> = fields
+                .into_iter()
+                // JSON string values come pre-quoted; CSV wants them bare.
+                .map(|(_, v)| csv_escape(v.trim_matches('"')))
+                .collect();
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The flat per-step field list shared by [`DegradeReport::to_json`]
+    /// and [`DegradeReport::to_csv`] (one definition, so the two schemas
+    /// cannot drift).
+    fn step_fields(&self, s: &DegradeStep) -> Vec<(&'static str, String)> {
+        let mut fields = vec![
+            ("retired_banks", s.retired_banks.to_string()),
+            ("alive_cores", s.alive_cores.to_string()),
+            ("surviving_banks", s.surviving_banks.to_string()),
+        ];
+        fields.extend(serve_fields(&s.serve));
+        fields
+    }
+}
+
+impl Session {
+    /// Sweep retired-bank counts from 0 (healthy) to the maximum the
+    /// fault model allows (`num_banks - banks_per_pimcore`, leaving one
+    /// core alive), running one serving simulation per step through a
+    /// shared [`ServeDriver`]. `step` is the retired-bank increment per
+    /// point (clamped to at least 1); the final step always lands
+    /// exactly on the maximum so the worst case is always measured.
+    pub fn degrade_sweep(&self, base: &ServeConfig, step: usize) -> Result<DegradeReport> {
+        base.validate().map_err(anyhow::Error::msg)?;
+        let step = step.max(1);
+        let max = base.cfg.num_banks - base.cfg.banks_per_pimcore;
+        let driver = ServeDriver::new(self);
+        let mut steps = Vec::new();
+        let mut retired = 0usize;
+        loop {
+            let mut sc = base.clone();
+            sc.cfg.faults.retired_banks = retired;
+            let plan = FaultPlan::build(&sc.cfg);
+            let serve = driver.run(&sc)?;
+            steps.push(DegradeStep {
+                retired_banks: retired,
+                alive_cores: plan.alive_core_count(),
+                surviving_banks: plan.surviving_bank_count(),
+                serve,
+            });
+            if retired >= max {
+                break;
+            }
+            retired = (retired + step).min(max);
+        }
+        Ok(DegradeReport {
+            label: base.cfg.label(),
+            workload: base.workload.name().to_string(),
+            steps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, System};
+    use crate::serve::ArrivalKind;
+    use crate::workload::Workload;
+
+    /// The `pimfused degrade` default stream shape: saturating fixed
+    /// arrivals, batch 1, a queue deep enough that nothing drops.
+    fn degrade_sc() -> ServeConfig {
+        let cfg = ArchConfig::system(System::Fused4, 8192, 128);
+        let clock = cfg.timing.clock_hz();
+        ServeConfig::new(cfg, Workload::Fig1, clock) // 1-cycle gap: service-bound
+            .arrival(ArrivalKind::Fixed)
+            .requests(40)
+            .queue_depth(40)
+    }
+
+    #[test]
+    fn goodput_decays_monotonically_as_banks_retire() {
+        let s = Session::new();
+        let r = s.degrade_sweep(&degrade_sc(), 4).unwrap();
+        // Fused4 on 16 banks: steps at 0, 4, 8, 12 retired.
+        let retired: Vec<usize> = r.steps.iter().map(|st| st.retired_banks).collect();
+        assert_eq!(retired, vec![0, 4, 8, 12]);
+        for st in &r.steps {
+            assert_eq!(st.serve.completed, 40, "deep queue: every request completes");
+            assert_eq!(st.serve.dropped, 0);
+            assert_eq!(st.surviving_banks, st.alive_cores * 4);
+        }
+        for w in r.steps.windows(2) {
+            assert!(
+                w[1].serve.goodput_rps <= w[0].serve.goodput_rps,
+                "goodput must not rise as banks retire: {} -> {}",
+                w[0].serve.goodput_rps,
+                w[1].serve.goodput_rps
+            );
+        }
+        let (first, last) = (&r.steps[0], &r.steps[r.steps.len() - 1]);
+        assert!(
+            last.serve.goodput_rps < first.serve.goodput_rps,
+            "losing 3 of 4 cores must cost goodput"
+        );
+        assert_eq!(last.alive_cores, 1);
+    }
+
+    #[test]
+    fn step_lands_exactly_on_the_maximum() {
+        let s = Session::new();
+        let r = s.degrade_sweep(&degrade_sc(), 5).unwrap();
+        let retired: Vec<usize> = r.steps.iter().map(|st| st.retired_banks).collect();
+        assert_eq!(retired, vec![0, 5, 10, 12], "final step clamps to num_banks - bpc");
+    }
+
+    #[test]
+    fn degrade_serialization_shapes() {
+        let s = Session::new();
+        let mut sc = degrade_sc();
+        sc.requests = 10;
+        sc.queue_depth = 10;
+        let r = s.degrade_sweep(&sc, 12).unwrap();
+        assert_eq!(r.steps.len(), 2);
+        let json = r.to_json();
+        assert!(json.starts_with("{\n  \"rows\": [\n"));
+        assert!(json.contains("\"retired_banks\": 12,"));
+        assert!(json.contains("\"goodput_rps\":"));
+        let csv = r.to_csv();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("retired_banks,alive_cores,surviving_banks,config,"));
+        assert_eq!(lines.count(), 2, "one row per step");
+        // Render carries the failure-state columns.
+        let text = r.render();
+        assert!(text.contains("retired"));
+        assert!(text.contains("goodput_rps"));
+    }
+}

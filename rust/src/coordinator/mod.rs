@@ -58,12 +58,14 @@
 //! host_residency, slice_pipelining)` so normalization always compares
 //! like with like, and [`SweepGrid`] can sweep the engine as an axis.
 
+mod degrade;
 mod grid;
 pub(crate) mod serialize;
 mod session;
 
 pub mod experiments;
 
+pub use degrade::{DegradeReport, DegradeStep};
 pub use grid::{SweepGrid, SweepPoint, SweepProgress, SweepResults, SweepRow};
 pub use serialize::{serve_to_csv, serve_to_json};
 pub use session::{Experiment, Session, SessionStats};

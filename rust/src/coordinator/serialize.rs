@@ -133,9 +133,10 @@ impl SweepResults {
 }
 
 /// The flat per-report field list shared by the serve JSON and CSV
-/// writers (one definition, so the two schemas cannot drift): name,
-/// value-as-JSON (strings pre-quoted/escaped).
-fn serve_fields(r: &ServeReport) -> Vec<(&'static str, String)> {
+/// writers — and by the degrade sweep's serializers, which append it to
+/// their failure-state columns (one definition, so the schemas cannot
+/// drift): name, value-as-JSON (strings pre-quoted/escaped).
+pub(crate) fn serve_fields(r: &ServeReport) -> Vec<(&'static str, String)> {
     vec![
         ("config", format!("\"{}\"", json_escape(&r.label))),
         ("system", format!("\"{}\"", json_escape(&r.system))),
@@ -148,8 +149,15 @@ fn serve_fields(r: &ServeReport) -> Vec<(&'static str, String)> {
         ("batch", r.batch.to_string()),
         ("batch_timeout", r.batch_timeout.to_string()),
         ("queue_depth", r.queue_depth.to_string()),
+        ("deadline_cycles", r.deadline.to_string()),
+        ("client_retries", r.client_retries.to_string()),
+        ("backoff_cycles", r.backoff.to_string()),
         ("completed", r.completed.to_string()),
         ("dropped", r.dropped.to_string()),
+        ("dropped_queue_full", r.dropped_queue_full.to_string()),
+        ("dropped_deadline_shed", r.dropped_deadline_shed.to_string()),
+        ("dropped_deadline_miss", r.dropped_deadline_miss.to_string()),
+        ("dropped_retry_exhausted", r.dropped_retry_exhausted.to_string()),
         ("batches", r.batches.to_string()),
         ("mean_batch", json_f64(r.mean_batch)),
         ("warmup_trimmed", r.warmup_trimmed.to_string()),
@@ -159,6 +167,7 @@ fn serve_fields(r: &ServeReport) -> Vec<(&'static str, String)> {
         ("mean_cycles", json_f64(r.latency.mean)),
         ("max_cycles", r.latency.max.to_string()),
         ("throughput_rps", json_f64(r.throughput_rps)),
+        ("goodput_rps", json_f64(r.goodput_rps)),
         ("utilization", json_f64(r.utilization)),
         ("queue_depth_mean", json_f64(r.queue_mean)),
         ("queue_depth_max", r.queue_max.to_string()),
@@ -237,8 +246,15 @@ fn serve_field_names() -> Vec<&'static str> {
         "batch",
         "batch_timeout",
         "queue_depth",
+        "deadline_cycles",
+        "client_retries",
+        "backoff_cycles",
         "completed",
         "dropped",
+        "dropped_queue_full",
+        "dropped_deadline_shed",
+        "dropped_deadline_miss",
+        "dropped_retry_exhausted",
         "batches",
         "mean_batch",
         "warmup_trimmed",
@@ -248,6 +264,7 @@ fn serve_field_names() -> Vec<&'static str> {
         "mean_cycles",
         "max_cycles",
         "throughput_rps",
+        "goodput_rps",
         "utilization",
         "queue_depth_mean",
         "queue_depth_max",
@@ -379,13 +396,21 @@ mod tests {
             batch_timeout: 0,
             queue_depth: 64,
             seed: 42,
+            deadline: 0,
+            client_retries: 0,
+            backoff: 0,
             completed: 100,
             dropped: 0,
+            dropped_queue_full: 0,
+            dropped_deadline_shed: 0,
+            dropped_deadline_miss: 0,
+            dropped_retry_exhausted: 0,
             batches: 30,
             mean_batch: 100.0 / 30.0,
             warmup_trimmed: 10,
             latency: LatencyStats { samples: 90, p50: 5000, p95: 7000, p99: 7500, mean: 5100.5, max: 8000 },
             throughput_rps: 49000.25,
+            goodput_rps: 49000.25,
             utilization: 0.75,
             queue_mean: 1.5,
             queue_max: 9,

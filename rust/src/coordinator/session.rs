@@ -173,6 +173,10 @@ impl Session {
     /// tuple, shared by every normalization afterwards. Any axis that
     /// changes what a cycle count *means* must match between numerator
     /// and baseline, or the ratio mixes models.
+    ///
+    /// Fault injection is deliberately **not** a normalization axis: a
+    /// degraded config is normalized against the *healthy* baseline, so
+    /// the ratio reads directly as "slowdown caused by the faults".
     pub fn baseline_matched(&self, w: Workload, cfg: &ArchConfig) -> Result<Arc<PpaReport>> {
         let key = (w, cfg.engine, cfg.host_residency, cfg.slice_pipelining);
         let mut m = self.baselines.lock().unwrap();
@@ -472,6 +476,30 @@ mod tests {
         // The plan depends only on the dataflow, never on the engine.
         assert_eq!(s.stats().plan_builds, 1);
         assert_eq!(s.stats().graph_builds, 1);
+    }
+
+    #[test]
+    fn degraded_configs_normalize_against_the_healthy_baseline() {
+        use crate::fault::FaultConfig;
+        let s = Session::new();
+        let cfg = ArchConfig::system(System::Fused4, 8192, 128);
+        let healthy = s.normalized(&cfg, Workload::Fig1).unwrap();
+        assert_eq!(s.stats().baseline_runs, 1);
+        let degraded = cfg
+            .clone()
+            .with_faults(FaultConfig { retired_banks: 4, ..Default::default() });
+        let n = s.normalized(&degraded, Workload::Fig1).unwrap();
+        assert!(
+            n.cycles >= healthy.cycles,
+            "losing banks cannot speed things up: {} < {}",
+            n.cycles,
+            healthy.cycles
+        );
+        assert_eq!(
+            s.stats().baseline_runs,
+            1,
+            "faults are not a normalization axis — the healthy baseline is reused"
+        );
     }
 
     #[test]

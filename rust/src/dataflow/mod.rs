@@ -41,6 +41,7 @@ pub enum PlanStep {
 /// The full execution plan for a workload on an architecture.
 #[derive(Debug, Clone)]
 pub struct Plan {
+    /// Scheduling steps in execution order.
     pub steps: Vec<PlanStep>,
 }
 

@@ -15,13 +15,18 @@ use crate::cnn::{Graph, NodeId, Op};
 /// `y` height. Channels are never tiled by the PIMfused dataflow (§IV).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Rect {
+    /// Inclusive left edge.
     pub x0: usize,
+    /// Inclusive top edge.
     pub y0: usize,
+    /// Exclusive right edge.
     pub x1: usize,
+    /// Exclusive bottom edge.
     pub y1: usize,
 }
 
 impl Rect {
+    /// The rectangle `[x0, x1) × [y0, y1)`.
     pub fn new(x0: usize, y0: usize, x1: usize, y1: usize) -> Self {
         debug_assert!(x0 <= x1 && y0 <= y1);
         Self { x0, y0, x1, y1 }
@@ -32,18 +37,22 @@ impl Rect {
         Self::new(0, 0, w, h)
     }
 
+    /// Width in pixels.
     pub fn w(&self) -> usize {
         self.x1 - self.x0
     }
 
+    /// Height in pixels.
     pub fn h(&self) -> usize {
         self.y1 - self.y0
     }
 
+    /// Area in pixels.
     pub fn pixels(&self) -> usize {
         self.w() * self.h()
     }
 
+    /// Whether the rect covers no pixels.
     pub fn is_empty(&self) -> bool {
         self.pixels() == 0
     }
@@ -64,6 +73,7 @@ impl Rect {
         )
     }
 
+    /// Whether `o` lies entirely inside this rect (empty rects always do).
     pub fn contains(&self, o: &Rect) -> bool {
         o.is_empty() || (self.x0 <= o.x0 && self.y0 <= o.y0 && self.x1 >= o.x1 && self.y1 >= o.y1)
     }
@@ -110,6 +120,7 @@ pub struct DemandMap {
 }
 
 impl DemandMap {
+    /// The demand rect recorded for `id`, if any.
     pub fn get(&self, id: &NodeId) -> Option<&Rect> {
         self.entries
             .binary_search_by_key(id, |e| e.0)
@@ -125,18 +136,22 @@ impl DemandMap {
         }
     }
 
+    /// All `(node, rect)` entries in ascending node-id order.
     pub fn iter(&self) -> impl Iterator<Item = (&NodeId, &Rect)> {
         self.entries.iter().map(|(k, v)| (k, v))
     }
 
+    /// All node ids with an entry, ascending.
     pub fn keys(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.entries.iter().map(|(k, _)| *k)
     }
 
+    /// Number of entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether the map holds no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

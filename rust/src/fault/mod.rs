@@ -1,0 +1,437 @@
+//! Fault injection: seeded, deterministic bank/PIMcore failures and
+//! transient per-command errors (DESIGN.md §11).
+//!
+//! The model distinguishes **permanent** faults — retired DRAM banks and
+//! dead PIMcores, fixed for the lifetime of a run — from **transient**
+//! faults — per-command errors that force the controller to replay the
+//! command (bounded retries, then escalation to the host). Both are
+//! expressed by a [`FaultConfig`] carried on
+//! [`crate::config::ArchConfig`], expanded once per run into a
+//! [`FaultPlan`] by seeded sampling ([`crate::util::rng::XorShift64`]),
+//! so the same config always degrades the same way — across sessions,
+//! engines, and serial-vs-threaded sweeps.
+//!
+//! Degradation is **core-granular**: a retired bank takes its owning
+//! PIMcore offline (the lockstep fan-in would otherwise go ragged), and
+//! a dead PIMcore idles its banks. Work remaps onto the surviving cores
+//! by even spreading ([`FaultPlan::spread_even`]), which preserves
+//! per-command totals (energy is conserved) while the per-core maximum —
+//! what bounds a lockstep command — grows as `ceil(total / k)` for `k`
+//! survivors. Retirement sets are *nested in the retired-bank count*
+//! (the sample for `n+1` retired banks extends the sample for `n`), so
+//! degraded cycle counts are monotone non-decreasing as banks retire.
+
+use crate::config::ArchConfig;
+use crate::trace::{BankMask, PerCore, MAX_CORES};
+use crate::util::rng::XorShift64;
+
+/// Transient-fault probabilities are integer parts-per-million so the
+/// config stays `Eq + Hash` (memo-cache keys hash whole configs).
+pub const PPM_SCALE: u32 = 1_000_000;
+
+/// Fault-injection knobs, carried on [`ArchConfig::faults`]. The
+/// all-zero default injects nothing and leaves every code path — and
+/// every serialized byte — identical to a fault-free build.
+///
+/// [`ArchConfig::faults`]: crate::config::ArchConfig::faults
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct FaultConfig {
+    /// Seed for the fault sampler (independent of workload seeds).
+    pub seed: u64,
+    /// Number of permanently retired DRAM banks.
+    pub retired_banks: usize,
+    /// Number of dead PIMcores (in addition to cores lost to retired
+    /// banks).
+    pub dead_cores: usize,
+    /// Per-command transient-error probability in parts per million
+    /// (`p = transient_ppm / 1e6`); each failed attempt is replayed.
+    pub transient_ppm: u32,
+    /// Replay budget per command; a command still failing after this
+    /// many replays escalates to the host as a permanent fault.
+    pub max_retries: u32,
+}
+
+impl FaultConfig {
+    /// Whether this config injects nothing at all (the default).
+    pub fn is_none(&self) -> bool {
+        self.retired_banks == 0 && self.dead_cores == 0 && self.transient_ppm == 0
+    }
+
+    /// Whether any *permanent* fault (retired bank / dead core) is
+    /// configured — what forces the trace generator to remap work.
+    pub fn has_permanent(&self) -> bool {
+        self.retired_banks > 0 || self.dead_cores > 0
+    }
+
+    /// One-line human summary (`banks=2 cores=1 p=0.001000 retries=3
+    /// seed=7`) for report headers.
+    pub fn summary(&self) -> String {
+        format!(
+            "banks={} cores={} p={:.6} retries={} seed={}",
+            self.retired_banks,
+            self.dead_cores,
+            self.transient_ppm as f64 / PPM_SCALE as f64,
+            self.max_retries,
+            self.seed
+        )
+    }
+
+    /// Check the knobs against a channel geometry. At least one PIMcore
+    /// must survive with its full bank fan-in intact, else no remap
+    /// target exists.
+    pub fn validate(&self, num_banks: usize, banks_per_pimcore: usize) -> Result<(), String> {
+        if self.transient_ppm > PPM_SCALE {
+            return Err(format!(
+                "transient fault probability {} ppm exceeds {} (p > 1)",
+                self.transient_ppm, PPM_SCALE
+            ));
+        }
+        let cores = num_banks / banks_per_pimcore.max(1);
+        if self.dead_cores >= cores && cores > 0 {
+            return Err(format!(
+                "dead_cores {} must leave at least one of {} PIMcores alive",
+                self.dead_cores, cores
+            ));
+        }
+        if self.retired_banks + banks_per_pimcore > num_banks {
+            return Err(format!(
+                "retired_banks {} must leave one PIMcore's fan-in ({} banks) of {} intact",
+                self.retired_banks, banks_per_pimcore, num_banks
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Replay verdict for one command under transient faults
+/// ([`FaultPlan::replays_for`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Replays {
+    /// Replays the controller issues after the first attempt.
+    pub count: u32,
+    /// Whether the retry budget ran out (the command escalates to the
+    /// host as a permanent fault; execution still completes).
+    pub escalated: bool,
+}
+
+/// The expanded, deterministic fault state of one run: which cores
+/// survive, which banks they keep, and the per-command replay draws.
+///
+/// Built once per run by [`FaultPlan::build`]; two builds from equal
+/// configs compare equal (`Eq`), which the property suite exploits to
+/// prove cross-session and serial-vs-threaded reproducibility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    seed: u64,
+    transient_ppm: u32,
+    max_retries: u32,
+    num_cores: usize,
+    num_banks: usize,
+    banks_per_core: usize,
+    core_alive: [bool; MAX_CORES],
+}
+
+impl FaultPlan {
+    /// Expand `cfg.faults` against `cfg`'s channel geometry. Sampling is
+    /// a pure function of the fault seed: dead cores draw first, then
+    /// retired banks draw one at a time with a deterministic forward
+    /// probe that skips already-retired banks and the *protected* core
+    /// (the lowest survivor, which guarantees a remap target). Because
+    /// each extra retired bank only appends draws, the retirement set
+    /// for `n+1` banks extends the set for `n` — survivor counts are
+    /// monotone in the retired-bank count.
+    pub fn build(cfg: &ArchConfig) -> FaultPlan {
+        let fc = &cfg.faults;
+        let bpc = cfg.banks_per_pimcore.max(1);
+        let num_banks = cfg.num_banks.min(MAX_CORES);
+        let num_cores = (num_banks / bpc).max(1);
+        let mut core_alive = [false; MAX_CORES];
+        for slot in core_alive.iter_mut().take(num_cores) {
+            *slot = true;
+        }
+        let mut plan = FaultPlan {
+            seed: fc.seed,
+            transient_ppm: fc.transient_ppm,
+            max_retries: fc.max_retries,
+            num_cores,
+            num_banks,
+            banks_per_core: bpc,
+            core_alive,
+        };
+        if fc.dead_cores == 0 && fc.retired_banks == 0 {
+            return plan;
+        }
+        let mut rng = XorShift64::new(fc.seed);
+        let dead_target = fc.dead_cores.min(num_cores - 1);
+        let mut killed = 0;
+        while killed < dead_target {
+            let c = rng.next_below(num_cores as u64) as usize;
+            if plan.core_alive[c] {
+                plan.core_alive[c] = false;
+                killed += 1;
+            }
+        }
+        let protected = (0..num_cores)
+            .find(|&c| plan.core_alive[c])
+            .expect("dead-core sampling keeps one core alive");
+        let mut retired = [false; MAX_CORES];
+        let target = fc.retired_banks.min(num_banks.saturating_sub(bpc));
+        let mut sampled = 0;
+        while sampled < target {
+            let mut b = rng.next_below(num_banks as u64) as usize;
+            let mut probes = 0;
+            while probes < num_banks && (retired[b] || b / bpc == protected) {
+                b = (b + 1) % num_banks;
+                probes += 1;
+            }
+            if probes == num_banks {
+                break;
+            }
+            retired[b] = true;
+            plan.core_alive[b / bpc] = false;
+            sampled += 1;
+        }
+        plan
+    }
+
+    /// Whether any PIMcore is offline (permanent degradation active).
+    pub fn is_degraded(&self) -> bool {
+        self.alive_core_count() < self.num_cores
+    }
+
+    /// Whether transient faults are configured (commands may replay).
+    pub fn has_transients(&self) -> bool {
+        self.transient_ppm > 0
+    }
+
+    /// Number of PIMcores still online.
+    pub fn alive_core_count(&self) -> usize {
+        self.core_alive[..self.num_cores].iter().filter(|&&a| a).count()
+    }
+
+    /// Whether PIMcore `c` is online (out-of-range cores never are).
+    pub fn core_alive(&self, c: usize) -> bool {
+        c < self.num_cores && self.core_alive[c]
+    }
+
+    /// Online PIMcore indices, ascending.
+    pub fn alive_cores(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.num_cores).filter(|&c| self.core_alive[c])
+    }
+
+    /// The banks of the surviving cores — every bank degraded host I/O
+    /// and cross-bank walks are allowed to touch. Never contains a
+    /// retired bank or a dead core's banks.
+    pub fn surviving_banks(&self) -> BankMask {
+        let bpc = self.banks_per_core;
+        BankMask::from_fn(self.num_banks, |b| self.core_alive(b / bpc))
+    }
+
+    /// Number of banks behind surviving cores.
+    pub fn surviving_bank_count(&self) -> usize {
+        self.alive_core_count() * self.banks_per_core
+    }
+
+    /// Transient-fault replay draws for command `cmd_idx`: a dedicated
+    /// PRNG stream per command (seed mixed with the index), so replay
+    /// verdicts are independent of trace length and issue order — the
+    /// analytic engine, the event scheduler, and the audit all see the
+    /// same draws for the same command.
+    pub fn replays_for(&self, cmd_idx: usize) -> Replays {
+        if self.transient_ppm == 0 {
+            return Replays::default();
+        }
+        let mix = (cmd_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = XorShift64::new(self.seed ^ mix ^ 0xD1B5_4A32_D192_ED03);
+        let mut count = 0u32;
+        loop {
+            if rng.next_below(PPM_SCALE as u64) >= self.transient_ppm as u64 {
+                return Replays { count, escalated: false };
+            }
+            if count >= self.max_retries {
+                return Replays { count, escalated: true };
+            }
+            count += 1;
+        }
+    }
+
+    /// Spread `total` units of work evenly over the surviving cores of a
+    /// `p`-core channel: each survivor gets `total / k`, with the
+    /// remainder going one unit each to the lowest survivors. The sum is
+    /// exactly `total` (energy tallies are conserved) and the maximum is
+    /// `ceil(total / k)` — monotone non-decreasing as survivors vanish,
+    /// which is what makes degraded cycle counts monotone.
+    pub fn spread_even(&self, total: u64, p: usize) -> PerCore {
+        let mut pc = PerCore::zero(p);
+        let k = self.alive_core_count() as u64;
+        if k == 0 || total == 0 {
+            return pc;
+        }
+        let (per, rem) = (total / k, total % k);
+        for (i, c) in self.alive_cores().enumerate() {
+            if c < p {
+                pc.set(c, per + u64::from((i as u64) < rem));
+            }
+        }
+        pc
+    }
+
+    /// The same value on every surviving core of a `p`-core channel
+    /// (zero on dead cores) — the degraded analogue of
+    /// [`PerCore::uniform`].
+    pub fn uniform_alive(&self, p: usize, v: u64) -> PerCore {
+        let mut pc = PerCore::zero(p);
+        for c in self.alive_cores() {
+            if c < p {
+                pc.set(c, v);
+            }
+        }
+        pc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, System};
+
+    fn cfg_with(faults: FaultConfig) -> ArchConfig {
+        let mut cfg = ArchConfig::system(System::Fused16, 32 * 1024, 256);
+        cfg.faults = faults;
+        cfg
+    }
+
+    #[test]
+    fn default_config_injects_nothing() {
+        let fc = FaultConfig::default();
+        assert!(fc.is_none());
+        assert!(!fc.has_permanent());
+        fc.validate(16, 1).unwrap();
+        let plan = FaultPlan::build(&cfg_with(fc));
+        assert!(!plan.is_degraded());
+        assert!(!plan.has_transients());
+        assert_eq!(plan.alive_core_count(), 16);
+        assert_eq!(plan.surviving_bank_count(), 16);
+        assert_eq!(plan.surviving_banks(), BankMask::all(16));
+        assert_eq!(plan.replays_for(0), Replays::default());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_knobs() {
+        let fc = FaultConfig { transient_ppm: PPM_SCALE + 1, ..Default::default() };
+        assert!(fc.validate(16, 1).is_err());
+        let fc = FaultConfig { dead_cores: 16, ..Default::default() };
+        assert!(fc.validate(16, 1).is_err());
+        assert!(FaultConfig { dead_cores: 15, ..Default::default() }.validate(16, 1).is_ok());
+        let fc = FaultConfig { retired_banks: 16, ..Default::default() };
+        assert!(fc.validate(16, 1).is_err());
+        // 4-bank fan-in: at most 12 of 16 banks may retire.
+        let fc = FaultConfig { retired_banks: 13, ..Default::default() };
+        assert!(fc.validate(16, 4).is_err());
+        assert!(FaultConfig { retired_banks: 12, ..Default::default() }.validate(16, 4).is_ok());
+    }
+
+    #[test]
+    fn same_seed_same_plan() {
+        let fc = FaultConfig { seed: 7, retired_banks: 3, dead_cores: 2, ..Default::default() };
+        let a = FaultPlan::build(&cfg_with(fc));
+        let b = FaultPlan::build(&cfg_with(fc));
+        assert_eq!(a, b);
+        let c = FaultPlan::build(&cfg_with(FaultConfig { seed: 8, ..fc }));
+        assert!(a != c || a.surviving_banks() == c.surviving_banks());
+    }
+
+    #[test]
+    fn retirement_sets_are_nested_in_count() {
+        for seed in [1u64, 42, 9999] {
+            let mut prev = BankMask::all(16);
+            let mut prev_alive = 16;
+            for n in 0..=15 {
+                let fc = FaultConfig { seed, retired_banks: n, ..Default::default() };
+                let plan = FaultPlan::build(&cfg_with(fc));
+                let banks = plan.surviving_banks();
+                // Survivor set shrinks (or holds) as banks retire, and is
+                // a subset of the previous survivor set.
+                for b in banks.iter() {
+                    assert!(prev.contains(b), "seed {seed} n {n}: bank {b} resurrected");
+                }
+                assert!(plan.alive_core_count() <= prev_alive);
+                assert!(plan.alive_core_count() >= 1, "seed {seed} n {n}: no survivors");
+                prev = banks;
+                prev_alive = plan.alive_core_count();
+            }
+        }
+    }
+
+    #[test]
+    fn retired_banks_take_their_core_offline() {
+        // 4-bank fan-in: one retired bank kills a whole 4-bank core.
+        let mut cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+        cfg.faults = FaultConfig { seed: 3, retired_banks: 1, ..Default::default() };
+        let plan = FaultPlan::build(&cfg);
+        assert_eq!(plan.alive_core_count(), 3);
+        assert_eq!(plan.surviving_bank_count(), 12);
+        assert_eq!(plan.surviving_banks().count(), 12);
+    }
+
+    #[test]
+    fn spread_even_conserves_totals_and_bounds_the_max() {
+        let fc = FaultConfig { seed: 5, retired_banks: 6, dead_cores: 3, ..Default::default() };
+        let plan = FaultPlan::build(&cfg_with(fc));
+        let k = plan.alive_core_count() as u64;
+        for total in [0u64, 1, 7, 1000, 12345] {
+            let pc = plan.spread_even(total, 16);
+            assert_eq!(pc.sum(), total);
+            assert_eq!(pc.max(), if total == 0 { 0 } else { total.div_ceil(k) });
+            for c in 0..16 {
+                if !plan.core_alive(c) {
+                    assert_eq!(pc.get(c), 0, "dead core {c} got work");
+                }
+            }
+        }
+        let u = plan.uniform_alive(16, 9);
+        assert_eq!(u.sum(), 9 * k);
+        assert_eq!(u.max(), 9);
+    }
+
+    #[test]
+    fn replays_are_deterministic_and_bounded() {
+        let fc = FaultConfig { seed: 11, transient_ppm: 500_000, max_retries: 3, ..Default::default() };
+        let plan = FaultPlan::build(&cfg_with(fc));
+        assert!(plan.has_transients());
+        let mut total = 0u64;
+        for i in 0..1000 {
+            let r = plan.replays_for(i);
+            assert_eq!(r, plan.replays_for(i), "replay draw not deterministic");
+            assert!(r.count <= 3);
+            if r.escalated {
+                assert_eq!(r.count, 3, "escalation only after the full budget");
+            }
+            total += r.count as u64;
+        }
+        // p = 0.5 over 1000 commands: replays happen, but not everywhere.
+        assert!(total > 200 && total < 2000, "replay mass {total} implausible for p=0.5");
+    }
+
+    #[test]
+    fn certain_failure_always_escalates() {
+        let fc = FaultConfig { seed: 1, transient_ppm: PPM_SCALE, max_retries: 2, ..Default::default() };
+        let plan = FaultPlan::build(&cfg_with(fc));
+        for i in 0..16 {
+            assert_eq!(plan.replays_for(i), Replays { count: 2, escalated: true });
+        }
+        // A zero retry budget escalates on the first failure.
+        let fc0 = FaultConfig { max_retries: 0, ..fc };
+        let plan0 = FaultPlan::build(&cfg_with(fc0));
+        assert_eq!(plan0.replays_for(0), Replays { count: 0, escalated: true });
+    }
+
+    #[test]
+    fn summary_names_every_knob() {
+        let fc = FaultConfig { seed: 7, retired_banks: 2, dead_cores: 1, transient_ppm: 1000, max_retries: 3 };
+        let s = fc.summary();
+        for needle in ["banks=2", "cores=1", "p=0.001000", "retries=3", "seed=7"] {
+            assert!(s.contains(needle), "{s}");
+        }
+    }
+}

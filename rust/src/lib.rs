@@ -20,6 +20,9 @@
 //!   back-to-back engine ([`sim::engine`]) and the event-driven
 //!   per-resource scheduler ([`sim::event`]).
 //! * [`energy`] — component-level energy/area models @22nm.
+//! * [`fault`] — seeded fault injection: retired banks, dead PIMcores,
+//!   transient command errors, and the deterministic [`fault::FaultPlan`]
+//!   that degraded execution remaps onto.
 //! * [`ppa`] — PPA reports and normalization against the baseline.
 //! * [`workload`] — the paper's workload scenarios (one table drives
 //!   names, aliases and [`workload::Workload::ALL`]).
@@ -55,13 +58,12 @@
 
 pub mod benchkit;
 pub mod cli;
-#[allow(missing_docs)]
 pub mod cnn;
 pub mod coordinator;
-#[allow(missing_docs)]
 pub mod dataflow;
 #[allow(missing_docs)]
 pub mod energy;
+pub mod fault;
 pub mod obs;
 pub mod ppa;
 pub mod serve;

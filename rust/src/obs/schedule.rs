@@ -237,22 +237,27 @@ impl ScheduleTrace {
         let (report, sched, records) = crate::sim::event::simulate_recorded(cfg, trace);
         let mut cmds = Vec::with_capacity(trace.cmds.len());
         let mut spans = Vec::new();
-        for (i, rec) in records.iter().enumerate() {
+        for (i, recs) in records.iter().enumerate() {
             let node = trace.cmds[i].node;
             let kind = trace.cmds[i].kind.mnemonic();
+            // The command's window spans every issue attempt: first
+            // attempt's start to last attempt's completion (one attempt
+            // unless a transient fault plan forced replays).
             cmds.push(CmdMeta { node, kind, start: sched.starts[i], done: sched.dones[i] });
-            for rv in &rec.resv {
-                let Resv { res, start, end, span, slid, tally } = *rv;
-                spans.push(TraceSpan {
-                    cmd: i,
-                    node,
-                    kind,
-                    res: res_id(res),
-                    start,
-                    end,
-                    busy: if tally { span } else { 0 },
-                    slid,
-                });
+            for rec in recs {
+                for rv in &rec.resv {
+                    let Resv { res, start, end, span, slid, tally } = *rv;
+                    spans.push(TraceSpan {
+                        cmd: i,
+                        node,
+                        kind,
+                        res: res_id(res),
+                        start,
+                        end,
+                        busy: if tally { span } else { 0 },
+                        slid,
+                    });
+                }
             }
         }
         let occ = report.occupancy;

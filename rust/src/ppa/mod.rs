@@ -91,6 +91,20 @@ impl PpaReport {
         self.occupancy.map(|o| o.act_utilization())
     }
 
+    /// Share of the run's serial work spent re-executing commands that
+    /// hit transient faults (`replayed / (cycles + replayed)` under the
+    /// analytic engine's serial accounting). `0.0` for fault-free runs —
+    /// a cheap "how much did reliability cost" headline for degraded
+    /// reports.
+    pub fn replay_overhead(&self) -> f64 {
+        let total = self.sim.cycles + self.sim.replayed_cycles;
+        if total == 0 {
+            0.0
+        } else {
+            self.sim.replayed_cycles as f64 / total as f64
+        }
+    }
+
     /// Per-layer phase attribution of the captured schedule
     /// ([`crate::obs::PhaseProfile`]). `None` unless the report was run
     /// with [`crate::config::ArchConfig::tracing`] on the event engine.
@@ -182,6 +196,15 @@ mod tests {
         assert_eq!(r.act_utilization(), Some(0.25));
         r.occupancy = Some(ResourceOccupancy::default());
         assert_eq!(r.host_bank_share(), Some(0.0), "empty schedule is 0, not NaN");
+    }
+
+    #[test]
+    fn replay_overhead_is_a_fraction_of_serial_work() {
+        let mut r = dummy(100, 1.0, 1.0);
+        assert_eq!(r.replay_overhead(), 0.0, "fault-free runs replay nothing");
+        r.sim.cycles = 300;
+        r.sim.replayed_cycles = 100;
+        assert_eq!(r.replay_overhead(), 0.25);
     }
 
     #[test]

@@ -79,6 +79,20 @@ pub struct ServeConfig {
     /// Fraction of completions trimmed from the front as warmup before
     /// computing latency statistics, in `[0, 1)` (default 0.1).
     pub warmup: f64,
+    /// Per-request latency SLO in cycles, measured from the request's
+    /// *original* arrival (default 0 = no deadline). With a deadline
+    /// set, admission sheds requests whose projected completion cannot
+    /// make it, and requests served past it count as deadline misses,
+    /// not completions.
+    pub deadline: u64,
+    /// How many times a rejected request (queue full or deadline shed)
+    /// re-offers itself before giving up (default 0 = open-loop clients
+    /// never retry).
+    pub client_retries: u32,
+    /// Base client backoff in cycles: the `k`-th retry re-offers after
+    /// `backoff << (k-1)` cycles (exponential; 0 retries on the next
+    /// cycle). Default 0.
+    pub backoff: u64,
 }
 
 impl ServeConfig {
@@ -96,6 +110,9 @@ impl ServeConfig {
             queue_depth: 64,
             seed: 42,
             warmup: 0.1,
+            deadline: 0,
+            client_retries: 0,
+            backoff: 0,
         }
     }
 
@@ -138,6 +155,24 @@ impl ServeConfig {
     /// Builder-style warmup fraction.
     pub fn warmup(mut self, w: f64) -> Self {
         self.warmup = w;
+        self
+    }
+
+    /// Builder-style per-request deadline in cycles (0 disables).
+    pub fn deadline(mut self, d: u64) -> Self {
+        self.deadline = d;
+        self
+    }
+
+    /// Builder-style client retry budget per rejected request.
+    pub fn client_retries(mut self, r: u32) -> Self {
+        self.client_retries = r;
+        self
+    }
+
+    /// Builder-style base client backoff in cycles.
+    pub fn backoff(mut self, b: u64) -> Self {
+        self.backoff = b;
         self
     }
 
@@ -185,6 +220,9 @@ mod tests {
         assert_eq!(sc.queue_depth, 64);
         assert_eq!(sc.seed, 42);
         assert_eq!(sc.warmup, 0.1);
+        assert_eq!(sc.deadline, 0, "deadlines are off unless asked for");
+        assert_eq!(sc.client_retries, 0, "open-loop clients never retry by default");
+        assert_eq!(sc.backoff, 0);
         sc.validate().unwrap();
     }
 

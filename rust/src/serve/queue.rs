@@ -1,17 +1,23 @@
 //! Bounded admission queue with time-weighted depth accounting.
 //!
-//! Requests that arrive while the queue is full are **dropped** (counted,
-//! never retried — open-loop clients don't back off). The queue tracks
-//! its maximum depth and a time-weighted depth integral so the driver
-//! can report mean queue depth over the run. Capacity counts *waiting*
+//! Requests that arrive while the queue is full are **dropped** (counted;
+//! whether the client retries is the driver's policy — see
+//! [`crate::serve::ServeConfig::client_retries`]). The queue tracks its
+//! maximum depth and a time-weighted depth integral so the driver can
+//! report mean queue depth over the run. Capacity counts *waiting*
 //! requests only; a batch in service has already left the queue.
+//!
+//! Each entry remembers both when it was queued (dispatch triggers and
+//! depth accounting) and the request's *original* arrival (latency and
+//! deadline accounting) — the two differ only for client re-offers.
 
 use std::collections::VecDeque;
 
-/// FIFO admission queue of request arrival times, bounded at `depth`.
+/// FIFO admission queue of `(queued_at, original_arrival)` request
+/// entries, bounded at `depth`.
 #[derive(Debug, Clone)]
 pub struct AdmissionQueue {
-    waiting: VecDeque<u64>,
+    waiting: VecDeque<(u64, u64)>,
     depth: usize,
     dropped: usize,
     max_depth: usize,
@@ -45,23 +51,32 @@ impl AdmissionQueue {
     /// Offer a request arriving at `arrival`; returns `false` (and counts
     /// a drop) when the queue is full.
     pub fn offer(&mut self, arrival: u64) -> bool {
-        self.advance(arrival);
+        self.offer_from(arrival, arrival)
+    }
+
+    /// Offer a request at time `now` that originally arrived at `orig`
+    /// (`orig <= now`; they differ for client re-offers after a
+    /// rejection). Returns `false` (and counts a drop) when full.
+    pub fn offer_from(&mut self, now: u64, orig: u64) -> bool {
+        debug_assert!(orig <= now, "a request cannot be re-offered before it arrived");
+        self.advance(now);
         if self.waiting.len() >= self.depth {
             self.dropped += 1;
             return false;
         }
-        self.waiting.push_back(arrival);
+        self.waiting.push_back((now, orig));
         self.max_depth = self.max_depth.max(self.waiting.len());
         true
     }
 
-    /// Pop up to `k` requests (their arrival times, FIFO order) at
-    /// dispatch time `now`. Never pops a request that has not arrived by
-    /// `now` — a batch can only contain requests that exist yet.
-    pub fn take(&mut self, now: u64, k: usize) -> Vec<u64> {
+    /// Pop up to `k` requests — `(queued_at, original_arrival)` pairs in
+    /// FIFO order — at dispatch time `now`. Never pops a request that was
+    /// not queued by `now` — a batch can only contain requests that
+    /// exist yet.
+    pub fn take(&mut self, now: u64, k: usize) -> Vec<(u64, u64)> {
         self.advance(now);
         let mut n = 0;
-        while n < k && self.waiting.get(n).map_or(false, |&a| a <= now) {
+        while n < k && self.waiting.get(n).map_or(false, |&(a, _)| a <= now) {
             n += 1;
         }
         self.waiting.drain(..n).collect()
@@ -77,21 +92,21 @@ impl AdmissionQueue {
         self.waiting.is_empty()
     }
 
-    /// Arrival time of the oldest waiting request, if any.
+    /// Queued-at time of the oldest waiting request, if any.
     pub fn head_arrival(&self) -> Option<u64> {
-        self.waiting.front().copied()
+        self.waiting.front().map(|&(a, _)| a)
     }
 
-    /// Arrival time of the `idx`-th oldest waiting request, if any. The
-    /// dispatcher uses `nth_arrival(batch - 1)` as the instant a full
-    /// batch came into existence.
+    /// Queued-at time of the `idx`-th oldest waiting request, if any.
+    /// The dispatcher uses `nth_arrival(batch - 1)` as the instant a
+    /// full batch came into existence.
     pub fn nth_arrival(&self, idx: usize) -> Option<u64> {
-        self.waiting.get(idx).copied()
+        self.waiting.get(idx).map(|&(a, _)| a)
     }
 
-    /// Arrival time of the newest waiting request, if any.
+    /// Queued-at time of the newest waiting request, if any.
     pub fn back_arrival(&self) -> Option<u64> {
-        self.waiting.back().copied()
+        self.waiting.back().map(|&(a, _)| a)
     }
 
     /// Requests dropped because the queue was full.
@@ -130,7 +145,7 @@ mod tests {
         assert_eq!(q.dropped(), 1);
         assert_eq!(q.max_depth(), 2);
         assert_eq!(q.head_arrival(), Some(10));
-        assert_eq!(q.take(50, 2), vec![10, 20]);
+        assert_eq!(q.take(50, 2), vec![(10, 10), (20, 20)]);
         assert!(q.is_empty());
         // Space freed: the next offer is admitted again.
         assert!(q.offer(60));
@@ -142,8 +157,16 @@ mod tests {
         let mut q = AdmissionQueue::new(8);
         q.offer(1);
         q.offer(2);
-        assert_eq!(q.take(5, 100), vec![1, 2]);
-        assert_eq!(q.take(6, 4), Vec::<u64>::new());
+        assert_eq!(q.take(5, 100), vec![(1, 1), (2, 2)]);
+        assert_eq!(q.take(6, 4), Vec::<(u64, u64)>::new());
+    }
+
+    #[test]
+    fn re_offers_keep_their_original_arrival() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.offer_from(30, 5), "re-offer queues at 30, arrived at 5");
+        assert_eq!(q.head_arrival(), Some(30), "triggers key off the queued-at time");
+        assert_eq!(q.take(40, 1), vec![(30, 5)], "latency keys off the original arrival");
     }
 
     #[test]

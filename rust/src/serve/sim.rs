@@ -16,7 +16,8 @@
 //! the contrast against the event engine is itself a fidelity statement
 //! (DESIGN.md §9).
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -125,13 +126,23 @@ impl<'s> ServeDriver<'s> {
 /// the report is a function of `(sc, prof)` alone, which is what makes
 /// serving results byte-reproducible across runs and thread schedules.
 ///
-/// The event loop merges two time-ordered streams — arrivals and batch
-/// dispatches — always processing the earlier event (arrival wins ties,
-/// so a request landing exactly at dispatch time joins the batch). A
-/// dispatch fires at the earliest instant the server is free **and** the
-/// dispatch condition holds: a full batch exists, the batch timeout has
-/// expired at the queue head, or the arrival stream is exhausted (no
-/// straggler is coming, so partial batches drain eagerly).
+/// The event loop merges three time-ordered streams — fresh arrivals,
+/// client re-offers, and batch dispatches — always processing the
+/// earliest event (offers win ties with dispatches, so a request landing
+/// exactly at dispatch time joins the batch; fresh arrivals win ties
+/// with re-offers). A dispatch fires at the earliest instant the server
+/// is free **and** the dispatch condition holds: a full batch exists,
+/// the batch timeout has expired at the queue head, or no further offer
+/// is coming (partial batches drain eagerly).
+///
+/// Deadline-aware admission (see [`ServeConfig::deadline`]): an offer
+/// whose projected completion — server-free time plus the queue's
+/// steady-state backlog plus one full service — already overshoots its
+/// deadline is **shed** at admission rather than queued to miss. A
+/// request served past its deadline still occupies the server but counts
+/// as a deadline miss, not a completion. Rejected offers (queue full or
+/// shed) re-offer up to [`ServeConfig::client_retries`] times with
+/// exponential backoff before counting as a drop.
 pub fn simulate_stream(sc: &ServeConfig, prof: ServiceProfile) -> ServeReport {
     simulate_stream_metered(sc, prof, None)
 }
@@ -139,8 +150,9 @@ pub fn simulate_stream(sc: &ServeConfig, prof: ServiceProfile) -> ServeReport {
 /// [`simulate_stream`] with a live metrics tap: when a registry is given,
 /// the loop pushes a `serve.queue_depth` sample (waiting requests at each
 /// batch dispatch) and a `serve.latency_cycles` sample per completed
-/// request into it as the stream replays. `None` is exactly
-/// [`simulate_stream`] — the report is identical either way.
+/// request (deadline misses excluded) into it as the stream replays.
+/// `None` is exactly [`simulate_stream`] — the report is identical
+/// either way.
 pub fn simulate_stream_metered(
     sc: &ServeConfig,
     prof: ServiceProfile,
@@ -151,11 +163,26 @@ pub fn simulate_stream_metered(
     let mut q = AdmissionQueue::new(sc.queue_depth);
     let mut shapes: HashMap<usize, u64> = HashMap::new();
     let mut latencies: Vec<u64> = Vec::with_capacity(sc.requests);
+    // Pending client re-offers as a `(re-offer time, request index)`
+    // min-heap, plus each request's rejection count so far.
+    let mut retry: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut attempts: Vec<u32> = vec![0; arrivals.len()];
+    let (mut dropped_queue_full, mut dropped_deadline_shed) = (0usize, 0usize);
+    let (mut dropped_deadline_miss, mut dropped_retry_exhausted) = (0usize, 0usize);
+    let mut served = 0usize;
     let mut free_at = 0u64;
     let mut busy = 0u64;
     let mut batches = 0usize;
     let mut i = 0usize;
-    while i < arrivals.len() || !q.is_empty() {
+    while i < arrivals.len() || !retry.is_empty() || !q.is_empty() {
+        // The next offer is the earlier of the next fresh arrival and the
+        // next client re-offer (fresh wins ties — it "arrived first").
+        let fresh = arrivals.get(i).map(|&a| (a, i, true));
+        let re = retry.peek().map(|&Reverse((t, s))| (t, s, false));
+        let offer = match (fresh, re) {
+            (Some(f), Some(r)) => Some(if r.0 < f.0 { r } else { f }),
+            (f, r) => f.or(r),
+        };
         let dispatch = if q.is_empty() {
             None
         } else {
@@ -163,8 +190,8 @@ pub fn simulate_stream_metered(
             let trigger = if q.len() >= sc.batch {
                 // Full batch: ready the instant its batch-th member arrived.
                 q.nth_arrival(sc.batch - 1).unwrap()
-            } else if i >= arrivals.len() {
-                // Stream over: drain the partial batch eagerly.
+            } else if offer.is_none() {
+                // No more offers coming: drain the partial batch eagerly.
                 q.back_arrival().unwrap()
             } else if sc.batch_timeout == 0 {
                 head
@@ -173,10 +200,39 @@ pub fn simulate_stream_metered(
             };
             Some(free_at.max(trigger))
         };
-        match (arrivals.get(i).copied(), dispatch) {
-            (Some(a), d) if d.map_or(true, |dt| a <= dt) => {
-                q.offer(a);
-                i += 1;
+        match (offer, dispatch) {
+            (Some((at, seq, is_fresh)), d) if d.map_or(true, |dt| at <= dt) => {
+                if is_fresh {
+                    i += 1;
+                } else {
+                    retry.pop();
+                }
+                let orig = arrivals[seq];
+                // Backlog projection at the offer instant: the server
+                // frees, works off everything already queued at the
+                // steady-state rate, then serves this request.
+                let projected = free_at.max(at)
+                    + q.len() as u64 * prof.steady_cycles
+                    + prof.single_cycles;
+                let queue_full = q.len() >= sc.queue_depth;
+                let shed = !queue_full
+                    && sc.deadline > 0
+                    && projected > orig.saturating_add(sc.deadline);
+                if !queue_full && !shed {
+                    q.offer_from(at, orig);
+                } else if attempts[seq] < sc.client_retries {
+                    attempts[seq] += 1;
+                    let wait =
+                        sc.backoff.saturating_mul(1u64 << (attempts[seq] - 1).min(63));
+                    // backoff 0 still re-offers strictly later, never now.
+                    retry.push(Reverse((at.saturating_add(wait.max(1)), seq)));
+                } else if sc.client_retries > 0 {
+                    dropped_retry_exhausted += 1;
+                } else if queue_full {
+                    dropped_queue_full += 1;
+                } else {
+                    dropped_deadline_shed += 1;
+                }
             }
             (_, Some(dt)) => {
                 if let Some(m) = metrics {
@@ -188,18 +244,25 @@ pub fn simulate_stream_metered(
                 let service = *shapes.entry(b).or_insert_with(|| prof.batch_cycles(b));
                 let done = dt + service;
                 busy += service;
-                for t in taken {
-                    if let Some(m) = metrics {
-                        m.push_sample("serve.latency_cycles", (done - t) as f64);
+                for (_, orig) in taken {
+                    let lat = done - orig;
+                    served += 1;
+                    if sc.deadline > 0 && lat > sc.deadline {
+                        dropped_deadline_miss += 1;
+                        continue;
                     }
-                    latencies.push(done - t);
+                    if let Some(m) = metrics {
+                        m.push_sample("serve.latency_cycles", lat as f64);
+                    }
+                    latencies.push(lat);
                 }
                 batches += 1;
                 free_at = done;
             }
-            (None, None) => unreachable!("loop invariant: arrivals or queue non-empty"),
+            (None, None) => unreachable!("loop invariant: offers or queue non-empty"),
         }
     }
+    debug_assert_eq!(q.dropped(), 0, "fullness is pre-checked; the driver classifies drops");
     let makespan = free_at;
     let completed = latencies.len();
     let mut trimmed = (sc.warmup * completed as f64).floor() as usize;
@@ -208,11 +271,7 @@ pub fn simulate_stream_metered(
         trimmed = trimmed.min(completed - 1);
     }
     let latency = latency_stats(&latencies[trimmed..]);
-    let throughput_rps = if makespan > 0 {
-        completed as f64 / makespan as f64 * clock
-    } else {
-        0.0
-    };
+    let per_makespan = |n: usize| if makespan > 0 { n as f64 / makespan as f64 * clock } else { 0.0 };
     ServeReport {
         label: sc.cfg.label(),
         system: sc.cfg.system.name().to_string(),
@@ -225,13 +284,24 @@ pub fn simulate_stream_metered(
         batch_timeout: sc.batch_timeout,
         queue_depth: sc.queue_depth,
         seed: sc.seed,
+        deadline: sc.deadline,
+        client_retries: sc.client_retries,
+        backoff: sc.backoff,
         completed,
-        dropped: q.dropped(),
+        dropped: dropped_queue_full
+            + dropped_deadline_shed
+            + dropped_deadline_miss
+            + dropped_retry_exhausted,
+        dropped_queue_full,
+        dropped_deadline_shed,
+        dropped_deadline_miss,
+        dropped_retry_exhausted,
         batches,
-        mean_batch: if batches > 0 { completed as f64 / batches as f64 } else { 0.0 },
+        mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
         warmup_trimmed: trimmed,
         latency,
-        throughput_rps,
+        throughput_rps: per_makespan(served),
+        goodput_rps: per_makespan(completed),
         utilization: if makespan > 0 { busy as f64 / makespan as f64 } else { 0.0 },
         queue_mean: q.mean_depth(makespan),
         queue_max: q.max_depth(),
@@ -379,5 +449,62 @@ mod tests {
         let r = simulate_stream(&sc, prof);
         assert_eq!(r.warmup_trimmed, 3);
         assert_eq!(r.latency.samples, 7);
+    }
+
+    #[test]
+    fn deadline_misses_are_split_from_completions() {
+        // Timeout-delayed requests finish at 600 cycles, the eager last
+        // one at 100 (see batch_timeout_delays_partial_batches). With a
+        // 550-cycle deadline the projection at admission (~100 cycles)
+        // still admits everyone, so the two delayed requests become
+        // deadline *misses* — served, but not completed.
+        let sc = sc_with(1000.0).requests(3).batch(4).batch_timeout(500).deadline(550);
+        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 10 };
+        let r = simulate_stream(&sc, prof);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.dropped_deadline_miss, 2);
+        assert_eq!(r.dropped, 2, "misses count as drops");
+        assert_eq!(r.dropped_queue_full + r.dropped_deadline_shed, 0);
+        assert_eq!(r.completed + r.dropped, 3, "conservation");
+        assert_eq!(r.batches, 3, "misses still occupied the server");
+        assert!(r.goodput_rps < r.throughput_rps, "misses dilute goodput");
+    }
+
+    #[test]
+    fn slo_admission_sheds_doomed_requests_before_the_queue_fills() {
+        // 10x overload with a 2000-cycle deadline: once two requests are
+        // backed up, a new arrival's projected completion (>= 3000
+        // cycles out) overshoots its deadline, so admission sheds it —
+        // the queue never reaches its 8-deep capacity.
+        let sc = sc_with(100.0).requests(50).queue_depth(8).deadline(2000);
+        let prof = ServiceProfile { single_cycles: 1000, steady_cycles: 1000 };
+        let r = simulate_stream(&sc, prof);
+        assert!(r.dropped_deadline_shed > 0, "overload must shed");
+        assert_eq!(r.dropped_queue_full, 0, "shedding keeps the queue below capacity");
+        assert!(r.queue_max < 8);
+        assert_eq!(r.completed + r.dropped, 50, "conservation");
+        // Shedding at admission means what *is* served meets its SLO.
+        assert_eq!(r.dropped_deadline_miss, 0);
+        assert!(r.latency.max <= 2000);
+    }
+
+    #[test]
+    fn client_retries_recover_requests_a_full_queue_rejected() {
+        // Burst at 10-cycle gaps against a 100-cycle server with a
+        // 2-deep queue: most arrivals bounce. Retrying clients re-offer
+        // with exponential backoff and land as the backlog drains.
+        let plain = sc_with(10.0).requests(20).queue_depth(2);
+        let retrying = sc_with(10.0).requests(20).queue_depth(2).client_retries(5).backoff(50);
+        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 100 };
+        let r0 = simulate_stream(&plain, prof);
+        let r1 = simulate_stream(&retrying, prof);
+        assert!(r0.dropped_queue_full > 0, "the burst must overflow the queue");
+        assert!(r1.completed > r0.completed, "retries must recover rejected requests");
+        // With a retry budget every terminal drop is a retry exhaustion.
+        assert_eq!(r1.dropped_queue_full, 0);
+        assert_eq!(r1.dropped, r1.dropped_retry_exhausted);
+        assert_eq!(r1.completed + r1.dropped, 20, "conservation");
+        // Pure function: an identical rerun is identical.
+        assert_eq!(simulate_stream(&retrying, prof), r1);
     }
 }

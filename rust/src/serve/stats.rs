@@ -85,21 +85,47 @@ pub struct ServeReport {
     pub queue_depth: usize,
     /// PRNG seed the arrival stream was drawn from.
     pub seed: u64,
-    /// Requests that completed service.
+    /// Per-request latency SLO in cycles (0 = none; config echo).
+    pub deadline: u64,
+    /// Client retry budget per rejected request (config echo).
+    pub client_retries: u32,
+    /// Base client backoff in cycles (config echo).
+    pub backoff: u64,
+    /// Requests served *within their deadline* (with no deadline, every
+    /// served request).
     pub completed: usize,
-    /// Requests dropped at admission because the queue was full.
+    /// Requests that never completed in time: the sum of the four
+    /// `dropped_*` classifications below. `completed + dropped ==
+    /// requests` always holds.
     pub dropped: usize,
+    /// Drops because the admission queue was full (retry budget 0).
+    pub dropped_queue_full: usize,
+    /// Drops shed at admission because the projected completion already
+    /// overshot the deadline (retry budget 0).
+    pub dropped_deadline_shed: usize,
+    /// Requests served past their deadline (they occupied the server but
+    /// do not count as completions).
+    pub dropped_deadline_miss: usize,
+    /// Requests whose client retry budget ran out while being rejected.
+    pub dropped_retry_exhausted: usize,
     /// Batches dispatched.
     pub batches: usize,
-    /// Mean requests per dispatched batch.
+    /// Mean requests per dispatched batch (served, whether or not they
+    /// made their deadline).
     pub mean_batch: f64,
     /// Completed requests trimmed from the front as warmup before
     /// computing [`ServeReport::latency`].
     pub warmup_trimmed: usize,
-    /// Latency statistics over the post-warmup completions, in cycles.
+    /// Latency statistics over the post-warmup completions, in cycles
+    /// (deadline misses excluded).
     pub latency: LatencyStats,
-    /// Completed requests per second of wall-clock time over the makespan.
+    /// *Served* requests (completions plus deadline misses) per second of
+    /// wall-clock time over the makespan.
     pub throughput_rps: f64,
+    /// Completed — deadline-meeting — requests per second of wall-clock
+    /// time over the makespan. Equal to [`ServeReport::throughput_rps`]
+    /// when no deadline is set.
+    pub goodput_rps: f64,
     /// Fraction of the makespan the channel was busy serving batches.
     pub utilization: f64,
     /// Time-weighted mean admission-queue depth over the makespan.
@@ -126,8 +152,13 @@ impl ServeReport {
         m.add("serve.requests", self.requests as u64);
         m.add("serve.completed", self.completed as u64);
         m.add("serve.dropped", self.dropped as u64);
+        m.add("serve.dropped_queue_full", self.dropped_queue_full as u64);
+        m.add("serve.dropped_deadline_shed", self.dropped_deadline_shed as u64);
+        m.add("serve.dropped_deadline_miss", self.dropped_deadline_miss as u64);
+        m.add("serve.dropped_retry_exhausted", self.dropped_retry_exhausted as u64);
         m.add("serve.batches", self.batches as u64);
         m.gauge("serve.throughput_rps", self.throughput_rps);
+        m.gauge("serve.goodput_rps", self.goodput_rps);
         m.gauge("serve.utilization", self.utilization);
         m.gauge("serve.queue_mean", self.queue_mean);
         m.gauge("serve.queue_max", self.queue_max as f64);
@@ -156,14 +187,32 @@ impl ServeReport {
             "offered {:.1} req/s, {} requests, batch<={} (timeout {} cyc), queue depth {}",
             self.rate_rps, self.requests, self.batch, self.batch_timeout, self.queue_depth
         );
+        if self.deadline > 0 || self.client_retries > 0 {
+            let _ = writeln!(
+                out,
+                "deadline {} cyc, client retries {} (backoff {} cyc)",
+                self.deadline, self.client_retries, self.backoff
+            );
+        }
         let mut t = Table::new(vec!["metric", "value"]);
         t.row(vec!["completed".to_string(), self.completed.to_string()]);
         t.row(vec!["dropped".to_string(), self.dropped.to_string()]);
+        t.row(vec![
+            "drop split".to_string(),
+            format!(
+                "{} queue-full, {} shed, {} missed, {} retries-exhausted",
+                self.dropped_queue_full,
+                self.dropped_deadline_shed,
+                self.dropped_deadline_miss,
+                self.dropped_retry_exhausted
+            ),
+        ]);
         t.row(vec![
             "batches".to_string(),
             format!("{} (mean {:.2} req)", self.batches, self.mean_batch),
         ]);
         t.row(vec!["throughput".to_string(), format!("{:.1} req/s", self.throughput_rps)]);
+        t.row(vec!["goodput".to_string(), format!("{:.1} req/s", self.goodput_rps)]);
         t.row(vec!["utilization".to_string(), pct(self.utilization)]);
         t.row(vec!["p50 latency".to_string(), format!("{} cyc", self.latency.p50)]);
         t.row(vec!["p95 latency".to_string(), format!("{} cyc", self.latency.p95)]);

@@ -12,7 +12,8 @@
 use super::dram;
 use super::ActionCounts;
 use crate::config::ArchConfig;
-use crate::trace::{Cmd, CmdKind, PerCore, RowMap, Trace};
+use crate::fault::FaultPlan;
+use crate::trace::{BankMask, Cmd, CmdKind, PerCore, RowMap, Trace, MAX_CORES};
 
 /// Result of simulating one trace on one architecture.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -30,13 +31,43 @@ pub struct SimResult {
     pub gbcore_cycles: u64,
     /// Cycles of host interface occupancy.
     pub host_cycles: u64,
+    /// Cycles spent re-executing transiently-failed commands (replay
+    /// attempts beyond each command's first). Zero without fault
+    /// injection; identical across engines because every replay is
+    /// charged its serial duration ([`charge`]) in both.
+    pub replayed_cycles: u64,
+    /// Commands whose transient failures exhausted the retry budget and
+    /// escalated to the host as permanent faults (DESIGN.md §11).
+    pub escalated_cmds: u64,
 }
 
 /// Simulate a full trace.
 pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> SimResult {
     let mut r = SimResult::default();
-    for cmd in &trace.cmds {
-        step(cfg, cmd, &mut r);
+    if cfg.faults.transient_ppm == 0 {
+        for cmd in &trace.cmds {
+            step(cfg, cmd, &mut r);
+        }
+        return r;
+    }
+    // Transient faults: each command executes 1 + replays times, every
+    // attempt tallied (re-executed work moves real data) and charged its
+    // full serial duration.
+    let plan = FaultPlan::build(cfg);
+    for (i, cmd) in trace.cmds.iter().enumerate() {
+        let rep = plan.replays_for(i);
+        let c = cost(cfg, cmd);
+        for attempt in 0..=rep.count {
+            tally(cmd, &mut r.actions);
+            let d = charge(cfg, &c, &mut r);
+            r.cycles += d;
+            if attempt > 0 {
+                r.replayed_cycles += d;
+            }
+        }
+        if rep.escalated {
+            r.escalated_cmds += 1;
+        }
     }
     r
 }
@@ -60,8 +91,10 @@ pub(crate) enum CmdCost {
     /// `PIM_BK2LBUF` / `PIM_LBUF2BK`: parallel per-core bank-stream cycles.
     NearBank { core: PerCore, write: bool, acts: PerCore },
     /// `PIM_BK2GBUF` / `PIM_GBUF2BK`: sequential bus / GBUF-port occupancy
-    /// (`total`), touching each bank for one `slice` of the interval.
-    CrossBank { total: u64, slice: u64, write: bool, acts: u64 },
+    /// (`total`), touching each bank of the `banks` walk set for one
+    /// `slice` of the interval. On a healthy channel the walk covers all
+    /// banks; retired banks shrink it (and grow the slice accordingly).
+    CrossBank { total: u64, slice: u64, write: bool, acts: u64, banks: BankMask },
     /// `HOST_WRITE` / `HOST_READ`: off-chip interface occupancy (`total`)
     /// plus — when the config models host bank residency — a slice of
     /// each destination bank's timeline sized by its share of the `rows`
@@ -117,12 +150,21 @@ pub(crate) fn cost(cfg: &ArchConfig, cmd: &Cmd) -> CmdCost {
         }
         CmdKind::Bk2Gbuf { bytes } | CmdKind::Gbuf2Bk { bytes } => {
             let total = dram::cross_bank_stream_cycles(t, *bytes);
-            let banks = cfg.num_banks.max(1) as u64;
+            // Retired banks drop out of the sequential walk: the same
+            // total spreads over fewer banks, so each surviving bank's
+            // slice grows. The healthy path keeps the exact 1/N split.
+            let (n, banks) = if cfg.faults.has_permanent() {
+                let plan = FaultPlan::build(cfg);
+                (plan.surviving_bank_count().max(1) as u64, plan.surviving_banks())
+            } else {
+                (cfg.num_banks.max(1) as u64, BankMask::all(cfg.num_banks.min(MAX_CORES)))
+            };
             CmdCost::CrossBank {
                 total,
-                slice: total.div_ceil(banks),
+                slice: total.div_ceil(n),
                 write: matches!(cmd.kind, CmdKind::Gbuf2Bk { .. }),
                 acts: rows_touched(*bytes),
+                banks,
             }
         }
         CmdKind::HostWrite { bytes, rows } | CmdKind::HostRead { bytes, rows } => {
@@ -439,6 +481,81 @@ mod tests {
             f16.cross_bank_cycles,
             base.cross_bank_cycles
         );
+    }
+
+    #[test]
+    fn transient_replays_add_serial_cycles() {
+        use crate::fault::FaultConfig;
+        let g = resnet18_first8();
+        let cfg = ArchConfig::system(System::Fused16, 2048, 0);
+        let p = plan(&g, &cfg);
+        let t = generate(&g, &cfg, &p, CostModel::default());
+        let healthy = simulate(&cfg, &t);
+        let faulty_cfg = cfg.clone().with_faults(FaultConfig {
+            seed: 9,
+            transient_ppm: 200_000,
+            max_retries: 3,
+            ..Default::default()
+        });
+        let faulty = simulate(&faulty_cfg, &t);
+        assert!(faulty.replayed_cycles > 0, "p=0.2 over a full trace must replay something");
+        // Replays are pure serial additions: the faulty total is exactly
+        // the healthy total plus the replayed cycles.
+        assert_eq!(faulty.cycles, healthy.cycles + faulty.replayed_cycles);
+        // Re-executed commands move real data again.
+        assert!(faulty.actions.pimcore_macs > healthy.actions.pimcore_macs);
+    }
+
+    #[test]
+    fn certain_transient_failure_triples_cycles_and_escalates() {
+        use crate::fault::FaultConfig;
+        let mut tr = Trace::default();
+        for i in 0..8 {
+            tr.push(i, CmdKind::Bk2Gbuf { bytes: 256 });
+        }
+        let cfg = ArchConfig::baseline().with_faults(FaultConfig {
+            seed: 1,
+            transient_ppm: 1_000_000,
+            max_retries: 2,
+            ..Default::default()
+        });
+        let r = simulate(&cfg, &tr);
+        assert_eq!(r.escalated_cmds, 8, "p=1 exhausts every retry budget");
+        let healthy = simulate(&ArchConfig::baseline(), &tr);
+        // Every command runs 1 + max_retries times before escalating.
+        assert_eq!(r.cycles, healthy.cycles * 3);
+        assert_eq!(r.replayed_cycles, healthy.cycles * 2);
+    }
+
+    #[test]
+    fn retired_banks_shrink_the_cross_bank_walk_and_grow_its_slice() {
+        use crate::fault::FaultConfig;
+        let mut tr = Trace::default();
+        tr.push(0, CmdKind::Bk2Gbuf { bytes: 4096 });
+        let healthy = ArchConfig::baseline();
+        let faulty = ArchConfig::baseline()
+            .with_faults(FaultConfig { seed: 2, retired_banks: 8, ..Default::default() });
+        let ch = cost(&healthy, &tr.cmds[0]);
+        let cf = cost(&faulty, &tr.cmds[0]);
+        let (th, sh, bh) = match ch {
+            CmdCost::CrossBank { total, slice, banks, .. } => (total, slice, banks),
+            _ => panic!("expected a CrossBank cost"),
+        };
+        let (tf, sf, bf) = match cf {
+            CmdCost::CrossBank { total, slice, banks, .. } => (total, slice, banks),
+            _ => panic!("expected a CrossBank cost"),
+        };
+        assert_eq!(th, tf, "the sequential total is geometry-independent");
+        assert_eq!(bh.count(), 16);
+        assert_eq!(bf.count(), 8, "8 retired banks leave an 8-bank walk");
+        assert_eq!(sh, th.div_ceil(16));
+        assert_eq!(sf, tf.div_ceil(8));
+        assert!(sf > sh);
+        // The serial charge is the total either way: degraded cross-bank
+        // commands never get cheaper.
+        let mut rh = SimResult::default();
+        let mut rf = SimResult::default();
+        assert_eq!(charge(&healthy, &ch, &mut rh), charge(&faulty, &cf, &mut rf));
     }
 
     #[test]

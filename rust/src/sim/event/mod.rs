@@ -58,6 +58,7 @@ use resources::NUM_ACT_GROUPS;
 use super::engine::{self, charge, cost, tally, CmdCost};
 use super::SimResult;
 use crate::config::ArchConfig;
+use crate::fault::FaultPlan;
 use crate::trace::{CmdKind, Trace, MAX_CORES};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -81,12 +82,16 @@ pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> EventReport {
 
 /// Simulate in recording mode, returning the report together with the
 /// per-command schedule (starts/completions in trace order) and the
-/// committed reservation records — the raw material
-/// [`crate::obs::ScheduleTrace`] promotes into a stable timeline.
+/// committed reservation records — per command, one [`IssueRecord`] per
+/// issue attempt (exactly one unless a transient fault plan forced
+/// replays) — the raw material [`crate::obs::ScheduleTrace`] promotes
+/// into a stable timeline.
+///
+/// [`IssueRecord`]: resources::IssueRecord
 pub(crate) fn simulate_recorded(
     cfg: &ArchConfig,
     trace: &Trace,
-) -> (EventReport, ScheduleAudit, Vec<resources::IssueRecord>) {
+) -> (EventReport, ScheduleAudit, Vec<Vec<resources::IssueRecord>>) {
     let dag = deps::build(trace);
     run_schedule(cfg, trace, &dag, true)
 }
@@ -112,6 +117,12 @@ pub struct ScheduleAudit {
     /// when `ArchConfig::slice_pipelining` is off (the audit rejects a
     /// slid slice outright in that case).
     pub slid_cycles: u64,
+    /// Cycles certified inside replay attempts (issue slot, data span,
+    /// and recovery of every attempt after a command's first) — the
+    /// independently re-derived counterpart of
+    /// [`SimResult::replayed_cycles`]. Zero without a transient fault
+    /// plan.
+    pub replayed_cycles: u64,
 }
 
 /// Re-run the schedule in recording mode and certify its legality:
@@ -138,7 +149,13 @@ pub struct ScheduleAudit {
 ///   group the reserved window cycles cover the command's activations at
 ///   `act_slot_cycles()` per ACT (saturated groups are capped at the
 ///   data span — the bulk-window degradation `DramTiming::act_layout`
-///   documents). Cross-command spacing follows from the no-overlap check.
+///   documents). Cross-command spacing follows from the no-overlap check;
+/// * under a transient fault plan, every command records exactly one
+///   attempt plus the replays the plan dictates for its trace index,
+///   each replay starting at-or-after the prior attempt's completion and
+///   passing every per-attempt check above in its *own* window; the
+///   certified replay cycles are reported
+///   ([`ScheduleAudit::replayed_cycles`]).
 pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
     let dag = deps::build(trace);
     let (report, mut sched, records) = run_schedule(cfg, trace, &dag, true);
@@ -161,11 +178,14 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
         ));
     }
 
-    // Independent double-booking replay over every resource.
+    // Independent double-booking replay over every resource (replay
+    // attempts included — a retry may not overlap anything either).
     let mut per_res: Vec<Vec<(u64, u64, usize)>> = vec![Vec::new(); resources::NUM_RES];
-    for (i, rec) in records.iter().enumerate() {
-        for rv in &rec.resv {
-            per_res[rv.res].push((rv.start, rv.end, i));
+    for (i, recs) in records.iter().enumerate() {
+        for rec in recs {
+            for rv in &rec.resv {
+                per_res[rv.res].push((rv.start, rv.end, i));
+            }
         }
     }
     for (res, iv) in per_res.iter_mut().enumerate() {
@@ -180,190 +200,237 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
         }
     }
 
+    let plan = FaultPlan::build(cfg);
     let t_cmd = cfg.timing.t_cmd;
     let act_slot = cfg.timing.act_slot_cycles();
-    for (i, rec) in records.iter().enumerate() {
-        let data_lo = sched.starts[i] + t_cmd;
-        let data_hi = data_lo + rec.data_span;
-
-        // Host bank residency: every slice sits on an annotated bank,
-        // inside the command's window, with exactly the span its share
-        // of the trace's row map dictates — and at or after its rigid
-        // stagger offset (exactly on it when slice pipelining is off).
-        if let CmdKind::HostWrite { rows, .. } | CmdKind::HostRead { rows, .. } =
-            &trace.cmds[i].kind
-        {
-            let c = cost(cfg, &trace.cmds[i]);
-            let resident = matches!(c, CmdCost::Host { rows: r, .. } if !r.is_empty());
-            // Expected per-bank (rigid offset, span), recomputed from
-            // the row map independently of the scheduler's arithmetic.
-            let mut want = [(0u64, 0u64); MAX_CORES];
-            let in_channel: u64 =
-                rows.iter().filter(|&(b, _)| b < cfg.num_banks).map(|(_, r)| r).sum();
-            if resident && in_channel > 0 {
-                let mut acc = 0u64;
-                for (b, r) in rows.iter() {
-                    if b >= cfg.num_banks {
-                        continue;
-                    }
-                    let lo = rec.data_span * acc / in_channel;
-                    acc += r;
-                    let hi = rec.data_span * acc / in_channel;
-                    want[b] = (lo, hi - lo);
+    for (i, recs) in records.iter().enumerate() {
+        // Replay accounting: the scheduler must have issued exactly one
+        // attempt plus the replays the fault plan dictates for this
+        // trace index, framed by the schedule's reported start (first
+        // attempt) and completion (last attempt), each replay waiting
+        // for the failed attempt to finish.
+        let rep = plan.replays_for(i);
+        if recs.len() != 1 + rep.count as usize {
+            return Err(format!(
+                "command {i}: {} issue attempts recorded, the fault plan dictates {}",
+                recs.len(),
+                1 + rep.count
+            ));
+        }
+        if recs[0].start != sched.starts[i] {
+            return Err(format!(
+                "command {i}: first attempt starts at {} but the schedule says {}",
+                recs[0].start, sched.starts[i]
+            ));
+        }
+        let last_done = recs.last().map(|r| r.done).unwrap_or(0);
+        if last_done != sched.dones[i] {
+            return Err(format!(
+                "command {i}: last attempt completes at {last_done} but the schedule says {}",
+                sched.dones[i]
+            ));
+        }
+        let mut prev_done = 0u64;
+        for (attempt, rec) in recs.iter().enumerate() {
+            if attempt > 0 {
+                if rec.start < prev_done {
+                    return Err(format!(
+                        "command {i}: replay {attempt} starts at {} before the failed attempt completes at {prev_done}",
+                        rec.start
+                    ));
                 }
+                sched.replayed_cycles += rec.done - rec.start;
             }
-            let mut seen = [0u64; MAX_CORES];
-            for rv in &rec.resv {
-                let (s, e, span) = (rv.start, rv.end, rv.span);
-                if let Some(b) = resources::res_bank(rv.res) {
-                    if !resident {
-                        return Err(format!(
-                            "host command {i} reserved bank {b} with residency off"
-                        ));
+            prev_done = rec.done;
+
+            let data_lo = rec.start + t_cmd;
+            let data_hi = data_lo + rec.data_span;
+
+            // Host bank residency: every slice sits on an annotated bank,
+            // inside the attempt's window, with exactly the span its share
+            // of the trace's row map dictates — and at or after its rigid
+            // stagger offset (exactly on it when slice pipelining is off).
+            if let CmdKind::HostWrite { rows, .. } | CmdKind::HostRead { rows, .. } =
+                &trace.cmds[i].kind
+            {
+                let c = cost(cfg, &trace.cmds[i]);
+                let resident = matches!(c, CmdCost::Host { rows: r, .. } if !r.is_empty());
+                // Expected per-bank (rigid offset, span), recomputed from
+                // the row map independently of the scheduler's arithmetic.
+                let mut want = [(0u64, 0u64); MAX_CORES];
+                let in_channel: u64 =
+                    rows.iter().filter(|&(b, _)| b < cfg.num_banks).map(|(_, r)| r).sum();
+                if resident && in_channel > 0 {
+                    let mut acc = 0u64;
+                    for (b, r) in rows.iter() {
+                        if b >= cfg.num_banks {
+                            continue;
+                        }
+                        let lo = rec.data_span * acc / in_channel;
+                        acc += r;
+                        let hi = rec.data_span * acc / in_channel;
+                        want[b] = (lo, hi - lo);
                     }
-                    if b >= cfg.num_banks || rows.get(b) == 0 {
-                        return Err(format!(
-                            "host command {i} reserved bank {b} outside its destination set"
-                        ));
-                    }
-                    if s < data_lo || e > sched.dones[i] || s + span > data_hi {
-                        return Err(format!(
-                            "host command {i}: bank {b} slice [{s}, {e}) escapes its window [{data_lo}, {})",
-                            sched.dones[i]
-                        ));
-                    }
-                    if span != want[b].1 {
-                        return Err(format!(
-                            "host command {i}: bank {b} slice span {span} disagrees with its row share {}",
-                            want[b].1
-                        ));
-                    }
-                    if s < data_lo + want[b].0 {
-                        return Err(format!(
-                            "host command {i}: bank {b} slice at {s} precedes its stagger offset"
-                        ));
-                    }
-                    if s != data_lo + want[b].0 {
-                        if !cfg.slice_pipelining {
+                }
+                let mut seen = [0u64; MAX_CORES];
+                for rv in &rec.resv {
+                    let (s, e, span) = (rv.start, rv.end, rv.span);
+                    if let Some(b) = resources::res_bank(rv.res) {
+                        if !resident {
                             return Err(format!(
-                                "host command {i}: bank {b} slice slid with pipelining off"
+                                "host command {i} reserved bank {b} with residency off"
                             ));
                         }
-                        sched.slid_cycles += span;
-                    }
-                    // Recovery tails are reserved but not streamed.
-                    seen[b] += span;
-                }
-            }
-            for b in 0..cfg.num_banks.min(MAX_CORES) {
-                if seen[b] != want[b].1 {
-                    return Err(format!(
-                        "host command {i}: bank {b} reserved {} slice cycles, the row map expects {}",
-                        seen[b], want[b].1
-                    ));
-                }
-            }
-            sched.host_bank_cycles += seen.iter().sum::<u64>();
-
-            // The scheduler's per-group ACT metering must equal the
-            // trace's per-bank row counts, group by group — the audit
-            // certifies no `div_ceil` share survives on the host path.
-            let mut want_acts = [0u64; NUM_ACT_GROUPS];
-            if resident {
-                for (b, r) in rows.iter() {
-                    if b < cfg.num_banks {
-                        want_acts[b / resources::GROUP_BANKS] += r;
-                    }
-                }
-            }
-            if rec.group_acts != want_acts {
-                return Err(format!(
-                    "host command {i}: metered ACT counts {:?} disagree with the row map's {:?}",
-                    rec.group_acts, want_acts
-                ));
-            }
-        }
-
-        // Cross-bank slices: the uniform 1/N walk over the channel, each
-        // slice in-window and at-or-after its rigid offset (exactly on
-        // it when slice pipelining is off).
-        if matches!(trace.cmds[i].kind, CmdKind::Bk2Gbuf { .. } | CmdKind::Gbuf2Bk { .. }) {
-            let c = cost(cfg, &trace.cmds[i]);
-            let mut want = [(0u64, 0u64); MAX_CORES];
-            if let CmdCost::CrossBank { total, slice, .. } = c {
-                if slice > 0 {
-                    for (b, w) in want.iter_mut().enumerate().take(cfg.num_banks.min(MAX_CORES)) {
-                        let off = b as u64 * slice;
-                        if off >= total {
-                            break;
-                        }
-                        *w = (off, slice.min(total - off));
-                    }
-                }
-            }
-            let mut seen = [0u64; MAX_CORES];
-            for rv in &rec.resv {
-                let (s, e, span) = (rv.start, rv.end, rv.span);
-                if let Some(b) = resources::res_bank(rv.res) {
-                    if b >= MAX_CORES || want[b].1 == 0 {
-                        return Err(format!(
-                            "cross-bank command {i} reserved bank {b} outside its walk"
-                        ));
-                    }
-                    if s < data_lo || e > sched.dones[i] || s + span > data_hi {
-                        return Err(format!(
-                            "cross-bank command {i}: bank {b} slice [{s}, {e}) escapes its window"
-                        ));
-                    }
-                    if span != want[b].1 || s < data_lo + want[b].0 {
-                        return Err(format!(
-                            "cross-bank command {i}: bank {b} slice [{s}, {e}) breaks the 1/N walk"
-                        ));
-                    }
-                    if s != data_lo + want[b].0 {
-                        if !cfg.slice_pipelining {
+                        if b >= cfg.num_banks || rows.get(b) == 0 {
                             return Err(format!(
-                                "cross-bank command {i}: bank {b} slice slid with pipelining off"
+                                "host command {i} reserved bank {b} outside its destination set"
                             ));
                         }
-                        sched.slid_cycles += span;
+                        if s < data_lo || e > rec.done || s + span > data_hi {
+                            return Err(format!(
+                                "host command {i}: bank {b} slice [{s}, {e}) escapes its window [{data_lo}, {})",
+                                rec.done
+                            ));
+                        }
+                        if span != want[b].1 {
+                            return Err(format!(
+                                "host command {i}: bank {b} slice span {span} disagrees with its row share {}",
+                                want[b].1
+                            ));
+                        }
+                        if s < data_lo + want[b].0 {
+                            return Err(format!(
+                                "host command {i}: bank {b} slice at {s} precedes its stagger offset"
+                            ));
+                        }
+                        if s != data_lo + want[b].0 {
+                            if !cfg.slice_pipelining {
+                                return Err(format!(
+                                    "host command {i}: bank {b} slice slid with pipelining off"
+                                ));
+                            }
+                            sched.slid_cycles += span;
+                        }
+                        // Recovery tails are reserved but not streamed.
+                        seen[b] += span;
                     }
-                    seen[b] += span;
                 }
-            }
-            for b in 0..MAX_CORES {
-                if seen[b] != want[b].1 {
-                    return Err(format!(
-                        "cross-bank command {i}: bank {b} reserved {} slice cycles, expected {}",
-                        seen[b], want[b].1
-                    ));
+                for b in 0..cfg.num_banks.min(MAX_CORES) {
+                    if seen[b] != want[b].1 {
+                        return Err(format!(
+                            "host command {i}: bank {b} reserved {} slice cycles, the row map expects {}",
+                            seen[b], want[b].1
+                        ));
+                    }
                 }
-            }
-        }
+                sched.host_bank_cycles += seen.iter().sum::<u64>();
 
-        // ACT slots: in-window, and enough reserved cycles per group to
-        // cover the command's activations at the legal rate.
-        let mut reserved = [0u64; NUM_ACT_GROUPS];
-        for rv in &rec.resv {
-            let (s, e) = (rv.start, rv.end);
-            if let Some(g) = resources::res_act_group(rv.res) {
-                if s < data_lo || e > data_hi {
+                // The scheduler's per-group ACT metering must equal the
+                // trace's per-bank row counts, group by group — the audit
+                // certifies no `div_ceil` share survives on the host path.
+                let mut want_acts = [0u64; NUM_ACT_GROUPS];
+                if resident {
+                    for (b, r) in rows.iter() {
+                        if b < cfg.num_banks {
+                            want_acts[b / resources::GROUP_BANKS] += r;
+                        }
+                    }
+                }
+                if rec.group_acts != want_acts {
                     return Err(format!(
-                        "command {i}: ACT window [{s}, {e}) escapes the data phase [{data_lo}, {data_hi})"
+                        "host command {i}: metered ACT counts {:?} disagree with the row map's {:?}",
+                        rec.group_acts, want_acts
                     ));
                 }
-                reserved[g] += e - s;
             }
-        }
-        for g in 0..NUM_ACT_GROUPS {
-            let want = (rec.group_acts[g] * act_slot).min(rec.data_span);
-            if reserved[g] < want {
-                return Err(format!(
-                    "command {i}: group {g} reserved {} ACT-window cycles for {} activations (needs {want})",
-                    reserved[g], rec.group_acts[g]
-                ));
+
+            // Cross-bank slices: the uniform 1/N walk over the cost's
+            // bank set (the whole channel when healthy, the fault plan's
+            // survivors when degraded — rigid offsets follow the walk
+            // position, so holes in the set do not open gaps), each slice
+            // in-window and at-or-after its rigid offset (exactly on it
+            // when slice pipelining is off).
+            if matches!(trace.cmds[i].kind, CmdKind::Bk2Gbuf { .. } | CmdKind::Gbuf2Bk { .. }) {
+                let c = cost(cfg, &trace.cmds[i]);
+                let mut want = [(0u64, 0u64); MAX_CORES];
+                if let CmdCost::CrossBank { total, slice, banks, .. } = c {
+                    if slice > 0 {
+                        for (k, b) in banks.iter().enumerate() {
+                            if b >= cfg.num_banks || b >= MAX_CORES {
+                                break;
+                            }
+                            let off = k as u64 * slice;
+                            if off >= total {
+                                break;
+                            }
+                            want[b] = (off, slice.min(total - off));
+                        }
+                    }
+                }
+                let mut seen = [0u64; MAX_CORES];
+                for rv in &rec.resv {
+                    let (s, e, span) = (rv.start, rv.end, rv.span);
+                    if let Some(b) = resources::res_bank(rv.res) {
+                        if b >= MAX_CORES || want[b].1 == 0 {
+                            return Err(format!(
+                                "cross-bank command {i} reserved bank {b} outside its walk"
+                            ));
+                        }
+                        if s < data_lo || e > rec.done || s + span > data_hi {
+                            return Err(format!(
+                                "cross-bank command {i}: bank {b} slice [{s}, {e}) escapes its window"
+                            ));
+                        }
+                        if span != want[b].1 || s < data_lo + want[b].0 {
+                            return Err(format!(
+                                "cross-bank command {i}: bank {b} slice [{s}, {e}) breaks the 1/N walk"
+                            ));
+                        }
+                        if s != data_lo + want[b].0 {
+                            if !cfg.slice_pipelining {
+                                return Err(format!(
+                                    "cross-bank command {i}: bank {b} slice slid with pipelining off"
+                                ));
+                            }
+                            sched.slid_cycles += span;
+                        }
+                        seen[b] += span;
+                    }
+                }
+                for b in 0..MAX_CORES {
+                    if seen[b] != want[b].1 {
+                        return Err(format!(
+                            "cross-bank command {i}: bank {b} reserved {} slice cycles, expected {}",
+                            seen[b], want[b].1
+                        ));
+                    }
+                }
             }
-            sched.act_window_cycles += reserved[g];
+
+            // ACT slots: in-window, and enough reserved cycles per group
+            // to cover the command's activations at the legal rate.
+            let mut reserved = [0u64; NUM_ACT_GROUPS];
+            for rv in &rec.resv {
+                let (s, e) = (rv.start, rv.end);
+                if let Some(g) = resources::res_act_group(rv.res) {
+                    if s < data_lo || e > data_hi {
+                        return Err(format!(
+                            "command {i}: ACT window [{s}, {e}) escapes the data phase [{data_lo}, {data_hi})"
+                        ));
+                    }
+                    reserved[g] += e - s;
+                }
+            }
+            for g in 0..NUM_ACT_GROUPS {
+                let want = (rec.group_acts[g] * act_slot).min(rec.data_span);
+                if reserved[g] < want {
+                    return Err(format!(
+                        "command {i}: group {g} reserved {} ACT-window cycles for {} activations (needs {want})",
+                        reserved[g], rec.group_acts[g]
+                    ));
+                }
+                sched.act_window_cycles += reserved[g];
+            }
         }
     }
     Ok(sched)
@@ -371,26 +438,46 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
 
 /// The scheduler core shared by [`simulate`] and [`audit`] (which pass
 /// in the DAG so it is built exactly once per call). With `record` set,
-/// every command's committed reservation intervals are captured for the
-/// audit's independent replay.
+/// every issue attempt's committed reservation intervals are captured
+/// (grouped per command, in trace order) for the audit's independent
+/// replay.
 fn run_schedule(
     cfg: &ArchConfig,
     trace: &Trace,
     dag: &deps::Dag,
     record: bool,
-) -> (EventReport, ScheduleAudit, Vec<resources::IssueRecord>) {
+) -> (EventReport, ScheduleAudit, Vec<Vec<resources::IssueRecord>>) {
     let n = trace.cmds.len();
     let mut r = SimResult::default();
+    // Transient-fault replays, resolved up front in trace order: the
+    // per-command draw depends only on the plan's seed and the trace
+    // index, so the heap's issue order cannot perturb which commands
+    // replay (and serial vs. threaded sweeps stay byte-identical).
+    let plan = (cfg.faults.transient_ppm > 0).then(|| FaultPlan::build(cfg));
+    let mut replays = vec![0u32; n];
     // Expand costs and tallies in trace order, so action counts and the
     // per-path cycle breakdowns are engine-identical by construction
-    // regardless of the issue order the heap picks below.
+    // regardless of the issue order the heap picks below. Every replay
+    // attempt tallies and charges again — exactly the analytic engine's
+    // replay accounting, so the faulty results stay engine-equal too.
     let mut costs = Vec::with_capacity(n);
-    for cmd in &trace.cmds {
-        tally(cmd, &mut r.actions);
+    for (i, cmd) in trace.cmds.iter().enumerate() {
         let c = cost(cfg, cmd);
-        // `charge` returns the serial duration, which we discard in
-        // favor of the scheduled completion below.
-        let _serial = charge(cfg, &c, &mut r);
+        let rep = plan.as_ref().map(|p| p.replays_for(i)).unwrap_or_default();
+        replays[i] = rep.count;
+        if rep.escalated {
+            r.escalated_cmds += 1;
+        }
+        for attempt in 0..=rep.count {
+            tally(cmd, &mut r.actions);
+            // `charge` returns the serial duration, which we discard in
+            // favor of the scheduled completion below — except on the
+            // replay ledger, which both engines count serially.
+            let d = charge(cfg, &c, &mut r);
+            if attempt > 0 {
+                r.replayed_cycles += d;
+            }
+        }
         costs.push(c);
     }
 
@@ -413,11 +500,21 @@ fn run_schedule(
     // trace order: remember which command each record belongs to.
     let mut issue_order = Vec::with_capacity(if record { n } else { 0 });
     while let Some(Reverse((at, i))) = heap.pop() {
-        let iss = tl.issue(at, &costs[i]);
+        // First attempt at readiness; each replay re-reserves every
+        // resource from scratch at the failed attempt's completion (the
+        // error is only detected when the command finishes), so retries
+        // queue behind whatever the channel is doing by then.
+        let mut iss = tl.issue(at, &costs[i]);
+        starts[i] = iss.start;
         if record {
             issue_order.push(i);
         }
-        starts[i] = iss.start;
+        for _ in 0..replays[i] {
+            iss = tl.issue(iss.done, &costs[i]);
+            if record {
+                issue_order.push(i);
+            }
+        }
         dones[i] = iss.done;
         makespan = makespan.max(iss.done);
         issued += 1;
@@ -432,14 +529,15 @@ fn run_schedule(
     }
     debug_assert_eq!(issued, n, "the dependency DAG must drain completely");
     r.cycles = makespan;
-    let mut records = tl.take_records();
+    let mut flat = tl.take_records();
+    // Group the issue-order records into per-command attempt lists in
+    // trace order (one command's attempts issue consecutively, so their
+    // order survives the grouping).
+    let mut records: Vec<Vec<resources::IssueRecord>> = vec![Vec::new(); n];
     if record {
-        // Permute the issue-order records back into trace order.
-        let mut by_trace = vec![resources::IssueRecord::default(); n];
-        for (k, rec) in records.drain(..).enumerate() {
-            by_trace[issue_order[k]] = rec;
+        for (k, rec) in flat.drain(..).enumerate() {
+            records[issue_order[k]].push(rec);
         }
-        records = by_trace;
     }
     let occupancy = tl.into_occupancy(makespan);
     let backfilled = occupancy.backfilled;
@@ -706,6 +804,59 @@ mod tests {
             assert!(ev.result.cycles >= ev.occupancy.busiest(), "{sys:?}: below resource bound");
             audit(&cfg, &t).unwrap_or_else(|e| panic!("{sys:?}: {e}"));
         }
+    }
+
+    #[test]
+    fn transient_replays_reissue_and_the_audit_recertifies() {
+        use crate::fault::{FaultConfig, PPM_SCALE};
+        // Certain failure with one retry doubles every command on a
+        // strictly-dependent chain; the audit must re-derive the same
+        // attempt structure and replay-cycle total independently.
+        let healthy = ArchConfig::baseline();
+        let cfg = ArchConfig::baseline().with_faults(FaultConfig {
+            seed: 5,
+            transient_ppm: PPM_SCALE,
+            max_retries: 1,
+            ..FaultConfig::default()
+        });
+        let mut t = Trace::default();
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], Some(1));
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 2048 }, &[1], Some(2));
+        t.push_dep(3, CmdKind::Gbuf2Bk { bytes: 1024 }, &[2], Some(3));
+        let ev = simulate(&cfg, &t);
+        let an = engine::simulate(&cfg, &t);
+        assert_eq!(ev.result.cycles, 2 * simulate(&healthy, &t).result.cycles);
+        assert_eq!(ev.result.actions, an.actions);
+        assert_eq!(ev.result.replayed_cycles, an.replayed_cycles);
+        assert_eq!(ev.result.escalated_cmds, 3, "retries exhausted on every command");
+        assert!(ev.result.cycles <= an.cycles);
+        let a = audit(&cfg, &t).expect("replayed schedule stays legal");
+        assert_eq!(a.replayed_cycles, ev.result.replayed_cycles);
+        assert!(a.replayed_cycles > 0);
+    }
+
+    #[test]
+    fn degraded_paper_trace_completes_and_audits() {
+        use crate::fault::FaultConfig;
+        // Retired banks, a dead core, and sparse transients together on a
+        // paper trace: the degraded schedule must drain end-to-end, keep
+        // the three engine-agreement invariants, and re-certify.
+        let g = resnet18_first8();
+        let cfg = ArchConfig::system(System::Fused16, 8192, 128).with_faults(FaultConfig {
+            seed: 7,
+            retired_banks: 3,
+            dead_cores: 1,
+            transient_ppm: 2_000,
+            max_retries: 3,
+        });
+        let p = plan(&g, &cfg);
+        let t = generate(&g, &cfg, &p, CostModel::default());
+        let ev = simulate(&cfg, &t);
+        let an = engine::simulate(&cfg, &t);
+        assert_eq!(ev.result.actions, an.actions);
+        assert!(ev.result.cycles <= an.cycles);
+        assert!(ev.result.cycles >= ev.occupancy.busiest());
+        audit(&cfg, &t).unwrap_or_else(|e| panic!("degraded schedule must certify: {e}"));
     }
 
     #[test]

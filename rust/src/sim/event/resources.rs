@@ -366,13 +366,19 @@ pub(crate) struct Resv {
     pub(crate) tally: bool,
 }
 
-/// One command's committed reservations, captured when the scheduler
-/// runs in audit mode: per resource the absolute `[start, end)` interval
-/// (recovery tails included) plus the streamed span without the tail,
-/// the command's data span, and the per-group activation counts its
-/// reservation request metered.
+/// One issue attempt's committed reservations, captured when the
+/// scheduler runs in audit mode: per resource the absolute `[start, end)`
+/// interval (recovery tails included) plus the streamed span without the
+/// tail, the attempt's data span, and the per-group activation counts
+/// its reservation request metered. `start`/`done` are the attempt's own
+/// issue-slot start and completion — under transient-fault replay a
+/// command owns several records (one per attempt), each with its own
+/// window, and the audit checks every attempt against its own `start`
+/// rather than the command's first.
 #[derive(Debug, Clone, Default)]
 pub(crate) struct IssueRecord {
+    pub(crate) start: u64,
+    pub(crate) done: u64,
     pub(crate) data_span: u64,
     pub(crate) group_acts: [u64; NUM_ACT_GROUPS],
     pub(crate) resv: Vec<Resv>,
@@ -521,7 +527,13 @@ impl Timelines {
                     tally: true,
                 });
             }
-            records.push(IssueRecord { data_span: span, group_acts: self.group_acts, resv });
+            records.push(IssueRecord {
+                start,
+                done: start + self.t_cmd + span + post,
+                data_span: span,
+                group_acts: self.group_acts,
+                resv,
+            });
         }
         Issue { start, done: start + self.t_cmd + span + post }
     }
@@ -641,16 +653,22 @@ impl Timelines {
                 self.req.push(ReqItem { res: GBCORE, off: t_cmd, span: *d, tail: 0, tally: true });
                 (*d, 0)
             }
-            CmdCost::CrossBank { total, slice, write, acts } => {
+            CmdCost::CrossBank { total, slice, write, acts, banks } => {
                 let post = if *write { self.t_wr } else { 0 };
                 self.req.push(ReqItem { res: BUS, off: t_cmd, span: *total, tail: 0, tally: true });
-                // The bank walk visits every channel bank for one 1/N
-                // share of the interval.
+                // The bank walk visits every bank in the walk set (all
+                // channel banks when healthy, the survivors under a
+                // degraded fault plan) for one 1/N share of the interval.
+                // Rigid offsets follow the walk *position*, not the bank
+                // index, so holes in the set do not open gaps.
                 let mut spans = [(0usize, 0u64); MAX_CORES];
                 let mut n = 0;
                 if *slice > 0 {
-                    for b in 0..self.num_banks {
-                        let off = b as u64 * *slice;
+                    for (k, b) in banks.iter().enumerate() {
+                        if b >= self.num_banks {
+                            break;
+                        }
+                        let off = k as u64 * *slice;
                         if off >= *total {
                             break;
                         }
@@ -660,10 +678,29 @@ impl Timelines {
                 }
                 self.slice_items(&spans[..n], post, false, *total);
                 // No row map on the cross-bank path: activations split
-                // evenly across the channel's groups (§6.3 ledger).
-                let groups = self.num_banks.div_ceil(GROUP_BANKS).max(1).min(NUM_ACT_GROUPS);
-                let per_group = acts.div_ceil(groups as u64);
-                self.group_acts[..groups].fill(per_group);
+                // evenly across the bank groups the walk set touches
+                // (§6.3 ledger). On a healthy full mask this is the
+                // channel's every group, exactly the pre-fault metering.
+                let mut gset = [false; NUM_ACT_GROUPS];
+                let mut ng = 0u64;
+                for b in banks.iter() {
+                    if b >= self.num_banks {
+                        break;
+                    }
+                    let g = (b / GROUP_BANKS).min(NUM_ACT_GROUPS - 1);
+                    if !gset[g] {
+                        gset[g] = true;
+                        ng += 1;
+                    }
+                }
+                if ng > 0 {
+                    let per_group = acts.div_ceil(ng);
+                    for (g, hit) in gset.iter().enumerate() {
+                        if *hit {
+                            self.group_acts[g] = per_group;
+                        }
+                    }
+                }
                 self.act_items(*total);
                 (*total, post)
             }
@@ -841,14 +878,20 @@ impl Timelines {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::trace::RowMap;
+    use crate::trace::{BankMask, RowMap};
 
     fn tl() -> Timelines {
         Timelines::new(&ArchConfig::baseline())
     }
 
     fn cross(total: u64) -> CmdCost {
-        CmdCost::CrossBank { total, slice: total.div_ceil(16), write: false, acts: 0 }
+        CmdCost::CrossBank {
+            total,
+            slice: total.div_ceil(16),
+            write: false,
+            acts: 0,
+            banks: BankMask::all(16),
+        }
     }
 
     /// Interface-only host I/O (no bank residency), as a residency-off

@@ -11,6 +11,7 @@ use crate::cnn::{Graph, NodeId, Op};
 use crate::config::{ArchConfig, ELEM_BYTES, ROW_BYTES};
 use crate::dataflow::tiling::{tile_grid, tile_segment, TileDemand};
 use crate::dataflow::{CostModel, Plan, PlanStep};
+use crate::fault::FaultPlan;
 use crate::trace::{CmdKind, ExecFlags, PerCore, RowMap, Trace, MAX_CORES};
 use std::collections::HashMap;
 
@@ -29,13 +30,19 @@ pub struct TraceGen<'a> {
     g: &'a Graph,
     cfg: &'a ArchConfig,
     model: CostModel,
+    /// The config's resolved fault plan. When it retires topology
+    /// (`is_degraded`), the generator remaps every per-core workload and
+    /// host row map onto the surviving cores and banks — a healthy plan
+    /// leaves the emitted trace byte-identical to the pre-fault path.
+    fplan: FaultPlan,
     layout: HashMap<NodeId, Layout>,
     trace: Trace,
 }
 
 /// Generate the command trace for `plan` on `cfg`.
 pub fn generate(g: &Graph, cfg: &ArchConfig, plan: &Plan, model: CostModel) -> Trace {
-    let mut tg = TraceGen { g, cfg, model, layout: HashMap::new(), trace: Trace::default() };
+    let fplan = FaultPlan::build(cfg);
+    let mut tg = TraceGen { g, cfg, model, fplan, layout: HashMap::new(), trace: Trace::default() };
     tg.run(plan);
     tg.trace
 }
@@ -89,9 +96,18 @@ impl<'a> TraceGen<'a> {
     /// * `Spatial` maps give each PIMcore its own tile: the tile's
     ///   demanded bytes (its pixel share of the map) land in that core's
     ///   banks, so uneven tile grids produce genuinely uneven row maps.
+    ///
+    /// Under a degraded fault plan both layouts stripe over the
+    /// *surviving* banks instead — a retired bank must never appear in a
+    /// row map (the host cannot address it), and we model the degraded
+    /// placement as channel-interleaved even for spatial layouts (the
+    /// per-tile bank affinity is already broken by the core remap).
     fn host_row_map(&self, id: NodeId, layout: Layout) -> RowMap {
         let n = self.cfg.num_banks.min(MAX_CORES);
         let shape = &self.g.nodes[id].shape;
+        if self.fplan.is_degraded() {
+            return RowMap::striped_over(shape.bytes() as u64, self.fplan.surviving_banks());
+        }
         match layout {
             Layout::CoutBanked => RowMap::striped(shape.bytes() as u64, n),
             Layout::Spatial { ty, tx } => {
@@ -146,13 +162,19 @@ impl<'a> TraceGen<'a> {
     fn emit_lbl_mac(&mut self, id: NodeId, flags: ExecFlags) {
         let n = &self.g.nodes[id];
         let p = self.cfg.num_pimcores();
+        // The cout split runs over the surviving cores: with a healthy
+        // fault plan `k == p` and `uniform_alive` degenerates to the
+        // plain uniform split, so the emitted trace is byte-identical;
+        // degraded, each survivor carries a `1/k` share and dead cores
+        // stay at zero everywhere.
+        let k = (self.fplan.alive_core_count().max(1)) as u64;
         let in_bytes: u64 = n.inputs.iter().map(|&i| self.g.nodes[i].shape.bytes() as u64).sum();
 
         // Gather input activations into the GBUF (cross-bank, sequential).
         self.trace.push_dep(id, CmdKind::Bk2Gbuf { bytes: in_bytes }, &n.inputs, None);
 
         let w_total = n.weight_bytes() as u64;
-        let w_core = w_total / p as u64;
+        let w_core = w_total / k;
         let phi = self.model.lbl_feed_phi(n.shape.c, self.cfg.lbuf_bytes);
 
         // Resident weight slice loads into the LBUF once (if any). Weights
@@ -162,31 +184,31 @@ impl<'a> TraceGen<'a> {
         if resident > 0 {
             self.trace.push_dep(
                 id,
-                CmdKind::Bk2Lbuf { bytes: PerCore::uniform(p, resident) },
+                CmdKind::Bk2Lbuf { bytes: self.fplan.uniform_alive(p, resident) },
                 &[],
                 None,
             );
         }
 
-        let macs_core = (n.macs() as u64) / p as u64;
+        let macs_core = (n.macs() as u64) / k;
         let feed = (2.0 * macs_core as f64 * phi).round() as u64;
         // The non-LBUF-resident weights stream from the bank at least
         // once (unique first touch, counted in `bank_read`); the rest of
         // the surviving feed hits the open row buffer.
         let unique = w_core - resident; // resident part was read by Bk2Lbuf
         let hit = feed.saturating_sub(unique);
-        let out_core = (n.shape.bytes() as u64) / p as u64;
-        let elt_core = (n.eltwise_ops() as u64) / p as u64;
+        let out_core = (n.shape.bytes() as u64) / k;
+        let elt_core = (n.eltwise_ops() as u64) / k;
 
         self.trace.push_dep(
             id,
             CmdKind::PimcoreCmp {
                 flags,
-                macs: PerCore::uniform(p, macs_core),
-                eltwise: PerCore::uniform(p, elt_core),
-                bank_read: PerCore::uniform(p, unique),
-                bank_read_hit: PerCore::uniform(p, hit),
-                bank_write: PerCore::uniform(p, out_core),
+                macs: self.fplan.uniform_alive(p, macs_core),
+                eltwise: self.fplan.uniform_alive(p, elt_core),
+                bank_read: self.fplan.uniform_alive(p, unique),
+                bank_read_hit: self.fplan.uniform_alive(p, hit),
+                bank_write: self.fplan.uniform_alive(p, out_core),
                 gbuf_stream: (in_bytes as f64 * self.model.broadcast_pace).round() as u64,
             },
             &n.inputs,
@@ -367,6 +389,21 @@ impl<'a> TraceGen<'a> {
             eltwise.set(t, scale(n.eltwise_ops() as u64, out_pix[t]));
         }
 
+        // Degraded remap: the tile geometry (and so the residency and
+        // re-broadcast decisions above) is evaluated per nominal tile,
+        // then the work redistributes evenly over the surviving cores —
+        // sums are conserved exactly, each survivor carries at most a
+        // `ceil(total/k)` share, and dead cores end at zero. Healthy
+        // plans skip this, keeping the per-tile skew byte-identical.
+        if self.fplan.is_degraded() {
+            bank_read = self.fplan.spread_even(bank_read.sum(), p);
+            bank_hit = self.fplan.spread_even(bank_hit.sum(), p);
+            bank_write = self.fplan.spread_even(bank_write.sum(), p);
+            macs = self.fplan.spread_even(macs.sum(), p);
+            eltwise = self.fplan.spread_even(eltwise.sum(), p);
+            lbuf_fill = self.fplan.spread_even(lbuf_fill.sum(), p);
+        }
+
         if lbuf_fill.sum() > 0 {
             self.trace.push_dep(id, CmdKind::Bk2Lbuf { bytes: lbuf_fill }, &n.inputs, None);
         }
@@ -521,6 +558,69 @@ mod tests {
                 assert!(rows.iter().all(|(_, r)| r == 1), "{rows:?}");
             }
             k => panic!("trace must end with the host output read, got {k:?}"),
+        }
+    }
+
+    #[test]
+    fn degraded_traces_keep_dead_cores_idle_and_avoid_retired_banks() {
+        use crate::fault::{FaultConfig, FaultPlan};
+        let g = resnet18_first8();
+        for sys in System::ALL {
+            let base = ArchConfig::system(sys, 8192, 128);
+            let cfg = base.clone().with_faults(FaultConfig {
+                seed: 11,
+                retired_banks: base.banks_per_pimcore,
+                dead_cores: 1,
+                transient_ppm: 0,
+                max_retries: 0,
+            });
+            let fplan = FaultPlan::build(&cfg);
+            assert!(fplan.is_degraded(), "{sys:?}: the plan must retire topology");
+            let alive_banks = fplan.surviving_banks();
+            let p = base.num_pimcores();
+            let pl = plan(&g, &cfg);
+            let t = generate(&g, &cfg, &pl, CostModel::default());
+            for c in &t.cmds {
+                match &c.kind {
+                    CmdKind::HostWrite { rows, .. } | CmdKind::HostRead { rows, .. } => {
+                        for (b, _) in rows.iter() {
+                            assert!(
+                                alive_banks.contains(b),
+                                "{sys:?}: retired bank {b} in a host row map"
+                            );
+                        }
+                    }
+                    CmdKind::PimcoreCmp { macs, bank_read, bank_read_hit, bank_write, .. } => {
+                        for core in 0..p {
+                            if !fplan.core_alive(core) {
+                                let touched = macs.get(core)
+                                    + bank_read.get(core)
+                                    + bank_read_hit.get(core)
+                                    + bank_write.get(core);
+                                assert_eq!(touched, 0, "{sys:?}: dead core {core} works");
+                            }
+                        }
+                    }
+                    CmdKind::Bk2Lbuf { bytes } | CmdKind::Lbuf2Bk { bytes } => {
+                        for core in 0..p {
+                            if !fplan.core_alive(core) {
+                                assert_eq!(
+                                    bytes.get(core),
+                                    0,
+                                    "{sys:?}: dead core {core} streams its bank"
+                                );
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            // The remap conserves compute: total MACs stay within
+            // integer-division remainders of the healthy trace (fused
+            // spreads conserve their per-tile sums exactly).
+            let healthy = generate(&g, &base, &plan(&g, &base), CostModel::default());
+            let (d, h) = (t.stats().total_macs as i64, healthy.stats().total_macs as i64);
+            assert!((d - h).abs() < 4096, "{sys:?}: degraded {d} vs healthy {h} MACs");
         }
     }
 

@@ -114,6 +114,17 @@ impl BankMask {
         }
     }
 
+    /// The banks of the first `n` for which `f(b)` holds — how the
+    /// fault layer projects a surviving-bank set out of its core map.
+    pub fn from_fn(n: usize, f: impl Fn(usize) -> bool) -> Self {
+        assert!(n <= MAX_CORES);
+        let mut bits = 0u16;
+        for b in (0..n).filter(|&b| f(b)) {
+            bits |= 1 << b;
+        }
+        BankMask(bits)
+    }
+
     /// Whether bank `b` is in the set (out-of-range banks never are).
     pub fn contains(&self, b: usize) -> bool {
         b < MAX_CORES && self.0 & (1 << b) != 0
@@ -186,6 +197,25 @@ impl RowMap {
         let (per, rem) = (bytes / n as u64, bytes % n as u64);
         for b in 0..n {
             let share = per + u64::from((b as u64) < rem);
+            m.set(b, share.div_ceil(crate::config::ROW_BYTES as u64));
+        }
+        m
+    }
+
+    /// The row map of `bytes` striped evenly across the given bank set
+    /// (remainder bytes to the lowest banks of the set) — the degraded
+    /// analogue of [`RowMap::striped`] when retired banks shrink the
+    /// channel. `striped_over(b, BankMask::all(n))` equals
+    /// `striped(b, n)`.
+    pub fn striped_over(bytes: u64, banks: BankMask) -> Self {
+        let n = banks.count();
+        let mut m = RowMap::EMPTY;
+        if bytes == 0 || n == 0 {
+            return m;
+        }
+        let (per, rem) = (bytes / n as u64, bytes % n as u64);
+        for (i, b) in banks.iter().enumerate() {
+            let share = per + u64::from((i as u64) < rem);
             m.set(b, share.div_ceil(crate::config::ROW_BYTES as u64));
         }
         m
@@ -691,6 +721,34 @@ mod tests {
     #[should_panic]
     fn bank_mask_bounds_checked() {
         BankMask::all(17);
+    }
+
+    #[test]
+    fn bank_mask_from_fn_selects_exactly() {
+        let evens = BankMask::from_fn(8, |b| b % 2 == 0);
+        assert_eq!(evens.iter().collect::<Vec<_>>(), vec![0, 2, 4, 6]);
+        assert_eq!(BankMask::from_fn(16, |_| true), BankMask::all(16));
+        assert_eq!(BankMask::from_fn(16, |_| false), BankMask::EMPTY);
+    }
+
+    #[test]
+    fn striped_over_matches_striped_on_full_masks_and_skips_holes() {
+        use crate::config::ROW_BYTES;
+        let row = ROW_BYTES as u64;
+        for bytes in [0u64, 3, 16 * 10 * row, 16 * 10 * row + 1] {
+            assert_eq!(
+                RowMap::striped_over(bytes, BankMask::all(16)),
+                RowMap::striped(bytes, 16),
+                "{bytes} bytes"
+            );
+        }
+        // A 12-bank survivor set (banks 4..16): bank 0..4 stay empty and
+        // the shares split 12 ways.
+        let mask = BankMask::from_fn(16, |b| b >= 4);
+        let m = RowMap::striped_over(12 * 10 * row, mask);
+        assert_eq!(m.get(0), 0);
+        assert!(m.iter().all(|(b, r)| b >= 4 && r == 10), "{m:?}");
+        assert_eq!(m.bank_count(), 12);
     }
 
     #[test]

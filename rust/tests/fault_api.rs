@@ -1,0 +1,196 @@
+//! Fault-injection property suite (DESIGN.md §11): zero-fault configs
+//! are byte-identical to fault-free ones, degradation is monotone in the
+//! retired-bank count, degraded event schedules stay audit-legal with
+//! replays, and fault plans are reproducible serial-vs-threaded.
+
+use pimfused::config::{ArchConfig, Engine, System};
+use pimfused::coordinator::{serve_to_json, Session, SweepGrid};
+use pimfused::dataflow::{plan, CostModel};
+use pimfused::fault::{FaultConfig, FaultPlan};
+use pimfused::serve::{ArrivalKind, ServeConfig};
+use pimfused::sim::event;
+use pimfused::trace::gen::generate;
+use pimfused::workload::Workload;
+
+fn fused4(gbuf: usize, lbuf: usize) -> ArchConfig {
+    ArchConfig::system(System::Fused4, gbuf, lbuf)
+}
+
+/// Acceptance gate: a `FaultConfig::default()` (all-zero) fault block is
+/// *exactly* the fault-free path — same cycles, same energy, same serve
+/// JSON — so every pre-existing golden stays byte-identical.
+#[test]
+fn zero_fault_configs_are_byte_identical_to_fault_free_ones() {
+    let session = Session::new();
+    for engine in [Engine::Analytic, Engine::Event] {
+        let plain = fused4(8192, 128).with_engine(engine);
+        let zeroed = plain.clone().with_faults(FaultConfig::default());
+        let a = session.run(&plain, Workload::ResNet18First8).unwrap();
+        let b = session.run(&zeroed, Workload::ResNet18First8).unwrap();
+        assert_eq!(a.cycles, b.cycles, "{engine:?}: zero faults must not change cycles");
+        assert_eq!(a.energy_pj, b.energy_pj, "{engine:?}: zero faults must not change energy");
+        assert_eq!(a.sim.actions, b.sim.actions);
+        assert_eq!(b.sim.replayed_cycles, 0);
+        assert_eq!(b.sim.escalated_cmds, 0);
+        assert_eq!(b.replay_overhead(), 0.0);
+    }
+
+    let sc = |cfg: ArchConfig| {
+        ServeConfig::new(cfg, Workload::Fig1, 40_000.0)
+            .arrival(ArrivalKind::Fixed)
+            .requests(60)
+            .batch(4)
+    };
+    let plain = session.serve(&sc(fused4(8192, 128))).unwrap();
+    let zeroed =
+        session.serve(&sc(fused4(8192, 128).with_faults(FaultConfig::default()))).unwrap();
+    assert_eq!(
+        serve_to_json(&plain),
+        serve_to_json(&zeroed),
+        "serve reports must serialize byte-identically under zero faults"
+    );
+}
+
+/// Retiring banks takes whole PIMcores offline and the analytic engine's
+/// per-core charge is bounded by the slowest core, so cycles are monotone
+/// non-decreasing in the retired-bank count (nested retirement sets make
+/// this a per-step guarantee, not just a trend).
+#[test]
+fn analytic_cycles_are_monotone_in_retired_banks() {
+    let session = Session::new();
+    let base = fused4(8192, 128);
+    let bpc = base.banks_per_pimcore;
+    let max = base.num_banks - bpc;
+    let mut prev = 0u64;
+    let mut counts = Vec::new();
+    let mut cycles = Vec::new();
+    let mut retired = 0usize;
+    loop {
+        let cfg = base
+            .clone()
+            .with_faults(FaultConfig { retired_banks: retired, ..Default::default() });
+        let r = session.run(&cfg, Workload::ResNet18First8).unwrap();
+        assert!(
+            r.cycles >= prev,
+            "retiring {retired} banks must not speed the run up ({} < {prev})",
+            r.cycles
+        );
+        prev = r.cycles;
+        counts.push(retired);
+        cycles.push(r.cycles);
+        if retired >= max {
+            break;
+        }
+        retired = (retired + bpc).min(max);
+    }
+    assert!(counts.len() >= 3, "the sweep must exercise several degradation levels");
+    assert!(
+        cycles.last().unwrap() > cycles.first().unwrap(),
+        "losing {}/{} cores must cost cycles somewhere: {cycles:?} at {counts:?}",
+        max / bpc,
+        base.num_banks / bpc
+    );
+}
+
+/// The acceptance scenario: ResNet18 on a channel with retired banks, a
+/// dead PIMcore, and a transient error rate completes end-to-end on both
+/// engines, the engines agree on actions and replay totals, and the
+/// recorded event schedule passes the full legality audit.
+#[test]
+fn degraded_resnet_completes_and_passes_the_schedule_audit() {
+    let fc = FaultConfig {
+        seed: 7,
+        retired_banks: 4,
+        dead_cores: 1,
+        transient_ppm: 20_000, // 2% per command — replays are guaranteed
+        max_retries: 3,
+    };
+    let base = fused4(8192, 128).with_faults(fc);
+    assert_eq!(FaultPlan::build(&base).alive_core_count(), 2);
+
+    let session = Session::new();
+    for w in [Workload::ResNet18First8, Workload::ResNet18Full] {
+        let a = session.run(&base.clone().with_engine(Engine::Analytic), w).unwrap();
+        let e = session.run(&base.clone().with_engine(Engine::Event), w).unwrap();
+        assert!(a.cycles > 0 && e.cycles > 0, "{}: degraded run must complete", w.name());
+        assert_eq!(a.sim.actions, e.sim.actions, "{}: engine action agreement", w.name());
+        assert_eq!(
+            a.sim.replayed_cycles,
+            e.sim.replayed_cycles,
+            "{}: engines must draw identical replays",
+            w.name()
+        );
+        assert_eq!(a.sim.escalated_cmds, e.sim.escalated_cmds);
+        assert!(a.sim.replayed_cycles > 0, "{}: 2% ppm over ResNet must replay", w.name());
+        assert!(a.replay_overhead() > 0.0 && a.replay_overhead() < 1.0);
+        assert!(e.cycles <= a.cycles, "{}: event must not exceed serial", w.name());
+    }
+
+    // Scheduler-v2 legality certificate on the degraded trace, replays
+    // included: every command (and every replay attempt) issues on a
+    // legal slot with no resource double-booking.
+    let g = Workload::ResNet18First8.graph();
+    let p = plan(&g, &base);
+    let tr = generate(&g, &base, &p, CostModel::default());
+    let audit = event::audit(&base, &tr).expect("degraded schedule must pass the audit");
+    assert_eq!(audit.starts.len(), tr.cmds.len());
+}
+
+/// Fault expansion is a pure function of (seed, geometry): equal configs
+/// give `Eq` plans, different seeds give different retirement sets (at
+/// levels where choice exists), and threaded sweeps match serial runs
+/// byte-for-byte — including the degrade sweep re-run end to end.
+#[test]
+fn fault_plans_are_deterministic_serial_vs_threaded() {
+    let fc = FaultConfig {
+        seed: 99,
+        retired_banks: 6,
+        dead_cores: 1,
+        transient_ppm: 5_000,
+        max_retries: 2,
+    };
+    let cfg = fused4(8192, 128).with_faults(fc);
+    assert_eq!(FaultPlan::build(&cfg), FaultPlan::build(&cfg), "equal configs, equal plans");
+    let reseeded = cfg.clone().with_faults(FaultConfig { seed: 100, ..fc });
+    assert_ne!(
+        FaultPlan::build(&cfg),
+        FaultPlan::build(&reseeded),
+        "six retired banks leave room for the seed to pick differently"
+    );
+
+    // Threaded sweep vs serial session over a grid of faulted configs.
+    let session = Session::new();
+    let points: Vec<_> = [0usize, 4, 8]
+        .iter()
+        .map(|&n| {
+            fused4(8192, 128)
+                .with_faults(FaultConfig { retired_banks: n, transient_ppm: 2_000, ..fc })
+        })
+        .collect();
+    let grid = SweepGrid::from_points(
+        points
+            .iter()
+            .cloned()
+            .map(|cfg| pimfused::coordinator::SweepPoint { cfg, workload: Workload::Fig1 })
+            .collect::<Vec<_>>(),
+    );
+    let threaded = grid.run(&session).unwrap();
+    threaded.ensure_ok().unwrap();
+    let serial = Session::new();
+    for (cfg, row) in points.iter().zip(&threaded) {
+        let want = serial.run(cfg, Workload::Fig1).unwrap();
+        let got = row.report.as_ref().unwrap();
+        assert_eq!(got.cycles, want.cycles, "threaded/serial divergence at {}", got.label);
+        assert_eq!(got.energy_pj, want.energy_pj);
+        assert_eq!(got.sim.replayed_cycles, want.sim.replayed_cycles);
+    }
+
+    // The degrade sweep is equally reproducible end to end.
+    let sc = ServeConfig::new(fused4(8192, 128), Workload::Fig1, 1e9)
+        .arrival(ArrivalKind::Fixed)
+        .requests(30)
+        .queue_depth(30);
+    let a = Session::new().degrade_sweep(&sc, 4).unwrap();
+    let b = Session::new().degrade_sweep(&sc, 4).unwrap();
+    assert_eq!(a.to_json(), b.to_json(), "degrade sweeps must be byte-reproducible");
+}

@@ -218,8 +218,15 @@ fn serve_json_and_csv_goldens() {
         batch_timeout: 0,
         queue_depth: 64,
         seed: 42,
+        deadline: 0,
+        client_retries: 0,
+        backoff: 0,
         completed: 100,
         dropped: 0,
+        dropped_queue_full: 0,
+        dropped_deadline_shed: 0,
+        dropped_deadline_miss: 0,
+        dropped_retry_exhausted: 0,
         batches: 25,
         mean_batch: 4.0,
         warmup_trimmed: 10,
@@ -232,6 +239,7 @@ fn serve_json_and_csv_goldens() {
             max: 8000,
         },
         throughput_rps: 49000.25,
+        goodput_rps: 49000.25,
         utilization: 0.75,
         queue_mean: 1.5,
         queue_max: 9,
@@ -254,8 +262,15 @@ fn serve_json_and_csv_goldens() {
       "batch": 4,
       "batch_timeout": 0,
       "queue_depth": 64,
+      "deadline_cycles": 0,
+      "client_retries": 0,
+      "backoff_cycles": 0,
       "completed": 100,
       "dropped": 0,
+      "dropped_queue_full": 0,
+      "dropped_deadline_shed": 0,
+      "dropped_deadline_miss": 0,
+      "dropped_retry_exhausted": 0,
       "batches": 25,
       "mean_batch": 4,
       "warmup_trimmed": 10,
@@ -265,6 +280,7 @@ fn serve_json_and_csv_goldens() {
       "mean_cycles": 5100.5,
       "max_cycles": 8000,
       "throughput_rps": 49000.25,
+      "goodput_rps": 49000.25,
       "utilization": 0.75,
       "queue_depth_mean": 1.5,
       "queue_depth_max": 9,
@@ -278,13 +294,15 @@ fn serve_json_and_csv_goldens() {
 "#;
     assert_eq!(serve_to_json(&[report.clone()]), want_json);
     let want_csv = "config,system,workload,engine,arrival,rate_rps,seed,requests,batch,\
-                    batch_timeout,queue_depth,completed,dropped,batches,mean_batch,\
+                    batch_timeout,queue_depth,deadline_cycles,client_retries,backoff_cycles,\
+                    completed,dropped,dropped_queue_full,dropped_deadline_shed,\
+                    dropped_deadline_miss,dropped_retry_exhausted,batches,mean_batch,\
                     warmup_trimmed,p50_cycles,p95_cycles,p99_cycles,mean_cycles,max_cycles,\
-                    throughput_rps,utilization,queue_depth_mean,queue_depth_max,\
+                    throughput_rps,goodput_rps,utilization,queue_depth_mean,queue_depth_max,\
                     service_single_cycles,service_steady_cycles,batch_shapes,makespan_cycles\n\
                     Fused4/G32K_L256,Fused4,Fig1_Example,event,poisson,50000,42,100,4,0,64,\
-                    100,0,25,4,10,5000,7000,7500,5100.5,8000,49000.25,0.75,1.5,9,4000,1500,\
-                    3,272000\n";
+                    0,0,0,100,0,0,0,0,0,25,4,10,5000,7000,7500,5100.5,8000,49000.25,49000.25,\
+                    0.75,1.5,9,4000,1500,3,272000\n";
     assert_eq!(serve_to_csv(&[report]), want_csv);
 }
 
