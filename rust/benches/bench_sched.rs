@@ -11,7 +11,9 @@
 //! CI runs this as a guardrail: `cargo bench --bench bench_sched --
 //! --assert-ratio 3` prints one machine-readable `guardrail:` line per
 //! system (plus a degraded `Fused4-faulty` point that times the replay
-//! loop) and a `guardrail-summary:` line, and exits non-zero if the
+//! loop, and a `Fused4-openrow-off` point that times the legacy
+//! every-command-reopens expansion) and a `guardrail-summary:` line,
+//! and exits non-zero if the
 //! worst event/analytic ratio exceeds the bar. `--json <path>` writes
 //! the same numbers as a `pimfused-bench-v1` [`pimfused::obs::BenchRecord`]
 //! snapshot; both the stdout and the JSON are uploaded as build
@@ -125,6 +127,37 @@ fn main() {
         rec.metrics.gauge("sched.faulty.analytic_cmds_per_s", per_sec(an.median));
         rec.metrics.gauge("sched.faulty.event_cmds_per_s", per_sec(ev.median));
         rec.metrics.gauge("sched.faulty.ratio", ratio);
+    }
+    // Open-row reuse off: the legacy every-command-reopens expansion
+    // (and the even-split ACT metering that rides with it) must hold the
+    // same bar — a regression here means the gating itself got slow.
+    section("scheduling throughput, open-row reuse off");
+    {
+        let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256).with_open_row_reuse(false);
+        let p = plan(&g, &cfg);
+        let tr = generate(&g, &cfg, &p, model);
+        let n = tr.cmds.len();
+        let an = bench(&format!("Fused4   analytic walk, open-row off ({n} cmds)"), 3, 200, || {
+            simulate(&cfg, &tr).cycles
+        });
+        let ev = bench(&format!("Fused4   event schedule, open-row off ({n} cmds)"), 3, 200, || {
+            event::simulate(&cfg, &tr).result.cycles
+        });
+        let per_sec = |d: std::time::Duration| n as f64 / d.as_secs_f64();
+        let ratio = ev.median.as_secs_f64() / an.median.as_secs_f64().max(f64::MIN_POSITIVE);
+        if ratio > worst.0 {
+            worst = (ratio, "Fused4-openrow-off");
+        }
+        println!(
+            "  guardrail: system=Fused4-openrow-off analytic_cmds_per_s={:.0} event_cmds_per_s={:.0} ratio={:.3}",
+            per_sec(an.median),
+            per_sec(ev.median),
+            ratio,
+        );
+        rec.metrics.add("sched.openrow_off.cmds", n as u64);
+        rec.metrics.gauge("sched.openrow_off.analytic_cmds_per_s", per_sec(an.median));
+        rec.metrics.gauge("sched.openrow_off.event_cmds_per_s", per_sec(ev.median));
+        rec.metrics.gauge("sched.openrow_off.ratio", ratio);
     }
 
     println!(

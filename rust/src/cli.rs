@@ -36,11 +36,13 @@ commands:
                                     [--engine analytic|event] [--json]
                                     [--host-residency on|off]
                                     [--slice-pipelining on|off]
+                                    [--open-row on|off]
                                     [--trace-out chrome|csv] [--faults <spec>]
   profile    schedule profiling     --workload <w> [--config <sys:GmK_Ln>]
                                     [--top N] [--trace-out chrome|csv]
                                     [--host-residency on|off]
-                                    [--slice-pipelining on|off] [--faults <spec>]
+                                    [--slice-pipelining on|off]
+                                    [--open-row on|off] [--faults <spec>]
   sweep      buffer design sweep    --systems aim,fused16,fused4 --gbuf 2K,32K
                                     --lbuf 0,256 --workload <w>
                                     [--engine analytic|event] [--json]
@@ -52,6 +54,7 @@ commands:
                                     [--queue-depth D] [--seed S] [--warmup F]
                                     [--arrival poisson|fixed] [--config <sys:GmK_Ln>]
                                     [--engine analytic|event] [--json|--csv]
+                                    [--open-row on|off]
                                     [--trace-out chrome|csv] [--faults <spec>]
                                     [--deadline CYC] [--retries N] [--backoff CYC]
   degrade    graceful-degradation   --workload <w> [--config <sys:GmK_Ln>]
@@ -66,6 +69,8 @@ engines:   analytic (serial sum) | event (overlap-aware, reports utilization)
 host-residency: model host I/O's bank occupancy (default on; off = interface-only)
 slice-pipelining: let per-bank transfer slices slide around busy banks (default on;
                   off = rigid i/N stagger)
+open-row: reuse rows banks left open — a read resuming the exact open row skips
+          one tRP+tRCD re-open (default on; off = every command reopens)
 serve: open-loop steady-state latency/throughput (DESIGN.md §9); --rates sweeps
        the offered load for the utilization-vs-latency curve; defaults to the
        event engine (batching only pipelines there)
@@ -165,6 +170,14 @@ impl Args {
         }
     }
 
+    fn open_row(&self) -> Result<bool> {
+        match self.opts.get("open-row").map(String::as_str) {
+            None | Some("on") => Ok(true),
+            Some("off") => Ok(false),
+            Some(other) => bail!("--open-row must be on|off, got {other:?}\n{USAGE}"),
+        }
+    }
+
     /// `--trace-out chrome|csv`, when given.
     fn trace_out(&self) -> Result<Option<crate::obs::TraceFormat>> {
         match self.opts.get("trace-out") {
@@ -257,6 +270,7 @@ pub fn run(args: &Args) -> Result<String> {
                 "json",
                 "host-residency",
                 "slice-pipelining",
+                "open-row",
                 "trace-out",
                 "faults",
             ])?;
@@ -276,6 +290,7 @@ pub fn run(args: &Args) -> Result<String> {
                     .with_engine(engine)
                     .with_host_residency(args.host_residency()?)
                     .with_slice_pipelining(args.slice_pipelining()?)
+                    .with_open_row_reuse(args.open_row()?)
                     .with_tracing(trace_out.is_some()),
             )?;
             let faults = cfg.faults;
@@ -430,6 +445,7 @@ pub fn run(args: &Args) -> Result<String> {
                 "csv",
                 "host-residency",
                 "slice-pipelining",
+                "open-row",
                 "trace-out",
             ])?;
             if args.flag("json") && args.flag("csv") {
@@ -498,7 +514,8 @@ pub fn run(args: &Args) -> Result<String> {
                 args.config()?
                     .with_engine(args.engine_or(Engine::Event)?)
                     .with_host_residency(args.host_residency()?)
-                    .with_slice_pipelining(args.slice_pipelining()?),
+                    .with_slice_pipelining(args.slice_pipelining()?)
+                    .with_open_row_reuse(args.open_row()?),
             )?;
             let sc = ServeConfig::new(cfg, args.workload()?, rate.unwrap_or(1.0))
                 .arrival(arrival)
@@ -643,6 +660,7 @@ pub fn run(args: &Args) -> Result<String> {
                 "trace-out",
                 "host-residency",
                 "slice-pipelining",
+                "open-row",
                 "faults",
             ])?;
             let top: usize = args
@@ -657,6 +675,7 @@ pub fn run(args: &Args) -> Result<String> {
                     .with_engine(Engine::Event)
                     .with_host_residency(args.host_residency()?)
                     .with_slice_pipelining(args.slice_pipelining()?)
+                    .with_open_row_reuse(args.open_row()?)
                     .with_tracing(true),
             )?;
             let w = args.workload()?;
@@ -899,6 +918,29 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("unknown option --slice-pipelining"), "{e}");
+    }
+
+    #[test]
+    fn simulate_open_row_flag() {
+        // Both settings run; every-command-reopens can never be faster
+        // than open-row reuse on the same point.
+        let cycles = |spec: &str| -> u64 {
+            let out = run(&parse_args(&argv(spec)).unwrap()).unwrap();
+            let tail = out.split("memory cycles : ").nth(1).expect("cycles line");
+            tail.split_whitespace().next().unwrap().parse().unwrap()
+        };
+        let base = "simulate --config fused4:G32K_L256 --workload fig1";
+        let on = cycles(base);
+        let off = cycles(&format!("{base} --open-row off"));
+        assert!(on <= off, "reuse can only help: on {on} > off {off}");
+        // Bad values fail with usage; other subcommands reject the flag.
+        let bad = parse_args(&argv("simulate --workload fig1 --open-row maybe")).unwrap();
+        let e = run(&bad).unwrap_err().to_string();
+        assert!(e.contains("--open-row must be on|off"), "{e}");
+        let e = run(&parse_args(&argv("sweep --open-row off")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown option --open-row"), "{e}");
     }
 
     #[test]

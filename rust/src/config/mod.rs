@@ -203,6 +203,15 @@ pub struct ArchConfig {
     /// rigid `i/N` stagger in the worst case. On by default — `false`
     /// pins every slice at its fixed offset (DESIGN.md §6.2).
     pub slice_pipelining: bool,
+    /// Track each bank's open row across commands: a read that resumes the
+    /// exact row its banks left open waives one `tRP + tRCD` re-open per
+    /// command, and cross-bank transfers meter their ACT windows from the
+    /// feature map's per-bank [`crate::trace::RowMap`] instead of an even
+    /// split. Rows close on writes (auto-precharge policy) and after a
+    /// refresh-scale gap ([`DramTiming::t_refi`]). On by default — `false`
+    /// restores the every-command-reopens model and the legacy even ACT
+    /// split (DESIGN.md §6.2).
+    pub open_row_reuse: bool,
     /// Capture a per-command schedule timeline ([`crate::obs::ScheduleTrace`])
     /// when the event engine runs this config. Off by default: tracing-off
     /// runs take the ordinary non-recording scheduler path and their report
@@ -239,6 +248,7 @@ impl ArchConfig {
             engine: Engine::Analytic,
             host_residency: true,
             slice_pipelining: true,
+            open_row_reuse: true,
             tracing: false,
             faults: crate::fault::FaultConfig::default(),
         }
@@ -262,6 +272,15 @@ impl ArchConfig {
     /// rigid stagger offset for A/B comparison.
     pub fn with_slice_pipelining(mut self, on: bool) -> Self {
         self.slice_pipelining = on;
+        self
+    }
+
+    /// Builder-style open-row selection (see the field docs);
+    /// `with_open_row_reuse(false)` makes every command re-pay its row
+    /// opens and restores the even cross-bank ACT split for A/B
+    /// comparison.
+    pub fn with_open_row_reuse(mut self, on: bool) -> Self {
+        self.open_row_reuse = on;
         self
     }
 
@@ -436,6 +455,16 @@ mod tests {
         }
         let c = ArchConfig::baseline().with_slice_pipelining(false);
         assert!(!c.slice_pipelining);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn open_row_reuse_defaults_on() {
+        for sys in System::ALL {
+            assert!(ArchConfig::system(sys, 2048, 0).open_row_reuse);
+        }
+        let c = ArchConfig::baseline().with_open_row_reuse(false);
+        assert!(!c.open_row_reuse);
         c.validate().unwrap();
     }
 

@@ -37,6 +37,12 @@ pub struct DramTiming {
     /// Extra cycles to route one column of data over the channel-internal
     /// bus between a bank and the GBUF (the shared-bus hop of §I).
     pub t_bus_hop: u64,
+    /// Refresh-interval scale (cycles): how long a bank's open row stays
+    /// reusable. The open-row tracker (DESIGN.md §6.2) treats a row left
+    /// open longer than this as closed — an all-bank refresh will have
+    /// precharged it — so commands arriving after a refresh-scale gap
+    /// re-pay the full row open.
+    pub t_refi: u64,
 }
 
 impl DramTiming {
@@ -53,6 +59,7 @@ impl DramTiming {
             t_faw: 32,
             t_cmd: 1,
             t_bus_hop: 2,
+            t_refi: 5200, // ≈ 3.9 µs at tCK = 0.75 ns
         }
     }
 
@@ -87,8 +94,12 @@ impl DramTiming {
         }
     }
 
-    /// Cycles to open a row (PRE of the old one + ACT + tRCD). The engine
-    /// charges this whenever a transfer crosses a row boundary.
+    /// Cycles to open a row (PRE of the old one + ACT + tRCD). The engines
+    /// charge this on every row *miss*; with [`open_row_reuse`] on, a read
+    /// that resumes the exact row its banks left open waives one of these
+    /// per command (DESIGN.md §6.2).
+    ///
+    /// [`open_row_reuse`]: crate::config::ArchConfig::open_row_reuse
     pub fn row_open_cycles(&self) -> u64 {
         self.t_rp + self.t_rcd
     }

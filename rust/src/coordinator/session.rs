@@ -56,18 +56,19 @@ pub struct Session {
     // configs differing only in buffers/timing share one mapped plan.
     plans: Mutex<HashMap<(Workload, Dataflow), Arc<Plan>>>,
     // Baselines are keyed by (workload, engine, host-residency,
-    // slice-pipelining): normalization always compares like with like,
-    // so an event-engine experiment is measured against the baseline
-    // config run through the event engine, an interface-only host model
-    // against an interface-only baseline, and a rigid-stagger run
-    // against a rigid-stagger baseline.
+    // slice-pipelining, open-row-reuse): normalization always compares
+    // like with like, so an event-engine experiment is measured against
+    // the baseline config run through the event engine, an
+    // interface-only host model against an interface-only baseline, a
+    // rigid-stagger run against a rigid-stagger baseline, and an
+    // every-command-reopens run against the same row model.
     baselines: Mutex<BaselineCache>,
     counters: Counters,
 }
 
 /// Baseline memo: one entry per `(workload, engine, host_residency,
-/// slice_pipelining)` normalization axis combination.
-type BaselineCache = HashMap<(Workload, Engine, bool, bool), Arc<PpaReport>>;
+/// slice_pipelining, open_row_reuse)` normalization axis combination.
+type BaselineCache = HashMap<(Workload, Engine, bool, bool, bool), Arc<PpaReport>>;
 
 #[derive(Default)]
 struct Counters {
@@ -167,18 +168,20 @@ impl Session {
     }
 
     /// The memoized baseline report matching an experiment config's
-    /// normalization axes — engine, host-residency model **and** slice
-    /// pipelining: one evaluation of [`Session::baseline_config`] per
-    /// distinct `(workload, engine, host_residency, slice_pipelining)`
-    /// tuple, shared by every normalization afterwards. Any axis that
-    /// changes what a cycle count *means* must match between numerator
-    /// and baseline, or the ratio mixes models.
+    /// normalization axes — engine, host-residency model, slice
+    /// pipelining **and** open-row reuse: one evaluation of
+    /// [`Session::baseline_config`] per distinct `(workload, engine,
+    /// host_residency, slice_pipelining, open_row_reuse)` tuple, shared
+    /// by every normalization afterwards. Any axis that changes what a
+    /// cycle count *means* must match between numerator and baseline,
+    /// or the ratio mixes models.
     ///
     /// Fault injection is deliberately **not** a normalization axis: a
     /// degraded config is normalized against the *healthy* baseline, so
     /// the ratio reads directly as "slowdown caused by the faults".
     pub fn baseline_matched(&self, w: Workload, cfg: &ArchConfig) -> Result<Arc<PpaReport>> {
-        let key = (w, cfg.engine, cfg.host_residency, cfg.slice_pipelining);
+        let key =
+            (w, cfg.engine, cfg.host_residency, cfg.slice_pipelining, cfg.open_row_reuse);
         let mut m = self.baselines.lock().unwrap();
         if let Some(b) = m.get(&key) {
             return Ok(b.clone());
@@ -189,7 +192,8 @@ impl Session {
             .clone()
             .with_engine(cfg.engine)
             .with_host_residency(cfg.host_residency)
-            .with_slice_pipelining(cfg.slice_pipelining);
+            .with_slice_pipelining(cfg.slice_pipelining)
+            .with_open_row_reuse(cfg.open_row_reuse);
         let r = Arc::new(
             self.run_with_model(&baseline_cfg, w, self.model)
                 .with_context(|| format!("evaluating baseline {}", baseline_cfg.label()))?,
@@ -464,6 +468,20 @@ mod tests {
         let n = s.normalized(&base_off, Workload::Fig1).unwrap();
         assert!((n.cycles - 1.0).abs() < 1e-12, "rigid-stagger self-normalization");
         assert_eq!(s.stats().baseline_runs, 2, "slice pipelining gets its own baseline");
+    }
+
+    #[test]
+    fn baselines_are_keyed_by_open_row() {
+        // An --open-row off point must normalize against an
+        // every-command-reopens baseline: the baseline config itself,
+        // reuse off, is exactly 1.0 and earns its own cache entry.
+        let s = Session::new();
+        let base_off = ArchConfig::baseline().with_open_row_reuse(false);
+        s.normalized(&ArchConfig::baseline(), Workload::Fig1).unwrap();
+        assert_eq!(s.stats().baseline_runs, 1);
+        let n = s.normalized(&base_off, Workload::Fig1).unwrap();
+        assert!((n.cycles - 1.0).abs() < 1e-12, "reuse-off self-normalization");
+        assert_eq!(s.stats().baseline_runs, 2, "open-row reuse gets its own baseline");
     }
 
     #[test]

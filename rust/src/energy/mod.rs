@@ -17,21 +17,26 @@ use primitives as p;
 /// One named energy contribution (for reporting/debugging breakdowns).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Component {
+    /// Dotted component path, e.g. `dram.row_act` or `gbuf.sram`.
     pub name: &'static str,
+    /// This component's contribution in picojoules.
     pub energy_pj: f64,
 }
 
 /// Energy report: total plus the per-component breakdown.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EnergyReport {
+    /// Per-component contributions, in the fixed order [`energy`] emits.
     pub components: Vec<Component>,
 }
 
 impl EnergyReport {
+    /// Total energy in picojoules (the sum over all components).
     pub fn total_pj(&self) -> f64 {
         self.components.iter().map(|c| c.energy_pj).sum()
     }
 
+    /// Energy of one named component in picojoules (0.0 when absent).
     pub fn component(&self, name: &str) -> f64 {
         self.components
             .iter()
@@ -46,6 +51,11 @@ impl EnergyReport {
 /// The LBUF feed term reconstructs the operand bytes the LBUF intercepted:
 /// the full per-MAC feed is `2 bytes × MACs`; whatever the banks did not
 /// serve (unique + hit) came from LBUF/registers.
+///
+/// `dram.row_act` prices [`ActionCounts::row_activations`], which the
+/// engines tally from the same per-bank row maps the event scheduler
+/// meters its ACT windows from — ACT energy and ACT scheduling can no
+/// longer disagree (DESIGN.md §6.2).
 pub fn energy(cfg: &ArchConfig, a: &ActionCounts) -> EnergyReport {
     let e_gbuf = cacti::sram_energy_pj_per_byte(cfg.gbuf_bytes);
     let e_lbuf = cacti::sram_energy_pj_per_byte(cfg.lbuf_bytes.max(32));
@@ -91,14 +101,20 @@ pub fn energy(cfg: &ArchConfig, a: &ActionCounts) -> EnergyReport {
 /// Area report (mm² of PIM additions to the DRAM die).
 #[derive(Debug, Clone, PartialEq)]
 pub struct AreaReport {
+    /// All PIMcores (per-core datapath area × core count).
     pub pimcores_mm2: f64,
+    /// The shared GBcore datapath.
     pub gbcore_mm2: f64,
+    /// The global buffer SRAM macro.
     pub gbuf_mm2: f64,
+    /// All per-core LBUF SRAM macros.
     pub lbufs_mm2: f64,
+    /// Command decode/control overhead.
     pub control_mm2: f64,
 }
 
 impl AreaReport {
+    /// Total PIM-addition area in mm².
     pub fn total_mm2(&self) -> f64 {
         self.pimcores_mm2 + self.gbcore_mm2 + self.gbuf_mm2 + self.lbufs_mm2 + self.control_mm2
     }

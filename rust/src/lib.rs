@@ -61,7 +61,6 @@ pub mod cli;
 pub mod cnn;
 pub mod coordinator;
 pub mod dataflow;
-#[allow(missing_docs)]
 pub mod energy;
 pub mod fault;
 pub mod obs;

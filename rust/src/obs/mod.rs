@@ -25,12 +25,12 @@
 //! ```
 //! use pimfused::config::ArchConfig;
 //! use pimfused::obs::{chrome_trace_json, PhaseProfile, ScheduleTrace};
-//! use pimfused::trace::{CmdKind, Trace};
+//! use pimfused::trace::{CmdKind, RowMap, Trace};
 //!
 //! // A two-command schedule: move a tile up to the GBUF, then back.
 //! let mut t = Trace::default();
-//! t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 2048 }, &[], Some(1));
-//! t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 1024 }, &[1], Some(2));
+//! t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 2048, rows: RowMap::EMPTY }, &[], Some(1));
+//! t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 1024, rows: RowMap::EMPTY }, &[1], Some(2));
 //!
 //! let cfg = ArchConfig::baseline();
 //! let (report, trace) = ScheduleTrace::capture(&cfg, &t);

@@ -3,8 +3,12 @@
 //! The trace carries macro commands ("stream N bytes from this bank");
 //! this module converts them to cycles under the bank's timing state
 //! machine: a burst train of 32-B columns paced by `tCCD`, a pipeline
-//! fill of `tCL`, and a `tRP + tRCD` row-open penalty whenever the stream
-//! crosses a 2-KB row boundary (plus `tRAS` enforcement on short rows).
+//! fill of `tCL`, and a `tRP + tRCD` row-open penalty per 2-KB row the
+//! stream walks (plus `tRAS` enforcement on short rows). These formulas
+//! price every row as a miss; when a command resumes the exact row its
+//! banks left open, the engines' shared expansion
+//! ([`crate::sim::engine`]) waives the leading re-open instead of
+//! changing the per-stream arithmetic here (DESIGN.md §6.2).
 
 use crate::config::{DramTiming, COL_BYTES, ROW_BYTES};
 

@@ -15,6 +15,55 @@ use crate::config::ArchConfig;
 use crate::fault::FaultPlan;
 use crate::trace::{BankMask, Cmd, CmdKind, PerCore, RowMap, Trace, MAX_CORES};
 
+/// Per-bank open-row tracker (DESIGN.md §6.2): the row each bank's row
+/// buffer last held open, stamped with when it was touched. Lives inside
+/// [`SimResult`] so both engines — and the audit's replay — advance one
+/// copy per run by expanding the trace-order command stream through
+/// [`expand`], which keeps waivers engine-identical by construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub(crate) struct OpenRows {
+    banks: [OpenRow; MAX_CORES],
+    /// Serial trace-order clock, advanced by every expanded command's
+    /// duration. Used only to expire rows after refresh-scale gaps
+    /// ([`crate::config::DramTiming::t_refi`]); deliberately
+    /// engine-independent, since the event engine's placement is not
+    /// known until the schedule settles.
+    clock: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+struct OpenRow {
+    row: u64,
+    touched: u64,
+    valid: bool,
+}
+
+impl OpenRows {
+    /// Whether every bank of a non-empty set still holds `row` open,
+    /// touched within the refresh scale of `now`.
+    fn all_open_at(&self, banks: BankMask, row: u64, now: u64, t_refi: u64) -> bool {
+        !banks.is_empty()
+            && banks.iter().all(|b| {
+                let s = &self.banks[b];
+                s.valid && s.row == row && now.saturating_sub(s.touched) <= t_refi
+            })
+    }
+
+    /// Record `row` as left open in every bank of the set.
+    fn open(&mut self, banks: BankMask, row: u64, now: u64) {
+        for b in banks.iter() {
+            self.banks[b] = OpenRow { row, touched: now, valid: true };
+        }
+    }
+
+    /// Close every bank of the set (writes, unknown row identity).
+    fn close(&mut self, banks: BankMask) {
+        for b in banks.iter() {
+            self.banks[b].valid = false;
+        }
+    }
+}
+
 /// Result of simulating one trace on one architecture.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SimResult {
@@ -39,6 +88,15 @@ pub struct SimResult {
     /// Commands whose transient failures exhausted the retry budget and
     /// escalated to the host as permanent faults (DESIGN.md §11).
     pub escalated_cmds: u64,
+    /// Commands whose leading `tRP + tRCD` row open was waived because
+    /// every bank they touch still held their first row open (open-row
+    /// reuse, DESIGN.md §6.2). Zero with
+    /// [`ArchConfig::open_row_reuse`] off; identical across engines
+    /// because both expand the trace-order stream through the same
+    /// state machine.
+    pub open_row_hits: u64,
+    /// Open-row tracker state after the last expanded command.
+    pub(crate) open: OpenRows,
 }
 
 /// Simulate a full trace.
@@ -56,7 +114,10 @@ pub fn simulate(cfg: &ArchConfig, trace: &Trace) -> SimResult {
     let plan = FaultPlan::build(cfg);
     for (i, cmd) in trace.cmds.iter().enumerate() {
         let rep = plan.replays_for(i);
-        let c = cost(cfg, cmd);
+        // One expansion per command, reused across replay attempts:
+        // every replay charges exactly the first attempt's duration and
+        // the open-row state advances once per command.
+        let c = expand(cfg, cmd, &mut r);
         for attempt in 0..=rep.count {
             tally(cmd, &mut r.actions);
             let d = charge(cfg, &c, &mut r);
@@ -94,7 +155,12 @@ pub(crate) enum CmdCost {
     /// (`total`), touching each bank of the `banks` walk set for one
     /// `slice` of the interval. On a healthy channel the walk covers all
     /// banks; retired banks shrink it (and grow the slice accordingly).
-    CrossBank { total: u64, slice: u64, write: bool, acts: u64, banks: BankMask },
+    /// With open-row reuse on, `rows` carries the feature map's per-bank
+    /// row map so the scheduler meters each bank group's ACT window at
+    /// its real row share; [`RowMap::EMPTY`] (reuse off, or un-annotated
+    /// synthetic traces) falls back to splitting `acts` evenly across
+    /// the walk's groups.
+    CrossBank { total: u64, slice: u64, write: bool, acts: u64, banks: BankMask, rows: RowMap },
     /// `HOST_WRITE` / `HOST_READ`: off-chip interface occupancy (`total`)
     /// plus — when the config models host bank residency — a slice of
     /// each destination bank's timeline sized by its share of the `rows`
@@ -148,7 +214,7 @@ pub(crate) fn cost(cfg: &ArchConfig, cmd: &Cmd) -> CmdCost {
             let write = matches!(cmd.kind, CmdKind::Lbuf2Bk { .. });
             CmdCost::NearBank { core, write, acts }
         }
-        CmdKind::Bk2Gbuf { bytes } | CmdKind::Gbuf2Bk { bytes } => {
+        CmdKind::Bk2Gbuf { bytes, rows } | CmdKind::Gbuf2Bk { bytes, rows } => {
             let total = dram::cross_bank_stream_cycles(t, *bytes);
             // Retired banks drop out of the sequential walk: the same
             // total spreads over fewer banks, so each surviving bank's
@@ -165,6 +231,9 @@ pub(crate) fn cost(cfg: &ArchConfig, cmd: &Cmd) -> CmdCost {
                 write: matches!(cmd.kind, CmdKind::Gbuf2Bk { .. }),
                 acts: rows_touched(*bytes),
                 banks,
+                // The row-map ACT metering rides the open-row toggle so
+                // `--open-row off` restores the legacy even split.
+                rows: if cfg.open_row_reuse { *rows } else { RowMap::EMPTY },
             }
         }
         CmdKind::HostWrite { bytes, rows } | CmdKind::HostRead { bytes, rows } => {
@@ -212,22 +281,37 @@ pub(crate) fn tally(cmd: &Cmd, a: &mut ActionCounts) {
             a.lbuf_read_bytes += bytes.sum();
             a.row_activations += rows_touched(bytes.sum());
         }
-        CmdKind::Bk2Gbuf { bytes } => {
+        CmdKind::Bk2Gbuf { bytes, rows } => {
             a.cross_col_read_bytes += bytes;
             a.gbuf_write_bytes += bytes;
             a.bus_bytes += bytes;
-            a.row_activations += rows_touched(*bytes);
+            a.row_activations += map_acts(*bytes, rows);
         }
-        CmdKind::Gbuf2Bk { bytes } => {
+        CmdKind::Gbuf2Bk { bytes, rows } => {
             a.cross_col_write_bytes += bytes;
             a.gbuf_read_bytes += bytes;
             a.bus_bytes += bytes;
-            a.row_activations += rows_touched(*bytes);
+            a.row_activations += map_acts(*bytes, rows);
         }
-        CmdKind::HostWrite { bytes, .. } | CmdKind::HostRead { bytes, .. } => {
+        CmdKind::HostWrite { bytes, rows } | CmdKind::HostRead { bytes, rows } => {
             a.host_bytes += bytes;
-            a.row_activations += rows_touched(*bytes);
+            a.row_activations += map_acts(*bytes, rows);
         }
+    }
+}
+
+/// Row activations of a bank-striped stream: the row map's per-bank
+/// total when the command carries one, else the contiguous-volume
+/// estimate. This is the same count the event scheduler meters into the
+/// bank groups' ACT windows, so ACT energy and the schedule price the
+/// exact same activations (the §6.3 tally/scheduler reconciliation).
+/// Deliberately independent of `open_row_reuse`: row *opens* that the
+/// reuse waiver skips are timing, not unique-data activations.
+fn map_acts(bytes: u64, rows: &RowMap) -> u64 {
+    if rows.is_empty() {
+        rows_touched(bytes)
+    } else {
+        rows.total()
     }
 }
 
@@ -241,45 +325,142 @@ pub(crate) fn tally(cmd: &Cmd, a: &mut ActionCounts) {
 /// command's duration (keeping the event engine's schedule bounded by
 /// the analytic serial sum even when a read queues behind the recovery).
 pub(crate) fn charge(cfg: &ArchConfig, c: &CmdCost, r: &mut SimResult) -> u64 {
+    let d = duration(cfg, c);
+    match c {
+        CmdCost::Pimcore { core, .. } => r.near_bank_cycles += core.max(),
+        CmdCost::Gbcore(_) => r.gbcore_cycles += d,
+        CmdCost::NearBank { .. } => r.near_bank_cycles += d,
+        CmdCost::CrossBank { .. } => r.cross_bank_cycles += d,
+        CmdCost::Host { .. } => r.host_cycles += d,
+    }
+    d
+}
+
+/// The serial duration of an expanded command — the pure arithmetic
+/// [`charge`] accumulates, factored out so [`expand`] can advance the
+/// open-row clock (and the audit can certify waivers) without touching
+/// any breakdown field.
+pub(crate) fn duration(cfg: &ArchConfig, c: &CmdCost) -> u64 {
     let t_cmd = cfg.timing.t_cmd;
     let recovery = |write: bool| if write { cfg.timing.t_wr } else { 0 };
     match c {
         CmdCost::Pimcore { core, bcast, write, .. } => {
-            let core_max = core.max();
-            r.near_bank_cycles += core_max;
-            core_max.max(*bcast) + t_cmd + recovery(*write)
+            core.max().max(*bcast) + t_cmd + recovery(*write)
         }
-        CmdCost::Gbcore(c) => {
-            let d = c + t_cmd;
-            r.gbcore_cycles += d;
-            d
+        CmdCost::Gbcore(c) => c + t_cmd,
+        CmdCost::NearBank { core, write, .. } => core.max() + t_cmd + recovery(*write),
+        CmdCost::CrossBank { total, write, .. } => total + t_cmd + recovery(*write),
+        // With bank residency modeled, a host write's destination banks
+        // must restore before the next access — the same tWR the event
+        // engine's slice tails reserve.
+        CmdCost::Host { total, rows, write } => total + t_cmd + recovery(*write && !rows.is_empty()),
+    }
+}
+
+/// The banks a command physically streams, as a conservative superset:
+/// per-core commands touch their active cores' bank fan-in, row-mapped
+/// transfers touch their map's banks, and un-annotated bank streams
+/// touch the whole channel. `GBcore_CMP` touches none.
+fn touched_banks(cfg: &ArchConfig, cmd: &Cmd) -> BankMask {
+    let n = cfg.num_banks.min(MAX_CORES);
+    let fanin = cfg.banks_per_pimcore.max(1);
+    match &cmd.kind {
+        CmdKind::PimcoreCmp { bank_read, bank_read_hit, bank_write, .. } => {
+            BankMask::from_fn(n, |b| {
+                let i = b / fanin;
+                i < bank_read.len()
+                    && bank_read.get(i) + bank_read_hit.get(i) + bank_write.get(i) > 0
+            })
         }
-        CmdCost::NearBank { core, write, .. } => {
-            let d = core.max() + t_cmd + recovery(*write);
-            r.near_bank_cycles += d;
-            d
+        CmdKind::GbcoreCmp { .. } => BankMask::EMPTY,
+        CmdKind::Bk2Lbuf { bytes } | CmdKind::Lbuf2Bk { bytes } => {
+            BankMask::from_fn(n, |b| {
+                let i = b / fanin;
+                i < bytes.len() && bytes.get(i) > 0
+            })
         }
-        CmdCost::CrossBank { total, write, .. } => {
-            let d = total + t_cmd + recovery(*write);
-            r.cross_bank_cycles += d;
-            d
-        }
-        CmdCost::Host { total, rows, write } => {
-            // With bank residency modeled, a host write's destination
-            // banks must restore before the next access — the same tWR
-            // the event engine's slice tails reserve.
-            let d = total + t_cmd + recovery(*write && !rows.is_empty());
-            r.host_cycles += d;
-            d
+        CmdKind::Bk2Gbuf { rows, .. }
+        | CmdKind::Gbuf2Bk { rows, .. }
+        | CmdKind::HostWrite { rows, .. }
+        | CmdKind::HostRead { rows, .. } => {
+            if rows.is_empty() {
+                BankMask::all(n)
+            } else {
+                rows.banks()
+            }
         }
     }
+}
+
+/// Expand one command into its charged cost, resolving open-row reuse
+/// against the per-run [`OpenRows`] state (DESIGN.md §6.2). This is the
+/// one entry point both engines — and the audit's replay — use, called
+/// exactly once per command in trace order, so waivers, hit counts, and
+/// the refresh clock are engine-identical by construction (invariant 1),
+/// and the event engine merely overlaps the already-reduced durations
+/// (invariant 2).
+///
+/// The policy: a *read* carrying a [`crate::trace::RowSpan`] hits when
+/// every bank it touches still holds the span's first row, touched
+/// within `tREFI`; the hit waives one `tRP + tRCD` from the command and
+/// the banks are left open at the span's last row. Bank writes close
+/// their banks (auto-precharge policy), as do bank streams with no row
+/// identity. With [`ArchConfig::open_row_reuse`] off the state is never
+/// touched and the cost is returned unmodified.
+pub(crate) fn expand(cfg: &ArchConfig, cmd: &Cmd, r: &mut SimResult) -> CmdCost {
+    let mut c = cost(cfg, cmd);
+    if !cfg.open_row_reuse {
+        return c;
+    }
+    let t = &cfg.timing;
+    let now = r.open.clock;
+    let banks = touched_banks(cfg, cmd);
+    // Reads with a known row identity may resume the open row. The
+    // waiver is capped at one row open per command: only the *leading*
+    // open is a potential hit — within one sequential macro command the
+    // row walk never revisits a row.
+    let mut reused = false;
+    let mut left_open = None;
+    match (&mut c, cmd.row_span) {
+        (CmdCost::CrossBank { total, write: false, .. }, Some(span)) => {
+            if *total >= t.row_open_cycles() && r.open.all_open_at(banks, span.first, now, t.t_refi)
+            {
+                *total -= t.row_open_cycles();
+                reused = true;
+            }
+            left_open = Some(span.last);
+        }
+        (CmdCost::Host { total, rows, write: false }, Some(span)) => {
+            // Interface-only host reads (empty map) model no banks, so
+            // they neither hit nor leave rows open.
+            if !rows.is_empty() {
+                if *total >= t.row_open_cycles()
+                    && r.open.all_open_at(banks, span.first, now, t.t_refi)
+                {
+                    *total -= t.row_open_cycles();
+                    reused = true;
+                }
+                left_open = Some(span.last);
+            }
+        }
+        _ => {}
+    }
+    r.open.clock = now + duration(cfg, &c);
+    match left_open {
+        Some(row) => r.open.open(banks, row, r.open.clock),
+        None => r.open.close(banks),
+    }
+    if reused {
+        r.open_row_hits += 1;
+    }
+    c
 }
 
 /// Advance the simulation by one command (exposed for incremental use by
 /// the validator and the property tests).
 pub fn step(cfg: &ArchConfig, cmd: &Cmd, r: &mut SimResult) {
     tally(cmd, &mut r.actions);
-    let c = cost(cfg, cmd);
+    let c = expand(cfg, cmd, r);
     let d = charge(cfg, &c, r);
     r.cycles += d;
 }
@@ -311,7 +492,7 @@ mod tests {
         let cfg = ArchConfig::baseline();
         let mut r = SimResult::default();
         let mut tr = Trace::default();
-        tr.push(0, CmdKind::Bk2Gbuf { bytes: 1024 });
+        tr.push(0, CmdKind::Bk2Gbuf { bytes: 1024, rows: RowMap::EMPTY });
         step(&cfg, &tr.cmds[0], &mut r);
         assert!(r.cycles > 0);
         assert_eq!(r.cycles, r.cross_bank_cycles + 0);
@@ -326,11 +507,11 @@ mod tests {
         let cfg = ArchConfig::baseline();
         let mut rd = SimResult::default();
         let mut tr = Trace::default();
-        tr.push(0, CmdKind::Bk2Gbuf { bytes: 1024 });
+        tr.push(0, CmdKind::Bk2Gbuf { bytes: 1024, rows: RowMap::EMPTY });
         step(&cfg, &tr.cmds[0], &mut rd);
         let mut wr = SimResult::default();
         let mut tw = Trace::default();
-        tw.push(0, CmdKind::Gbuf2Bk { bytes: 1024 });
+        tw.push(0, CmdKind::Gbuf2Bk { bytes: 1024, rows: RowMap::EMPTY });
         step(&cfg, &tw.cmds[0], &mut wr);
         assert_eq!(wr.cycles - rd.cycles, cfg.timing.t_wr);
         // Same for the parallel near-bank spill vs fill.
@@ -511,7 +692,7 @@ mod tests {
         use crate::fault::FaultConfig;
         let mut tr = Trace::default();
         for i in 0..8 {
-            tr.push(i, CmdKind::Bk2Gbuf { bytes: 256 });
+            tr.push(i, CmdKind::Bk2Gbuf { bytes: 256, rows: RowMap::EMPTY });
         }
         let cfg = ArchConfig::baseline().with_faults(FaultConfig {
             seed: 1,
@@ -531,7 +712,7 @@ mod tests {
     fn retired_banks_shrink_the_cross_bank_walk_and_grow_its_slice() {
         use crate::fault::FaultConfig;
         let mut tr = Trace::default();
-        tr.push(0, CmdKind::Bk2Gbuf { bytes: 4096 });
+        tr.push(0, CmdKind::Bk2Gbuf { bytes: 4096, rows: RowMap::EMPTY });
         let healthy = ArchConfig::baseline();
         let faulty = ArchConfig::baseline()
             .with_faults(FaultConfig { seed: 2, retired_banks: 8, ..Default::default() });
@@ -565,5 +746,113 @@ mod tests {
             assert!(r.cycles > 100_000, "{sys:?} suspiciously fast: {}", r.cycles);
             assert!(r.actions.pimcore_macs > 1_500_000_000);
         }
+    }
+
+    // --- open-row reuse (DESIGN.md §6.2) -----------------------------
+
+    use crate::trace::RowSpan;
+
+    /// A 1-row gather at row `first` (2048 B = exactly one 2-KB row).
+    fn read_row(t: &mut Trace, first: u64) {
+        t.push_dep_rows(
+            0,
+            CmdKind::Bk2Gbuf { bytes: 2048, rows: RowMap::EMPTY },
+            &[],
+            None,
+            Some(RowSpan { first, last: first }),
+        );
+    }
+
+    fn on_off(t: &Trace) -> (SimResult, SimResult) {
+        let on = simulate(&ArchConfig::baseline(), t);
+        let off = simulate(&ArchConfig::baseline().with_open_row_reuse(false), t);
+        (on, off)
+    }
+
+    #[test]
+    fn same_row_stream_waives_one_open_per_follow_up_command() {
+        let mut t = Trace::default();
+        for _ in 0..3 {
+            read_row(&mut t, 5);
+        }
+        let (on, off) = on_off(&t);
+        assert_eq!(off.open_row_hits, 0, "reuse off never waives");
+        assert_eq!(on.open_row_hits, 2, "first command misses, the rest hit");
+        let w = ArchConfig::baseline().timing.row_open_cycles();
+        assert_eq!(off.cycles - on.cycles, 2 * w);
+        assert_eq!(on.actions, off.actions, "waivers are timing, not energy");
+    }
+
+    #[test]
+    fn alternating_rows_reopen_every_command() {
+        let mut t = Trace::default();
+        for i in 0..4 {
+            read_row(&mut t, if i % 2 == 0 { 5 } else { 9 });
+        }
+        let (on, off) = on_off(&t);
+        assert_eq!(on.open_row_hits, 0, "a ping-pong stream never resumes its row");
+        assert_eq!(on.cycles, off.cycles);
+    }
+
+    #[test]
+    fn writes_close_the_open_row() {
+        let mut t = Trace::default();
+        read_row(&mut t, 5); // miss: opens row 5 everywhere
+        read_row(&mut t, 5); // hit
+        // A scatter to the same banks closes them (auto-precharge policy).
+        t.push(0, CmdKind::Gbuf2Bk { bytes: 2048, rows: RowMap::EMPTY });
+        read_row(&mut t, 5); // miss again
+        let (on, off) = on_off(&t);
+        assert_eq!(on.open_row_hits, 1);
+        let w = ArchConfig::baseline().timing.row_open_cycles();
+        assert_eq!(off.cycles - on.cycles, w);
+    }
+
+    #[test]
+    fn refresh_scale_gaps_expire_open_rows() {
+        let cfg = ArchConfig::baseline();
+        // A GBcore interlude long enough to cross tREFI (it touches no
+        // bank, so only the clock gap matters).
+        let gap_elt = (cfg.timing.t_refi + 1_000) * cfg.gbcore_eltwise_per_cycle as u64;
+        let mut t = Trace::default();
+        read_row(&mut t, 5);
+        t.push(0, CmdKind::GbcoreCmp { flags: crate::trace::ExecFlags::Pool, eltwise: gap_elt });
+        read_row(&mut t, 5);
+        let r = simulate(&cfg, &t);
+        assert_eq!(r.open_row_hits, 0, "a refresh-scale gap closes the row");
+        // A short interlude keeps it open.
+        let mut t2 = Trace::default();
+        read_row(&mut t2, 5);
+        t2.push(0, CmdKind::GbcoreCmp { flags: crate::trace::ExecFlags::Pool, eltwise: 64 });
+        read_row(&mut t2, 5);
+        assert_eq!(simulate(&cfg, &t2).open_row_hits, 1);
+    }
+
+    #[test]
+    fn cross_bank_cost_carries_its_row_map_only_with_reuse_on() {
+        let mut t = Trace::default();
+        t.push(0, CmdKind::Bk2Gbuf { bytes: 4096, rows: RowMap::striped(4096, 16) });
+        let rows_of = |cfg: &ArchConfig| match cost(cfg, &t.cmds[0]) {
+            CmdCost::CrossBank { rows, .. } => rows,
+            _ => panic!("expected a CrossBank cost"),
+        };
+        assert!(!rows_of(&ArchConfig::baseline()).is_empty());
+        // Off restores the legacy even ACT split (empty map sentinel).
+        assert!(rows_of(&ArchConfig::baseline().with_open_row_reuse(false)).is_empty());
+    }
+
+    #[test]
+    fn row_mapped_commands_price_act_energy_off_the_map() {
+        // The §6.3 reconciliation: a skewed map's activation count is the
+        // map's total, not ceil(bytes/ROW_BYTES) on the contiguous volume.
+        let mut a = ActionCounts::default();
+        let mut t = Trace::default();
+        let rows = RowMap::from_rows(&[7, 1, 1, 1]);
+        t.push(0, CmdKind::Bk2Gbuf { bytes: 4096, rows });
+        t.push(0, CmdKind::HostWrite { bytes: 4096, rows });
+        tally(&t.cmds[0], &mut a);
+        assert_eq!(a.row_activations, 10, "map total, not ceil(4096/2048) = 2");
+        tally(&t.cmds[1], &mut a);
+        assert_eq!(a.row_activations, 20, "host path prices the same map");
     }
 }

@@ -159,13 +159,13 @@ pub(crate) fn build(trace: &Trace) -> Dag {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::trace::{CmdKind, Trace};
+    use crate::trace::{CmdKind, RowMap, Trace};
 
     #[test]
     fn same_node_commands_chain() {
         let mut t = Trace::default();
-        t.push(1, CmdKind::Bk2Gbuf { bytes: 64 });
-        t.push(1, CmdKind::Gbuf2Bk { bytes: 64 });
+        t.push(1, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY });
+        t.push(1, CmdKind::Gbuf2Bk { bytes: 64, rows: RowMap::EMPTY });
         let d = build(&t);
         assert_eq!(d.preds[0].len(), 0);
         assert_eq!(d.preds[1].sorted(), vec![0]);
@@ -177,12 +177,12 @@ mod tests {
     #[test]
     fn readers_wait_on_last_writer_only() {
         let mut t = Trace::default();
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 }, &[], Some(1));
-        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 64 }, &[], Some(2));
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY }, &[], Some(1));
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY }, &[], Some(2));
         // Node 3 reads 1 only: independent of command 1 (node 2's write).
-        t.push_dep(3, CmdKind::Bk2Gbuf { bytes: 64 }, &[1], None);
+        t.push_dep(3, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY }, &[1], None);
         // Node 4 reads both.
-        t.push_dep(4, CmdKind::Bk2Gbuf { bytes: 64 }, &[1, 2], None);
+        t.push_dep(4, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY }, &[1, 2], None);
         let d = build(&t);
         assert_eq!(d.preds[2].sorted(), vec![0]);
         assert_eq!(d.preds[3].sorted(), vec![0, 1]);
@@ -195,11 +195,11 @@ mod tests {
     #[test]
     fn rewriting_a_map_retargets_readers() {
         let mut t = Trace::default();
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 }, &[], Some(1));
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY }, &[], Some(1));
         // A fused reorganization rewrites node 1's layout...
-        t.push_dep(5, CmdKind::Gbuf2Bk { bytes: 64 }, &[], Some(1));
+        t.push_dep(5, CmdKind::Gbuf2Bk { bytes: 64, rows: RowMap::EMPTY }, &[], Some(1));
         // ...so a later reader of 1 waits for the reorganization.
-        t.push_dep(6, CmdKind::Bk2Gbuf { bytes: 64 }, &[1], None);
+        t.push_dep(6, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY }, &[1], None);
         let d = build(&t);
         assert_eq!(d.preds[2].sorted(), vec![1]);
     }
@@ -207,33 +207,32 @@ mod tests {
     #[test]
     fn rewriters_wait_for_open_readers_and_prior_writer() {
         let mut t = Trace::default();
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 }, &[], Some(1)); // writes map 1
-        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 64 }, &[1], None); // reader A
-        t.push_dep(3, CmdKind::Bk2Gbuf { bytes: 64 }, &[1], None); // reader B
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY }, &[], Some(1)); // writes map 1
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY }, &[1], None); // reader A
+        t.push_dep(3, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY }, &[1], None); // reader B
         // A reorganization rewriting map 1 must drain both in-flight
         // readers (WAR) and order after the original write (WAW).
-        t.push_dep(7, CmdKind::Gbuf2Bk { bytes: 64 }, &[], Some(1));
+        t.push_dep(7, CmdKind::Gbuf2Bk { bytes: 64, rows: RowMap::EMPTY }, &[], Some(1));
         let d = build(&t);
         assert_eq!(d.preds[3].sorted(), vec![0, 1, 2]);
         // A write retires the open-reader set: a second rewrite waits on
         // the first rewrite only, not the long-retired readers.
         let mut t2 = t.clone();
-        t2.push_dep(8, CmdKind::Gbuf2Bk { bytes: 64 }, &[], Some(1));
+        t2.push_dep(8, CmdKind::Gbuf2Bk { bytes: 64, rows: RowMap::EMPTY }, &[], Some(1));
         let d2 = build(&t2);
         assert_eq!(d2.preds[4].sorted(), vec![3]);
     }
 
     #[test]
     fn host_io_bounds_the_dag() {
-        use crate::trace::RowMap;
         // HOST_WRITE defines the input map: the first consumer waits on
         // it. HOST_READ consumes the output map: it waits on the final
         // writer, but not on unrelated commands.
         let rows = RowMap::striped(1024, 16);
         let mut t = Trace::default();
         t.push_dep(0, CmdKind::HostWrite { bytes: 1024, rows }, &[], Some(0));
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 1024 }, &[0], None);
-        t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 512 }, &[], Some(2));
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 1024, rows: RowMap::EMPTY }, &[0], None);
+        t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 512, rows: RowMap::EMPTY }, &[], Some(2));
         t.push_dep(2, CmdKind::HostRead { bytes: 512, rows }, &[2], None);
         let d = build(&t);
         assert_eq!(d.preds[1].sorted(), vec![0], "consumer waits on the host write");
@@ -244,8 +243,8 @@ mod tests {
     #[test]
     fn unannotated_traces_only_chain_per_node() {
         let mut t = Trace::default();
-        t.push(1, CmdKind::Bk2Gbuf { bytes: 64 });
-        t.push(2, CmdKind::Bk2Gbuf { bytes: 64 });
+        t.push(1, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY });
+        t.push(2, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY });
         let d = build(&t);
         assert_eq!(d.preds[1].len(), 0, "different nodes, no annotations: independent");
         assert_eq!(d.indegree(), [0, 0]);
@@ -257,8 +256,8 @@ mod tests {
         // dedup must record the edge once (so indegree stays consistent
         // with the successor count).
         let mut t = Trace::default();
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 }, &[], Some(1));
-        t.push_dep(1, CmdKind::Gbuf2Bk { bytes: 64 }, &[1], Some(1));
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64, rows: RowMap::EMPTY }, &[], Some(1));
+        t.push_dep(1, CmdKind::Gbuf2Bk { bytes: 64, rows: RowMap::EMPTY }, &[1], Some(1));
         let d = build(&t);
         assert_eq!(d.preds[1].sorted(), vec![0]);
         assert_eq!(d.succs(0), [1]);

@@ -55,7 +55,7 @@ pub use resources::ResourceOccupancy;
 
 use resources::NUM_ACT_GROUPS;
 
-use super::engine::{self, charge, cost, tally, CmdCost};
+use super::engine::{self, charge, cost, duration, expand, tally, CmdCost};
 use super::SimResult;
 use crate::config::ArchConfig;
 use crate::fault::FaultPlan;
@@ -123,6 +123,13 @@ pub struct ScheduleAudit {
     /// [`SimResult::replayed_cycles`]. Zero without a transient fault
     /// plan.
     pub replayed_cycles: u64,
+    /// Row-open cycles certified as waived by open-row reuse: the audit
+    /// replays the open-row state machine in trace order and admits
+    /// exactly one `row_open_cycles()` waiver per command whose banks
+    /// all left the resumed row open. Always zero when
+    /// [`ArchConfig::open_row_reuse`](crate::config::ArchConfig::open_row_reuse)
+    /// is off.
+    pub waived_open_cycles: u64,
 }
 
 /// Re-run the schedule in recording mode and certify its legality:
@@ -203,6 +210,10 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
     let plan = FaultPlan::build(cfg);
     let t_cmd = cfg.timing.t_cmd;
     let act_slot = cfg.timing.act_slot_cycles();
+    // The audit replays the open-row state machine itself, in trace
+    // order, so every waived re-open charge is certified independently
+    // of the scheduler's bookkeeping.
+    let mut replay = SimResult::default();
     for (i, recs) in records.iter().enumerate() {
         // Replay accounting: the scheduler must have issued exactly one
         // attempt plus the replays the fault plan dictates for this
@@ -230,6 +241,39 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
                 sched.dones[i]
             ));
         }
+        // One expansion per command — replays reuse it, exactly as the
+        // scheduler (and the analytic engine's replay path) did. The
+        // difference against the un-waived base cost is the open-row
+        // waiver, admissible only with the toggle on, only with a row
+        // identity, and only at exactly one `row_open_cycles()`.
+        let base = cost(cfg, &trace.cmds[i]);
+        let exp = expand(cfg, &trace.cmds[i], &mut replay);
+        let d_base = duration(cfg, &base);
+        let d_exp = duration(cfg, &exp);
+        if d_exp > d_base {
+            return Err(format!(
+                "command {i}: expansion grew the serial duration ({d_exp} > {d_base})"
+            ));
+        }
+        let waived = d_base - d_exp;
+        if waived != 0 {
+            if !cfg.open_row_reuse {
+                return Err(format!(
+                    "command {i}: waived {waived} cycles with open-row reuse off"
+                ));
+            }
+            if waived != cfg.timing.row_open_cycles() {
+                return Err(format!(
+                    "command {i}: waived {waived} cycles, a row resume waives exactly {}",
+                    cfg.timing.row_open_cycles()
+                ));
+            }
+            if trace.cmds[i].row_span.is_none() {
+                return Err(format!("command {i}: open-row waiver without a row identity"));
+            }
+            sched.waived_open_cycles += waived;
+        }
+
         let mut prev_done = 0u64;
         for (attempt, rec) in recs.iter().enumerate() {
             if attempt > 0 {
@@ -246,6 +290,17 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
             let data_lo = rec.start + t_cmd;
             let data_hi = data_lo + rec.data_span;
 
+            // The recorded data window must be the *expanded* cost's —
+            // a waived re-open really shrank the reserved interval.
+            if let CmdCost::CrossBank { total, .. } | CmdCost::Host { total, .. } = &exp {
+                if rec.data_span != *total {
+                    return Err(format!(
+                        "command {i}: recorded data span {} disagrees with the expanded cost {total}",
+                        rec.data_span
+                    ));
+                }
+            }
+
             // Host bank residency: every slice sits on an annotated bank,
             // inside the attempt's window, with exactly the span its share
             // of the trace's row map dictates — and at or after its rigid
@@ -253,8 +308,7 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
             if let CmdKind::HostWrite { rows, .. } | CmdKind::HostRead { rows, .. } =
                 &trace.cmds[i].kind
             {
-                let c = cost(cfg, &trace.cmds[i]);
-                let resident = matches!(c, CmdCost::Host { rows: r, .. } if !r.is_empty());
+                let resident = matches!(&exp, CmdCost::Host { rows: r, .. } if !r.is_empty());
                 // Expected per-bank (rigid offset, span), recomputed from
                 // the row map independently of the scheduler's arithmetic.
                 let mut want = [(0u64, 0u64); MAX_CORES];
@@ -351,9 +405,9 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
             // in-window and at-or-after its rigid offset (exactly on it
             // when slice pipelining is off).
             if matches!(trace.cmds[i].kind, CmdKind::Bk2Gbuf { .. } | CmdKind::Gbuf2Bk { .. }) {
-                let c = cost(cfg, &trace.cmds[i]);
                 let mut want = [(0u64, 0u64); MAX_CORES];
-                if let CmdCost::CrossBank { total, slice, banks, .. } = c {
+                if let CmdCost::CrossBank { total, slice, banks, .. } = &exp {
+                    let (total, slice) = (*total, *slice);
                     if slice > 0 {
                         for (k, b) in banks.iter().enumerate() {
                             if b >= cfg.num_banks || b >= MAX_CORES {
@@ -405,6 +459,48 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
                         ));
                     }
                 }
+
+                // Per-group ACT metering: a row-mapped transfer charges
+                // each group for the rows that actually land in its
+                // banks; an un-annotated one falls back to the even
+                // `div_ceil` split across the groups its walk touches.
+                let mut want_acts = [0u64; NUM_ACT_GROUPS];
+                if let CmdCost::CrossBank { acts, banks, rows, .. } = &exp {
+                    if !rows.is_empty() {
+                        for (b, r) in rows.iter() {
+                            if b < cfg.num_banks {
+                                want_acts[b / resources::GROUP_BANKS] += r;
+                            }
+                        }
+                    } else {
+                        let mut gset = [false; NUM_ACT_GROUPS];
+                        let mut ng = 0u64;
+                        for b in banks.iter() {
+                            if b >= cfg.num_banks {
+                                break;
+                            }
+                            let g = (b / resources::GROUP_BANKS).min(NUM_ACT_GROUPS - 1);
+                            if !gset[g] {
+                                gset[g] = true;
+                                ng += 1;
+                            }
+                        }
+                        if ng > 0 {
+                            let per_group = acts.div_ceil(ng);
+                            for (g, hit) in gset.iter().enumerate() {
+                                if *hit {
+                                    want_acts[g] = per_group;
+                                }
+                            }
+                        }
+                    }
+                }
+                if rec.group_acts != want_acts {
+                    return Err(format!(
+                        "cross-bank command {i}: metered ACT counts {:?} disagree with the expected {:?}",
+                        rec.group_acts, want_acts
+                    ));
+                }
             }
 
             // ACT slots: in-window, and enough reserved cycles per group
@@ -433,6 +529,12 @@ pub fn audit(cfg: &ArchConfig, trace: &Trace) -> Result<ScheduleAudit, String> {
             }
         }
     }
+    if replay.open_row_hits != report.result.open_row_hits {
+        return Err(format!(
+            "open-row replay certifies {} hits, the engine reported {}",
+            replay.open_row_hits, report.result.open_row_hits
+        ));
+    }
     Ok(sched)
 }
 
@@ -455,14 +557,16 @@ fn run_schedule(
     // replay (and serial vs. threaded sweeps stay byte-identical).
     let plan = (cfg.faults.transient_ppm > 0).then(|| FaultPlan::build(cfg));
     let mut replays = vec![0u32; n];
-    // Expand costs and tallies in trace order, so action counts and the
-    // per-path cycle breakdowns are engine-identical by construction
+    // Expand costs and tallies in trace order, so action counts, the
+    // per-path cycle breakdowns, and the open-row waivers (`expand`
+    // resolves hits against the controller's issue order — the trace
+    // order — in both engines) are engine-identical by construction
     // regardless of the issue order the heap picks below. Every replay
     // attempt tallies and charges again — exactly the analytic engine's
     // replay accounting, so the faulty results stay engine-equal too.
     let mut costs = Vec::with_capacity(n);
     for (i, cmd) in trace.cmds.iter().enumerate() {
-        let c = cost(cfg, cmd);
+        let c = expand(cfg, cmd, &mut r);
         let rep = plan.as_ref().map(|p| p.replays_for(i)).unwrap_or_default();
         replays[i] = rep.count;
         if rep.escalated {
@@ -582,9 +686,9 @@ mod tests {
         // the scatter's write-recovery window, charged by both engines).
         let cfg = ArchConfig::baseline();
         let mut t = Trace::default();
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], Some(1));
-        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 2048 }, &[1], Some(2));
-        t.push_dep(3, CmdKind::Gbuf2Bk { bytes: 1024 }, &[2], Some(3));
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096, rows: RowMap::EMPTY }, &[], Some(1));
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 2048, rows: RowMap::EMPTY }, &[1], Some(2));
+        t.push_dep(3, CmdKind::Gbuf2Bk { bytes: 1024, rows: RowMap::EMPTY }, &[2], Some(3));
         let ev = simulate(&cfg, &t);
         assert_eq!(ev.result.cycles, serial_cycles(&cfg, &t));
     }
@@ -619,8 +723,8 @@ mod tests {
         // slot (`t_cmd`) hides under the first transfer.
         let cfg = ArchConfig::baseline();
         let mut t = Trace::default();
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], None);
-        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], None);
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096, rows: RowMap::EMPTY }, &[], None);
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 4096, rows: RowMap::EMPTY }, &[], None);
         let ev = simulate(&cfg, &t);
         let serial = serial_cycles(&cfg, &t);
         assert_eq!(ev.result.cycles, ev.occupancy.bus_busy + cfg.timing.t_cmd);
@@ -634,9 +738,9 @@ mod tests {
         // though the two occupy mostly disjoint resources.
         let cfg = ArchConfig::baseline();
         let mut t = Trace::default();
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], Some(1));
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096, rows: RowMap::EMPTY }, &[], Some(1));
         t.push_dep(2, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 64 * 1024) }, &[1], None);
-        t.push_dep(5, CmdKind::Gbuf2Bk { bytes: 4096 }, &[], Some(1));
+        t.push_dep(5, CmdKind::Gbuf2Bk { bytes: 4096, rows: RowMap::EMPTY }, &[], Some(1));
         let ev = simulate(&cfg, &t);
         // RAW then WAR chain every command: no overlap is legal.
         assert_eq!(ev.result.cycles, serial_cycles(&cfg, &t));
@@ -676,8 +780,8 @@ mod tests {
         // traffic entirely.
         let cfg = ArchConfig::baseline();
         let mut t = Trace::default();
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 * 1024 }, &[], None);
-        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], None);
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 64 * 1024, rows: RowMap::EMPTY }, &[], None);
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 4096, rows: RowMap::EMPTY }, &[], None);
         // Interface-only host read (no bank annotation): its data hides
         // fully under the bus traffic without touching the banks.
         t.push_dep(3, CmdKind::HostRead { bytes: 4096, rows: RowMap::EMPTY }, &[], None);
@@ -697,7 +801,7 @@ mod tests {
         let mut t = Trace::default();
         t.push_dep(1, CmdKind::Bk2Lbuf { bytes: PerCore::uniform(16, 64 * 1024) }, &[], Some(1));
         t.push_dep(1, CmdKind::Lbuf2Bk { bytes: PerCore::uniform(16, 64 * 1024) }, &[], Some(1));
-        t.push_dep(7, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], None);
+        t.push_dep(7, CmdKind::Bk2Gbuf { bytes: 4096, rows: RowMap::EMPTY }, &[], None);
         let a = audit(&cfg, &t).unwrap();
         assert!(
             a.starts[2] < a.starts[1],
@@ -764,7 +868,7 @@ mod tests {
         let mut c0 = PerCore::zero(16);
         c0.set(0, 4096);
         t.push(1, CmdKind::Bk2Lbuf { bytes: c0 });
-        t.push(2, CmdKind::Bk2Gbuf { bytes: 4096 });
+        t.push(2, CmdKind::Bk2Gbuf { bytes: 4096, rows: RowMap::EMPTY });
         let ev_on = simulate(&on, &t);
         let ev_off = simulate(&off, &t);
         assert!(
@@ -807,6 +911,37 @@ mod tests {
     }
 
     #[test]
+    fn audit_certifies_open_row_waivers() {
+        use crate::trace::RowSpan;
+        // Three independent reads of the same single-row map serialize
+        // on the bus; the second and third resume the row the first
+        // left open. The audit's trace-order replay must certify both
+        // waivers, and turning reuse off must restore the full cost.
+        let cfg = ArchConfig::baseline();
+        let off = cfg.clone().with_open_row_reuse(false);
+        let span = Some(RowSpan { first: 5, last: 5 });
+        let mut t = Trace::default();
+        for _ in 0..3 {
+            t.push_dep_rows(1, CmdKind::Bk2Gbuf { bytes: 2048, rows: RowMap::EMPTY }, &[], None, span);
+        }
+        let a_on = audit(&cfg, &t).unwrap();
+        let a_off = audit(&off, &t).unwrap();
+        assert_eq!(a_on.waived_open_cycles, 2 * cfg.timing.row_open_cycles());
+        assert_eq!(a_off.waived_open_cycles, 0);
+        let ev_on = simulate(&cfg, &t);
+        let ev_off = simulate(&off, &t);
+        assert_eq!(ev_on.result.open_row_hits, 2);
+        assert_eq!(ev_off.result.open_row_hits, 0);
+        // Bus-serialized chain: the makespan shrinks by exactly the
+        // certified waivers, and energy is reuse-independent.
+        assert_eq!(
+            ev_off.result.cycles - ev_on.result.cycles,
+            a_on.waived_open_cycles
+        );
+        assert_eq!(ev_on.result.actions, ev_off.result.actions);
+    }
+
+    #[test]
     fn transient_replays_reissue_and_the_audit_recertifies() {
         use crate::fault::{FaultConfig, PPM_SCALE};
         // Certain failure with one retry doubles every command on a
@@ -820,9 +955,9 @@ mod tests {
             ..FaultConfig::default()
         });
         let mut t = Trace::default();
-        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096 }, &[], Some(1));
-        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 2048 }, &[1], Some(2));
-        t.push_dep(3, CmdKind::Gbuf2Bk { bytes: 1024 }, &[2], Some(3));
+        t.push_dep(1, CmdKind::Bk2Gbuf { bytes: 4096, rows: RowMap::EMPTY }, &[], Some(1));
+        t.push_dep(2, CmdKind::Bk2Gbuf { bytes: 2048, rows: RowMap::EMPTY }, &[1], Some(2));
+        t.push_dep(3, CmdKind::Gbuf2Bk { bytes: 1024, rows: RowMap::EMPTY }, &[2], Some(3));
         let ev = simulate(&cfg, &t);
         let an = engine::simulate(&cfg, &t);
         assert_eq!(ev.result.cycles, 2 * simulate(&healthy, &t).result.cycles);

@@ -46,7 +46,11 @@
 //!   data completes;
 //! * row activations are metered per **bank group** on an activation
 //!   window timeline at [`DramTiming::act_slot_cycles`] per ACT (the
-//!   tFAW/tRRD constraint). [`DramTiming::act_layout`] spreads a
+//!   tFAW/tRRD constraint). A cross-bank command that carries a
+//!   [`RowMap`] charges each group for the rows that actually land in
+//!   its banks — the same metering as the host path; an un-annotated
+//!   command falls back to an even `div_ceil` split across the groups
+//!   its bank walk touches. [`DramTiming::act_layout`] spreads a
 //!   command's activations across its data span as **per-row interleaved
 //!   slots** (up to [`MAX_ACT_SLOTS`] windows per group), so two
 //!   dense-activation commands can interleave within one window instead
@@ -653,7 +657,7 @@ impl Timelines {
                 self.req.push(ReqItem { res: GBCORE, off: t_cmd, span: *d, tail: 0, tally: true });
                 (*d, 0)
             }
-            CmdCost::CrossBank { total, slice, write, acts, banks } => {
+            CmdCost::CrossBank { total, slice, write, acts, banks, rows } => {
                 let post = if *write { self.t_wr } else { 0 };
                 self.req.push(ReqItem { res: BUS, off: t_cmd, span: *total, tail: 0, tally: true });
                 // The bank walk visits every bank in the walk set (all
@@ -677,27 +681,39 @@ impl Timelines {
                     }
                 }
                 self.slice_items(&spans[..n], post, false, *total);
-                // No row map on the cross-bank path: activations split
-                // evenly across the bank groups the walk set touches
-                // (§6.3 ledger). On a healthy full mask this is the
-                // channel's every group, exactly the pre-fault metering.
-                let mut gset = [false; NUM_ACT_GROUPS];
-                let mut ng = 0u64;
-                for b in banks.iter() {
-                    if b >= self.num_banks {
-                        break;
+                if !rows.is_empty() {
+                    // The feature map's row map says exactly how many
+                    // rows land in each bank: meter each bank group's
+                    // ACT window at its real share, like the host path.
+                    for (b, r) in rows.iter() {
+                        if b < self.num_banks {
+                            self.group_acts[b / GROUP_BANKS] += r;
+                        }
                     }
-                    let g = (b / GROUP_BANKS).min(NUM_ACT_GROUPS - 1);
-                    if !gset[g] {
-                        gset[g] = true;
-                        ng += 1;
+                } else {
+                    // No row map (open-row reuse off, or an un-annotated
+                    // synthetic trace): activations split evenly across
+                    // the bank groups the walk set touches — the legacy
+                    // metering. On a healthy full mask this is the
+                    // channel's every group.
+                    let mut gset = [false; NUM_ACT_GROUPS];
+                    let mut ng = 0u64;
+                    for b in banks.iter() {
+                        if b >= self.num_banks {
+                            break;
+                        }
+                        let g = (b / GROUP_BANKS).min(NUM_ACT_GROUPS - 1);
+                        if !gset[g] {
+                            gset[g] = true;
+                            ng += 1;
+                        }
                     }
-                }
-                if ng > 0 {
-                    let per_group = acts.div_ceil(ng);
-                    for (g, hit) in gset.iter().enumerate() {
-                        if *hit {
-                            self.group_acts[g] = per_group;
+                    if ng > 0 {
+                        let per_group = acts.div_ceil(ng);
+                        for (g, hit) in gset.iter().enumerate() {
+                            if *hit {
+                                self.group_acts[g] = per_group;
+                            }
                         }
                     }
                 }
@@ -891,6 +907,7 @@ mod tests {
             write: false,
             acts: 0,
             banks: BankMask::all(16),
+            rows: RowMap::EMPTY,
         }
     }
 
@@ -1207,6 +1224,34 @@ mod tests {
         assert_eq!(occ.act_busy[0], 7 * 8, "group 0 reserved for its 7 real ACTs, not 4");
         assert_eq!(occ.act_busy[1], 8, "group 1 for its 1 real ACT, not 4");
         assert_eq!(occ.act_busy[2], 0);
+    }
+
+    #[test]
+    fn cross_bank_row_map_meters_act_windows_exactly() {
+        // Same 7/1 row skew on the cross-bank path. The legacy metering
+        // spread `acts.div_ceil(groups)` = 2 ACTs over every group the
+        // full bank mask touches; the row map charges group 0 for its 7
+        // real rows, group 1 for its 1, and groups 2/3 for none.
+        let mut t = tl();
+        let mut rows = RowMap::EMPTY;
+        rows.set(0, 7);
+        rows.set(4, 1);
+        t.issue(
+            0,
+            &CmdCost::CrossBank {
+                total: 160,
+                slice: 10,
+                write: false,
+                acts: 8,
+                banks: BankMask::all(16),
+                rows,
+            },
+        );
+        let occ = t.into_occupancy(200);
+        assert_eq!(occ.act_busy[0], 7 * 8, "group 0 reserved for its 7 real ACTs");
+        assert_eq!(occ.act_busy[1], 8, "group 1 for its 1 real ACT");
+        assert_eq!(occ.act_busy[2], 0, "untouched groups reserve nothing");
+        assert_eq!(occ.act_busy[3], 0);
     }
 
     #[test]

@@ -147,9 +147,9 @@ mod tests {
 
     #[test]
     fn run_dispatches_on_engine() {
-        use crate::trace::CmdKind;
+        use crate::trace::{CmdKind, RowMap};
         let mut t = Trace::default();
-        t.push(0, CmdKind::Bk2Gbuf { bytes: 2048 });
+        t.push(0, CmdKind::Bk2Gbuf { bytes: 2048, rows: RowMap::EMPTY });
         let cfg = ArchConfig::baseline();
         let analytic = run(&cfg, &t);
         assert!(analytic.occupancy.is_none());

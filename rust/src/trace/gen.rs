@@ -12,7 +12,7 @@ use crate::config::{ArchConfig, ELEM_BYTES, ROW_BYTES};
 use crate::dataflow::tiling::{tile_grid, tile_segment, TileDemand};
 use crate::dataflow::{CostModel, Plan, PlanStep};
 use crate::fault::FaultPlan;
-use crate::trace::{CmdKind, ExecFlags, PerCore, RowMap, Trace, MAX_CORES};
+use crate::trace::{CmdKind, ExecFlags, PerCore, RowMap, RowSpan, Trace, MAX_CORES};
 use std::collections::HashMap;
 
 /// Where a feature map currently lives in the channel.
@@ -36,13 +36,27 @@ pub struct TraceGen<'a> {
     /// leaves the emitted trace byte-identical to the pre-fault path.
     fplan: FaultPlan,
     layout: HashMap<NodeId, Layout>,
+    /// Base row of each feature map's region in the trace-global
+    /// per-bank row address space (see [`TraceGen::row_base`]).
+    row_regions: HashMap<NodeId, u64>,
+    /// Next unallocated base row.
+    next_row: u64,
     trace: Trace,
 }
 
 /// Generate the command trace for `plan` on `cfg`.
 pub fn generate(g: &Graph, cfg: &ArchConfig, plan: &Plan, model: CostModel) -> Trace {
     let fplan = FaultPlan::build(cfg);
-    let mut tg = TraceGen { g, cfg, model, fplan, layout: HashMap::new(), trace: Trace::default() };
+    let mut tg = TraceGen {
+        g,
+        cfg,
+        model,
+        fplan,
+        layout: HashMap::new(),
+        row_regions: HashMap::new(),
+        next_row: 0,
+        trace: Trace::default(),
+    };
     tg.run(plan);
     tg.trace
 }
@@ -76,13 +90,17 @@ impl<'a> TraceGen<'a> {
         // (both layouts stripe the map across all banks; the recorded
         // layout of the last layer decides each bank's row count).
         let out = self.g.nodes.last().unwrap();
-        let out_layout = self.layout.get(&out.id).copied().unwrap_or(Layout::CoutBanked);
-        let rows = self.host_row_map(out.id, out_layout);
-        self.trace.push_dep(
-            out.id,
-            CmdKind::HostRead { bytes: out.shape.bytes() as u64, rows },
-            &[out.id],
+        let out_id = out.id;
+        let out_bytes = out.shape.bytes() as u64;
+        let out_layout = self.layout.get(&out_id).copied().unwrap_or(Layout::CoutBanked);
+        let rows = self.host_row_map(out_id, out_layout);
+        let span = Some(self.span_of(out_id, &rows));
+        self.trace.push_dep_rows(
+            out_id,
+            CmdKind::HostRead { bytes: out_bytes, rows },
+            &[out_id],
             None,
+            span,
         );
     }
 
@@ -132,6 +150,64 @@ impl<'a> TraceGen<'a> {
         }
     }
 
+    /// Base row of node `id`'s feature map in the trace-global per-bank
+    /// row address space. Every map gets a distinct region sized by its
+    /// full row footprint, so [`RowSpan`]s of different maps never
+    /// compare equal and open-row reuse only triggers on genuinely
+    /// re-read data (DESIGN.md §6.2).
+    fn row_base(&mut self, id: NodeId) -> u64 {
+        if let Some(&b) = self.row_regions.get(&id) {
+            return b;
+        }
+        let rows = (self.g.nodes[id].shape.bytes() as u64).div_ceil(ROW_BYTES as u64).max(1);
+        let base = self.next_row;
+        self.next_row += rows;
+        self.row_regions.insert(id, base);
+        base
+    }
+
+    /// The [`RowSpan`] a stream with per-bank row map `rows` covers
+    /// inside node `id`'s region: the region base through its deepest
+    /// per-bank row.
+    fn span_of(&mut self, id: NodeId, rows: &RowMap) -> RowSpan {
+        let base = self.row_base(id);
+        let depth = rows.iter().map(|(_, r)| r).max().unwrap_or(1).max(1);
+        RowSpan { first: base, last: base + depth - 1 }
+    }
+
+    /// The [`RowSpan`] of a full-map stream of node `id` under its
+    /// currently recorded layout.
+    fn map_span(&mut self, id: NodeId) -> RowSpan {
+        let layout = self.layout.get(&id).copied().unwrap_or(Layout::CoutBanked);
+        let rows = self.host_row_map(id, layout);
+        self.span_of(id, &rows)
+    }
+
+    /// Per-bank rows a cross-bank gather of the given feature maps
+    /// reads: each producer's layout-derived map (the same `tile_grid`
+    /// split host I/O uses), summed bank-wise for multi-operand gathers.
+    fn gather_rows(&self, ids: &[NodeId]) -> RowMap {
+        let mut m = RowMap::EMPTY;
+        for &id in ids {
+            let layout = self.layout.get(&id).copied().unwrap_or(Layout::CoutBanked);
+            for (b, r) in self.host_row_map(id, layout).iter() {
+                m.set(b, m.get(b) + r);
+            }
+        }
+        m
+    }
+
+    /// Per-bank rows of a `bytes`-sized partial stream of one feature
+    /// map (fused halo / reorganization traffic): striped like a
+    /// `CoutBanked` map, over the surviving banks when degraded.
+    fn partial_rows(&self, bytes: u64) -> RowMap {
+        if self.fplan.is_degraded() {
+            RowMap::striped_over(bytes, self.fplan.surviving_banks())
+        } else {
+            RowMap::striped(bytes, self.cfg.num_banks.min(MAX_CORES))
+        }
+    }
+
     // ---------------------------------------------------------------
     // Layer-by-layer emission (Fig. 3(b))
     // ---------------------------------------------------------------
@@ -171,7 +247,12 @@ impl<'a> TraceGen<'a> {
         let in_bytes: u64 = n.inputs.iter().map(|&i| self.g.nodes[i].shape.bytes() as u64).sum();
 
         // Gather input activations into the GBUF (cross-bank, sequential).
-        self.trace.push_dep(id, CmdKind::Bk2Gbuf { bytes: in_bytes }, &n.inputs, None);
+        let rows = self.gather_rows(&n.inputs);
+        let span = match n.inputs[..] {
+            [src] => Some(self.map_span(src)),
+            _ => None, // multi-map gathers interleave rows: no single identity
+        };
+        self.trace.push_dep_rows(id, CmdKind::Bk2Gbuf { bytes: in_bytes, rows }, &n.inputs, None, span);
 
         let w_total = n.weight_bytes() as u64;
         let w_core = w_total / k;
@@ -223,10 +304,16 @@ impl<'a> TraceGen<'a> {
         let n = &self.g.nodes[id];
         let in_bytes: u64 = n.inputs.iter().map(|&i| self.g.nodes[i].shape.bytes() as u64).sum();
         let out_bytes = n.shape.bytes() as u64;
-        self.trace.push_dep(id, CmdKind::Bk2Gbuf { bytes: in_bytes }, &n.inputs, None);
+        let rows = self.gather_rows(&n.inputs);
+        let span = match n.inputs[..] {
+            [src] => Some(self.map_span(src)),
+            _ => None, // multi-map gathers interleave rows: no single identity
+        };
+        self.trace.push_dep_rows(id, CmdKind::Bk2Gbuf { bytes: in_bytes, rows }, &n.inputs, None, span);
         self.trace.push_dep(id, CmdKind::GbcoreCmp { flags, eltwise: n.eltwise_ops() as u64 }, &[], None);
         // The scatter places the result in banks: it defines `id`'s layout.
-        self.trace.push_dep(id, CmdKind::Gbuf2Bk { bytes: out_bytes }, &[], Some(id));
+        let out_rows = self.host_row_map(id, Layout::CoutBanked);
+        self.trace.push_dep(id, CmdKind::Gbuf2Bk { bytes: out_bytes, rows: out_rows }, &[], Some(id));
         self.layout.insert(id, Layout::CoutBanked);
     }
 
@@ -281,8 +368,21 @@ impl<'a> TraceGen<'a> {
                 // placement: readers of `pid` inside the segment must wait
                 // for the scatter, which is why it registers as the new
                 // writer of `pid`.
-                self.trace.push_dep(seg_start, CmdKind::Bk2Gbuf { bytes: cross }, &[pid], None);
-                self.trace.push_dep(seg_start, CmdKind::Gbuf2Bk { bytes: cross }, &[], Some(pid));
+                let rows = self.partial_rows(cross);
+                let span = Some(self.span_of(pid, &rows));
+                self.trace.push_dep_rows(
+                    seg_start,
+                    CmdKind::Bk2Gbuf { bytes: cross, rows },
+                    &[pid],
+                    None,
+                    span,
+                );
+                self.trace.push_dep(
+                    seg_start,
+                    CmdKind::Gbuf2Bk { bytes: cross, rows: self.partial_rows(cross) },
+                    &[],
+                    Some(pid),
+                );
             }
         }
     }
@@ -562,6 +662,66 @@ mod tests {
     }
 
     #[test]
+    fn cross_bank_row_maps_follow_producer_layouts() {
+        let g = resnet18();
+        // Layer-by-layer: every cross-bank transfer is annotated with a
+        // non-empty row map spanning the full channel, and a gather of a
+        // CoutBanked producer carries exactly the producer's striped map.
+        let t = trace_for(System::AimLike, &g, 2048, 0);
+        let mut gathers = 0;
+        for c in &t.cmds {
+            if let CmdKind::Bk2Gbuf { rows, .. } | CmdKind::Gbuf2Bk { rows, .. } = &c.kind {
+                gathers += 1;
+                assert!(!rows.is_empty(), "cross-bank command without a row map");
+                assert_eq!(rows.bank_count(), 16, "LbL maps stripe the whole channel");
+            }
+        }
+        assert!(gathers > 20, "ResNet18 LbL must gather every layer");
+        // A single-producer gather's map is the producer's full-map
+        // stripe: node 1 gathers the input (id 0, 150528 B over 16
+        // banks = 10 rows/bank, the figure host_row_maps pins).
+        let first_gather = t
+            .cmds
+            .iter()
+            .find_map(|c| match &c.kind {
+                CmdKind::Bk2Gbuf { rows, .. } if c.node == 1 => Some(*rows),
+                _ => None,
+            })
+            .expect("layer 1 gathers its input");
+        assert!(first_gather.iter().all(|(_, r)| r == 10), "{first_gather:?}");
+    }
+
+    #[test]
+    fn row_spans_give_distinct_maps_distinct_identities() {
+        let g = resnet18();
+        let t = trace_for(System::AimLike, &g, 2048, 0);
+        // Single-producer gathers carry a row span; spans of different
+        // producers never collide (each map owns a distinct row region).
+        let mut by_producer: HashMap<NodeId, crate::trace::RowSpan> = HashMap::new();
+        for c in &t.cmds {
+            if let CmdKind::Bk2Gbuf { .. } = c.kind {
+                if let (1, Some(span)) = (c.reads.len(), c.row_span) {
+                    let src = c.reads.iter().next().unwrap();
+                    if let Some(prev) = by_producer.insert(src, span) {
+                        assert_eq!(prev.first, span.first, "same map, same region base");
+                    }
+                }
+            }
+        }
+        assert!(by_producer.len() > 10, "most LbL gathers are single-producer");
+        let mut firsts: Vec<u64> = by_producer.values().map(|s| s.first).collect();
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert_eq!(firsts.len(), by_producer.len(), "regions must not collide");
+        // Writes and multi-operand gathers stay span-less.
+        for c in &t.cmds {
+            if matches!(c.kind, CmdKind::Gbuf2Bk { .. } | CmdKind::HostWrite { .. }) {
+                assert!(c.row_span.is_none(), "writes carry no reuse identity");
+            }
+        }
+    }
+
+    #[test]
     fn degraded_traces_keep_dead_cores_idle_and_avoid_retired_banks() {
         use crate::fault::{FaultConfig, FaultPlan};
         let g = resnet18_first8();
@@ -610,6 +770,14 @@ mod tests {
                                     "{sys:?}: dead core {core} streams its bank"
                                 );
                             }
+                        }
+                    }
+                    CmdKind::Bk2Gbuf { rows, .. } | CmdKind::Gbuf2Bk { rows, .. } => {
+                        for (b, _) in rows.iter() {
+                            assert!(
+                                alive_banks.contains(b),
+                                "{sys:?}: retired bank {b} in a cross-bank row map"
+                            );
                         }
                     }
                     _ => {}

@@ -336,11 +336,21 @@ pub enum CmdKind {
     Bk2Gbuf {
         /// Total bytes gathered over the shared bus.
         bytes: u64,
+        /// Per-bank DRAM rows the gather reads, from the producing
+        /// layer's tensor layout ([`RowMap`]). [`RowMap::EMPTY`] means
+        /// the generator had no layout (synthetic traces): the engines
+        /// fall back to splitting `ceil(bytes/ROW_BYTES)` activations
+        /// evenly across the touched bank groups.
+        rows: RowMap,
     },
     /// `PIM_GBUF2BK` — sequential GBUF→bank scatter (cross-bank write).
     Gbuf2Bk {
         /// Total bytes scattered over the shared bus.
         bytes: u64,
+        /// Per-bank DRAM rows the scatter writes, from the destination
+        /// layout ([`RowMap`]); see [`CmdKind::Bk2Gbuf`] for the
+        /// [`RowMap::EMPTY`] fallback.
+        rows: RowMap,
     },
     /// Host writes network input into banks over the channel interface,
     /// streaming bank-at-a-time through the banks of its row map (which
@@ -421,6 +431,21 @@ impl Deps {
     }
 }
 
+/// The per-bank row-address range one command streams, in the trace's
+/// row address space (the generator gives every feature map a distinct
+/// row region, so spans only compare equal when the data is the same).
+/// A command walks its banks from `first` to `last`; the open-row
+/// tracker (DESIGN.md §6.2) waives a re-open when a read's `first` row
+/// is the row its banks left open, and records `last` as the row left
+/// open afterwards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowSpan {
+    /// First per-bank row the stream touches.
+    pub first: u64,
+    /// Last per-bank row the stream touches (`≥ first`).
+    pub last: u64,
+}
+
 /// A command tagged with the graph node it serves and its data-flow
 /// annotations (see the module docs).
 #[derive(Debug, Clone, PartialEq)]
@@ -433,6 +458,10 @@ pub struct Cmd {
     pub reads: Deps,
     /// Feature map whose data or layout this command (re)defines.
     pub writes: Option<NodeId>,
+    /// Row identity of the stream ([`RowSpan`]), when the generator
+    /// knows it (single-map transfers). `None` disables open-row reuse
+    /// for this command and conservatively closes the banks it touches.
+    pub row_span: Option<RowSpan>,
 }
 
 /// A full workload trace.
@@ -497,7 +526,22 @@ impl Trace {
         reads: &[NodeId],
         writes: Option<NodeId>,
     ) {
-        self.cmds.push(Cmd { node, kind, reads: Deps::from_slice(reads), writes });
+        self.push_dep_rows(node, kind, reads, writes, None);
+    }
+
+    /// Append a command with data-flow annotations *and* row identity:
+    /// what [`Trace::push_dep`] records, plus the [`RowSpan`] the stream
+    /// covers (the generator sets this on single-map transfers so the
+    /// open-row tracker can recognise reuse).
+    pub fn push_dep_rows(
+        &mut self,
+        node: NodeId,
+        kind: CmdKind,
+        reads: &[NodeId],
+        writes: Option<NodeId>,
+        row_span: Option<RowSpan>,
+    ) {
+        self.cmds.push(Cmd { node, kind, reads: Deps::from_slice(reads), writes, row_span });
     }
 
     /// Largest node id any command references (its own node, its `reads`,
@@ -536,8 +580,8 @@ impl Trace {
                 CmdKind::GbcoreCmp { eltwise, .. } => s.gbcore_eltwise += eltwise,
                 CmdKind::Bk2Lbuf { bytes } => s.lbuf_fill += bytes.sum(),
                 CmdKind::Lbuf2Bk { bytes } => s.lbuf_spill += bytes.sum(),
-                CmdKind::Bk2Gbuf { bytes } => s.cross_bank_read += bytes,
-                CmdKind::Gbuf2Bk { bytes } => s.cross_bank_write += bytes,
+                CmdKind::Bk2Gbuf { bytes, .. } => s.cross_bank_read += bytes,
+                CmdKind::Gbuf2Bk { bytes, .. } => s.cross_bank_write += bytes,
                 CmdKind::HostWrite { bytes, .. } | CmdKind::HostRead { bytes, .. } => {
                     s.host_bytes += bytes
                 }
@@ -570,8 +614,26 @@ impl Trace {
                 CmdKind::Lbuf2Bk { bytes } => {
                     format!("PIM_LBUF2BK  {}B/core (parallel)", bytes.max())
                 }
-                CmdKind::Bk2Gbuf { bytes } => format!("PIM_BK2GBUF  {bytes}B (sequential)"),
-                CmdKind::Gbuf2Bk { bytes } => format!("PIM_GBUF2BK  {bytes}B (sequential)"),
+                CmdKind::Bk2Gbuf { bytes, rows } if rows.is_empty() => {
+                    format!("PIM_BK2GBUF  {bytes}B (sequential)")
+                }
+                CmdKind::Bk2Gbuf { bytes, rows } => {
+                    format!(
+                        "PIM_BK2GBUF  {bytes}B (sequential) <- {} banks / {} rows",
+                        rows.bank_count(),
+                        rows.total()
+                    )
+                }
+                CmdKind::Gbuf2Bk { bytes, rows } if rows.is_empty() => {
+                    format!("PIM_GBUF2BK  {bytes}B (sequential)")
+                }
+                CmdKind::Gbuf2Bk { bytes, rows } => {
+                    format!(
+                        "PIM_GBUF2BK  {bytes}B (sequential) -> {} banks / {} rows",
+                        rows.bank_count(),
+                        rows.total()
+                    )
+                }
                 CmdKind::HostWrite { bytes, rows } => {
                     format!(
                         "HOST_WRITE   {bytes}B -> {} banks / {} rows",
@@ -622,8 +684,8 @@ mod tests {
     #[test]
     fn stats_accumulate_by_kind() {
         let mut t = Trace::default();
-        t.push(1, CmdKind::Bk2Gbuf { bytes: 100 });
-        t.push(1, CmdKind::Gbuf2Bk { bytes: 50 });
+        t.push(1, CmdKind::Bk2Gbuf { bytes: 100, rows: RowMap::EMPTY });
+        t.push(1, CmdKind::Gbuf2Bk { bytes: 50, rows: RowMap::EMPTY });
         t.push(2, CmdKind::PimcoreCmp {
             flags: ExecFlags::ConvBnRelu,
             macs: PerCore::uniform(4, 1000),
@@ -646,10 +708,10 @@ mod tests {
     #[test]
     fn deps_annotations_roundtrip() {
         let mut t = Trace::default();
-        t.push(3, CmdKind::Bk2Gbuf { bytes: 8 });
+        t.push(3, CmdKind::Bk2Gbuf { bytes: 8, rows: RowMap::EMPTY });
         assert!(t.cmds[0].reads.is_empty());
         assert_eq!(t.cmds[0].writes, None);
-        t.push_dep(4, CmdKind::Gbuf2Bk { bytes: 8 }, &[1, 2], Some(4));
+        t.push_dep(4, CmdKind::Gbuf2Bk { bytes: 8, rows: RowMap::EMPTY }, &[1, 2], Some(4));
         let c = &t.cmds[1];
         assert_eq!(c.reads.iter().collect::<Vec<_>>(), vec![1, 2]);
         assert_eq!(c.reads.len(), 2);
@@ -666,9 +728,9 @@ mod tests {
     fn max_node_covers_reads_and_writes() {
         assert_eq!(Trace::default().max_node(), 0);
         let mut t = Trace::default();
-        t.push_dep(3, CmdKind::Bk2Gbuf { bytes: 8 }, &[7], None);
+        t.push_dep(3, CmdKind::Bk2Gbuf { bytes: 8, rows: RowMap::EMPTY }, &[7], None);
         assert_eq!(t.max_node(), 7);
-        t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 8 }, &[], Some(9));
+        t.push_dep(2, CmdKind::Gbuf2Bk { bytes: 8, rows: RowMap::EMPTY }, &[], Some(9));
         assert_eq!(t.max_node(), 9);
     }
 
@@ -677,8 +739,8 @@ mod tests {
         let cases: Vec<(CmdKind, &str)> = vec![
             (CmdKind::Bk2Lbuf { bytes: PerCore::zero(1) }, "PIM_BK2LBUF"),
             (CmdKind::Lbuf2Bk { bytes: PerCore::zero(1) }, "PIM_LBUF2BK"),
-            (CmdKind::Bk2Gbuf { bytes: 1 }, "PIM_BK2GBUF"),
-            (CmdKind::Gbuf2Bk { bytes: 1 }, "PIM_GBUF2BK"),
+            (CmdKind::Bk2Gbuf { bytes: 1, rows: RowMap::EMPTY }, "PIM_BK2GBUF"),
+            (CmdKind::Gbuf2Bk { bytes: 1, rows: RowMap::EMPTY }, "PIM_GBUF2BK"),
             (CmdKind::HostWrite { bytes: 1, rows: RowMap::EMPTY }, "HOST_WRITE"),
             (CmdKind::HostRead { bytes: 1, rows: RowMap::EMPTY }, "HOST_READ"),
             (CmdKind::GbcoreCmp { flags: ExecFlags::Pool, eltwise: 1 }, "GBcore_CMP"),
@@ -697,7 +759,7 @@ mod tests {
     fn dump_is_line_per_cmd() {
         let mut t = Trace::default();
         t.push(0, CmdKind::HostWrite { bytes: 42, rows: RowMap::uniform(16, 1) });
-        t.push(1, CmdKind::Bk2Gbuf { bytes: 7 });
+        t.push(1, CmdKind::Bk2Gbuf { bytes: 7, rows: RowMap::EMPTY });
         let d = t.dump(10);
         assert_eq!(d.lines().count(), 2);
         assert!(d.contains("PIM_BK2GBUF"));
