@@ -11,8 +11,10 @@
 //! CI runs this as a guardrail: `cargo bench --bench bench_sched --
 //! --assert-ratio 3` prints one machine-readable `guardrail:` line per
 //! system (plus a degraded `Fused4-faulty` point that times the replay
-//! loop, and a `Fused4-openrow-off` point that times the legacy
-//! every-command-reopens expansion) and a `guardrail-summary:` line,
+//! loop, a `Fused4-openrow-off` point that times the legacy
+//! every-command-reopens expansion, and a `Fused4-4ch` point that times
+//! the 4-channel model-parallel scale-out — four shard schedules plus
+//! the host-interconnect gather serialization) and a `guardrail-summary:` line,
 //! and exits non-zero if the
 //! worst event/analytic ratio exceeds the bar. `--json <path>` writes
 //! the same numbers as a `pimfused-bench-v1` [`pimfused::obs::BenchRecord`]
@@ -21,12 +23,14 @@
 
 use pimfused::benchkit::{bench, section};
 use pimfused::cnn::resnet::resnet18;
-use pimfused::config::{ArchConfig, System};
+use pimfused::config::{ArchConfig, Engine, PartitionKind, System};
 use pimfused::dataflow::{plan, CostModel};
 use pimfused::fault::FaultConfig;
 use pimfused::obs::BenchRecord;
+use pimfused::sim::channel::run_channels;
 use pimfused::sim::{event, simulate};
 use pimfused::trace::gen::generate;
+use pimfused::trace::partition::build_channels;
 
 fn main() {
     let mut args = std::env::args().skip(1);
@@ -102,6 +106,7 @@ fn main() {
             dead_cores: 0,
             transient_ppm: 20_000,
             max_retries: 3,
+            dead_channels: 0,
         });
         let p = plan(&g, &cfg);
         let tr = generate(&g, &cfg, &p, model);
@@ -158,6 +163,53 @@ fn main() {
         rec.metrics.gauge("sched.openrow_off.analytic_cmds_per_s", per_sec(an.median));
         rec.metrics.gauge("sched.openrow_off.event_cmds_per_s", per_sec(ev.median));
         rec.metrics.gauge("sched.openrow_off.ratio", ratio);
+    }
+    // Multi-channel scale-out: four model-parallel shard schedules plus
+    // the shared host-interconnect gather timeline. The composed run is
+    // four independent schedules, so the per-command cost must stay on
+    // the same bar — a regression here means the cross-channel plumbing
+    // (boundary readiness, interval reservation) itself got slow.
+    section("scheduling throughput, 4 channels (model partition)");
+    {
+        let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256)
+            .with_channels(4)
+            .with_partition(PartitionKind::Model);
+        let cfg_ev = cfg.clone().with_engine(Engine::Event);
+        let set = build_channels(&g, &cfg, model).expect("partition ResNet18 across 4 channels");
+        let n: usize = set.traces.iter().map(|t| t.cmds.len()).sum();
+        let an = bench(&format!("Fused4   analytic walk, 4ch ({n} cmds)"), 3, 200, || {
+            run_channels(&cfg, &set).result.cycles
+        });
+        let ev = bench(&format!("Fused4   event schedule, 4ch ({n} cmds)"), 3, 200, || {
+            run_channels(&cfg_ev, &set).result.cycles
+        });
+        let per_sec = |d: std::time::Duration| n as f64 / d.as_secs_f64();
+        let ratio = ev.median.as_secs_f64() / an.median.as_secs_f64().max(f64::MIN_POSITIVE);
+        if ratio > worst.0 {
+            worst = (ratio, "Fused4-4ch");
+        }
+        println!(
+            "  guardrail: system=Fused4-4ch analytic_cmds_per_s={:.0} event_cmds_per_s={:.0} ratio={:.3}",
+            per_sec(an.median),
+            per_sec(ev.median),
+            ratio,
+        );
+        rec.metrics.add("sched.channels4.cmds", n as u64);
+        rec.metrics.gauge("sched.channels4.analytic_cmds_per_s", per_sec(an.median));
+        rec.metrics.gauge("sched.channels4.event_cmds_per_s", per_sec(ev.median));
+        rec.metrics.gauge("sched.channels4.ratio", ratio);
+        // Per-channel makespans and interconnect load, so the artifact
+        // history shows load balance across shards, not just the total.
+        let out = run_channels(&cfg_ev, &set);
+        for (ch, &cycles) in out.report.channel_cycles.iter().enumerate() {
+            rec.metrics.add(&format!("sched.channels4.ch{ch}.cycles"), cycles);
+        }
+        rec.metrics.add("sched.channels4.interconnect_busy", out.report.interconnect_busy);
+        rec.metrics.add("sched.channels4.exchange_bytes", out.report.exchange_bytes);
+        rec.metrics.gauge(
+            "sched.channels4.interconnect_utilization",
+            out.report.interconnect_utilization(out.result.cycles),
+        );
     }
 
     println!(

@@ -16,7 +16,7 @@
 //! [`SweepResults::to_json`] schema. Bad subcommands or options fail with
 //! a non-zero exit and the usage text.
 
-use crate::config::{ArchConfig, Engine, System};
+use crate::config::{ArchConfig, Engine, PartitionKind, System};
 use crate::coordinator::{
     experiments, serve_to_csv, serve_to_json, Session, SweepGrid, SweepPoint, SweepResults,
 };
@@ -38,14 +38,17 @@ commands:
                                     [--slice-pipelining on|off]
                                     [--open-row on|off]
                                     [--trace-out chrome|csv] [--faults <spec>]
+                                    [--channels N] [--partition data|model]
   profile    schedule profiling     --workload <w> [--config <sys:GmK_Ln>]
                                     [--top N] [--trace-out chrome|csv]
                                     [--host-residency on|off]
                                     [--slice-pipelining on|off]
                                     [--open-row on|off] [--faults <spec>]
+                                    [--channels N] [--partition data|model]
   sweep      buffer design sweep    --systems aim,fused16,fused4 --gbuf 2K,32K
                                     --lbuf 0,256 --workload <w>
                                     [--engine analytic|event] [--json]
+                                    [--channels n1,n2,..] [--partition data|model]
   fig5 | fig6 | fig7                regenerate the paper's figures
                                     [--engine analytic|event]
   takeaways | headline              §V-D statistics / the headline claim
@@ -57,6 +60,7 @@ commands:
                                     [--open-row on|off]
                                     [--trace-out chrome|csv] [--faults <spec>]
                                     [--deadline CYC] [--retries N] [--backoff CYC]
+                                    [--channels N] [--partition data|model]
   degrade    graceful-degradation   --workload <w> [--config <sys:GmK_Ln>]
              sweep                  [--requests N] [--rate <req/s>] [--seed S]
                                     [--step BANKS] [--faults <spec>] [--json|--csv]
@@ -81,9 +85,16 @@ trace-out: emit the captured timeline instead of the report — chrome is
            csv one row per reservation (event engine only)
 faults: inject failures, e.g. --faults banks=4,cores=1,p=0.001,retries=3,seed=7
         banks=N retired banks, cores=N dead PIMcores (permanent; work remaps
-        onto the survivors), p = per-command transient error probability in
-        [0,1] (errored commands replay up to retries times), seed for the
-        deterministic fault plan
+        onto the survivors), channels=N retired DRAM channels (multi-channel
+        configs only; survivors absorb the shards), p = per-command transient
+        error probability in [0,1] (errored commands replay up to retries
+        times), seed for the deterministic fault plan
+channels: scale out across N independent DRAM channels sharing one host
+          interconnect (DESIGN.md §12); --partition data shards the batch
+          (no cross-channel traffic), model shards every layer's output
+          channels and gathers the shards over the interconnect at each
+          fused-step boundary; sweep --channels without --partition sweeps
+          both partitions
 degrade: sweep retired banks from 0 to num_banks - banks_per_pimcore (step
          defaults to one PIMcore's banks) and serve the same stream at each
          point; analytic engine, batch 1, drop-free queue, so goodput decays
@@ -178,6 +189,33 @@ impl Args {
         }
     }
 
+    /// `--channels N` (default 1 = the classic single-channel model).
+    /// Range checks beyond `>= 1` stay in [`ArchConfig::validate`].
+    fn channels(&self) -> Result<usize> {
+        match self.opts.get("channels") {
+            None => Ok(1),
+            Some(s) => {
+                let n: usize = s.parse().map_err(|_| {
+                    anyhow!("--channels must be an integer, got {s:?}\n{USAGE}")
+                })?;
+                if n == 0 {
+                    bail!("--channels must be >= 1\n{USAGE}");
+                }
+                Ok(n)
+            }
+        }
+    }
+
+    /// `--partition data|model`, when given.
+    fn partition(&self) -> Result<Option<PartitionKind>> {
+        match self.opts.get("partition") {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                PartitionKind::parse(s).map_err(|e| anyhow!("{e}\n{USAGE}"))?,
+            )),
+        }
+    }
+
     /// `--trace-out chrome|csv`, when given.
     fn trace_out(&self) -> Result<Option<crate::obs::TraceFormat>> {
         match self.opts.get("trace-out") {
@@ -209,6 +247,7 @@ impl Args {
             match k {
                 "banks" => fc.retired_banks = int()? as usize,
                 "cores" => fc.dead_cores = int()? as usize,
+                "channels" => fc.dead_channels = int()? as usize,
                 "p" => {
                     let p: f64 = v.parse().map_err(|_| {
                         anyhow!("--faults p must be a number, got {v:?}\n{USAGE}")
@@ -221,7 +260,9 @@ impl Args {
                 "retries" => fc.max_retries = int()? as u32,
                 "seed" => fc.seed = int()?,
                 other => {
-                    bail!("unknown --faults key {other:?} (banks|cores|p|retries|seed)\n{USAGE}")
+                    bail!(
+                        "unknown --faults key {other:?} (banks|cores|channels|p|retries|seed)\n{USAGE}"
+                    )
                 }
             }
         }
@@ -235,7 +276,7 @@ impl Args {
         match self.faults()? {
             None => Ok(cfg),
             Some(fc) => {
-                fc.validate(cfg.num_banks, cfg.banks_per_pimcore)
+                fc.validate(cfg.num_banks, cfg.banks_per_pimcore, cfg.channels)
                     .map_err(|e| anyhow!("{e}\n{USAGE}"))?;
                 Ok(cfg.with_faults(fc))
             }
@@ -273,6 +314,8 @@ pub fn run(args: &Args) -> Result<String> {
                 "open-row",
                 "trace-out",
                 "faults",
+                "channels",
+                "partition",
             ])?;
             let trace_out = args.trace_out()?;
             if trace_out.is_some() && args.flag("json") {
@@ -291,6 +334,8 @@ pub fn run(args: &Args) -> Result<String> {
                     .with_host_residency(args.host_residency()?)
                     .with_slice_pipelining(args.slice_pipelining()?)
                     .with_open_row_reuse(args.open_row()?)
+                    .with_channels(args.channels()?)
+                    .with_partition(args.partition()?.unwrap_or(PartitionKind::Data))
                     .with_tracing(trace_out.is_some()),
             )?;
             let faults = cfg.faults;
@@ -347,6 +392,25 @@ pub fn run(args: &Args) -> Result<String> {
                     occ.slid_slices,
                 ));
             }
+            if let Some(ch) = &r.channels {
+                let dead = if ch.dead_channels > 0 {
+                    format!(", {} dead", ch.dead_channels)
+                } else {
+                    String::new()
+                };
+                out.push_str(&format!(
+                    "channels: {} ({} partition, width {}{})\n  per-channel cycles: {:?}\n  interconnect: {} busy cycles ({} of makespan) | {} exchanges, {} B\n",
+                    ch.channels,
+                    ch.partition.name(),
+                    ch.width,
+                    dead,
+                    ch.channel_cycles,
+                    ch.interconnect_busy,
+                    crate::util::table::pct(ch.interconnect_utilization(r.cycles)),
+                    ch.exchanges.len(),
+                    ch.exchange_bytes,
+                ));
+            }
             if !faults.is_none() {
                 out.push_str(&format!(
                     "faults: {}\n  replayed cycles: {} | escalated commands: {}\n",
@@ -358,7 +422,9 @@ pub fn run(args: &Args) -> Result<String> {
             Ok(out)
         }
         "sweep" => {
-            args.check_opts(&["systems", "gbuf", "lbuf", "workload", "engine", "json"])?;
+            args.check_opts(&[
+                "systems", "gbuf", "lbuf", "workload", "engine", "json", "channels", "partition",
+            ])?;
             let systems: Vec<System> = args
                 .opts
                 .get("systems")
@@ -379,14 +445,41 @@ pub fn run(args: &Args) -> Result<String> {
             };
             let gbufs = parse_list("gbuf", "2K,8K,16K,32K,64K")?;
             let lbufs = parse_list("lbuf", "0,64,128,256,512")?;
+            // --channels n1,n2,... adds the scale-out axis; without an
+            // explicit --partition the sweep covers both strategies.
+            let channels: Option<Vec<usize>> = args
+                .opts
+                .get("channels")
+                .map(|s| {
+                    s.split(',')
+                        .map(|c| {
+                            let n: usize = c.trim().parse().map_err(|_| {
+                                anyhow!(
+                                    "--channels must be comma-separated integers, got {c:?}\n{USAGE}"
+                                )
+                            })?;
+                            if n == 0 {
+                                bail!("--channels must be >= 1\n{USAGE}");
+                            }
+                            Ok(n)
+                        })
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .transpose()?;
             let w = args.workload()?;
-            let results: SweepResults = SweepGrid::new()
+            let mut grid = SweepGrid::new()
                 .systems(systems)
                 .gbuf_bytes(gbufs)
                 .lbuf_bytes(lbufs)
                 .workload(w)
-                .engine(args.engine()?)
-                .run(&session)?;
+                .engine(args.engine()?);
+            match (channels, args.partition()?) {
+                (Some(chs), Some(p)) => grid = grid.channels(chs).partition(p),
+                (Some(chs), None) => grid = grid.channels(chs).partitions(PartitionKind::ALL),
+                (None, Some(p)) => grid = grid.partition(p),
+                (None, None) => {}
+            }
+            let results: SweepResults = grid.run(&session)?;
             results.ensure_ok()?;
             if args.flag("json") {
                 return Ok(results.to_json());
@@ -447,6 +540,8 @@ pub fn run(args: &Args) -> Result<String> {
                 "slice-pipelining",
                 "open-row",
                 "trace-out",
+                "channels",
+                "partition",
             ])?;
             if args.flag("json") && args.flag("csv") {
                 bail!("--json and --csv are mutually exclusive\n{USAGE}");
@@ -515,7 +610,9 @@ pub fn run(args: &Args) -> Result<String> {
                     .with_engine(args.engine_or(Engine::Event)?)
                     .with_host_residency(args.host_residency()?)
                     .with_slice_pipelining(args.slice_pipelining()?)
-                    .with_open_row_reuse(args.open_row()?),
+                    .with_open_row_reuse(args.open_row()?)
+                    .with_channels(args.channels()?)
+                    .with_partition(args.partition()?.unwrap_or(PartitionKind::Data)),
             )?;
             let sc = ServeConfig::new(cfg, args.workload()?, rate.unwrap_or(1.0))
                 .arrival(arrival)
@@ -662,6 +759,8 @@ pub fn run(args: &Args) -> Result<String> {
                 "slice-pipelining",
                 "open-row",
                 "faults",
+                "channels",
+                "partition",
             ])?;
             let top: usize = args
                 .opts
@@ -676,6 +775,8 @@ pub fn run(args: &Args) -> Result<String> {
                     .with_host_residency(args.host_residency()?)
                     .with_slice_pipelining(args.slice_pipelining()?)
                     .with_open_row_reuse(args.open_row()?)
+                    .with_channels(args.channels()?)
+                    .with_partition(args.partition()?.unwrap_or(PartitionKind::Data))
                     .with_tracing(true),
             )?;
             let w = args.workload()?;
@@ -686,8 +787,13 @@ pub fn run(args: &Args) -> Result<String> {
             }
             let occ = r.occupancy.as_ref().expect("event engine");
             // Certify the trace against the occupancy tallies before
-            // reporting anything derived from it.
-            st.verify(occ).map_err(anyhow::Error::msg)?;
+            // reporting anything derived from it. Multi-channel traces
+            // carry appended interconnect spans and a composed makespan
+            // the per-channel occupancy doesn't tally, so the exact
+            // cross-check only applies to single-channel schedules.
+            if r.channels.is_none() {
+                st.verify(occ).map_err(anyhow::Error::msg)?;
+            }
             let profile = crate::obs::PhaseProfile::from_trace(st);
             let metrics = crate::obs::MetricsRegistry::new();
             session.publish_metrics(&metrics);
@@ -1284,5 +1390,107 @@ mod tests {
         .unwrap();
         let out = run(&a).unwrap();
         assert_eq!(out.matches("Fused4/").count(), 4);
+    }
+
+    #[test]
+    fn simulate_channels_flag_reports_scale_out() {
+        let a = parse_args(&argv(
+            "simulate --config fused4:G8K_L128 --workload fig1 --engine event \
+             --channels 2 --partition model",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("/c2-model"), "{out}");
+        assert!(out.contains("channels: 2 (model partition"), "{out}");
+        assert!(out.contains("interconnect:"), "{out}");
+        assert_eq!(run(&a).unwrap(), out, "deterministic");
+        // --channels 1 is byte-identical to a run without the flag.
+        let base = "simulate --config fused4:G8K_L128 --workload fig1 --engine event";
+        let plain = run(&parse_args(&argv(base)).unwrap()).unwrap();
+        let one = run(&parse_args(&argv(&format!("{base} --channels 1"))).unwrap()).unwrap();
+        assert_eq!(plain, one);
+        assert!(!plain.contains("interconnect:"), "{plain}");
+    }
+
+    #[test]
+    fn channels_bad_specs_are_rejected() {
+        let err = |s: &str| run(&parse_args(&argv(s)).unwrap()).unwrap_err().to_string();
+        let e = err("simulate --workload fig1 --channels 0");
+        assert!(e.contains("--channels must be >= 1"), "{e}");
+        let e = err("simulate --workload fig1 --channels two");
+        assert!(e.contains("--channels must be an integer"), "{e}");
+        let e = err("simulate --workload fig1 --channels 99");
+        assert!(e.contains("exceeds the supported maximum"), "{e}");
+        let e = err("simulate --workload fig1 --partition diagonal");
+        assert!(e.contains("unknown partition"), "{e}");
+        let e = err("sweep --channels 0,2");
+        assert!(e.contains("--channels must be >= 1"), "{e}");
+        let e = err("fig5 --channels 2");
+        assert!(e.contains("unknown option --channels"), "{e}");
+        // Retiring every channel (or any channel of a single-channel
+        // config) fails the fault geometry check up front.
+        let e = err("simulate --workload fig1 --faults channels=1");
+        assert!(e.contains("must leave at least one"), "{e}");
+        let e = err("simulate --workload fig1 --channels 2 --faults channels=2");
+        assert!(e.contains("must leave at least one"), "{e}");
+    }
+
+    #[test]
+    fn sweep_channels_axis_covers_both_partitions() {
+        let a = parse_args(&argv(
+            "sweep --systems fused4 --gbuf 2K --lbuf 0 --workload fig1 --channels 1,2",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        // 1 system x 1 gbuf x 1 lbuf x {1,2} channels x both partitions.
+        assert_eq!(out.matches("Fused4/").count(), 4, "{out}");
+        assert!(out.contains("/c2-data"), "{out}");
+        assert!(out.contains("/c2-model"), "{out}");
+        // An explicit --partition pins the strategy.
+        let json = run(&parse_args(&argv(
+            "sweep --systems fused4 --gbuf 2K --lbuf 0 --workload fig1 \
+             --channels 2 --partition model --json",
+        ))
+        .unwrap())
+        .unwrap();
+        assert_eq!(json.matches("\"config\":").count(), 1, "{json}");
+        assert!(json.contains("/c2-model"), "{json}");
+        assert!(json.contains("\"channels\": {"), "{json}");
+        assert!(json.contains("\"interconnect_busy\": "), "{json}");
+    }
+
+    #[test]
+    fn serve_accepts_channels() {
+        let out = run(&parse_args(&argv(
+            "serve --workload fig1 --rate 50000 --requests 100 --channels 2 --partition data",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(out.contains("/c2-data"), "{out}");
+        assert!(out.contains("p99 latency"), "{out}");
+        // degrade doesn't take the flag.
+        let e = run(&parse_args(&argv("degrade --workload fig1 --channels 2")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown option --channels"), "{e}");
+    }
+
+    #[test]
+    fn profile_multi_channel_shows_cross_channel_phase() {
+        let a = parse_args(&argv(
+            "profile --config fused4:G8K_L128 --workload fig1 --channels 2 --partition model",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("profile: Fused4/G8K_L128/c2-model"), "{out}");
+        assert!(out.contains("cross-chan"), "{out}");
+        assert_eq!(run(&a).unwrap(), out, "deterministic");
+        // Single-channel profiles keep the classic header.
+        let plain = run(&parse_args(&argv(
+            "profile --config fused4:G8K_L128 --workload fig1",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(!plain.contains("cross-chan"), "{plain}");
     }
 }

@@ -106,6 +106,60 @@ impl Engine {
     }
 }
 
+/// How a multi-channel configuration partitions a CNN across channels
+/// (DESIGN.md §12). Irrelevant (and ignored) when
+/// [`ArchConfig::channels`] is 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionKind {
+    /// Data-parallel by batch: each channel runs the whole network on its
+    /// share of the batch. A single inference occupies one channel; the
+    /// extra channels pay off as serving throughput, not single-shot
+    /// latency.
+    Data,
+    /// Model-parallel by output channels (Cout): every layer's output
+    /// channels shard across the DRAM channels, and each layer boundary
+    /// all-gathers the sharded feature map over the host interconnect.
+    Model,
+}
+
+/// One row per partition kind: (variant, display name, CLI aliases) —
+/// the same table treatment as [`System`], so `name` and `parse` cannot
+/// drift.
+const PARTITION_TABLE: &[(PartitionKind, &str, &[&str])] = &[
+    (PartitionKind::Data, "data", &["batch", "dp"]),
+    (PartitionKind::Model, "model", &["cout", "mp"]),
+];
+
+impl PartitionKind {
+    /// Every partition kind, in `PARTITION_TABLE` order.
+    pub const ALL: [PartitionKind; 2] = [PartitionKind::Data, PartitionKind::Model];
+
+    fn row(&self) -> &'static (PartitionKind, &'static str, &'static [&'static str]) {
+        PARTITION_TABLE
+            .iter()
+            .find(|row| row.0 == *self)
+            .expect("every PartitionKind variant must have a PARTITION_TABLE row")
+    }
+
+    /// Display name, e.g. `data`.
+    pub fn name(&self) -> &'static str {
+        self.row().1
+    }
+
+    /// Parse a CLI spelling: the display name or any alias,
+    /// case-insensitively.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let t = s.trim().to_ascii_lowercase();
+        for &(p, name, aliases) in PARTITION_TABLE {
+            if t == name || aliases.contains(&t.as_str()) {
+                return Ok(p);
+            }
+        }
+        let names: Vec<&str> = PARTITION_TABLE.iter().map(|row| row.1).collect();
+        Err(format!("unknown partition {s:?} ({})", names.join("|")))
+    }
+}
+
 /// The three systems of §V-A3.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum System {
@@ -223,6 +277,15 @@ pub struct ArchConfig {
     /// all-zero default injects nothing and leaves every code path and
     /// serialized byte identical to a fault-free build (DESIGN.md §11).
     pub faults: crate::fault::FaultConfig,
+    /// Independent DRAM-PIM channels (devices) the workload scales out
+    /// over. Each channel is a full copy of this geometry with its own
+    /// schedule; cross-channel traffic meters on a shared host
+    /// interconnect ([`crate::sim::channel`]). The default 1 keeps every
+    /// code path — and every serialized byte — identical to the
+    /// single-channel model (DESIGN.md §12).
+    pub channels: usize,
+    /// How the CNN partitions across channels when `channels > 1`.
+    pub partition: PartitionKind,
 }
 
 impl ArchConfig {
@@ -251,6 +314,8 @@ impl ArchConfig {
             open_row_reuse: true,
             tracing: false,
             faults: crate::fault::FaultConfig::default(),
+            channels: 1,
+            partition: PartitionKind::Data,
         }
     }
 
@@ -300,6 +365,20 @@ impl ArchConfig {
         self
     }
 
+    /// Builder-style channel-count selection (see the field docs);
+    /// `with_channels(1)` restores the single-channel model.
+    pub fn with_channels(mut self, channels: usize) -> Self {
+        self.channels = channels;
+        self
+    }
+
+    /// Builder-style partition selection for multi-channel configs (see
+    /// the field docs); ignored while `channels == 1`.
+    pub fn with_partition(mut self, partition: PartitionKind) -> Self {
+        self.partition = partition;
+        self
+    }
+
     /// The paper's baseline: AiM-like with GBUF = 2 KB, LBUF = 0 (§V-A3).
     pub fn baseline() -> Self {
         Self::system(System::AimLike, 2 * 1024, 0)
@@ -310,9 +389,17 @@ impl ArchConfig {
         self.num_banks / self.banks_per_pimcore
     }
 
-    /// Paper notation, e.g. `Fused4/G32K_L256`.
+    /// Paper notation, e.g. `Fused4/G32K_L256`. Multi-channel configs
+    /// append the channel axis (`Fused4/G32K_L256/c4-model`);
+    /// single-channel labels are byte-identical to the pre-axis form.
     pub fn label(&self) -> String {
-        format!("{}/{}", self.system.name(), fmt_bufcfg(self.gbuf_bytes, self.lbuf_bytes))
+        let base =
+            format!("{}/{}", self.system.name(), fmt_bufcfg(self.gbuf_bytes, self.lbuf_bytes));
+        if self.channels > 1 {
+            format!("{base}/c{}-{}", self.channels, self.partition.name())
+        } else {
+            base
+        }
     }
 
     /// Parse `"fused4:G32K_L256"` into a config.
@@ -351,7 +438,17 @@ impl ArchConfig {
                 ));
             }
         }
-        self.faults.validate(self.num_banks, self.banks_per_pimcore)?;
+        if self.channels == 0 {
+            return Err("channels must be at least 1".into());
+        }
+        if self.channels > crate::sim::channel::MAX_CHANNELS {
+            return Err(format!(
+                "channels {} exceeds the supported maximum {}",
+                self.channels,
+                crate::sim::channel::MAX_CHANNELS
+            ));
+        }
+        self.faults.validate(self.num_banks, self.banks_per_pimcore, self.channels)?;
         self.timing.validate()
     }
 }
@@ -512,6 +609,56 @@ mod tests {
         let bad = ArchConfig::system(System::Fused4, 2048, 0)
             .with_faults(FaultConfig { retired_banks: 13, ..Default::default() });
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn partition_table_drives_name_and_parse() {
+        assert_eq!(PARTITION_TABLE.len(), PartitionKind::ALL.len());
+        for (row, p) in PARTITION_TABLE.iter().zip(PartitionKind::ALL) {
+            assert_eq!(row.0, p, "PARTITION_TABLE and ALL must agree on order");
+        }
+        for p in PartitionKind::ALL {
+            assert_eq!(PartitionKind::parse(p.name()).unwrap(), p);
+            assert_eq!(PartitionKind::parse(&p.name().to_ascii_uppercase()).unwrap(), p);
+        }
+        assert_eq!(PartitionKind::parse("batch").unwrap(), PartitionKind::Data);
+        assert_eq!(PartitionKind::parse("cout").unwrap(), PartitionKind::Model);
+        assert!(PartitionKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn channels_default_to_one() {
+        for sys in System::ALL {
+            let c = ArchConfig::system(sys, 2048, 0);
+            assert_eq!(c.channels, 1);
+            assert_eq!(c.partition, PartitionKind::Data);
+        }
+        let c = ArchConfig::baseline().with_channels(4).with_partition(PartitionKind::Model);
+        assert_eq!(c.channels, 4);
+        assert_eq!(c.partition, PartitionKind::Model);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn channel_labels_extend_only_above_one() {
+        let c = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+        assert_eq!(c.label(), "Fused4/G32K_L256");
+        assert_eq!(c.clone().with_channels(1).label(), "Fused4/G32K_L256");
+        assert_eq!(c.clone().with_channels(4).label(), "Fused4/G32K_L256/c4-data");
+        assert_eq!(
+            c.with_channels(2).with_partition(PartitionKind::Model).label(),
+            "Fused4/G32K_L256/c2-model"
+        );
+    }
+
+    #[test]
+    fn bad_channel_counts_rejected() {
+        assert!(ArchConfig::baseline().with_channels(0).validate().is_err());
+        assert!(ArchConfig::baseline()
+            .with_channels(crate::sim::channel::MAX_CHANNELS + 1)
+            .validate()
+            .is_err());
+        ArchConfig::baseline().with_channels(crate::sim::channel::MAX_CHANNELS).validate().unwrap();
     }
 
     #[test]

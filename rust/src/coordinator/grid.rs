@@ -28,7 +28,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::session::Session;
-use crate::config::{ArchConfig, Dataflow, Engine, System};
+use crate::config::{ArchConfig, Dataflow, Engine, PartitionKind, System};
 use crate::ppa::{Normalized, PpaReport};
 use crate::workload::Workload;
 use anyhow::{bail, Result};
@@ -94,6 +94,8 @@ pub struct SweepGrid {
     bufcfgs: Vec<(usize, usize)>,
     workloads: Vec<Workload>,
     engines: Vec<Engine>,
+    channels: Vec<usize>,
+    partitions: Vec<PartitionKind>,
     explicit_points: Vec<SweepPoint>,
 }
 
@@ -157,6 +159,25 @@ impl SweepGrid {
         self.engines([e])
     }
 
+    /// Channel counts to sweep (after the engine axis; default: 1).
+    pub fn channels(mut self, channels: impl IntoIterator<Item = usize>) -> Self {
+        self.channels = channels.into_iter().collect();
+        self
+    }
+
+    /// Partition strategies to sweep (innermost axis; default
+    /// [`PartitionKind::Data`], which is what single-channel configs
+    /// carry anyway).
+    pub fn partitions(mut self, partitions: impl IntoIterator<Item = PartitionKind>) -> Self {
+        self.partitions = partitions.into_iter().collect();
+        self
+    }
+
+    /// Convenience for a single-partition sweep.
+    pub fn partition(self, p: PartitionKind) -> Self {
+        self.partitions([p])
+    }
+
     /// Expand the explicit [`SweepGrid::from_points`] extras across the
     /// engine axis: `from_points(..).engine(e)` means "run exactly these
     /// points under `e`"; with no engine axis set, each point keeps the
@@ -179,14 +200,17 @@ impl SweepGrid {
 
     /// The ordered point list this grid expands to: workload-major, then
     /// system, then buffer config (GBUF-major, LBUF-minor), then engine,
-    /// then any [`SweepGrid::from_points`] extras (engine axis applied,
-    /// see [`SweepGrid::explicit_expanded`]).
+    /// then channel count, then partition, then any
+    /// [`SweepGrid::from_points`] extras (engine axis applied, see
+    /// [`SweepGrid::explicit_expanded`]).
     pub fn points(&self) -> Vec<SweepPoint> {
         let untouched = self.systems.is_empty()
             && self.gbufs.is_empty()
             && self.lbufs.is_empty()
             && self.bufcfgs.is_empty()
-            && self.workloads.is_empty();
+            && self.workloads.is_empty()
+            && self.channels.is_empty()
+            && self.partitions.is_empty();
         if untouched && !self.explicit_points.is_empty() {
             return self.explicit_expanded();
         }
@@ -205,18 +229,36 @@ impl SweepGrid {
         };
         let engines =
             if self.engines.is_empty() { vec![Engine::Analytic] } else { self.engines.clone() };
+        let channels = if self.channels.is_empty() { vec![1] } else { self.channels.clone() };
+        let partitions = if self.partitions.is_empty() {
+            vec![PartitionKind::Data]
+        } else {
+            self.partitions.clone()
+        };
         let mut pts = Vec::with_capacity(
-            workloads.len() * systems.len() * bufcfgs.len() * engines.len()
+            workloads.len()
+                * systems.len()
+                * bufcfgs.len()
+                * engines.len()
+                * channels.len()
+                * partitions.len()
                 + self.explicit_points.len(),
         );
         for &w in &workloads {
             for &s in &systems {
                 for &(g, l) in &bufcfgs {
                     for &e in &engines {
-                        pts.push(SweepPoint {
-                            cfg: ArchConfig::system(s, g, l).with_engine(e),
-                            workload: w,
-                        });
+                        for &ch in &channels {
+                            for &pk in &partitions {
+                                pts.push(SweepPoint {
+                                    cfg: ArchConfig::system(s, g, l)
+                                        .with_engine(e)
+                                        .with_channels(ch)
+                                        .with_partition(pk),
+                                    workload: w,
+                                });
+                            }
+                        }
                     }
                 }
             }
@@ -246,15 +288,22 @@ impl SweepGrid {
         // serially, so every parallel worker and every normalization hits
         // the session cache: exactly one baseline run per key, and no
         // worker ever builds while holding a cache mutex.
-        let mut warmed: Vec<(Workload, Engine, bool, bool)> = Vec::new();
-        let mut warmed_plans: Vec<(Workload, Dataflow)> = Vec::new();
+        let mut warmed: Vec<(Workload, Engine, bool, bool, usize, PartitionKind)> = Vec::new();
+        let mut warmed_plans: Vec<(Workload, Dataflow, usize, PartitionKind)> = Vec::new();
         for p in &points {
-            let bkey = (p.workload, p.cfg.engine, p.cfg.host_residency, p.cfg.slice_pipelining);
+            let bkey = (
+                p.workload,
+                p.cfg.engine,
+                p.cfg.host_residency,
+                p.cfg.slice_pipelining,
+                p.cfg.channels,
+                p.cfg.partition,
+            );
             if !warmed.contains(&bkey) {
                 session.baseline_matched(p.workload, &p.cfg)?;
                 warmed.push(bkey);
             }
-            let key = (p.workload, p.cfg.dataflow);
+            let key = (p.workload, p.cfg.dataflow, p.cfg.channels, p.cfg.partition);
             if !warmed_plans.contains(&key) {
                 // Ignore warm failures: a bad point must fail as its own
                 // row (the per-point run re-validates), not abort the
@@ -466,6 +515,43 @@ mod tests {
         }
         let ev = results.rows[1].report.as_ref().unwrap();
         assert!(ev.occupancy.is_some(), "event rows carry occupancy");
+    }
+
+    #[test]
+    fn channel_axes_are_innermost_after_engine() {
+        let pts = SweepGrid::new()
+            .systems([System::Fused4])
+            .gbuf_bytes([32 * 1024])
+            .lbuf_bytes([256])
+            .workload(Workload::Fig1)
+            .engines(Engine::ALL)
+            .channels([1, 2])
+            .partitions(PartitionKind::ALL)
+            .points();
+        assert_eq!(pts.len(), 2 * 2 * 2);
+        // Partition is innermost, then channels, then engine.
+        assert_eq!(
+            (pts[0].cfg.engine, pts[0].cfg.channels, pts[0].cfg.partition),
+            (Engine::Analytic, 1, PartitionKind::Data)
+        );
+        assert_eq!(pts[1].cfg.partition, PartitionKind::Model);
+        assert_eq!((pts[2].cfg.channels, pts[2].cfg.partition), (2, PartitionKind::Data));
+        assert_eq!(pts[4].cfg.engine, Engine::Event);
+        // Defaults: single channel, data partition.
+        assert!(SweepGrid::new()
+            .points()
+            .iter()
+            .all(|p| p.cfg.channels == 1 && p.cfg.partition == PartitionKind::Data));
+    }
+
+    #[test]
+    fn channel_axis_alone_builds_a_grid() {
+        // Setting only .channels() must not fall through to the
+        // explicit-points escape hatch logic — it's a touched axis.
+        let pts = SweepGrid::new().channels([1, 2, 4]).points();
+        assert_eq!(pts.len(), 3 * 3, "all systems × three channel counts");
+        assert_eq!(pts[0].cfg.channels, 1);
+        assert_eq!(pts[2].cfg.channels, 4);
     }
 
     #[test]

@@ -85,11 +85,22 @@ impl SweepResults {
     /// Serialize to CSV with a fixed header row. Failed points leave the
     /// metric columns empty and put the message in `error`; analytic rows
     /// (no occupancy breakdown) leave the occupancy columns empty.
+    ///
+    /// When any row of the sweep is multi-channel, four channel columns
+    /// (`channels,partition,interconnect_busy,interconnect_utilization`)
+    /// are inserted before `error`; a single-channel-only sweep keeps the
+    /// pre-axis header byte-for-byte (golden-tested in
+    /// `tests/session_api.rs`).
     pub fn to_csv(&self) -> String {
+        let multi = self.rows.iter().any(|r| r.point.cfg.channels > 1);
         let mut out = String::from(
             "config,system,gbuf_bytes,lbuf_bytes,workload,engine,cycles,energy_pj,area_mm2,\
-             norm_cycles,norm_energy,norm_area,host_bank_busy,act_window_busy,slid_slices,error\n",
+             norm_cycles,norm_energy,norm_area,host_bank_busy,act_window_busy,slid_slices,",
         );
+        if multi {
+            out.push_str("channels,partition,interconnect_busy,interconnect_utilization,");
+        }
+        out.push_str("error\n");
         for row in &self.rows {
             let cfg = &row.point.cfg;
             let _ = write!(
@@ -108,7 +119,7 @@ impl SweepResults {
                     let host_bk = occ.map(|o| o.host_bank_total().to_string()).unwrap_or_default();
                     let act_bk = occ.map(|o| o.act_busy_total().to_string()).unwrap_or_default();
                     let slid = occ.map(|o| o.slid_slices.to_string()).unwrap_or_default();
-                    let _ = writeln!(
+                    let _ = write!(
                         out,
                         "{},{},{},{},{},{},{},{},{},",
                         r.cycles,
@@ -121,10 +132,35 @@ impl SweepResults {
                         act_bk,
                         slid
                     );
+                    if multi {
+                        let (ib, iu) = r
+                            .channels
+                            .as_ref()
+                            .map(|c| {
+                                (
+                                    c.interconnect_busy.to_string(),
+                                    c.interconnect_utilization(r.cycles).to_string(),
+                                )
+                            })
+                            .unwrap_or_default();
+                        let _ = write!(
+                            out,
+                            "{},{},{},{},",
+                            cfg.channels,
+                            cfg.partition.name(),
+                            ib,
+                            iu
+                        );
+                    }
+                    out.push('\n');
                 }
                 _ => {
                     let err = row.report.as_ref().err().map(|e| e.to_string()).unwrap_or_default();
-                    let _ = writeln!(out, ",,,,,,,,,{}", csv_escape(&err));
+                    let _ = write!(out, ",,,,,,,,,");
+                    if multi {
+                        let _ = write!(out, ",,,,");
+                    }
+                    let _ = writeln!(out, "{}", csv_escape(&err));
                 }
             }
         }
@@ -303,6 +339,28 @@ fn json_utilization(occ: &crate::sim::ResourceOccupancy) -> String {
     )
 }
 
+/// The multi-channel summary object for `channels > 1` rows: configured
+/// and active channel counts, the partition strategy, interconnect busy
+/// cycles and their share of the composed makespan, the total bytes
+/// exchanged, the committed transfer count, and each channel's own
+/// schedule length (0 for idle/retired channels).
+fn json_channels(c: &crate::sim::ChannelReport, makespan: u64) -> String {
+    let cycles =
+        c.channel_cycles.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ");
+    format!(
+        "{{\"channels\": {}, \"width\": {}, \"dead_channels\": {}, \"partition\": \"{}\", \"interconnect_busy\": {}, \"interconnect_utilization\": {}, \"exchange_bytes\": {}, \"exchange_count\": {}, \"channel_cycles\": [{}]}}",
+        c.channels,
+        c.width,
+        c.dead_channels,
+        c.partition.name(),
+        c.interconnect_busy,
+        json_f64(c.interconnect_utilization(makespan)),
+        c.exchange_bytes,
+        c.exchanges.len(),
+        cycles,
+    )
+}
+
 fn json_row(out: &mut String, row: &SweepRow) {
     let cfg = &row.point.cfg;
     out.push_str("    {\n");
@@ -338,6 +396,11 @@ fn json_row(out: &mut String, row: &SweepRow) {
                 None => {
                     let _ = writeln!(out, "      \"utilization\": null,");
                 }
+            }
+            // Multi-channel rows only — single-channel rows keep the
+            // pre-axis schema byte-for-byte.
+            if let Some(c) = &r.channels {
+                let _ = writeln!(out, "      \"channels\": {},", json_channels(c, r.cycles));
             }
             out.push_str("      \"error\": null\n");
         }

@@ -34,11 +34,12 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cnn::Graph;
-use crate::config::{ArchConfig, Dataflow, Engine};
+use crate::config::{ArchConfig, Dataflow, Engine, PartitionKind};
 use crate::dataflow::{plan, CostModel, Plan};
 use crate::energy;
 use crate::ppa::{Normalized, PpaReport};
 use crate::trace::gen::generate;
+use crate::trace::partition::{build_channels, ChannelSet};
 use crate::workload::Workload;
 use anyhow::{Context, Result};
 
@@ -56,19 +57,27 @@ pub struct Session {
     // configs differing only in buffers/timing share one mapped plan.
     plans: Mutex<HashMap<(Workload, Dataflow), Arc<Plan>>>,
     // Baselines are keyed by (workload, engine, host-residency,
-    // slice-pipelining, open-row-reuse): normalization always compares
-    // like with like, so an event-engine experiment is measured against
-    // the baseline config run through the event engine, an
-    // interface-only host model against an interface-only baseline, a
-    // rigid-stagger run against a rigid-stagger baseline, and an
-    // every-command-reopens run against the same row model.
+    // slice-pipelining, open-row-reuse, channels, partition):
+    // normalization always compares like with like, so an event-engine
+    // experiment is measured against the baseline config run through the
+    // event engine, an interface-only host model against an
+    // interface-only baseline, a rigid-stagger run against a
+    // rigid-stagger baseline, an every-command-reopens run against the
+    // same row model, and a 4-channel model-parallel run against the
+    // baseline scaled out the same way.
     baselines: Mutex<BaselineCache>,
+    // Channel sets are keyed by (workload, config) with the engine and
+    // tracing axes canonicalized out — per-channel traces depend on
+    // neither, so one partitioning serves both engines.
+    channel_sets: Mutex<HashMap<(Workload, ArchConfig), Arc<ChannelSet>>>,
     counters: Counters,
 }
 
 /// Baseline memo: one entry per `(workload, engine, host_residency,
-/// slice_pipelining, open_row_reuse)` normalization axis combination.
-type BaselineCache = HashMap<(Workload, Engine, bool, bool, bool), Arc<PpaReport>>;
+/// slice_pipelining, open_row_reuse, channels, partition)` normalization
+/// axis combination.
+type BaselineCache =
+    HashMap<(Workload, Engine, bool, bool, bool, usize, PartitionKind), Arc<PpaReport>>;
 
 #[derive(Default)]
 struct Counters {
@@ -76,6 +85,7 @@ struct Counters {
     plan_builds: AtomicUsize,
     baseline_runs: AtomicUsize,
     points_run: AtomicUsize,
+    channel_set_builds: AtomicUsize,
 }
 
 /// Snapshot of a session's cache/work counters (see [`Session::stats`]).
@@ -92,6 +102,11 @@ pub struct SessionStats {
     pub baseline_runs: usize,
     /// Total pipeline evaluations, baselines included.
     pub points_run: usize,
+    /// Multi-channel partitionings built (one per distinct
+    /// `(workload, config)` with the engine/tracing axes canonicalized
+    /// out — the determinism suite uses this to prove per-channel traces
+    /// are generated exactly once).
+    pub channel_set_builds: usize,
 }
 
 impl Session {
@@ -109,6 +124,7 @@ impl Session {
             graphs: Mutex::new(HashMap::new()),
             plans: Mutex::new(HashMap::new()),
             baselines: Mutex::new(HashMap::new()),
+            channel_sets: Mutex::new(HashMap::new()),
             counters: Counters::default(),
         }
     }
@@ -180,8 +196,15 @@ impl Session {
     /// degraded config is normalized against the *healthy* baseline, so
     /// the ratio reads directly as "slowdown caused by the faults".
     pub fn baseline_matched(&self, w: Workload, cfg: &ArchConfig) -> Result<Arc<PpaReport>> {
-        let key =
-            (w, cfg.engine, cfg.host_residency, cfg.slice_pipelining, cfg.open_row_reuse);
+        let key = (
+            w,
+            cfg.engine,
+            cfg.host_residency,
+            cfg.slice_pipelining,
+            cfg.open_row_reuse,
+            cfg.channels,
+            cfg.partition,
+        );
         let mut m = self.baselines.lock().unwrap();
         if let Some(b) = m.get(&key) {
             return Ok(b.clone());
@@ -193,7 +216,9 @@ impl Session {
             .with_engine(cfg.engine)
             .with_host_residency(cfg.host_residency)
             .with_slice_pipelining(cfg.slice_pipelining)
-            .with_open_row_reuse(cfg.open_row_reuse);
+            .with_open_row_reuse(cfg.open_row_reuse)
+            .with_channels(cfg.channels)
+            .with_partition(cfg.partition);
         let r = Arc::new(
             self.run_with_model(&baseline_cfg, w, self.model)
                 .with_context(|| format!("evaluating baseline {}", baseline_cfg.label()))?,
@@ -226,16 +251,20 @@ impl Session {
             plan_builds: self.counters.plan_builds.load(Ordering::Relaxed),
             baseline_runs: self.counters.baseline_runs.load(Ordering::Relaxed),
             points_run: self.counters.points_run.load(Ordering::Relaxed),
+            channel_set_builds: self.counters.channel_set_builds.load(Ordering::Relaxed),
         }
     }
 
-    /// Ensure the graph and plan for `(w, cfg.dataflow)` are memoized.
-    /// The sweep executor calls this from its serial warm-up so parallel
-    /// workers never build inside the cache mutexes — they only take
-    /// cache hits.
+    /// Ensure the graph, plan, and (for multi-channel configs) channel
+    /// set for this point are memoized. The sweep executor calls this
+    /// from its serial warm-up so parallel workers never build inside
+    /// the cache mutexes — they only take cache hits.
     pub(crate) fn warm(&self, cfg: &ArchConfig, w: Workload) -> Result<()> {
         let g = self.graph(w)?;
         self.plan_for(&g, cfg, w)?;
+        if cfg.channels > 1 {
+            self.channel_set(cfg, w, self.model)?;
+        }
         Ok(())
     }
 
@@ -267,6 +296,9 @@ impl Session {
         cfg.validate()
             .map_err(anyhow::Error::msg)
             .context("invalid architecture config")?;
+        if cfg.channels > 1 {
+            return self.run_multi_channel(cfg, w, model);
+        }
         let g = self.graph(w)?;
         let p = self.plan_for(&g, cfg, w)?;
         let trace = generate(&g, cfg, &p, model);
@@ -300,6 +332,80 @@ impl Session {
             area: a,
             occupancy: out.occupancy,
             schedule,
+            channels: None,
+        })
+    }
+
+    /// The memoized [`ChannelSet`] for `(workload, config)`. Per-channel
+    /// traces depend on neither the engine nor the tracing flag, so both
+    /// axes are canonicalized out of the key and one partitioning serves
+    /// every engine. A model override bypasses the cache — the memo
+    /// belongs to the session model, exactly like the baseline memo.
+    fn channel_set(
+        &self,
+        cfg: &ArchConfig,
+        w: Workload,
+        model: CostModel,
+    ) -> Result<Arc<ChannelSet>> {
+        let g = self.graph(w)?;
+        let build = || -> Result<ChannelSet> {
+            self.counters.channel_set_builds.fetch_add(1, Ordering::Relaxed);
+            build_channels(&g, cfg, model).map_err(anyhow::Error::msg).with_context(|| {
+                format!("partitioning {} across {} channels", w.name(), cfg.channels)
+            })
+        };
+        if model != self.model {
+            return Ok(Arc::new(build()?));
+        }
+        let key = (w, cfg.clone().with_engine(Engine::Analytic).with_tracing(false));
+        let mut m = self.channel_sets.lock().unwrap();
+        if let Some(s) = m.get(&key) {
+            return Ok(s.clone());
+        }
+        let s = Arc::new(build()?);
+        m.insert(key, s.clone());
+        Ok(s)
+    }
+
+    /// The multi-channel pipeline (`cfg.channels > 1`): partition the
+    /// graph into per-channel traces (memoized), schedule every channel
+    /// independently, meter cross-channel exchanges on the shared host
+    /// interconnect, and compose the totals
+    /// ([`crate::sim::channel::run_channels`]). With tracing on, the
+    /// captured timeline is channel 0's schedule with the committed
+    /// `CH_XCHG` interconnect spans folded in
+    /// ([`crate::obs::ScheduleTrace::attach_exchanges`]).
+    fn run_multi_channel(
+        &self,
+        cfg: &ArchConfig,
+        w: Workload,
+        model: CostModel,
+    ) -> Result<PpaReport> {
+        let set = self.channel_set(cfg, w, model)?;
+        let outcome = crate::sim::channel::run_channels(cfg, &set);
+        let schedule = if cfg.tracing && cfg.engine == Engine::Event {
+            let (_, mut st) = crate::obs::ScheduleTrace::capture(cfg, &set.traces[0]);
+            st.attach_exchanges(&outcome.report, outcome.result.cycles);
+            Some(st)
+        } else {
+            None
+        };
+        let e = energy::energy(cfg, &outcome.result.actions);
+        let a = energy::area(cfg);
+        self.counters.points_run.fetch_add(1, Ordering::Relaxed);
+        Ok(PpaReport {
+            label: cfg.label(),
+            workload: w.name().to_string(),
+            engine: cfg.engine,
+            cycles: outcome.result.cycles,
+            energy_pj: e.total_pj(),
+            area_mm2: a.total_mm2(),
+            sim: outcome.result,
+            energy: e,
+            area: a,
+            occupancy: outcome.occupancy,
+            schedule,
+            channels: Some(outcome.report),
         })
     }
 
@@ -311,6 +417,7 @@ impl Session {
         m.add("session.plan_builds", st.plan_builds as u64);
         m.add("session.baseline_runs", st.baseline_runs as u64);
         m.add("session.points_run", st.points_run as u64);
+        m.add("session.channel_set_builds", st.channel_set_builds as u64);
     }
 }
 
@@ -357,8 +464,13 @@ impl Experiment<'_> {
             None => self.session.normalized(&self.cfg, self.workload),
             Some(m) => {
                 let r = self.session.run_with_model(&self.cfg, self.workload, m)?;
-                let baseline_cfg =
-                    self.session.baseline_cfg.clone().with_engine(self.cfg.engine);
+                let baseline_cfg = self
+                    .session
+                    .baseline_cfg
+                    .clone()
+                    .with_engine(self.cfg.engine)
+                    .with_channels(self.cfg.channels)
+                    .with_partition(self.cfg.partition);
                 let b = self.session.run_with_model(&baseline_cfg, self.workload, m)?;
                 Ok(r.normalize(&b))
             }
@@ -518,6 +630,53 @@ mod tests {
             1,
             "faults are not a normalization axis — the healthy baseline is reused"
         );
+    }
+
+    #[test]
+    fn channel_sets_are_memoized_across_engines() {
+        let s = Session::new();
+        let cfg = ArchConfig::system(System::Fused4, 32 * 1024, 256)
+            .with_channels(2)
+            .with_partition(PartitionKind::Model);
+        s.run(&cfg, Workload::Fig1).unwrap();
+        s.run(&cfg.clone().with_engine(Engine::Event), Workload::Fig1).unwrap();
+        assert_eq!(s.stats().channel_set_builds, 1, "one partitioning serves both engines");
+        s.run(&cfg.clone().with_channels(4), Workload::Fig1).unwrap();
+        assert_eq!(s.stats().channel_set_builds, 2, "a new channel count re-partitions");
+    }
+
+    #[test]
+    fn multi_channel_reports_carry_the_channel_summary() {
+        let s = Session::new();
+        let base = ArchConfig::system(System::Fused4, 32 * 1024, 256);
+        let cfg = base.clone().with_channels(2).with_partition(PartitionKind::Model);
+        let r = s.run(&cfg, Workload::Fig1).unwrap();
+        let c = r.channels.as_ref().expect("multi-channel runs carry the summary");
+        assert_eq!(c.channels, 2);
+        assert!(c.interconnect_busy > 0, "model partition crosses the interconnect");
+        assert!(r.interconnect_utilization().unwrap() > 0.0);
+        assert!(r.label.ends_with("/c2-model"), "label grows the channel suffix: {}", r.label);
+        let single = s.run(&base, Workload::Fig1).unwrap();
+        assert!(single.channels.is_none(), "single-channel reports carry no channel summary");
+        assert_eq!(single.interconnect_utilization(), None);
+    }
+
+    #[test]
+    fn baselines_are_keyed_by_channels_and_partition() {
+        let s = Session::new();
+        let cfg = ArchConfig::system(System::Fused4, 8192, 128);
+        s.normalized(&cfg, Workload::Fig1).unwrap();
+        assert_eq!(s.stats().baseline_runs, 1);
+        // A scaled-out point is normalized against the baseline scaled
+        // out the same way — and the baseline config itself, scaled out,
+        // self-normalizes to exactly 1.
+        let scaled = ArchConfig::baseline().with_channels(2).with_partition(PartitionKind::Model);
+        let n = s.normalized(&scaled, Workload::Fig1).unwrap();
+        assert!((n.cycles - 1.0).abs() < 1e-12, "scaled-out self-normalization");
+        assert_eq!(s.stats().baseline_runs, 2, "the channel axis gets its own baseline");
+        let data = scaled.clone().with_partition(PartitionKind::Data);
+        s.normalized(&data, Workload::Fig1).unwrap();
+        assert_eq!(s.stats().baseline_runs, 3, "each partition gets its own baseline");
     }
 
     #[test]

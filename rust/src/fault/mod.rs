@@ -49,12 +49,21 @@ pub struct FaultConfig {
     /// Replay budget per command; a command still failing after this
     /// many replays escalates to the host as a permanent fault.
     pub max_retries: u32,
+    /// Number of whole channels retired in a multi-channel config
+    /// ([`crate::config::ArchConfig::channels`]): the highest-indexed
+    /// channels go offline and their work redistributes over the
+    /// survivors (DESIGN.md §12). Ignored (and must be 0) when the
+    /// config has a single channel.
+    pub dead_channels: usize,
 }
 
 impl FaultConfig {
     /// Whether this config injects nothing at all (the default).
     pub fn is_none(&self) -> bool {
-        self.retired_banks == 0 && self.dead_cores == 0 && self.transient_ppm == 0
+        self.retired_banks == 0
+            && self.dead_cores == 0
+            && self.transient_ppm == 0
+            && self.dead_channels == 0
     }
 
     /// Whether any *permanent* fault (retired bank / dead core) is
@@ -64,22 +73,45 @@ impl FaultConfig {
     }
 
     /// One-line human summary (`banks=2 cores=1 p=0.001000 retries=3
-    /// seed=7`) for report headers.
+    /// seed=7`) for report headers. A `channels=` knob appears only when
+    /// whole channels are retired, so single-channel summaries stay
+    /// byte-identical to the pre-axis form.
     pub fn summary(&self) -> String {
-        format!(
+        let base = format!(
             "banks={} cores={} p={:.6} retries={} seed={}",
             self.retired_banks,
             self.dead_cores,
             self.transient_ppm as f64 / PPM_SCALE as f64,
             self.max_retries,
             self.seed
-        )
+        );
+        if self.dead_channels > 0 {
+            format!("{base} channels={}", self.dead_channels)
+        } else {
+            base
+        }
     }
 
-    /// Check the knobs against a channel geometry. At least one PIMcore
-    /// must survive with its full bank fan-in intact, else no remap
-    /// target exists.
-    pub fn validate(&self, num_banks: usize, banks_per_pimcore: usize) -> Result<(), String> {
+    /// Check the knobs against the **per-channel** geometry plus the
+    /// channel count. Bank/core knobs replicate identically in every
+    /// channel, so they validate against one channel's bank count — not
+    /// the `channels × num_banks` aggregate — and at least one PIMcore
+    /// must survive per surviving channel with its full fan-in intact,
+    /// else no remap target exists. `dead_channels` must leave at least
+    /// one channel alive.
+    pub fn validate(
+        &self,
+        num_banks: usize,
+        banks_per_pimcore: usize,
+        channels: usize,
+    ) -> Result<(), String> {
+        if self.dead_channels >= channels.max(1) {
+            return Err(format!(
+                "dead_channels {} must leave at least one of {} channels alive",
+                self.dead_channels,
+                channels.max(1)
+            ));
+        }
         if self.transient_ppm > PPM_SCALE {
             return Err(format!(
                 "transient fault probability {} ppm exceeds {} (p > 1)",
@@ -306,7 +338,7 @@ mod tests {
         let fc = FaultConfig::default();
         assert!(fc.is_none());
         assert!(!fc.has_permanent());
-        fc.validate(16, 1).unwrap();
+        fc.validate(16, 1, 1).unwrap();
         let plan = FaultPlan::build(&cfg_with(fc));
         assert!(!plan.is_degraded());
         assert!(!plan.has_transients());
@@ -319,16 +351,38 @@ mod tests {
     #[test]
     fn validate_rejects_out_of_range_knobs() {
         let fc = FaultConfig { transient_ppm: PPM_SCALE + 1, ..Default::default() };
-        assert!(fc.validate(16, 1).is_err());
+        assert!(fc.validate(16, 1, 1).is_err());
         let fc = FaultConfig { dead_cores: 16, ..Default::default() };
-        assert!(fc.validate(16, 1).is_err());
-        assert!(FaultConfig { dead_cores: 15, ..Default::default() }.validate(16, 1).is_ok());
+        assert!(fc.validate(16, 1, 1).is_err());
+        assert!(FaultConfig { dead_cores: 15, ..Default::default() }.validate(16, 1, 1).is_ok());
         let fc = FaultConfig { retired_banks: 16, ..Default::default() };
-        assert!(fc.validate(16, 1).is_err());
+        assert!(fc.validate(16, 1, 1).is_err());
         // 4-bank fan-in: at most 12 of 16 banks may retire.
         let fc = FaultConfig { retired_banks: 13, ..Default::default() };
-        assert!(fc.validate(16, 4).is_err());
-        assert!(FaultConfig { retired_banks: 12, ..Default::default() }.validate(16, 4).is_ok());
+        assert!(fc.validate(16, 4, 1).is_err());
+        assert!(FaultConfig { retired_banks: 12, ..Default::default() }.validate(16, 4, 1).is_ok());
+    }
+
+    #[test]
+    fn validate_checks_per_channel_geometry_not_aggregate() {
+        // 13 retired banks overflow ONE channel's 4-bank fan-in headroom
+        // even when 4 channels × 16 banks = 64 banks exist in aggregate:
+        // bank/core faults replicate per channel, so the per-channel
+        // geometry is what must stay viable.
+        let fc = FaultConfig { retired_banks: 13, ..Default::default() };
+        assert!(fc.validate(16, 4, 4).is_err());
+        assert!(FaultConfig { retired_banks: 12, ..Default::default() }.validate(16, 4, 4).is_ok());
+    }
+
+    #[test]
+    fn validate_bounds_dead_channels() {
+        let fc = FaultConfig { dead_channels: 1, ..Default::default() };
+        assert!(fc.validate(16, 1, 1).is_err(), "single channel cannot retire itself");
+        fc.validate(16, 1, 2).unwrap();
+        let fc = FaultConfig { dead_channels: 4, ..Default::default() };
+        assert!(fc.validate(16, 1, 4).is_err());
+        assert!(FaultConfig { dead_channels: 3, ..Default::default() }.validate(16, 1, 4).is_ok());
+        assert!(!fc.is_none(), "dead channels count as injected faults");
     }
 
     #[test]
@@ -428,10 +482,22 @@ mod tests {
 
     #[test]
     fn summary_names_every_knob() {
-        let fc = FaultConfig { seed: 7, retired_banks: 2, dead_cores: 1, transient_ppm: 1000, max_retries: 3 };
+        let fc = FaultConfig {
+            seed: 7,
+            retired_banks: 2,
+            dead_cores: 1,
+            transient_ppm: 1000,
+            max_retries: 3,
+            dead_channels: 0,
+        };
         let s = fc.summary();
         for needle in ["banks=2", "cores=1", "p=0.001000", "retries=3", "seed=7"] {
             assert!(s.contains(needle), "{s}");
         }
+        // The channels knob appears only when channels actually retire,
+        // so single-channel summaries keep their pre-axis bytes.
+        assert!(!s.contains("channels="), "{s}");
+        let s2 = FaultConfig { dead_channels: 2, ..fc }.summary();
+        assert!(s2.contains("channels=2"), "{s2}");
     }
 }

@@ -42,6 +42,10 @@ pub struct LayerPhase {
     pub near_bank: u64,
     /// Busy cycles of `PIM_BK2GBUF` / `PIM_GBUF2BK` spans.
     pub cross_bank: u64,
+    /// Busy cycles of `CH_XCHG` spans on the shared host interconnect —
+    /// cross-channel shard gathers of a multi-channel run
+    /// ([`crate::sim::channel`]). Always 0 for single-channel schedules.
+    pub cross_channel: u64,
     /// Busy cycles of `HOST_WRITE` / `HOST_READ` spans.
     pub host: u64,
     /// Reserved ACT-window cycles (tFAW/tRRD throttling slots).
@@ -108,6 +112,7 @@ impl PhaseProfile {
             match sp.res.class() {
                 ResourceClass::CmdBus => e.cmdbus += sp.busy,
                 ResourceClass::Act => e.act_window += sp.end - sp.start,
+                ResourceClass::Interconnect => e.cross_channel += sp.busy,
                 _ => match sp.kind {
                     "PIMcore_CMP" | "GBcore_CMP" => e.compute += sp.busy,
                     "PIM_BK2LBUF" | "PIM_LBUF2BK" => e.near_bank += sp.busy,
@@ -154,54 +159,52 @@ impl PhaseProfile {
 
     /// Render the per-layer breakdown table plus the top-`top` bottleneck
     /// commands — the default `pimfused profile` output.
+    ///
+    /// The `cross-chan` column appears only when some layer actually has
+    /// cross-channel cycles, so single-channel profiles stay
+    /// byte-identical to a build without the channels axis.
     pub fn render(&self, top: usize) -> String {
-        let mut t = Table::new(vec![
-            "node",
-            "cmds",
-            "window",
-            "compute",
-            "near-bank",
-            "cross-bank",
-            "host",
-            "act",
-            "cmdbus",
-            "stall",
-        ]);
+        let xc = self.layers.iter().any(|l| l.cross_channel > 0);
+        let mut hdr = vec!["node", "cmds", "window", "compute", "near-bank", "cross-bank"];
+        if xc {
+            hdr.push("cross-chan");
+        }
+        hdr.extend(["host", "act", "cmdbus", "stall"]);
+        let mut t = Table::new(hdr);
+        let phase_row = |head: String, window: String, p: &LayerPhase| -> Vec<String> {
+            let mut cells = vec![
+                head,
+                p.cmds.to_string(),
+                window,
+                p.compute.to_string(),
+                p.near_bank.to_string(),
+                p.cross_bank.to_string(),
+            ];
+            if xc {
+                cells.push(p.cross_channel.to_string());
+            }
+            cells.extend([
+                p.host.to_string(),
+                p.act_window.to_string(),
+                p.cmdbus.to_string(),
+                p.stall.to_string(),
+            ]);
+            cells
+        };
         let mut total = LayerPhase::default();
         for l in &self.layers {
-            t.row(vec![
-                l.node.to_string(),
-                l.cmds.to_string(),
-                format!("{}..{}", l.start, l.end),
-                l.compute.to_string(),
-                l.near_bank.to_string(),
-                l.cross_bank.to_string(),
-                l.host.to_string(),
-                l.act_window.to_string(),
-                l.cmdbus.to_string(),
-                l.stall.to_string(),
-            ]);
+            t.row(phase_row(l.node.to_string(), format!("{}..{}", l.start, l.end), l));
             total.cmds += l.cmds;
             total.compute += l.compute;
             total.near_bank += l.near_bank;
             total.cross_bank += l.cross_bank;
+            total.cross_channel += l.cross_channel;
             total.host += l.host;
             total.act_window += l.act_window;
             total.cmdbus += l.cmdbus;
             total.stall += l.stall;
         }
-        t.row(vec![
-            "total".to_string(),
-            total.cmds.to_string(),
-            format!("0..{}", self.makespan),
-            total.compute.to_string(),
-            total.near_bank.to_string(),
-            total.cross_bank.to_string(),
-            total.host.to_string(),
-            total.act_window.to_string(),
-            total.cmdbus.to_string(),
-            total.stall.to_string(),
-        ]);
+        t.row(phase_row("total".to_string(), format!("0..{}", self.makespan), &total));
         let mut out = t.render();
         let _ = writeln!(out, "top {} commands by busy cycles:", top.min(self.top.len()));
         let mut tt = Table::new(vec!["cmd", "node", "kind", "busy_cycles", "start", "done"]);

@@ -42,6 +42,9 @@ pub enum ResourceClass {
     Core,
     /// A DRAM bank.
     Bank,
+    /// The shared host interconnect that meters cross-channel exchanges
+    /// (multi-channel runs only; see [`crate::sim::channel`]).
+    Interconnect,
 }
 
 /// One row per class: `(class, export name)`. Single source of truth for
@@ -54,11 +57,12 @@ const CLASS_TABLE: &[(ResourceClass, &str)] = &[
     (ResourceClass::Act, "act"),
     (ResourceClass::Core, "core"),
     (ResourceClass::Bank, "bank"),
+    (ResourceClass::Interconnect, "interconnect"),
 ];
 
 impl ResourceClass {
     /// Every class, in export order.
-    pub const ALL: [ResourceClass; 7] = [
+    pub const ALL: [ResourceClass; 8] = [
         ResourceClass::CmdBus,
         ResourceClass::Bus,
         ResourceClass::Gbcore,
@@ -66,6 +70,7 @@ impl ResourceClass {
         ResourceClass::Act,
         ResourceClass::Core,
         ResourceClass::Bank,
+        ResourceClass::Interconnect,
     ];
 
     fn row(&self) -> &'static (ResourceClass, &'static str) {
@@ -106,6 +111,8 @@ pub enum ResourceId {
     Core(usize),
     /// Bank `.0`.
     Bank(usize),
+    /// The shared host interconnect (multi-channel runs only).
+    Interconnect,
 }
 
 impl ResourceId {
@@ -119,6 +126,7 @@ impl ResourceId {
             ResourceId::ActGroup(_) => ResourceClass::Act,
             ResourceId::Core(_) => ResourceClass::Core,
             ResourceId::Bank(_) => ResourceClass::Bank,
+            ResourceId::Interconnect => ResourceClass::Interconnect,
         }
     }
 
@@ -357,6 +365,35 @@ impl ScheduleTrace {
         }
         Ok(())
     }
+
+    /// Fold a multi-channel run's committed interconnect schedule into
+    /// this (channel-0) trace: one `CH_XCHG` span on
+    /// [`ResourceId::Interconnect`] per cross-channel transfer, each
+    /// attributed to the producing node's last command, and the makespan
+    /// raised to the composed multi-channel total (`makespan`).
+    ///
+    /// The result is what `pimfused profile --channels N` renders. It is
+    /// deliberately **not** [`ScheduleTrace::verify`]-able afterwards:
+    /// the composed makespan and the interconnect class exist only in
+    /// the multi-channel view, never in channel 0's
+    /// [`ResourceOccupancy`], so certification stays a single-channel
+    /// property and multi-channel callers skip the verify step.
+    pub fn attach_exchanges(&mut self, report: &crate::sim::ChannelReport, makespan: u64) {
+        for x in &report.exchanges {
+            let cmd = self.cmds.iter().rposition(|c| c.node == x.node).unwrap_or(0);
+            self.spans.push(TraceSpan {
+                cmd,
+                node: x.node,
+                kind: "CH_XCHG",
+                res: ResourceId::Interconnect,
+                start: x.start,
+                end: x.end,
+                busy: x.end - x.start,
+                slid: 0,
+            });
+        }
+        self.makespan = self.makespan.max(makespan);
+    }
 }
 
 #[cfg(test)]
@@ -380,6 +417,9 @@ mod tests {
         assert_eq!(ResourceId::ActGroup(1).label(), "act1");
         assert_eq!(ResourceId::Bank(3).index(), 3);
         assert_eq!(ResourceId::Host.index(), 0);
+        assert_eq!(ResourceId::Interconnect.label(), "interconnect");
+        assert_eq!(ResourceId::Interconnect.index(), 0);
+        assert_eq!(ResourceId::Interconnect.class().pid(), 8, "appended class keeps pids stable");
     }
 
     #[test]

@@ -31,6 +31,11 @@ pub struct PpaReport {
     /// The committed schedule timeline, captured only when the config ran
     /// the event engine with [`crate::config::ArchConfig::tracing`] on.
     pub schedule: Option<crate::obs::ScheduleTrace>,
+    /// Multi-channel summary (per-channel cycles, interconnect busy,
+    /// exchange schedule). `None` for single-channel runs, so their
+    /// reports — and everything serialized from them — are byte-identical
+    /// to a build without the channels axis.
+    pub channels: Option<crate::sim::ChannelReport>,
 }
 
 /// PPA ratios relative to a baseline run (the paper normalizes everything
@@ -105,6 +110,14 @@ impl PpaReport {
         }
     }
 
+    /// Host-interconnect utilization of a multi-channel run: the shared
+    /// interconnect's busy share of the composed makespan. `None` for
+    /// single-channel runs (no interconnect exists), `Some(0.0)` for
+    /// multi-channel runs that never exchange (data-parallel).
+    pub fn interconnect_utilization(&self) -> Option<f64> {
+        self.channels.as_ref().map(|c| c.interconnect_utilization(self.cycles))
+    }
+
     /// Per-layer phase attribution of the captured schedule
     /// ([`crate::obs::PhaseProfile`]). `None` unless the report was run
     /// with [`crate::config::ArchConfig::tracing`] on the event engine.
@@ -150,6 +163,7 @@ mod tests {
             },
             occupancy: None,
             schedule: None,
+            channels: None,
         }
     }
 

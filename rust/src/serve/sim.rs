@@ -39,28 +39,45 @@ pub struct ServiceProfile {
     /// Marginal cycles per additional request in a batch: the pipeline
     /// initiation interval, bounded below by the busiest resource.
     pub steady_cycles: u64,
+    /// Parallel serving lanes: a data-parallel multi-channel config runs
+    /// independent requests on independent channels, so a batch splits
+    /// into `ceil(b / lanes)` waves. 1 everywhere else (single-channel,
+    /// and model-parallel — where all channels cooperate on one request
+    /// and the payoff is a shorter `single_cycles` instead).
+    pub lanes: usize,
 }
 
 impl ServiceProfile {
     /// Derive a profile from a PPA report. Event-engine reports carry a
     /// per-resource occupancy breakdown, whose busiest entry is the
     /// initiation interval; analytic reports have none, so the steady
-    /// cost degenerates to the full single-inference cost.
+    /// cost degenerates to the full single-inference cost. Data-parallel
+    /// multi-channel reports contribute their surviving channel count as
+    /// serving lanes.
     pub fn from_report(report: &PpaReport) -> Self {
         let single = report.cycles.max(1);
         let steady = match &report.occupancy {
             Some(occ) => occ.busiest().clamp(1, single),
             None => single,
         };
-        ServiceProfile { single_cycles: single, steady_cycles: steady }
+        let lanes = match &report.channels {
+            Some(c) if c.partition == crate::config::PartitionKind::Data => {
+                c.channels.saturating_sub(c.dead_channels).max(1)
+            }
+            _ => 1,
+        };
+        ServiceProfile { single_cycles: single, steady_cycles: steady, lanes }
     }
 
-    /// Service cycles for a batch of `b` requests (`b >= 1`): the first
-    /// request pays the full schedule, the rest pay the initiation
-    /// interval each.
+    /// Service cycles for a batch of `b` requests (`b >= 1`): the batch
+    /// splits into `ceil(b / lanes)` waves; the first wave pays the full
+    /// schedule, each further wave pays the initiation interval. With one
+    /// lane this is the plain affine model (first request full, the rest
+    /// marginal).
     pub fn batch_cycles(&self, b: usize) -> u64 {
         debug_assert!(b >= 1);
-        self.single_cycles + (b as u64 - 1) * self.steady_cycles
+        let waves = crate::util::ceil_div(b, self.lanes.max(1)) as u64;
+        self.single_cycles + (waves - 1) * self.steady_cycles
     }
 }
 
@@ -376,17 +393,27 @@ mod tests {
 
     #[test]
     fn batch_cycles_is_affine() {
-        let p = ServiceProfile { single_cycles: 1000, steady_cycles: 40 };
+        let p = ServiceProfile { single_cycles: 1000, steady_cycles: 40, lanes: 1 };
         assert_eq!(p.batch_cycles(1), 1000);
         assert_eq!(p.batch_cycles(2), 1040);
         assert_eq!(p.batch_cycles(9), 1320);
     }
 
     #[test]
+    fn lanes_split_batches_into_waves() {
+        // Four data-parallel channels: a batch of four runs as one wave.
+        let p = ServiceProfile { single_cycles: 1000, steady_cycles: 40, lanes: 4 };
+        assert_eq!(p.batch_cycles(1), 1000);
+        assert_eq!(p.batch_cycles(4), 1000, "one wave fills all four lanes");
+        assert_eq!(p.batch_cycles(5), 1040, "fifth request starts a second wave");
+        assert_eq!(p.batch_cycles(9), 1080);
+    }
+
+    #[test]
     fn low_load_latency_equals_service_time() {
         // Gap 1000 cycles, service 100: no request ever waits.
         let sc = sc_with(1000.0);
-        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 100 };
+        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 100, lanes: 1 };
         let r = simulate_stream(&sc, prof);
         assert_eq!(r.completed, 50);
         assert_eq!(r.dropped, 0);
@@ -401,7 +428,7 @@ mod tests {
     fn saturation_drops_and_pegs_utilization() {
         // Gap 100 cycles, service 1000: offered load is 10x capacity.
         let sc = sc_with(100.0).requests(200).queue_depth(4);
-        let prof = ServiceProfile { single_cycles: 1000, steady_cycles: 1000 };
+        let prof = ServiceProfile { single_cycles: 1000, steady_cycles: 1000, lanes: 1 };
         let r = simulate_stream(&sc, prof);
         assert!(r.dropped > 0, "overload must overflow the queue");
         assert_eq!(r.completed + r.dropped, 200);
@@ -415,7 +442,7 @@ mod tests {
         // dispatches alone at arrival + 500 — except the last, which
         // drains eagerly once the stream is over.
         let sc = sc_with(1000.0).requests(3).batch(4).batch_timeout(500);
-        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 10 };
+        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 10, lanes: 1 };
         let r = simulate_stream(&sc, prof);
         assert_eq!(r.completed, 3);
         assert_eq!(r.batches, 3);
@@ -432,7 +459,7 @@ mod tests {
         // still over, but far less over than 8x1000).
         let sc1 = sc_with(100.0).requests(160).queue_depth(200);
         let sc8 = sc_with(100.0).requests(160).queue_depth(200).batch(8);
-        let prof = ServiceProfile { single_cycles: 1000, steady_cycles: 10 };
+        let prof = ServiceProfile { single_cycles: 1000, steady_cycles: 10, lanes: 1 };
         let r1 = simulate_stream(&sc1, prof);
         let r8 = simulate_stream(&sc8, prof);
         assert!(r8.mean_batch > 1.0, "batches must actually form");
@@ -445,7 +472,7 @@ mod tests {
     #[test]
     fn warmup_trims_the_front() {
         let sc = sc_with(1000.0).requests(10).warmup(0.3);
-        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 100 };
+        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 100, lanes: 1 };
         let r = simulate_stream(&sc, prof);
         assert_eq!(r.warmup_trimmed, 3);
         assert_eq!(r.latency.samples, 7);
@@ -459,7 +486,7 @@ mod tests {
         // still admits everyone, so the two delayed requests become
         // deadline *misses* — served, but not completed.
         let sc = sc_with(1000.0).requests(3).batch(4).batch_timeout(500).deadline(550);
-        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 10 };
+        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 10, lanes: 1 };
         let r = simulate_stream(&sc, prof);
         assert_eq!(r.completed, 1);
         assert_eq!(r.dropped_deadline_miss, 2);
@@ -477,7 +504,7 @@ mod tests {
         // cycles out) overshoots its deadline, so admission sheds it —
         // the queue never reaches its 8-deep capacity.
         let sc = sc_with(100.0).requests(50).queue_depth(8).deadline(2000);
-        let prof = ServiceProfile { single_cycles: 1000, steady_cycles: 1000 };
+        let prof = ServiceProfile { single_cycles: 1000, steady_cycles: 1000, lanes: 1 };
         let r = simulate_stream(&sc, prof);
         assert!(r.dropped_deadline_shed > 0, "overload must shed");
         assert_eq!(r.dropped_queue_full, 0, "shedding keeps the queue below capacity");
@@ -495,7 +522,7 @@ mod tests {
         // with exponential backoff and land as the backlog drains.
         let plain = sc_with(10.0).requests(20).queue_depth(2);
         let retrying = sc_with(10.0).requests(20).queue_depth(2).client_retries(5).backoff(50);
-        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 100 };
+        let prof = ServiceProfile { single_cycles: 100, steady_cycles: 100, lanes: 1 };
         let r0 = simulate_stream(&plain, prof);
         let r1 = simulate_stream(&retrying, prof);
         assert!(r0.dropped_queue_full > 0, "the burst must overflow the queue");

@@ -1,0 +1,376 @@
+//! Multi-channel scale-out driver (DESIGN.md §12): schedule each
+//! channel's trace independently on its own per-resource timelines, then
+//! meter the cross-channel exchanges on a single shared
+//! **host-interconnect** interval timeline so channel counts are not a
+//! free lunch.
+//!
+//! ## Composition model
+//!
+//! Channels are embarrassingly parallel inside a step: every channel's
+//! trace runs through the ordinary engine selected by
+//! [`crate::config::ArchConfig::engine`] with its own
+//! [`crate::sim::event::resources`] arena, untouched. What couples them
+//! is the exchange schedule: each [`ExchangePoint`] becomes *ready* when
+//! its channel's **analytic prefix** through the boundary command
+//! completes (engine-independent, so both engines agree on the exchange
+//! record), and then claims the interconnect timeline first-fit at or
+//! after its ready time, one transfer at a time — the gather serializes
+//! exactly like the command bus serializes issue slots.
+//!
+//! Totals compose so the single-channel engine invariants survive:
+//!
+//! * **event** = `max(max_c event_c, last exchange end)` — still ≥ every
+//!   per-resource busy sum, including the interconnect's;
+//! * **analytic** = `max_c analytic_c + Σ exchange durations` — still
+//!   ≥ the event total, because an exchange's ready time is an analytic
+//!   prefix (≤ `max_c analytic_c`) and the queue adds at most the serial
+//!   sum of durations;
+//! * **actions** = `Σ_c actions_c` plus the exchange bytes tallied once
+//!   as host-interface traffic — identical under both engines, so energy
+//!   stays engine-equal.
+//!
+//! [`ExchangePoint`]: crate::trace::partition::ExchangePoint
+
+use crate::cnn::NodeId;
+use crate::config::{ArchConfig, Engine, PartitionKind};
+use crate::sim::{self, dram, engine, ResourceOccupancy, SimResult};
+use crate::trace::partition::ChannelSet;
+
+/// Upper bound on [`ArchConfig::channels`] — keeps per-channel vectors
+/// small and the CLI honest about what the model has been tested at.
+pub const MAX_CHANNELS: usize = 16;
+
+/// A single-resource interval timeline with first-fit placement — the
+/// host interconnect's analogue of the command bus: one transfer holds
+/// the whole resource, reservations never overlap, and a transfer may
+/// backfill an earlier gap if one fits entirely.
+#[derive(Debug, Clone, Default)]
+pub struct IntervalTimeline {
+    /// Committed `[start, end)` reservations, kept sorted by start.
+    spans: Vec<(u64, u64)>,
+}
+
+impl IntervalTimeline {
+    /// An empty timeline.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve `dur` cycles at the earliest start ≥ `at_or_after` where
+    /// the whole interval fits; returns the committed start. Zero-length
+    /// reservations commit nothing and return `at_or_after`.
+    pub fn reserve(&mut self, at_or_after: u64, dur: u64) -> u64 {
+        if dur == 0 {
+            return at_or_after;
+        }
+        let mut start = at_or_after;
+        let mut at = 0usize;
+        for (i, &(s, e)) in self.spans.iter().enumerate() {
+            if start + dur <= s {
+                break;
+            }
+            if start < e {
+                start = e;
+            }
+            at = i + 1;
+        }
+        self.spans.insert(at, (start, start + dur));
+        start
+    }
+
+    /// Total reserved cycles.
+    pub fn busy(&self) -> u64 {
+        self.spans.iter().map(|&(s, e)| e - s).sum()
+    }
+
+    /// End of the last reservation (0 when empty).
+    pub fn end(&self) -> u64 {
+        self.spans.iter().map(|&(_, e)| e).max().unwrap_or(0)
+    }
+
+    /// Number of committed reservations.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Whether nothing has been reserved.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+}
+
+/// One committed cross-channel transfer on the interconnect timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExchangeSpan {
+    /// Source channel of the shard.
+    pub channel: usize,
+    /// Graph node whose sharded output crossed.
+    pub node: NodeId,
+    /// Shard bytes moved.
+    pub bytes: u64,
+    /// When the shard became ready (analytic prefix completion).
+    pub ready: u64,
+    /// Committed start on the interconnect timeline.
+    pub start: u64,
+    /// Committed end (`start` + transfer duration).
+    pub end: u64,
+}
+
+/// The multi-channel summary a [`crate::ppa::PpaReport`] carries when
+/// `channels > 1` (absent — and therefore byte-invisible — otherwise).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelReport {
+    /// Configured channel count.
+    pub channels: usize,
+    /// Channels that executed work (see
+    /// [`crate::trace::partition::ChannelSet::width`]).
+    pub width: usize,
+    /// Channels retired by the fault config.
+    pub dead_channels: usize,
+    /// Partition strategy.
+    pub partition: PartitionKind,
+    /// Per configured channel, that channel's own schedule length in
+    /// cycles (0 for idle and retired channels).
+    pub channel_cycles: Vec<u64>,
+    /// Busy cycles on the shared host interconnect.
+    pub interconnect_busy: u64,
+    /// Total bytes that crossed the interconnect.
+    pub exchange_bytes: u64,
+    /// Committed transfers, in interconnect-schedule order.
+    pub exchanges: Vec<ExchangeSpan>,
+}
+
+impl ChannelReport {
+    /// Interconnect utilization: busy share of the composed makespan.
+    pub fn interconnect_utilization(&self, makespan: u64) -> f64 {
+        if makespan == 0 {
+            0.0
+        } else {
+            self.interconnect_busy as f64 / makespan as f64
+        }
+    }
+}
+
+/// Result of running a [`ChannelSet`]: the composed [`SimResult`],
+/// channel 0's occupancy breakdown (event engine), and the channel
+/// summary.
+#[derive(Debug, Clone)]
+pub struct ChannelOutcome {
+    /// Composed cycles/actions/breakdowns (see the module docs).
+    pub result: SimResult,
+    /// Channel 0's per-resource occupancy (event engine only). The
+    /// channels are geometry-identical clones, so channel 0 is the
+    /// representative timeline; per-channel makespans live in
+    /// [`ChannelOutcome::report`].
+    pub occupancy: Option<ResourceOccupancy>,
+    /// The multi-channel summary.
+    pub report: ChannelReport,
+}
+
+/// Analytic prefix completion times for each channel's exchange
+/// boundaries: entry `b` is the serial cycle count through the boundary
+/// command of exchange `b`. A pure function of the trace (no replay
+/// draws), so both engines — and every thread — derive identical
+/// readiness.
+fn boundary_readiness(cfg: &ArchConfig, set: &ChannelSet, ch: usize) -> Vec<u64> {
+    let xs = &set.exchanges[ch];
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let mut ready = vec![0u64; xs.len()];
+    let mut scratch = SimResult::default();
+    let mut next = 0usize;
+    for (i, cmd) in set.traces[ch].cmds.iter().enumerate() {
+        engine::step(cfg, cmd, &mut scratch);
+        while next < xs.len() && xs[next].cmd == i {
+            ready[next] = scratch.cycles;
+            next += 1;
+        }
+    }
+    // Boundaries past the trace end (defensive): ready at the full prefix.
+    for r in ready.iter_mut().skip(next) {
+        *r = scratch.cycles;
+    }
+    ready
+}
+
+/// Run every channel of `set` under `cfg.engine`, schedule the exchange
+/// boundaries on the shared interconnect timeline, and compose the
+/// totals (see the module docs for the exact composition rules).
+pub fn run_channels(cfg: &ArchConfig, set: &ChannelSet) -> ChannelOutcome {
+    let outs: Vec<sim::SimOutcome> = set.traces.iter().map(|t| sim::run(cfg, t)).collect();
+    let readiness: Vec<Vec<u64>> =
+        (0..set.width).map(|ch| boundary_readiness(cfg, set, ch)).collect();
+
+    // Exchange schedule: boundary-major, channel-minor — the gather at
+    // boundary b must drain before boundary b+1's shards queue up, and
+    // within a boundary channels take the interconnect in index order.
+    let mut timeline = IntervalTimeline::new();
+    let mut exchanges = Vec::new();
+    for b in 0..set.num_boundaries() {
+        for ch in 0..set.width {
+            let xp = set.exchanges[ch][b];
+            let dur = dram::host_stream_cycles(&cfg.timing, xp.bytes);
+            if dur == 0 {
+                continue;
+            }
+            let ready = readiness[ch][b];
+            let start = timeline.reserve(ready, dur);
+            exchanges.push(ExchangeSpan {
+                channel: ch,
+                node: xp.node,
+                bytes: xp.bytes,
+                ready,
+                start,
+                end: start + dur,
+            });
+        }
+    }
+    let interconnect_busy = timeline.busy();
+    let last_end = exchanges.iter().map(|x| x.end).max().unwrap_or(0);
+
+    // Compose the per-channel results.
+    let mut result = outs[0].result;
+    for o in &outs[1..] {
+        result.actions.add(&o.result.actions);
+        result.cross_bank_cycles += o.result.cross_bank_cycles;
+        result.near_bank_cycles += o.result.near_bank_cycles;
+        result.gbcore_cycles += o.result.gbcore_cycles;
+        result.host_cycles += o.result.host_cycles;
+        result.replayed_cycles += o.result.replayed_cycles;
+        result.escalated_cmds += o.result.escalated_cmds;
+        result.open_row_hits += o.result.open_row_hits;
+    }
+    let exchange_bytes = set.total_exchange_bytes();
+    result.actions.host_bytes += exchange_bytes;
+    let compute_max = outs.iter().map(|o| o.result.cycles).max().unwrap_or(0);
+    result.cycles = match cfg.engine {
+        Engine::Analytic => compute_max + interconnect_busy,
+        Engine::Event => compute_max.max(last_end),
+    };
+
+    let mut channel_cycles = vec![0u64; set.channels];
+    for (ch, o) in outs.iter().enumerate() {
+        channel_cycles[ch] = o.result.cycles;
+    }
+    ChannelOutcome {
+        result,
+        occupancy: outs[0].occupancy,
+        report: ChannelReport {
+            channels: set.channels,
+            width: set.width,
+            dead_channels: set.dead_channels,
+            partition: set.partition,
+            channel_cycles,
+            interconnect_busy,
+            exchange_bytes,
+            exchanges,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::System;
+    use crate::dataflow::CostModel;
+    use crate::trace::partition::build_channels;
+    use crate::workload::Workload;
+
+    #[test]
+    fn timeline_serializes_and_backfills() {
+        let mut tl = IntervalTimeline::new();
+        assert_eq!(tl.reserve(10, 5), 10); // [10,15)
+        assert_eq!(tl.reserve(12, 5), 15, "overlap pushes to the free point"); // [15,20)
+        assert_eq!(tl.reserve(0, 5), 0, "a leading gap backfills"); // [0,5)
+        assert_eq!(tl.reserve(0, 6), 20, "a 6-cycle hole doesn't exist before 20");
+        assert_eq!(tl.reserve(5, 5), 5, "the [5,10) hole fits exactly");
+        assert_eq!(tl.busy(), 5 + 5 + 5 + 6 + 5);
+        assert_eq!(tl.end(), 26);
+        assert_eq!(tl.len(), 5);
+        assert_eq!(tl.reserve(99, 0), 99, "zero-length reservations commit nothing");
+        assert_eq!(tl.len(), 5);
+    }
+
+    #[test]
+    fn timeline_reservations_never_overlap() {
+        let mut tl = IntervalTimeline::new();
+        let mut spans = Vec::new();
+        let mut seed = 0x2545F491_4F6C_DD1Du64;
+        for _ in 0..200 {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            let at = seed % 500;
+            let dur = 1 + (seed >> 32) % 40;
+            let start = tl.reserve(at, dur);
+            assert!(start >= at);
+            spans.push((start, start + dur));
+        }
+        spans.sort_unstable();
+        for w in spans.windows(2) {
+            assert!(w[0].1 <= w[1].0, "{:?} overlaps {:?}", w[0], w[1]);
+        }
+        assert_eq!(tl.busy(), spans.iter().map(|&(s, e)| e - s).sum::<u64>());
+    }
+
+    fn channel_cfg(sys: System, channels: usize, p: PartitionKind, e: Engine) -> ArchConfig {
+        ArchConfig::system(sys, 32 * 1024, 256)
+            .with_channels(channels)
+            .with_partition(p)
+            .with_engine(e)
+    }
+
+    #[test]
+    fn data_partition_matches_single_channel() {
+        for e in Engine::ALL {
+            let c1 = channel_cfg(System::Fused4, 1, PartitionKind::Data, e);
+            let g = Workload::Fig1.graph();
+            let set1 = build_channels(&g, &c1, CostModel::default()).unwrap();
+            let o1 = run_channels(&c1, &set1);
+            let c4 = c1.clone().with_channels(4);
+            let set4 = build_channels(&g, &c4, CostModel::default()).unwrap();
+            let o4 = run_channels(&c4, &set4);
+            assert_eq!(o1.result, o4.result, "batch-sharded single shot is channel 0 alone");
+            assert_eq!(o4.report.interconnect_busy, 0);
+            assert_eq!(o4.report.channel_cycles[1..], [0, 0, 0]);
+        }
+    }
+
+    #[test]
+    fn model_partition_preserves_engine_invariants() {
+        let g = Workload::Fig1.graph();
+        for channels in [2usize, 4] {
+            let ca = channel_cfg(System::Fused4, channels, PartitionKind::Model, Engine::Analytic);
+            let ce = ca.clone().with_engine(Engine::Event);
+            let set = build_channels(&g, &ca, CostModel::default()).unwrap();
+            let oa = run_channels(&ca, &set);
+            let oe = run_channels(&ce, &set);
+            assert_eq!(
+                oa.result.actions, oe.result.actions,
+                "actions engine-equal at {channels} channels"
+            );
+            assert!(oe.result.cycles <= oa.result.cycles, "event ≤ analytic");
+            assert!(
+                oe.result.cycles >= oe.report.interconnect_busy,
+                "event ≥ interconnect busy"
+            );
+            assert_eq!(oa.report.exchanges, oe.report.exchanges, "exchange schedule engine-equal");
+            assert!(oa.report.interconnect_busy > 0, "model partition moves shards");
+        }
+    }
+
+    #[test]
+    fn exchange_bytes_are_tallied_as_host_traffic_once() {
+        let g = Workload::Fig1.graph();
+        let cfg = channel_cfg(System::Fused4, 2, PartitionKind::Model, Engine::Analytic);
+        let set = build_channels(&g, &cfg, CostModel::default()).unwrap();
+        let o = run_channels(&cfg, &set);
+        let per_channel: u64 = set
+            .traces
+            .iter()
+            .map(|t| sim::run(&cfg, t).result.actions.host_bytes)
+            .sum();
+        assert_eq!(o.result.actions.host_bytes, per_channel + set.total_exchange_bytes());
+    }
+}

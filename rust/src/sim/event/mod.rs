@@ -983,6 +983,7 @@ mod tests {
             dead_cores: 1,
             transient_ppm: 2_000,
             max_retries: 3,
+            dead_channels: 0,
         });
         let p = plan(&g, &cfg);
         let t = generate(&g, &cfg, &p, CostModel::default());

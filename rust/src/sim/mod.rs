@@ -44,10 +44,12 @@
 //! Both engines tally identical [`ActionCounts`] for the energy model,
 //! so energy reports never depend on engine choice.
 
+pub mod channel;
 pub mod dram;
 pub mod engine;
 pub mod event;
 
+pub use channel::{ChannelOutcome, ChannelReport, ExchangeSpan, IntervalTimeline};
 pub use engine::{simulate, SimResult};
 pub use event::{EventReport, ResourceOccupancy};
 

@@ -733,6 +733,7 @@ mod tests {
                 dead_cores: 1,
                 transient_ppm: 0,
                 max_retries: 0,
+                dead_channels: 0,
             });
             let fplan = FaultPlan::build(&cfg);
             assert!(fplan.is_degraded(), "{sys:?}: the plan must retire topology");

@@ -19,6 +19,7 @@
 //! commands of the same node".
 
 pub mod gen;
+pub mod partition;
 
 use crate::cnn::NodeId;
 

@@ -1,0 +1,362 @@
+//! Multi-channel graph partitioning (DESIGN.md §12): turn one CNN graph
+//! into per-channel command traces plus the cross-channel exchange
+//! boundaries the shared host interconnect meters
+//! ([`crate::sim::channel`]).
+//!
+//! Two partition strategies ([`crate::config::PartitionKind`]):
+//!
+//! * **Data-parallel** shards the *batch*: each channel runs the whole
+//!   network on its share of the requests. A single inference therefore
+//!   occupies exactly one channel (channel 0 gets the full trace, the
+//!   rest idle) and needs no exchanges — the extra channels pay off as
+//!   serving throughput ([`crate::serve`] splits batches across them),
+//!   not as single-shot latency.
+//! * **Model-parallel** shards every layer's *output channels* (Cout):
+//!   channel `i` computes `c/W + (i < c mod W)` of each layer's output
+//!   channels from the **full** input feature map, so at every plan-step
+//!   boundary the sharded outputs must all-gather over the host
+//!   interconnect before the next step's full-Cin compute can see them.
+//!
+//! Sharded graphs keep `cached_cin` / `cached_in_elems` at their *full*
+//! values: model-parallel compute is full-Cin × Cout-shard, which is
+//! exactly what [`crate::cnn::Node::macs`] / `weight_bytes` derive from
+//! the cached producer width. The effective width is capped at the
+//! narrowest layer so no shard is ever empty (a zero-channel feature map
+//! would fail [`crate::cnn::Graph::validate`]); channels beyond the cap
+//! idle, and channels retired by
+//! [`crate::fault::FaultConfig::dead_channels`] (the highest-indexed
+//! ones) are excluded before the cap applies.
+
+use crate::cnn::{Graph, NodeId, Op};
+use crate::config::{ArchConfig, PartitionKind};
+use crate::dataflow::{plan, CostModel, Plan, PlanStep};
+use crate::trace::gen::generate;
+use crate::trace::Trace;
+
+/// One cross-channel exchange contribution: at a plan-step boundary,
+/// one channel's shard of the step's output feature map crosses the
+/// host interconnect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExchangePoint {
+    /// Index of the last command of the producing step in this channel's
+    /// trace — the exchange becomes *ready* when the channel's analytic
+    /// prefix through this command completes.
+    pub cmd: usize,
+    /// The step's last graph node (what the exchange gathers).
+    pub node: NodeId,
+    /// Shard bytes this channel contributes to the gather.
+    pub bytes: u64,
+}
+
+/// The partitioned form of one workload on one multi-channel config:
+/// per-channel command traces plus the exchange boundaries between them.
+///
+/// Built once per `(workload, config)` by [`build_channels`] and memoized
+/// by the session ([`crate::coordinator::Session`]); consumed by the
+/// multi-channel driver ([`crate::sim::channel::run_channels`]).
+#[derive(Debug, Clone)]
+pub struct ChannelSet {
+    /// Configured channel count (including idle and retired channels).
+    pub channels: usize,
+    /// Channels that actually execute work (`traces.len()`): 1 for
+    /// data-parallel single-shot runs, `min(surviving channels,
+    /// narrowest layer width)` for model-parallel.
+    pub width: usize,
+    /// Channels retired by the fault config (highest-indexed first).
+    pub dead_channels: usize,
+    /// The partition strategy that produced this set.
+    pub partition: PartitionKind,
+    /// One command trace per active channel.
+    pub traces: Vec<Trace>,
+    /// Per active channel, one [`ExchangePoint`] per plan-step boundary
+    /// (every step except the last; empty for data-parallel). All
+    /// channels have the same boundary count, in the same step order.
+    pub exchanges: Vec<Vec<ExchangePoint>>,
+}
+
+impl ChannelSet {
+    /// Boundary count (exchanges per channel).
+    pub fn num_boundaries(&self) -> usize {
+        self.exchanges.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Total bytes that cross the interconnect across all boundaries and
+    /// channels.
+    pub fn total_exchange_bytes(&self) -> u64 {
+        self.exchanges.iter().flatten().map(|x| x.bytes).sum()
+    }
+}
+
+/// `c` output channels sharded `width` ways: shard `ch` gets
+/// `c/width + (ch < c mod width)`.
+fn shard_c(c: usize, ch: usize, width: usize) -> usize {
+    c / width + usize::from(ch < c % width)
+}
+
+/// Clone `g` with every non-input feature map (and Conv/Fc `cout`)
+/// narrowed to channel `ch`'s Cout shard. Producer caches stay full
+/// (see the module docs).
+fn shard_graph(g: &Graph, ch: usize, width: usize) -> Graph {
+    let mut sg = g.clone();
+    for n in sg.nodes.iter_mut().skip(1) {
+        let sc = shard_c(n.shape.c, ch, width);
+        n.shape.c = sc;
+        match &mut n.op {
+            Op::Conv { cout, .. } => *cout = sc,
+            Op::Fc { cout } => *cout = sc,
+            _ => {}
+        }
+    }
+    sg.name = format!("{}_ch{}of{}", g.name, ch, width);
+    sg
+}
+
+/// The last node a plan step produces (what crosses a boundary).
+fn step_last_node(s: &PlanStep) -> NodeId {
+    match *s {
+        PlanStep::Fused { end, .. } => end,
+        PlanStep::Lbl { node } => node,
+    }
+}
+
+/// Per plan step, the index of its last command in `trace`. Commands are
+/// generated in step order, so each step's commands are contiguous; a
+/// step that generated no commands inherits the previous step's boundary
+/// (its readiness is unchanged). Input-node commands (the host staging
+/// the network input) belong to the first step.
+fn step_boundaries(trace: &Trace, p: &Plan) -> Vec<usize> {
+    let mut node_step = vec![0usize; 1 + p.steps.iter().map(step_last_node).max().unwrap_or(0)];
+    for (si, s) in p.steps.iter().enumerate() {
+        match *s {
+            PlanStep::Fused { start, end, .. } => {
+                for n in start..=end {
+                    node_step[n] = si;
+                }
+            }
+            PlanStep::Lbl { node } => node_step[node] = si,
+        }
+    }
+    let mut last = vec![usize::MAX; p.steps.len()];
+    for (i, c) in trace.cmds.iter().enumerate() {
+        let si = node_step.get(c.node).copied().unwrap_or(0);
+        last[si] = i;
+    }
+    // Carry forward over command-less steps.
+    let mut prev = 0usize;
+    for l in last.iter_mut() {
+        if *l == usize::MAX {
+            *l = prev;
+        } else {
+            prev = *l;
+        }
+    }
+    last
+}
+
+/// Partition `g` across `cfg.channels` and build the per-channel traces
+/// and exchange boundaries. `cfg.channels` may be 1 (one full trace, no
+/// exchanges) — the single-channel pipeline does not call this, but the
+/// property suite uses it to cross-check.
+pub fn build_channels(g: &Graph, cfg: &ArchConfig, model: CostModel) -> Result<ChannelSet, String> {
+    let dead = cfg.faults.dead_channels;
+    let alive = cfg
+        .channels
+        .checked_sub(dead)
+        .filter(|&a| a > 0)
+        .ok_or_else(|| format!("dead_channels {dead} retires all {} channels", cfg.channels))?;
+    match cfg.partition {
+        _ if alive == 1 => build_single(g, cfg, model),
+        PartitionKind::Data => build_single(g, cfg, model),
+        PartitionKind::Model => build_model(g, cfg, model, alive),
+    }
+    .map(|mut set| {
+        set.channels = cfg.channels;
+        set.dead_channels = dead;
+        set.partition = cfg.partition;
+        set
+    })
+}
+
+/// Data-parallel (or one surviving channel): channel 0 runs the whole
+/// network, every other channel idles, nothing crosses the interconnect.
+fn build_single(g: &Graph, cfg: &ArchConfig, model: CostModel) -> Result<ChannelSet, String> {
+    let p = plan(g, cfg);
+    p.validate(g)?;
+    let trace = generate(g, cfg, &p, model);
+    Ok(ChannelSet {
+        channels: cfg.channels,
+        width: 1,
+        dead_channels: 0,
+        partition: cfg.partition,
+        traces: vec![trace],
+        exchanges: vec![Vec::new()],
+    })
+}
+
+/// Model-parallel: Cout shards across the surviving channels, one
+/// all-gather boundary after every plan step but the last.
+fn build_model(
+    g: &Graph,
+    cfg: &ArchConfig,
+    model: CostModel,
+    alive: usize,
+) -> Result<ChannelSet, String> {
+    let min_c = g.layers().map(|n| n.shape.c).min().unwrap_or(1).max(1);
+    let width = alive.min(min_c);
+    let mut traces = Vec::with_capacity(width);
+    let mut exchanges = Vec::with_capacity(width);
+    for ch in 0..width {
+        let sg = shard_graph(g, ch, width);
+        sg.validate()?;
+        let p = plan(&sg, cfg);
+        p.validate(&sg)?;
+        let trace = generate(&sg, cfg, &p, model);
+        let last = step_boundaries(&trace, &p);
+        // One exchange per step boundary — every step except the final
+        // one must all-gather its sharded output before the next step's
+        // full-Cin compute.
+        let mut xs = Vec::with_capacity(p.steps.len().saturating_sub(1));
+        for (si, s) in p.steps.iter().enumerate().take(p.steps.len().saturating_sub(1)) {
+            let node = step_last_node(s);
+            xs.push(ExchangePoint {
+                cmd: last[si],
+                node,
+                bytes: sg.nodes[node].shape.bytes() as u64,
+            });
+        }
+        traces.push(trace);
+        exchanges.push(xs);
+    }
+    // The scheduler pairs boundary b of every channel into one gather, so
+    // the shard plans must agree on the step structure. Shard Cout deltas
+    // are at most one output channel, which never flips a fusion decision
+    // today — fail loudly rather than mis-pair if that ever changes.
+    for xs in exchanges.iter().skip(1) {
+        if xs.len() != exchanges[0].len()
+            || xs.iter().zip(&exchanges[0]).any(|(a, b)| a.node != b.node)
+        {
+            return Err(format!(
+                "model partition produced misaligned step boundaries across channel shards of {}",
+                g.name
+            ));
+        }
+    }
+    Ok(ChannelSet {
+        channels: cfg.channels,
+        width,
+        dead_channels: 0,
+        partition: cfg.partition,
+        traces,
+        exchanges,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::System;
+    use crate::workload::Workload;
+
+    fn cfg(channels: usize, p: PartitionKind) -> ArchConfig {
+        ArchConfig::system(System::Fused4, 32 * 1024, 256)
+            .with_channels(channels)
+            .with_partition(p)
+    }
+
+    #[test]
+    fn shard_widths_sum_to_full() {
+        for c in [3usize, 10, 64, 512] {
+            for w in 1..=4 {
+                let total: usize = (0..w).map(|ch| shard_c(c, ch, w)).sum();
+                assert_eq!(total, c, "c={c} w={w}");
+                // Balanced within one.
+                let max = (0..w).map(|ch| shard_c(c, ch, w)).max().unwrap();
+                let min = (0..w).map(|ch| shard_c(c, ch, w)).min().unwrap();
+                assert!(max - min <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_graphs_conserve_macs_and_output_bytes() {
+        let g = Workload::ResNet18First8.graph();
+        let w = 4;
+        let shards: Vec<Graph> = (0..w).map(|ch| shard_graph(&g, ch, w)).collect();
+        for sg in &shards {
+            sg.validate().unwrap();
+        }
+        for id in 1..g.nodes.len() {
+            let full = &g.nodes[id];
+            let macs: usize = shards.iter().map(|sg| sg.nodes[id].macs()).sum();
+            assert_eq!(macs, full.macs(), "node {id} MAC shards must sum to the full layer");
+            let bytes: usize = shards.iter().map(|sg| sg.nodes[id].shape.bytes()).sum();
+            assert_eq!(bytes, full.shape.bytes(), "node {id} output shards must tile the map");
+        }
+    }
+
+    #[test]
+    fn data_partition_is_channel_zero_plus_idlers() {
+        let g = Workload::Fig1.graph();
+        let set = build_channels(&g, &cfg(4, PartitionKind::Data), CostModel::default()).unwrap();
+        assert_eq!(set.channels, 4);
+        assert_eq!(set.width, 1);
+        assert_eq!(set.num_boundaries(), 0);
+        assert_eq!(set.total_exchange_bytes(), 0);
+        // Channel 0's trace is the unpartitioned single-channel trace.
+        let c1 = build_channels(&g, &cfg(1, PartitionKind::Data), CostModel::default()).unwrap();
+        assert_eq!(set.traces[0].cmds, c1.traces[0].cmds);
+    }
+
+    #[test]
+    fn model_partition_exchanges_cover_every_boundary() {
+        let g = Workload::Fig1.graph();
+        let c = cfg(2, PartitionKind::Model);
+        let set = build_channels(&g, &c, CostModel::default()).unwrap();
+        assert_eq!(set.width, 2);
+        let p = plan(&g, &c);
+        assert_eq!(set.num_boundaries(), p.steps.len() - 1);
+        for xs in &set.exchanges {
+            assert_eq!(xs.len(), set.num_boundaries(), "same boundary count per channel");
+            let mut prev = 0;
+            for x in xs {
+                assert!(x.bytes > 0, "every shard moves bytes");
+                assert!(x.cmd >= prev, "boundaries advance through the trace");
+                prev = x.cmd;
+            }
+        }
+        // The gathered bytes at each boundary tile the full feature map.
+        for b in 0..set.num_boundaries() {
+            let node = set.exchanges[0][b].node;
+            let total: u64 = set.exchanges.iter().map(|xs| xs[b].bytes).sum();
+            assert_eq!(total, g.nodes[node].shape.bytes() as u64);
+        }
+    }
+
+    #[test]
+    fn width_caps_at_the_narrowest_layer() {
+        // Fig1 is a single shallow layer stack; its narrowest layer width
+        // bounds how many channels can hold a non-empty Cout shard.
+        let g = Workload::Fig1.graph();
+        let min_c = g.layers().map(|n| n.shape.c).min().unwrap();
+        let set =
+            build_channels(&g, &cfg(16, PartitionKind::Model), CostModel::default()).unwrap();
+        assert_eq!(set.width, 16.min(min_c));
+        for t in &set.traces {
+            assert!(!t.cmds.is_empty(), "active channels execute work");
+        }
+    }
+
+    #[test]
+    fn dead_channels_shrink_the_active_width() {
+        let g = Workload::Fig1.graph();
+        let mut c = cfg(4, PartitionKind::Model);
+        c.faults.dead_channels = 2;
+        let set = build_channels(&g, &c, CostModel::default()).unwrap();
+        assert_eq!(set.dead_channels, 2);
+        assert_eq!(set.width, 2, "retired channels take no work");
+        // The survivors' shards still tile the full map.
+        let b0_node = set.exchanges[0][0].node;
+        let total: u64 = set.exchanges.iter().map(|xs| xs[0].bytes).sum();
+        assert_eq!(total, g.nodes[b0_node].shape.bytes() as u64);
+    }
+}

@@ -1,0 +1,359 @@
+//! Cross-channel certification suite (DESIGN.md §12): the multi-channel
+//! scale-out axis must preserve every single-channel engine invariant —
+//! actions and energy engine-equal, event ≤ analytic, per-channel
+//! schedules audit-legal — over random configs × workloads × channel
+//! counts × both partitions; `channels = 1` must stay byte-identical to
+//! the pre-axis pipeline; the scaling laws must hold (data-parallel
+//! never slower with more channels, model-parallel sub-linear once the
+//! interconnect is contended); and the sweep/serve paths must stay
+//! deterministic across the serial and threaded executors.
+
+use pimfused::config::{ArchConfig, Engine, PartitionKind, System};
+use pimfused::coordinator::{Session, SweepGrid};
+use pimfused::dataflow::CostModel;
+use pimfused::ppa::PpaReport;
+use pimfused::serve::ServeConfig;
+use pimfused::sim::channel::run_channels;
+use pimfused::sim::event;
+use pimfused::trace::partition::{build_channels, ChannelSet, ExchangePoint};
+use pimfused::trace::{Cmd, CmdKind, Deps, RowMap, Trace};
+use pimfused::util::prop::{check_no_shrink, Gen};
+use pimfused::workload::Workload;
+
+fn fused4(channels: usize, p: PartitionKind) -> ArchConfig {
+    ArchConfig::system(System::Fused4, 32 * 1024, 256)
+        .with_channels(channels)
+        .with_partition(p)
+}
+
+/// The single-channel engine-agreement contract, extended across the
+/// channels axis: identical actions and energy under both engines, event
+/// ≤ analytic, event ≥ the interconnect's busy cycles, and an
+/// engine-equal exchange schedule (readiness is an analytic prefix, so
+/// the engines cannot disagree about it).
+fn assert_channel_agreement(session: &Session, cfg: &ArchConfig, w: Workload, ctx: &str) {
+    let a = session.run(&cfg.clone().with_engine(Engine::Analytic), w).unwrap();
+    let e = session.run(&cfg.clone().with_engine(Engine::Event), w).unwrap();
+    assert_eq!(e.sim.actions, a.sim.actions, "{ctx}: actions must be engine-equal");
+    assert_eq!(e.energy_pj, a.energy_pj, "{ctx}: energy must be engine-equal");
+    assert!(
+        e.cycles <= a.cycles,
+        "{ctx}: event {} must not exceed analytic {}",
+        e.cycles,
+        a.cycles
+    );
+    let occ = e.occupancy.as_ref().expect("event engine reports occupancy");
+    assert!(
+        e.cycles >= occ.busiest(),
+        "{ctx}: event {} below channel 0's busiest resource {}",
+        e.cycles,
+        occ.busiest()
+    );
+    if cfg.channels > 1 {
+        let ca = a.channels.as_ref().expect("multi-channel analytic summary");
+        let ce = e.channels.as_ref().expect("multi-channel event summary");
+        assert_eq!(ca.exchanges, ce.exchanges, "{ctx}: exchange schedule engine-equal");
+        assert_eq!(ca.exchange_bytes, ce.exchange_bytes, "{ctx}");
+        assert!(
+            e.cycles >= ce.interconnect_busy,
+            "{ctx}: event {} below interconnect busy {}",
+            e.cycles,
+            ce.interconnect_busy
+        );
+        for (ch, &c) in ce.channel_cycles.iter().enumerate() {
+            assert!(
+                c <= e.cycles,
+                "{ctx}: channel {ch} makespan {c} exceeds composed {}",
+                e.cycles
+            );
+        }
+    } else {
+        assert!(a.channels.is_none(), "{ctx}: single-channel reports carry no channel summary");
+        assert!(e.channels.is_none(), "{ctx}");
+    }
+}
+
+#[test]
+fn engines_agree_across_channels_and_partitions() {
+    // Random (system, buffers, workload) points × {1, 2, 4} channels ×
+    // both partitions: the agreement invariants are axis-independent.
+    let session = Session::new();
+    check_no_shrink(
+        "channel-agreement-random",
+        16,
+        |g: &mut Gen| {
+            let sys = *g.choose(&System::ALL);
+            let gbuf = *g.choose(&[8192usize, 32768]);
+            let lbuf = *g.choose(&[0usize, 256]);
+            let w = *g.choose(&[Workload::Fig1, Workload::Fig3, Workload::ResNet18First8]);
+            let channels = *g.choose(&[1usize, 2, 4]);
+            let p = *g.choose(&PartitionKind::ALL);
+            (sys, gbuf, lbuf, w, channels, p)
+        },
+        |&(sys, gbuf, lbuf, w, channels, p)| {
+            let cfg = ArchConfig::system(sys, gbuf, lbuf)
+                .with_channels(channels)
+                .with_partition(p);
+            let ctx = format!("{} on {} x{channels} {}", w.name(), cfg.label(), p.name());
+            assert_channel_agreement(&session, &cfg, w, &ctx);
+            true
+        },
+    );
+}
+
+#[test]
+fn per_channel_traces_pass_the_scheduler_audit() {
+    // Every shard trace the partitioner emits must be a legal input to
+    // the event scheduler: the audit replays dependencies, resource
+    // exclusivity, and the open-row state machine per channel.
+    for p in PartitionKind::ALL {
+        for channels in [2usize, 4] {
+            let cfg = fused4(channels, p).with_engine(Engine::Event);
+            let g = Workload::Fig3.graph();
+            let set = build_channels(&g, &cfg, CostModel::default()).unwrap();
+            for (ch, t) in set.traces.iter().enumerate() {
+                if let Err(e) = event::audit(&cfg, t) {
+                    panic!("{} x{channels} channel {ch}: illegal schedule: {e}", p.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_channel_results_are_byte_identical_to_the_pre_axis_pipeline() {
+    // A sweep that spells out `channels = [1]` / `partition = data` must
+    // serialize byte-for-byte like one that never mentions the axis:
+    // the channels axis is invisible until it is actually used.
+    let base_grid = SweepGrid::new()
+        .systems([System::AimLike, System::Fused4])
+        .gbuf_bytes([2048, 32768])
+        .lbuf_bytes([0, 256])
+        .workload(Workload::Fig1)
+        .engines(Engine::ALL);
+    let axis_grid = SweepGrid::new()
+        .systems([System::AimLike, System::Fused4])
+        .gbuf_bytes([2048, 32768])
+        .lbuf_bytes([0, 256])
+        .workload(Workload::Fig1)
+        .engines(Engine::ALL)
+        .channels([1])
+        .partition(PartitionKind::Data);
+    let base = base_grid.run(&Session::new()).unwrap();
+    let axis = axis_grid.run(&Session::new()).unwrap();
+    assert_eq!(base.to_json(), axis.to_json(), "JSON golden unchanged by channels=1");
+    assert_eq!(base.to_csv(), axis.to_csv(), "CSV golden unchanged by channels=1");
+
+    // Same for serving: an explicit single-channel config reproduces the
+    // pre-axis report exactly.
+    let session = Session::new();
+    let plain = ServeConfig::new(
+        ArchConfig::system(System::Fused4, 32 * 1024, 256).with_engine(Engine::Event),
+        Workload::Fig1,
+        20_000.0,
+    )
+    .requests(100)
+    .batch(4)
+    .seed(7);
+    let spelled = ServeConfig::new(
+        fused4(1, PartitionKind::Data).with_engine(Engine::Event),
+        Workload::Fig1,
+        20_000.0,
+    )
+    .requests(100)
+    .batch(4)
+    .seed(7);
+    assert_eq!(
+        session.serve(&plain).unwrap(),
+        session.serve(&spelled).unwrap(),
+        "serving is byte-identical at channels=1"
+    );
+}
+
+#[test]
+fn data_parallel_cycles_never_increase_with_channel_count() {
+    // Batch sharding gives a single inference exactly one channel, so
+    // single-shot cycles are monotone non-increasing (in fact constant)
+    // in the channel count; the extra channels pay off as serving lanes.
+    let session = Session::new();
+    for e in Engine::ALL {
+        let one = session
+            .run(&fused4(1, PartitionKind::Data).with_engine(e), Workload::ResNet18First8)
+            .unwrap()
+            .cycles;
+        let mut prev = one;
+        for channels in [2usize, 4, 8] {
+            let r = session
+                .run(
+                    &fused4(channels, PartitionKind::Data).with_engine(e),
+                    Workload::ResNet18First8,
+                )
+                .unwrap();
+            assert!(
+                r.cycles <= prev,
+                "{} channels regressed ResNet18 cycles: {} > {prev} ({e:?})",
+                channels,
+                r.cycles
+            );
+            assert_eq!(r.cycles, one, "data partition single shot is channel 0 alone ({e:?})");
+            let ch = r.channels.as_ref().unwrap();
+            assert_eq!(ch.interconnect_busy, 0, "batch sharding moves nothing cross-channel");
+            prev = r.cycles;
+        }
+    }
+}
+
+#[test]
+fn model_parallel_speedup_is_sublinear_under_interconnect_contention() {
+    // Cout sharding buys real single-shot speedup, but every plan-step
+    // boundary all-gathers over the shared interconnect — so once the
+    // interconnect reports busy cycles, speedup(C) must be < C.
+    let session = Session::new();
+    let base = session
+        .run(&fused4(1, PartitionKind::Data).with_engine(Engine::Event), Workload::ResNet18First8)
+        .unwrap()
+        .cycles;
+    for channels in [2usize, 4] {
+        let r = session
+            .run(
+                &fused4(channels, PartitionKind::Model).with_engine(Engine::Event),
+                Workload::ResNet18First8,
+            )
+            .unwrap();
+        let ch = r.channels.as_ref().unwrap();
+        assert!(ch.interconnect_busy > 0, "model partition must contend for the interconnect");
+        let util = r.interconnect_utilization().unwrap();
+        assert!(util > 0.0 && util <= 1.0, "utilization {util} out of range");
+        assert!(
+            r.cycles * channels as u64 > base,
+            "{channels}-channel model partition speedup must be sub-linear: \
+             {} * {channels} <= {base}",
+            r.cycles
+        );
+    }
+}
+
+#[test]
+fn simultaneous_gathers_serialize_on_the_interconnect() {
+    // Hand-built two-channel set: identical one-command shard traces, so
+    // both boundary shards become ready at the same instant and the
+    // second transfer has no choice but to queue behind the first on the
+    // interval timeline.
+    let cfg = fused4(2, PartitionKind::Model).with_engine(Engine::Event);
+    let shard = || Trace {
+        cmds: vec![Cmd {
+            node: 1,
+            kind: CmdKind::HostRead { bytes: 4096, rows: RowMap::EMPTY },
+            reads: Deps::EMPTY,
+            writes: None,
+            row_span: None,
+        }],
+    };
+    let set = ChannelSet {
+        channels: 2,
+        width: 2,
+        dead_channels: 0,
+        partition: PartitionKind::Model,
+        traces: vec![shard(), shard()],
+        exchanges: vec![
+            vec![ExchangePoint { cmd: 0, node: 1, bytes: 4096 }],
+            vec![ExchangePoint { cmd: 0, node: 1, bytes: 4096 }],
+        ],
+    };
+    let o = run_channels(&cfg, &set);
+    let x = &o.report.exchanges;
+    assert_eq!(x.len(), 2);
+    assert_eq!(x[0].ready, x[1].ready, "identical shards become ready together");
+    assert!(x[0].start >= x[0].ready);
+    assert_eq!(x[1].start, x[0].end, "the second gather starts exactly when the first ends");
+    assert!(x[1].start > x[1].ready, "provably serialized: it waited past its ready time");
+    assert_eq!(
+        o.report.interconnect_busy,
+        (x[0].end - x[0].start) + (x[1].end - x[1].start),
+        "no overlap on the shared resource"
+    );
+    assert!(o.result.cycles >= x[1].end, "the makespan covers the queued gather");
+}
+
+#[test]
+fn threaded_sweep_with_channel_axis_is_byte_identical_to_serial() {
+    // 3 systems × 3 GBUFs × 2 LBUFs × 2 channel counts × 2 partitions =
+    // 72 points: above the executor's serial threshold (64), so this
+    // exercises per-channel scheduling on the threaded path.
+    let grid = SweepGrid::new()
+        .systems(System::ALL)
+        .gbuf_bytes([2048, 8192, 32768])
+        .lbuf_bytes([0, 256])
+        .workload(Workload::Fig1)
+        .channels([1, 2])
+        .partitions(PartitionKind::ALL);
+    let points = grid.points();
+    assert!(points.len() > 64, "need the threaded path, got {} points", points.len());
+
+    let r1 = grid.run(&Session::new()).unwrap();
+    let r2 = grid.run(&Session::new()).unwrap();
+    r1.ensure_ok().unwrap();
+    assert_eq!(r1.to_json(), r2.to_json(), "threaded sweep is run-to-run byte-identical");
+    assert_eq!(r1.to_csv(), r2.to_csv());
+
+    // Every threaded row matches an independent serial run.
+    let serial = Session::new();
+    for row in &r1 {
+        let want: PpaReport = serial.run(&row.point.cfg, row.point.workload).unwrap();
+        let got = row.report.as_ref().unwrap();
+        assert_eq!(got.cycles, want.cycles, "{}", row.point.cfg.label());
+        assert_eq!(got.energy_pj, want.energy_pj, "{}", row.point.cfg.label());
+    }
+}
+
+#[test]
+fn serve_sweep_with_channels_is_deterministic_and_lanes_help() {
+    // The serving path over a multi-channel config: identical reports
+    // from two fresh sessions (covers the parallel serve_sweep path),
+    // and four data-parallel lanes never serve a saturating load worse
+    // than one channel.
+    let rates = [10_000.0, 20_000.0, 40_000.0];
+    let sc = |channels: usize| {
+        ServeConfig::new(
+            fused4(channels, PartitionKind::Data).with_engine(Engine::Event),
+            Workload::Fig1,
+            20_000.0,
+        )
+        .requests(200)
+        .batch(8)
+        .seed(7)
+    };
+    let a = Session::new().serve_sweep(&sc(4), &rates, true).unwrap();
+    let b = Session::new().serve_sweep(&sc(4), &rates, true).unwrap();
+    assert_eq!(a, b, "serve sweep is deterministic across sessions and threads");
+
+    let single = Session::new().serve_sweep(&sc(1), &rates, true).unwrap();
+    for (wide, narrow) in a.iter().zip(&single) {
+        assert!(
+            wide.throughput_rps >= narrow.throughput_rps,
+            "4 data-parallel lanes must not lose throughput at rate {}: {} < {}",
+            narrow.rate_rps,
+            wide.throughput_rps,
+            narrow.throughput_rps
+        );
+    }
+}
+
+#[test]
+fn channel_partitioning_runs_exactly_once_per_config() {
+    // The session memoizes the partitioned ChannelSet across engines and
+    // repeats: stats() proves the per-channel traces were generated once.
+    let session = Session::new();
+    let cfg = fused4(2, PartitionKind::Model);
+    session.run(&cfg.clone().with_engine(Engine::Analytic), Workload::Fig1).unwrap();
+    session.run(&cfg.clone().with_engine(Engine::Event), Workload::Fig1).unwrap();
+    session.run(&cfg.clone().with_engine(Engine::Event), Workload::Fig1).unwrap();
+    assert_eq!(
+        session.stats().channel_set_builds,
+        1,
+        "both engines and the repeat must share one partitioning"
+    );
+    // A different channel count is a different partitioning.
+    session.run(&fused4(4, PartitionKind::Model), Workload::Fig1).unwrap();
+    assert_eq!(session.stats().channel_set_builds, 2);
+}

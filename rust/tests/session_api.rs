@@ -116,6 +116,7 @@ fn golden_results() -> SweepResults {
         area: dummy_area.clone(),
         occupancy: None,
         schedule: None,
+        channels: None,
     };
     // A Fused4 event-engine row with a hand-built occupancy (4 cores,
     // 16 banks) locks the utilization schema.
@@ -153,6 +154,7 @@ fn golden_results() -> SweepResults {
         area: dummy_area,
         occupancy: Some(occ),
         schedule: None,
+        channels: None,
     };
     let err_cfg = ArchConfig::system(System::AimLike, 2048, 0);
     SweepResults {
